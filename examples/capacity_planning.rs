@@ -1,0 +1,48 @@
+//! Carbon-aware capacity provisioning interop (paper §6.7, Fig. 14).
+//!
+//! CarbonFlex separates provisioning (φ) from scheduling (ψ), so it can be
+//! compared against — and composed with — Google's Variable Capacity Curve:
+//! `VCC` water-fills daily demand into the cleanest forecast hours and
+//! schedules FCFS; `VCC (Scaling)` keeps the same capacity curve but fills
+//! it elastically by marginal throughput; `CarbonFlex` learns both
+//! decisions from the oracle.
+//!
+//! Run with: `cargo run --release --example capacity_planning`
+
+use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::runner::run_policies;
+use carbonflex::sched::PolicyKind;
+use carbonflex::util::bench::Table;
+
+fn main() {
+    // §6.7 levels the queues at 24 h slack for a fair comparison.
+    let mut cfg = ExperimentConfig::default();
+    cfg.uniform_delay_hours = Some(24.0);
+
+    println!("== Carbon-aware provisioning (uniform 24 h slack) ==\n");
+    let rows = run_policies(
+        &cfg,
+        &[PolicyKind::Vcc, PolicyKind::VccScaling, PolicyKind::CarbonFlex, PolicyKind::Oracle],
+    );
+    let mut t = Table::new(&["policy", "carbon (kg)", "savings %", "mean wait (h)", "peak servers"]);
+    for row in &rows {
+        let m = &row.result.metrics;
+        t.row(&[
+            m.policy.clone(),
+            format!("{:.2}", m.carbon_kg()),
+            format!("{:.1}", row.savings_pct),
+            format!("{:.2}", m.mean_delay_hours),
+            format!("{}", m.peak_allocated),
+        ]);
+    }
+    t.print();
+
+    let vcc = &rows[0];
+    let vcc_scaling = &rows[1];
+    println!(
+        "\nAdding elastic scheduling to VCC: {:+.1} pp carbon, {:+.0}% waiting time",
+        vcc_scaling.savings_pct - vcc.savings_pct,
+        (vcc_scaling.result.metrics.mean_delay_hours / vcc.result.metrics.mean_delay_hours - 1.0)
+            * 100.0,
+    );
+}

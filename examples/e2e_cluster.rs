@@ -1,0 +1,108 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full CarbonFlex pipeline on
+//! the paper's primary setting, with the **PJRT-executed Pallas kernel on
+//! the runtime hot path**.
+//!
+//! 1. Synthesize a South Australia carbon year and an Azure-like workload
+//!    (150-server CPU cluster, ~50% utilization).
+//! 2. Learning phase: replay the offline oracle (Alg. 1) over the two-week
+//!    historical window with multiple start offsets → knowledge base.
+//! 3. Execution phase: run the evaluation week with Algorithms 2+3, state
+//!    matching via the AOT-compiled `match.hlo.txt` artifact (Python never
+//!    runs here — `make artifacts` must have been run once).
+//! 4. Report carbon/savings/delay against all baselines (paper Fig. 6).
+//!
+//! Run with: `make artifacts && cargo run --release --example e2e_cluster`
+
+use std::time::Instant;
+
+use carbonflex::carbon::forecast::Forecaster;
+use carbonflex::cluster::energy::EnergyModel;
+use carbonflex::cluster::sim::Simulator;
+use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::runner::PreparedExperiment;
+use carbonflex::runtime::engine::Engine;
+use carbonflex::runtime::matcher::PjrtMatcher;
+use carbonflex::sched::carbonflex::{CarbonFlex, CarbonFlexParams};
+use carbonflex::sched::PolicyKind;
+use carbonflex::util::bench::Table;
+
+fn main() {
+    let cfg = ExperimentConfig::default(); // the paper's §6.1 CPU setting
+    println!("== CarbonFlex end-to-end: {} servers, {} ({}h eval / {}h history) ==\n",
+        cfg.capacity, cfg.region, cfg.horizon_hours, cfg.history_hours);
+
+    // --- Phase 0: traces + workload ---
+    let t0 = Instant::now();
+    let mut prep = PreparedExperiment::prepare(&cfg);
+    println!(
+        "traces ready in {:.2?}: {} eval jobs ({:.0} server-hours), trace mean {:.0} g/kWh",
+        t0.elapsed(),
+        prep.eval_jobs.len(),
+        prep.eval_jobs.iter().map(|j| j.length_hours).sum::<f64>(),
+        prep.eval_trace.mean(),
+    );
+
+    // --- Phase 1: learning (oracle replay) ---
+    let t1 = Instant::now();
+    let kb_len = prep.knowledge_base().cases().len();
+    println!("learning phase: {} cases in {:.2?}", kb_len, t1.elapsed());
+
+    // --- Phase 2: execution with the PJRT matcher on the hot path ---
+    let engine = match Engine::cpu(Engine::default_artifacts_dir()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot load AOT artifacts ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {} (artifacts: match kernel, {} cases compiled)\n",
+        engine.platform(), engine.meta().match_cases);
+
+    let t2 = Instant::now();
+    let matcher = PjrtMatcher::from_kb(&engine, prep.knowledge_base()).expect("matcher");
+    let mut policy = CarbonFlex::new(matcher, CarbonFlexParams::default());
+    let sim = Simulator::new(
+        cfg.capacity,
+        EnergyModel::for_hardware(cfg.hardware),
+        cfg.queues.len(),
+        cfg.horizon_hours,
+    );
+    let forecaster = Forecaster::perfect(prep.eval_trace.clone());
+    let flex = sim.run(&prep.eval_jobs, &forecaster, &mut policy);
+    let exec_time = t2.elapsed();
+    let slots_run = flex.slots.len();
+    println!(
+        "execution phase: {} slots in {:.2?} ({:.2?}/slot incl. PJRT match)",
+        slots_run,
+        exec_time,
+        exec_time / slots_run.max(1) as u32
+    );
+
+    // --- Baselines for context ---
+    let mut table = Table::new(&["policy", "carbon (kg)", "savings %", "mean delay (h)"]);
+    let baseline = prep.run(PolicyKind::CarbonAgnostic);
+    let base_carbon = baseline.metrics.carbon_g;
+    let mut push = |m: &carbonflex::cluster::metrics::RunMetrics| {
+        table.row(&[
+            m.policy.clone(),
+            format!("{:.2}", m.carbon_kg()),
+            format!("{:.1}", (1.0 - m.carbon_g / base_carbon) * 100.0),
+            format!("{:.2}", m.mean_delay_hours),
+        ]);
+    };
+    push(&baseline.metrics);
+    for kind in [PolicyKind::Gaia, PolicyKind::WaitAwhile, PolicyKind::CarbonScaler] {
+        push(&prep.run(kind).metrics);
+    }
+    push(&flex.metrics); // CarbonFlex w/ PJRT matcher
+    push(&prep.run(PolicyKind::Oracle).metrics);
+    println!();
+    table.print();
+
+    assert_eq!(flex.metrics.unfinished, 0, "e2e run must drain all jobs");
+    let savings = (1.0 - flex.metrics.carbon_g / base_carbon) * 100.0;
+    println!(
+        "\nCarbonFlex (PJRT hot path): {:.1}% carbon savings, {} jobs, {} SLO violations",
+        savings, flex.metrics.completed, flex.metrics.violations
+    );
+}

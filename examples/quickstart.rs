@@ -1,0 +1,47 @@
+//! Quickstart: build a small cluster, learn from history, and compare
+//! CarbonFlex against the carbon-agnostic baseline on three days of work.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::runner::{run_policies, PreparedExperiment};
+use carbonflex::sched::PolicyKind;
+
+fn main() {
+    // A small cluster: 24 servers, ~50% utilization, South Australia grid.
+    let mut cfg = ExperimentConfig::default();
+    cfg.capacity = 24;
+    cfg.horizon_hours = 72; // three evaluation days
+    cfg.history_hours = 168; // one week of history to learn from
+    cfg.replay_offsets = 4;
+
+    // Peek at what the learning phase produces.
+    let mut prep = PreparedExperiment::prepare(&cfg);
+    println!(
+        "workload: {} jobs over {} h (mean length {:.1} h); history: {} jobs",
+        prep.eval_jobs.len(),
+        cfg.horizon_hours,
+        prep.eval_jobs.iter().map(|j| j.length_hours).sum::<f64>() / prep.eval_jobs.len() as f64,
+        prep.hist_jobs.len(),
+    );
+    println!("knowledge base: {} oracle cases\n", prep.knowledge_base().cases().len());
+
+    // Run the comparison.
+    let rows = run_policies(&cfg, &[PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex, PolicyKind::Oracle]);
+    for row in &rows {
+        let m = &row.result.metrics;
+        println!(
+            "{:<20} {:>8.2} kg CO2  ({:>5.1}% savings)  mean delay {:>5.2} h",
+            m.policy,
+            m.carbon_kg(),
+            row.savings_pct,
+            m.mean_delay_hours
+        );
+    }
+    let flex = rows.iter().find(|r| r.kind == PolicyKind::CarbonFlex).unwrap();
+    let oracle = rows.iter().find(|r| r.kind == PolicyKind::Oracle).unwrap();
+    println!(
+        "\nCarbonFlex is within {:.1} percentage points of the offline oracle.",
+        oracle.savings_pct - flex.savings_pct
+    );
+}

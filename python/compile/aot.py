@@ -1,0 +1,75 @@
+"""AOT compile path: lower the Layer-2 graphs to HLO text + metadata.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (via ``make
+artifacts``). Emits:
+
+- ``match.hlo.txt`` — the state-match graph (Pallas distance kernel + top-k)
+- ``score.hlo.txt`` — the Alg. 1 score kernel
+- ``meta.json`` — static shapes the Rust runtime pads its inputs to
+
+HLO **text** is the interchange format, not ``.serialize()``: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the published xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+
+    lowered_match = jax.jit(model.state_match).lower(*model.match_example_args())
+    match_path = os.path.join(out_dir, "match.hlo.txt")
+    with open(match_path, "w") as f:
+        f.write(to_hlo_text(lowered_match))
+    print(f"wrote {match_path}")
+
+    lowered_score = jax.jit(model.oracle_scores).lower(*model.score_example_args())
+    score_path = os.path.join(out_dir, "score.hlo.txt")
+    with open(score_path, "w") as f:
+        f.write(to_hlo_text(lowered_score))
+    print(f"wrote {score_path}")
+
+    meta = {
+        "match": {
+            "cases": model.MATCH_CASES,
+            "features": model.MATCH_FEATURES,
+            "k": model.MATCH_K,
+        },
+        "score": {"jk": model.SCORE_JK, "t": model.SCORE_T},
+    }
+    meta_path = os.path.join(out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    args = parser.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

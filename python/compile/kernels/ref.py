@@ -1,0 +1,40 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: ``test_kernels.py`` asserts the
+Pallas implementations (run under ``interpret=True``) match these references
+across shapes and dtypes (hypothesis sweeps). Keep them boring and obviously
+right.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_ref(queries, cases):
+    """Squared Euclidean distances.
+
+    Args:
+        queries: [B, F] float array.
+        cases: [C, F] float array.
+
+    Returns:
+        [B, C] squared distances ``d2[b, c] = sum_f (q[b,f] - x[c,f])**2``.
+    """
+    diff = queries[:, None, :].astype(jnp.float32) - cases[None, :, :].astype(jnp.float32)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def score_matrix_ref(marginals, ci, window):
+    """Algorithm 1 score tensor.
+
+    Args:
+        marginals: [R] marginal throughput per (job, scale) row.
+        ci: [T] carbon intensity per slot.
+        window: [R, T] 1.0 where slot t lies inside row r's job window.
+
+    Returns:
+        [R, T] scores ``window * marginals[:, None] / max(ci, eps)[None, :]``.
+    """
+    marginals = marginals.astype(jnp.float32)
+    ci = ci.astype(jnp.float32)
+    window = window.astype(jnp.float32)
+    return window * marginals[:, None] / jnp.maximum(ci, 1e-9)[None, :]

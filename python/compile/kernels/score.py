@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: the Algorithm 1 score tensor.
+
+The learning phase's ``O(N·K·T)`` inner loop (paper Alg. 1 lines 2–5):
+``score[r, t] = p_r / CI_t`` for every (job, scale) row r and slot t, masked
+by each job's arrival/deadline window. The Rust oracle consumes the matrix
+through ``runtime::ScoreKernel``.
+
+TPU mapping: rows are tiled (BLOCK_R × T per block); each block holds
+BLOCK_R·T f32 in VMEM (256·168·4 ≈ 168 KiB), streaming the window mask once
+— the op is bandwidth-bound, so the BlockSpec simply keeps tiles resident.
+Lowered with ``interpret=True`` (see dist.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256
+
+
+def _score_kernel(m_ref, ci_ref, w_ref, o_ref):
+    m = m_ref[...]  # [R_blk]
+    ci = ci_ref[...]  # [T]
+    w = w_ref[...]  # [R_blk, T]
+    o_ref[...] = w * m[:, None] / jnp.maximum(ci, 1e-9)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def score_matrix(marginals, ci, window, *, block_r=BLOCK_R):
+    """Tiled [R, T] score matrix via the Pallas kernel.
+
+    ``R`` must be a multiple of ``block_r`` (AOT shapes guarantee it; tests
+    use :func:`score_matrix_padded`).
+    """
+    (r,) = marginals.shape
+    (t,) = ci.shape
+    assert window.shape == (r, t), f"window shape {window.shape} != {(r, t)}"
+    assert r % block_r == 0, f"R={r} not a multiple of block_r={block_r}"
+    grid = (r // block_r,)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+            pl.BlockSpec((block_r, t), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, t), jnp.float32),
+        interpret=True,
+    )(
+        marginals.astype(jnp.float32),
+        ci.astype(jnp.float32),
+        window.astype(jnp.float32),
+    )
+
+
+def score_matrix_padded(marginals, ci, window, *, block_r=BLOCK_R):
+    """Arbitrary-R wrapper: zero-pads rows to a block multiple (marginal 0 ⇒
+    score 0 everywhere, never selected) and slices back."""
+    r = marginals.shape[0]
+    block_r = min(block_r, max(8, 1 << (r - 1).bit_length()))
+    padded_r = ((r + block_r - 1) // block_r) * block_r
+    if padded_r != r:
+        marginals = jnp.concatenate([marginals, jnp.zeros(padded_r - r, marginals.dtype)])
+        window = jnp.concatenate(
+            [window, jnp.zeros((padded_r - r, window.shape[1]), window.dtype)], axis=0
+        )
+    return score_matrix(marginals, ci, window, block_r=block_r)[:r]

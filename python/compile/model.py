@@ -1,0 +1,76 @@
+"""Layer-2 JAX compute graphs, calling the Layer-1 Pallas kernels.
+
+Two graphs are AOT-lowered by ``aot.py`` and executed from Rust via PJRT:
+
+- :func:`state_match` — the per-slot CBR match (paper §5): squared distances
+  from the current state to every knowledge-base case (Pallas kernel), then
+  ``lax.top_k`` and gathers of the matched decisions. Rust feeds z-space
+  states and padded tensors (see ``rust/src/runtime/matcher.rs``).
+- :func:`oracle_scores` — the Alg. 1 score tensor (Pallas kernel), used by
+  the learning-phase offload bench.
+
+Python runs only at build time; the lowered HLO text is the interchange.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.dist import pairwise_sq_dists
+from compile.kernels.score import score_matrix
+
+# AOT shapes (must match artifacts/meta.json and the Rust runtime).
+MATCH_CASES = 4096
+MATCH_FEATURES = 8
+MATCH_K = 5
+SCORE_JK = 1024
+SCORE_T = 336
+
+
+def state_match(query, states, caps, rhos, pressures):
+    """Top-k nearest knowledge-base cases and their decisions.
+
+    Args:
+        query: [1, F] current state (z-space).
+        states: [C, F] knowledge-base states (z-space; padding rows at 1e3).
+        caps: [C] recorded capacities m_t.
+        rhos: [C] recorded thresholds ρ.
+        pressures: [C] recorded queue-pressure feature.
+
+    Returns:
+        Tuple of [1, K] arrays: (squared distances, capacities, rhos,
+        pressures) of the K nearest cases, ascending by distance.
+    """
+    d2 = pairwise_sq_dists(query, states)[0]  # [C]
+    # Sort-based top-k: `lax.top_k` lowers to a `topk` HLO op that the
+    # xla_extension 0.5.1 text parser rejects; `argsort` lowers to plain
+    # `sort`, which round-trips fine.
+    idx = jnp.argsort(d2)[:MATCH_K]
+    take = lambda v: jnp.take(v, idx, axis=0)[None, :]
+    return (d2[idx][None, :], take(caps), take(rhos), take(pressures))
+
+
+def oracle_scores(marginals, ci, window):
+    """Alg. 1 score tensor ``p_r / CI_t`` with window masking; [R, T]."""
+    return (score_matrix(marginals, ci, window),)
+
+
+def match_example_args():
+    """ShapeDtypeStructs for lowering state_match."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((1, MATCH_FEATURES), f32),
+        jax.ShapeDtypeStruct((MATCH_CASES, MATCH_FEATURES), f32),
+        jax.ShapeDtypeStruct((MATCH_CASES,), f32),
+        jax.ShapeDtypeStruct((MATCH_CASES,), f32),
+        jax.ShapeDtypeStruct((MATCH_CASES,), f32),
+    )
+
+
+def score_example_args():
+    """ShapeDtypeStructs for lowering oracle_scores."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((SCORE_JK,), f32),
+        jax.ShapeDtypeStruct((SCORE_T,), f32),
+        jax.ShapeDtypeStruct((SCORE_JK, SCORE_T), f32),
+    )

@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp references — the core correctness signal.
+
+Hypothesis sweeps shapes and value ranges; fixed cases cover the AOT shapes
+exactly as compiled.
+"""
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dist import pairwise_sq_dists, pairwise_sq_dists_padded
+from compile.kernels.ref import pairwise_sq_dists_ref, score_matrix_ref
+from compile.kernels.score import score_matrix, score_matrix_padded
+
+RNG = np.random.default_rng(42)
+
+
+# ---------- distance kernel ----------
+
+
+def test_dist_matches_ref_at_aot_shape():
+    q = RNG.normal(size=(1, 8)).astype(np.float32)
+    c = RNG.normal(size=(4096, 8)).astype(np.float32)
+    got = np.asarray(pairwise_sq_dists(jnp.asarray(q), jnp.asarray(c)))
+    want = np.asarray(pairwise_sq_dists_ref(jnp.asarray(q), jnp.asarray(c)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    c=st.integers(1, 300),
+    f=st.integers(1, 16),
+    scale=st.floats(0.1, 100.0),
+)
+def test_dist_padded_matches_ref_random_shapes(b, c, f, scale):
+    rng = np.random.default_rng(b * 10007 + c * 101 + f)
+    q = (rng.normal(size=(b, f)) * scale).astype(np.float32)
+    x = (rng.normal(size=(c, f)) * scale).astype(np.float32)
+    got = np.asarray(pairwise_sq_dists_padded(jnp.asarray(q), jnp.asarray(x)))
+    want = np.asarray(pairwise_sq_dists_ref(jnp.asarray(q), jnp.asarray(x)))
+    assert got.shape == (b, c)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3 * scale * scale)
+
+
+@settings(max_examples=20, deadline=None)
+@given(c=st.integers(2, 200), f=st.integers(1, 12))
+def test_dist_zero_iff_identical(c, f):
+    rng = np.random.default_rng(c * 31 + f)
+    x = rng.normal(size=(c, f)).astype(np.float32)
+    # query = case 0 exactly
+    q = x[0:1]
+    d = np.asarray(pairwise_sq_dists_padded(jnp.asarray(q), jnp.asarray(x)))
+    # The MXU-form expansion ||q||^2 - 2 q.x + ||x||^2 carries f32
+    # cancellation error of O(f * x^2 * eps) at the self-distance.
+    assert d[0, 0] == pytest.approx(0.0, abs=1e-4)
+    assert (d >= -1e-4).all(), "distances must be non-negative (mod f32 cancellation)"
+
+
+def test_dist_dtype_f64_inputs_coerced():
+    q = RNG.normal(size=(1, 8)).astype(np.float64)
+    c = RNG.normal(size=(64, 8)).astype(np.float64)
+    got = np.asarray(pairwise_sq_dists_padded(jnp.asarray(q), jnp.asarray(c)))
+    want = np.asarray(pairwise_sq_dists_ref(jnp.asarray(q), jnp.asarray(c)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert got.dtype == np.float32
+
+
+def test_dist_padding_rows_are_huge():
+    # 100 real cases padded to a block multiple: padded-row distances (not
+    # returned) must not disturb real results; pad value puts them ~8e6 away.
+    q = np.zeros((1, 8), dtype=np.float32)
+    x = RNG.normal(size=(100, 8)).astype(np.float32)
+    d = np.asarray(pairwise_sq_dists_padded(jnp.asarray(q), jnp.asarray(x)))
+    assert d.shape == (1, 100)
+    assert d.max() < 1e5  # only real rows returned
+
+
+# ---------- score kernel ----------
+
+
+def test_score_matches_ref_at_aot_shape():
+    r, t = 1024, 336
+    m = RNG.uniform(0.0, 1.0, size=r).astype(np.float32)
+    ci = RNG.uniform(10.0, 700.0, size=t).astype(np.float32)
+    w = (RNG.uniform(size=(r, t)) < 0.3).astype(np.float32)
+    got = np.asarray(score_matrix(jnp.asarray(m), jnp.asarray(ci), jnp.asarray(w)))
+    want = np.asarray(score_matrix_ref(jnp.asarray(m), jnp.asarray(ci), jnp.asarray(w)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(r=st.integers(1, 300), t=st.integers(1, 64))
+def test_score_padded_matches_ref_random_shapes(r, t):
+    rng = np.random.default_rng(r * 7919 + t)
+    m = rng.uniform(0.0, 1.0, size=r).astype(np.float32)
+    ci = rng.uniform(5.0, 800.0, size=t).astype(np.float32)
+    w = (rng.uniform(size=(r, t)) < 0.5).astype(np.float32)
+    got = np.asarray(score_matrix_padded(jnp.asarray(m), jnp.asarray(ci), jnp.asarray(w)))
+    want = np.asarray(score_matrix_ref(jnp.asarray(m), jnp.asarray(ci), jnp.asarray(w)))
+    assert got.shape == (r, t)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-8)
+
+
+def test_score_masked_slots_are_zero():
+    m = np.ones(16, dtype=np.float32)
+    ci = np.full(8, 100.0, dtype=np.float32)
+    w = np.zeros((16, 8), dtype=np.float32)
+    w[3, 4] = 1.0
+    got = np.array(score_matrix_padded(jnp.asarray(m), jnp.asarray(ci), jnp.asarray(w)))
+    assert got[3, 4] == pytest.approx(0.01)
+    got[3, 4] = 0.0
+    assert (got == 0.0).all()
+
+
+def test_score_zero_ci_guarded():
+    m = np.ones(8, dtype=np.float32)
+    ci = np.zeros(4, dtype=np.float32)
+    w = np.ones((8, 4), dtype=np.float32)
+    got = np.asarray(score_matrix_padded(jnp.asarray(m), jnp.asarray(ci), jnp.asarray(w)))
+    assert np.isfinite(got).all()

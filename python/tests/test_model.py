@@ -1,0 +1,100 @@
+"""Layer-2 model graphs: top-k semantics, gather alignment, AOT lowering."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def _random_kb(rng, valid):
+    states = np.full((model.MATCH_CASES, model.MATCH_FEATURES), 1e3, dtype=np.float32)
+    states[:valid] = rng.normal(size=(valid, model.MATCH_FEATURES)).astype(np.float32)
+    caps = np.zeros(model.MATCH_CASES, dtype=np.float32)
+    caps[:valid] = rng.integers(0, 150, size=valid)
+    rhos = np.full(model.MATCH_CASES, 1.01, dtype=np.float32)
+    rhos[:valid] = rng.uniform(0.2, 1.01, size=valid).astype(np.float32)
+    press = np.zeros(model.MATCH_CASES, dtype=np.float32)
+    press[:valid] = rng.uniform(0.0, 2.0, size=valid).astype(np.float32)
+    return states, caps, rhos, press
+
+
+def _numpy_topk(q, states, k):
+    d2 = ((states - q[0]) ** 2).sum(axis=1)
+    idx = np.argsort(d2, kind="stable")[:k]
+    return d2, idx
+
+
+def test_state_match_agrees_with_numpy():
+    rng = np.random.default_rng(7)
+    states, caps, rhos, press = _random_kb(rng, valid=1000)
+    q = rng.normal(size=(1, model.MATCH_FEATURES)).astype(np.float32)
+    d2_top, caps_top, rhos_top, press_top = model.state_match(
+        jnp.asarray(q), jnp.asarray(states), jnp.asarray(caps), jnp.asarray(rhos), jnp.asarray(press)
+    )
+    d2, idx = _numpy_topk(q, states, model.MATCH_K)
+    np.testing.assert_allclose(np.asarray(d2_top)[0], d2[idx], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(caps_top)[0], caps[idx])
+    np.testing.assert_allclose(np.asarray(rhos_top)[0], rhos[idx], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(press_top)[0], press[idx], rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(valid=st.integers(model.MATCH_K, 512), seed=st.integers(0, 2**31 - 1))
+def test_state_match_never_returns_padding(valid, seed):
+    rng = np.random.default_rng(seed)
+    states, caps, rhos, press = _random_kb(rng, valid=valid)
+    q = rng.normal(size=(1, model.MATCH_FEATURES)).astype(np.float32)
+    d2_top, _, _, _ = model.state_match(
+        jnp.asarray(q), jnp.asarray(states), jnp.asarray(caps), jnp.asarray(rhos), jnp.asarray(press)
+    )
+    # With ≥ K real cases, no padding row (distance ~8e6) may win.
+    assert np.asarray(d2_top).max() < 1e6
+
+
+def test_state_match_distances_ascending():
+    rng = np.random.default_rng(11)
+    states, caps, rhos, press = _random_kb(rng, valid=500)
+    q = rng.normal(size=(1, model.MATCH_FEATURES)).astype(np.float32)
+    d2_top, _, _, _ = model.state_match(
+        jnp.asarray(q), jnp.asarray(states), jnp.asarray(caps), jnp.asarray(rhos), jnp.asarray(press)
+    )
+    d = np.asarray(d2_top)[0]
+    assert (np.diff(d) >= -1e-6).all()
+
+
+def test_oracle_scores_shape_and_value():
+    rng = np.random.default_rng(13)
+    m = rng.uniform(0, 1, model.SCORE_JK).astype(np.float32)
+    ci = rng.uniform(10, 700, model.SCORE_T).astype(np.float32)
+    w = (rng.uniform(size=(model.SCORE_JK, model.SCORE_T)) < 0.4).astype(np.float32)
+    (scores,) = model.oracle_scores(jnp.asarray(m), jnp.asarray(ci), jnp.asarray(w))
+    assert scores.shape == (model.SCORE_JK, model.SCORE_T)
+    want = w * m[:, None] / ci[None, :]
+    np.testing.assert_allclose(np.asarray(scores), want, rtol=1e-5)
+
+
+def test_lowering_produces_hlo_text(tmp_path):
+    # The full AOT path (minus disk layout assumptions).
+    from compile import aot
+
+    aot.build(str(tmp_path))
+    match_txt = (tmp_path / "match.hlo.txt").read_text()
+    score_txt = (tmp_path / "score.hlo.txt").read_text()
+    assert "HloModule" in match_txt
+    assert "HloModule" in score_txt
+    meta = (tmp_path / "meta.json").read_text()
+    assert '"cases": 4096' in meta
+
+
+def test_match_graph_jit_compiles():
+    args = [jnp.zeros(s.shape, s.dtype) for s in model.match_example_args()]
+    out = jax.jit(model.state_match)(*args)
+    assert len(out) == 4
+    assert out[0].shape == (1, model.MATCH_K)

@@ -1,0 +1,59 @@
+//! Ablation bench: CarbonFlex design choices (DESIGN.md §7).
+//!
+//! Sweeps the Alg. 2/3 aggregation knobs (capacity aggregator, ρ
+//! aggregator, urgency window, k) on the paper-default setting and prints
+//! the savings each variant achieves — the evidence behind the defaults.
+
+use std::time::Instant;
+
+use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::runner::run_policies;
+use carbonflex::sched::PolicyKind;
+use carbonflex::util::bench::Table;
+
+fn run_variant(cfg: &ExperimentConfig, agg: &str, rho: &str) -> (f64, usize) {
+    std::env::set_var("CARBONFLEX_AGG", agg);
+    std::env::set_var("CARBONFLEX_RHO", rho);
+    let rows = run_policies(cfg, &[PolicyKind::CarbonFlex]);
+    std::env::remove_var("CARBONFLEX_AGG");
+    std::env::remove_var("CARBONFLEX_RHO");
+    (rows[0].savings_pct, rows[0].result.metrics.violations)
+}
+
+fn main() {
+    let t0 = Instant::now();
+    let cfg = ExperimentConfig::default();
+
+    println!("\n== Ablation: CarbonFlex aggregation choices (paper-default setting) ==");
+    let mut t = Table::new(&["capacity agg", "rho agg", "savings %", "violations"]);
+    for agg in ["wmean", "min", "median", "max"] {
+        for rho in ["min", "median"] {
+            let (savings, violations) = run_variant(&cfg, agg, rho);
+            t.row(&[
+                agg.to_string(),
+                rho.to_string(),
+                format!("{savings:.1}"),
+                format!("{violations}"),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n== Ablation: k (neighbours) and replay offsets ==");
+    let mut t2 = Table::new(&["knn k", "offsets", "savings %"]);
+    for k in [1usize, 3, 5, 9] {
+        let mut c = cfg.clone();
+        c.knn_k = k;
+        let rows = run_policies(&c, &[PolicyKind::CarbonFlex]);
+        t2.row(&[format!("{k}"), format!("{}", c.replay_offsets), format!("{:.1}", rows[0].savings_pct)]);
+    }
+    for offsets in [1usize, 3, 6] {
+        let mut c = cfg.clone();
+        c.replay_offsets = offsets;
+        let rows = run_policies(&c, &[PolicyKind::CarbonFlex]);
+        t2.row(&["5".into(), format!("{offsets}"), format!("{:.1}", rows[0].savings_pct)]);
+    }
+    t2.print();
+
+    println!("\n[bench ablation_carbonflex] wall time: {:.2?}", t0.elapsed());
+}

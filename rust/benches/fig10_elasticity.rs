@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 10: elasticity scenarios.
+//!
+//! `harness = false`: prints the paper-shaped table and reports wall time
+//! (criterion is unavailable offline; see `util::bench`).
+
+use std::time::Instant;
+
+use carbonflex::experiments::figures::{self, fig10_elasticity};
+
+fn main() {
+    let t0 = Instant::now();
+    fig10_elasticity(&figures::paper_default());
+    println!("\n[bench fig10_elasticity] wall time: {:.2?}", t0.elapsed());
+}

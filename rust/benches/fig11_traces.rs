@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 11: workload trace families.
+//!
+//! `harness = false`: prints the paper-shaped table and reports wall time
+//! (criterion is unavailable offline; see `util::bench`).
+
+use std::time::Instant;
+
+use carbonflex::experiments::figures::{self, fig11_traces};
+
+fn main() {
+    let t0 = Instant::now();
+    fig11_traces(&figures::paper_default());
+    println!("\n[bench fig11_traces] wall time: {:.2?}", t0.elapsed());
+}

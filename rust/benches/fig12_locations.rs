@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 12: ten locations.
+//!
+//! `harness = false`: prints the paper-shaped table and reports wall time
+//! (criterion is unavailable offline; see `util::bench`).
+
+use std::time::Instant;
+
+use carbonflex::experiments::figures::{self, fig12_locations};
+
+fn main() {
+    let t0 = Instant::now();
+    fig12_locations(&figures::paper_default());
+    println!("\n[bench fig12_locations] wall time: {:.2?}", t0.elapsed());
+}

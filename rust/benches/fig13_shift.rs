@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 13: distribution shifts.
+//!
+//! `harness = false`: prints the paper-shaped table and reports wall time
+//! (criterion is unavailable offline; see `util::bench`).
+
+use std::time::Instant;
+
+use carbonflex::experiments::figures::{self, fig13_shift};
+
+fn main() {
+    let t0 = Instant::now();
+    fig13_shift(&figures::paper_default());
+    println!("\n[bench fig13_shift] wall time: {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 14: VCC provisioning interop.
+//!
+//! `harness = false`: prints the paper-shaped table and reports wall time
+//! (criterion is unavailable offline; see `util::bench`).
+
+use std::time::Instant;
+
+use carbonflex::experiments::figures::{self, fig14_vcc};
+
+fn main() {
+    let t0 = Instant::now();
+    fig14_vcc(&figures::paper_default());
+    println!("\n[bench fig14_vcc] wall time: {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 5: carbon-trace diversity across ten regions.
+//!
+//! `harness = false`: prints the paper-shaped table and reports wall time
+//! (criterion is unavailable offline; see `util::bench`).
+
+use std::time::Instant;
+
+use carbonflex::experiments::figures::fig5_traces;
+
+fn main() {
+    let t0 = Instant::now();
+    fig5_traces(42);
+    println!("\n[bench fig5_traces] wall time: {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 6: CPU-cluster headline comparison.
+//!
+//! `harness = false`: prints the paper-shaped table and reports wall time
+//! (criterion is unavailable offline; see `util::bench`).
+
+use std::time::Instant;
+
+use carbonflex::experiments::figures::{self, fig6_cpu};
+
+fn main() {
+    let t0 = Instant::now();
+    fig6_cpu(&figures::paper_default());
+    println!("\n[bench fig6_cpu_cluster] wall time: {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 7: GPU-cluster comparison.
+//!
+//! `harness = false`: prints the paper-shaped table and reports wall time
+//! (criterion is unavailable offline; see `util::bench`).
+
+use std::time::Instant;
+
+use carbonflex::experiments::figures::fig7_gpu;
+
+fn main() {
+    let t0 = Instant::now();
+    fig7_gpu();
+    println!("\n[bench fig7_gpu_cluster] wall time: {:.2?}", t0.elapsed());
+}

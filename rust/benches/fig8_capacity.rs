@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 8: capacity sweep.
+//!
+//! `harness = false`: prints the paper-shaped table and reports wall time
+//! (criterion is unavailable offline; see `util::bench`).
+
+use std::time::Instant;
+
+use carbonflex::experiments::figures::{self, fig8_capacity};
+
+fn main() {
+    let t0 = Instant::now();
+    fig8_capacity(&figures::paper_default());
+    println!("\n[bench fig8_capacity] wall time: {:.2?}", t0.elapsed());
+}

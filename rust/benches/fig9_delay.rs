@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 9: delay sweep.
+//!
+//! `harness = false`: prints the paper-shaped table and reports wall time
+//! (criterion is unavailable offline; see `util::bench`).
+
+use std::time::Instant;
+
+use carbonflex::experiments::figures::{self, fig9_delay};
+
+fn main() {
+    let t0 = Instant::now();
+    fig9_delay(&figures::paper_default());
+    println!("\n[bench fig9_delay] wall time: {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,14 @@
+//! Bench: forecast-error sensitivity extension (README/EXPERIMENTS.md) —
+//! how savings degrade as day-ahead forecast noise grows past the
+//! CarbonCast-level ~5% the paper assumes.
+
+use std::time::Instant;
+
+use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::forecast_noise::print_noise_sweep;
+
+fn main() {
+    let t0 = Instant::now();
+    print_noise_sweep(&ExperimentConfig::default());
+    println!("\n[bench forecast_noise] wall time: {:.2?}", t0.elapsed());
+}

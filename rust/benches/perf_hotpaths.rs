@@ -1,0 +1,96 @@
+//! Perf bench: the three hot paths of EXPERIMENTS.md §Perf.
+//!
+//! - L3 oracle (Alg. 1) over a week-long trace — the learning-phase loop
+//!   (paper §6.8: 2–10 **minutes** in the Python prototype).
+//! - State match: native KD-tree vs brute force vs PJRT/Pallas round trip
+//!   (paper §6.8: 1–2 ms with scikit-learn).
+//! - Cluster-engine stepping throughput.
+
+use std::time::{Duration, Instant};
+
+use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::runner::PreparedExperiment;
+use carbonflex::learning::kb::{KnowledgeBase, Matcher};
+use carbonflex::learning::state::StateVector;
+use carbonflex::runtime::engine::Engine;
+use carbonflex::runtime::matcher::PjrtMatcher;
+use carbonflex::runtime::score::{score_native, ScoreKernel};
+use carbonflex::sched::oracle::compute_schedule;
+use carbonflex::sched::PolicyKind;
+use carbonflex::util::bench::{bench, bench_for, fmt_duration};
+use carbonflex::util::rng::Rng;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    let mut prep = PreparedExperiment::prepare(&cfg);
+    println!("== perf: L3 oracle (Alg. 1), {} jobs, week trace ==", prep.eval_jobs.len());
+    let jobs = prep.eval_jobs.clone();
+    let trace = prep.eval_trace.clone();
+    let r = bench_for("oracle/week-trace", Duration::from_secs(5), || {
+        std::hint::black_box(compute_schedule(&jobs, &trace, cfg.capacity, 24.0, 8));
+    });
+    println!("{r}");
+    println!("(paper prototype: 2–10 min)");
+
+    println!("\n== perf: state match (k = 5) ==");
+    let kb = KnowledgeBase::from_cases(prep.knowledge_base().cases().to_vec());
+    let mut rng = Rng::new(1);
+    let mut queries = Vec::new();
+    for _ in 0..256 {
+        queries.push(StateVector::from_raw(
+            rng.range(10.0, 700.0),
+            rng.range(-80.0, 80.0),
+            rng.f64(),
+            &[rng.below(40), rng.below(40), rng.below(40)],
+            rng.f64(),
+        ));
+    }
+    let mut qi = 0usize;
+    let r = bench("match/native-kdtree", 100, 2000, || {
+        qi = (qi + 1) % queries.len();
+        std::hint::black_box(kb.top_k(&queries[qi], 5));
+    });
+    println!("{r}");
+
+    match Engine::cpu(Engine::default_artifacts_dir()) {
+        Ok(engine) => {
+            let matcher = PjrtMatcher::from_kb(&engine, &kb).expect("matcher");
+            let r = bench("match/pjrt-pallas", 20, 200, || {
+                qi = (qi + 1) % queries.len();
+                std::hint::black_box(matcher.top_k(&queries[qi], 5));
+            });
+            println!("{r}");
+            println!("(paper prototype: 1–2 ms)");
+
+            println!("\n== perf: score kernel (Alg. 1 inner loop) ==");
+            let kernel = ScoreKernel::load(&engine).expect("score kernel");
+            let (jk, t) = kernel.shape();
+            let marginals: Vec<f32> = (0..jk).map(|i| 1.0 / (1 + i % 16) as f32).collect();
+            let ci: Vec<f32> = (0..t).map(|i| 100.0 + (i % 24) as f32 * 10.0).collect();
+            let window: Vec<f32> = (0..jk * t).map(|i| (i % 3 == 0) as u8 as f32).collect();
+            let r = bench("score/native", 5, 50, || {
+                std::hint::black_box(score_native(&marginals, &ci, &window));
+            });
+            println!("{r}");
+            let r = bench("score/pjrt-pallas", 5, 50, || {
+                std::hint::black_box(kernel.run(&marginals, &ci, &window).unwrap());
+            });
+            println!("{r}");
+        }
+        Err(e) => println!("SKIP pjrt benches: {e}"),
+    }
+
+    println!("\n== perf: end-to-end policy runs (week, M=150) ==");
+    for kind in [PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex, PolicyKind::Oracle] {
+        let t0 = Instant::now();
+        let res = prep.run(kind);
+        let dt = t0.elapsed();
+        println!(
+            "{:<22} {:>10}  ({} slots, {:.0} slots/s)",
+            kind.as_str(),
+            fmt_duration(dt),
+            res.slots.len(),
+            res.slots.len() as f64 / dt.as_secs_f64()
+        );
+    }
+}

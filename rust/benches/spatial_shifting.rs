@@ -1,0 +1,13 @@
+//! Bench: spatial-shifting extension — geo-dispatch across three regions,
+//! alone and composed with CarbonFlex's temporal/elastic scheduling.
+
+use std::time::Instant;
+
+use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::spatial::print_spatial;
+
+fn main() {
+    let t0 = Instant::now();
+    print_spatial(&ExperimentConfig::default());
+    println!("\n[bench spatial_shifting] wall time: {:.2?}", t0.elapsed());
+}

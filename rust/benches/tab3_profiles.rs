@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 2 / Table 3: scaling-profile catalog.
+//!
+//! `harness = false`: prints the paper-shaped table and reports wall time
+//! (criterion is unavailable offline; see `util::bench`).
+
+use std::time::Instant;
+
+use carbonflex::experiments::figures::fig2_profiles;
+
+fn main() {
+    let t0 = Instant::now();
+    fig2_profiles();
+    println!("\n[bench tab3_profiles] wall time: {:.2?}", t0.elapsed());
+}

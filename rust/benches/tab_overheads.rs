@@ -1,0 +1,14 @@
+//! Bench: regenerate §6.8: system overheads.
+//!
+//! `harness = false`: prints the paper-shaped table and reports wall time
+//! (criterion is unavailable offline; see `util::bench`).
+
+use std::time::Instant;
+
+use carbonflex::experiments::figures::{self, overheads};
+
+fn main() {
+    let t0 = Instant::now();
+    overheads(&figures::paper_default());
+    println!("\n[bench tab_overheads] wall time: {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,35 @@
+//! Bench: year-long continuous-learning evaluation (paper §5's
+//! CarbonFlex-Simulator mode) — 8 consecutive weeks with weekly relearning
+//! and knowledge-base aging (4-week rolling window).
+
+use std::time::Instant;
+
+use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::yearlong::run_yearlong;
+use carbonflex::util::bench::Table;
+
+fn main() {
+    let t0 = Instant::now();
+    let cfg = ExperimentConfig::default();
+    let r = run_yearlong(&cfg, 8, 24 * 28);
+    println!("\n== Continuous learning over {} weeks (aging window 4 weeks) ==", r.weeks.len());
+    let mut t = Table::new(&["week", "mean CI", "CarbonFlex %", "Oracle %", "KB cases", "violations"]);
+    for w in &r.weeks {
+        t.row(&[
+            format!("{}", w.week),
+            format!("{:.0}", w.mean_ci),
+            format!("{:.1}", w.savings_pct),
+            format!("{:.1}", w.oracle_savings_pct),
+            format!("{}", w.kb_cases),
+            format!("{}", w.violations),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nmean savings {:.1}% (oracle {:.1}%), worst week {:.1}%",
+        r.mean_savings(),
+        r.mean_oracle_savings(),
+        r.min_savings()
+    );
+    println!("\n[bench yearlong_continuous] wall time: {:.2?}", t0.elapsed());
+}

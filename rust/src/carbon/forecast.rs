@@ -1,0 +1,123 @@
+//! Day-ahead carbon-intensity forecasts.
+//!
+//! The paper assumes a carbon-information service (ElectricityMaps) with
+//! accurate day-ahead forecasts (footnote 3, citing CarbonCast). We model a
+//! forecast as the true future window plus optional multiplicative noise, so
+//! experiments can probe forecast-error sensitivity.
+
+use crate::carbon::trace::CarbonTrace;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Day-ahead forecast provider over a ground-truth trace.
+#[derive(Debug, Clone)]
+pub struct Forecaster {
+    truth: CarbonTrace,
+    /// Relative (multiplicative) forecast noise σ; 0 = perfect forecast.
+    noise_sigma: f64,
+    /// Pre-drawn noise per hour so repeated queries are consistent.
+    noise: Vec<f64>,
+}
+
+impl Forecaster {
+    /// Perfect day-ahead forecast (the paper's assumption).
+    pub fn perfect(truth: CarbonTrace) -> Self {
+        Forecaster { noise_sigma: 0.0, noise: vec![], truth }
+    }
+
+    /// Noisy forecast with relative error σ (e.g. 0.05 ≈ CarbonCast-level).
+    pub fn noisy(truth: CarbonTrace, sigma: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let noise = (0..truth.len()).map(|_| 1.0 + sigma * rng.normal()).collect();
+        Forecaster { noise_sigma: sigma, noise, truth }
+    }
+
+    pub fn noise_sigma(&self) -> f64 {
+        self.noise_sigma
+    }
+
+    /// Forecast CI for slot `t` (as seen from any slot ≤ t).
+    pub fn predict(&self, t: usize) -> f64 {
+        let base = self.truth.at(t);
+        if self.noise_sigma == 0.0 || self.noise.is_empty() {
+            return base;
+        }
+        let i = t.min(self.noise.len() - 1);
+        (base * self.noise[i]).max(1.0)
+    }
+
+    /// Forecast window `[t, t+n)`.
+    pub fn predict_window(&self, t: usize, n: usize) -> Vec<f64> {
+        (t..t + n).map(|i| self.predict(i)).collect()
+    }
+
+    /// Rank of slot `t` within its day-ahead window (Table 2's CI^R): 0 means
+    /// the current slot is forecast to be the cleanest of the next 24 h.
+    pub fn day_ahead_rank(&self, t: usize) -> f64 {
+        let w = self.predict_window(t, 24);
+        stats::rank_fraction(self.predict(t), &w)
+    }
+
+    /// p-th percentile of the next-24h forecast — Wait Awhile's threshold.
+    pub fn day_ahead_percentile(&self, t: usize, p: f64) -> f64 {
+        let w = self.predict_window(t, 24);
+        stats::percentile(&w, p)
+    }
+
+    /// Access the underlying ground truth (for accounting, never for
+    /// policy decisions in online schedulers).
+    pub fn truth(&self) -> &CarbonTrace {
+        &self.truth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::synth::{synthesize, Region};
+
+    #[test]
+    fn perfect_forecast_is_truth() {
+        let t = synthesize(Region::California, 200, 1);
+        let f = Forecaster::perfect(t.clone());
+        for i in 0..200 {
+            assert_eq!(f.predict(i), t.at(i));
+        }
+    }
+
+    #[test]
+    fn noisy_forecast_bounded_error() {
+        let t = synthesize(Region::California, 2000, 2);
+        let f = Forecaster::noisy(t.clone(), 0.05, 3);
+        let mut rel_errs = Vec::new();
+        for i in 0..2000 {
+            rel_errs.push((f.predict(i) - t.at(i)).abs() / t.at(i));
+        }
+        let mean_err = stats::mean(&rel_errs);
+        assert!(mean_err > 0.01 && mean_err < 0.10, "mean rel err {mean_err}");
+    }
+
+    #[test]
+    fn noisy_is_consistent_across_queries() {
+        let t = synthesize(Region::Texas, 100, 4);
+        let f = Forecaster::noisy(t, 0.1, 5);
+        assert_eq!(f.predict(42), f.predict(42));
+    }
+
+    #[test]
+    fn rank_detects_cleanest_hour() {
+        let hourly: Vec<f64> = (0..48).map(|i| if i == 10 { 10.0 } else { 100.0 }).collect();
+        let f = Forecaster::perfect(CarbonTrace::new("x", hourly));
+        assert_eq!(f.day_ahead_rank(10), 0.0);
+        // Slot 9's window still contains the clean hour → its own rank > 0.
+        assert!(f.day_ahead_rank(9) > 0.0);
+    }
+
+    #[test]
+    fn percentile_threshold() {
+        let hourly: Vec<f64> = (1..=24).map(|i| i as f64 * 10.0).collect();
+        let f = Forecaster::perfect(CarbonTrace::new("x", hourly));
+        let p30 = f.day_ahead_percentile(0, 30.0);
+        assert!(p30 > 60.0 && p30 < 90.0, "p30 {p30}");
+    }
+}

@@ -1,0 +1,98 @@
+//! CSV persistence for carbon traces (`hour,ci` rows with a header), so
+//! synthesized traces can be exported, inspected, or replaced with real
+//! ElectricityMaps exports of the same shape.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::carbon::trace::CarbonTrace;
+
+/// IO error for trace files.
+#[derive(Debug, thiserror::Error)]
+pub enum TraceIoError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("csv line {0}: {1}")]
+    Malformed(usize, String),
+}
+
+/// Save a trace as `hour,carbon_intensity` CSV.
+pub fn save_csv(trace: &CarbonTrace, path: impl AsRef<Path>) -> Result<(), TraceIoError> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "hour,carbon_intensity")?;
+    for (h, ci) in trace.hourly.iter().enumerate() {
+        writeln!(f, "{h},{ci:.4}")?;
+    }
+    Ok(())
+}
+
+/// Load a trace saved by [`save_csv`] (or any `hour,ci` CSV; hours must be
+/// contiguous from 0).
+pub fn load_csv(region: &str, path: impl AsRef<Path>) -> Result<CarbonTrace, TraceIoError> {
+    let src = std::fs::read_to_string(path)?;
+    let mut hourly = Vec::new();
+    for (i, line) in src.lines().enumerate() {
+        if i == 0 && line.to_ascii_lowercase().starts_with("hour") {
+            continue; // header
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split(',');
+        let hour: usize = parts
+            .next()
+            .and_then(|s| s.trim().parse().ok())
+            .ok_or_else(|| TraceIoError::Malformed(i + 1, format!("bad hour in '{line}'")))?;
+        let ci: f64 = parts
+            .next()
+            .and_then(|s| s.trim().parse().ok())
+            .ok_or_else(|| TraceIoError::Malformed(i + 1, format!("bad ci in '{line}'")))?;
+        if hour != hourly.len() {
+            return Err(TraceIoError::Malformed(
+                i + 1,
+                format!("non-contiguous hour {hour}, expected {}", hourly.len()),
+            ));
+        }
+        if !(ci.is_finite() && ci >= 0.0) {
+            return Err(TraceIoError::Malformed(i + 1, format!("invalid ci {ci}")));
+        }
+        hourly.push(ci);
+    }
+    Ok(CarbonTrace::new(region, hourly))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::synth::{synthesize, Region};
+
+    #[test]
+    fn roundtrip() {
+        let t = synthesize(Region::Germany, 100, 1);
+        let dir = std::env::temp_dir().join("carbonflex_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("germany.csv");
+        save_csv(&t, &path).unwrap();
+        let loaded = load_csv("germany", &path).unwrap();
+        assert_eq!(loaded.len(), t.len());
+        for i in 0..t.len() {
+            assert!((loaded.at(i) - t.at(i)).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rejects_gaps_and_garbage() {
+        let dir = std::env::temp_dir().join("carbonflex_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad1 = dir.join("bad1.csv");
+        std::fs::write(&bad1, "hour,carbon_intensity\n0,100\n2,200\n").unwrap();
+        assert!(load_csv("x", &bad1).is_err());
+        let bad2 = dir.join("bad2.csv");
+        std::fs::write(&bad2, "hour,carbon_intensity\n0,not-a-number\n").unwrap();
+        assert!(load_csv("x", &bad2).is_err());
+        let bad3 = dir.join("bad3.csv");
+        std::fs::write(&bad3, "hour,carbon_intensity\n0,-5.0\n").unwrap();
+        assert!(load_csv("x", &bad3).is_err());
+    }
+}

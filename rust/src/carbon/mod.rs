@@ -1,0 +1,12 @@
+//! Carbon-intensity substrate: hourly traces, a parametric synthesizer for
+//! the ten evaluation regions (calibrated to the paper's Fig. 5), day-ahead
+//! forecasting, and CSV IO.
+
+pub mod forecast;
+pub mod io;
+pub mod synth;
+pub mod trace;
+
+pub use forecast::Forecaster;
+pub use synth::Region;
+pub use trace::CarbonTrace;

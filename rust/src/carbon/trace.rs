@@ -1,0 +1,156 @@
+//! Hourly carbon-intensity time series.
+//!
+//! A [`CarbonTrace`] is the substrate every policy consumes: an hourly
+//! sequence of grid carbon intensity in g·CO₂eq/kWh (paper §2.1). Slot `t`
+//! indexes hours from the trace start.
+
+use crate::util::stats;
+
+/// Hourly carbon-intensity series for one region.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CarbonTrace {
+    /// Region key (e.g. "south-australia").
+    pub region: String,
+    /// Carbon intensity per hour, g·CO₂eq/kWh.
+    pub hourly: Vec<f64>,
+}
+
+impl CarbonTrace {
+    pub fn new(region: impl Into<String>, hourly: Vec<f64>) -> Self {
+        let trace = CarbonTrace { region: region.into(), hourly };
+        debug_assert!(trace.hourly.iter().all(|&c| c >= 0.0 && c.is_finite()));
+        trace
+    }
+
+    pub fn len(&self) -> usize {
+        self.hourly.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hourly.is_empty()
+    }
+
+    /// CI at slot `t`; clamps to the last value if `t` runs past the end
+    /// (keeps long feasibility-repair runs well-defined).
+    pub fn at(&self, t: usize) -> f64 {
+        if self.hourly.is_empty() {
+            return 0.0;
+        }
+        let i = t.min(self.hourly.len() - 1);
+        self.hourly[i]
+    }
+
+    /// Slice `[t, t+n)` clamped to the trace end (may be shorter than `n`).
+    pub fn window(&self, t: usize, n: usize) -> &[f64] {
+        if t >= self.hourly.len() {
+            return &[];
+        }
+        let end = (t + n).min(self.hourly.len());
+        &self.hourly[t..end]
+    }
+
+    /// Sub-trace starting at `offset` with length `n` (clamped).
+    pub fn slice(&self, offset: usize, n: usize) -> CarbonTrace {
+        CarbonTrace::new(self.region.clone(), self.window(offset, n).to_vec())
+    }
+
+    /// Mean CI over the whole trace.
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.hourly)
+    }
+
+    /// Mean within-day coefficient of variation (Fig. 5's variability axis).
+    pub fn daily_cov(&self) -> f64 {
+        stats::daily_cov(&self.hourly)
+    }
+
+    /// p-th percentile of the window `[t, t+n)` — Wait Awhile's threshold
+    /// uses the 30th percentile of the next 24 h.
+    pub fn window_percentile(&self, t: usize, n: usize, p: f64) -> f64 {
+        let w = self.window(t, n);
+        if w.is_empty() {
+            return self.at(t);
+        }
+        stats::percentile(w, p)
+    }
+
+    /// Rank (fraction in [0,1], 0 = cleanest hour) of slot `t` within the
+    /// day-ahead window `[t, t+24)` — the CI^R state feature of Table 2.
+    pub fn day_ahead_rank(&self, t: usize) -> f64 {
+        let w = self.window(t, 24);
+        stats::rank_fraction(self.at(t), w)
+    }
+
+    /// Signed gradient CI_t − CI_{t−1} (0 at t = 0) — the ∇CI feature.
+    pub fn gradient(&self, t: usize) -> f64 {
+        if t == 0 || self.hourly.is_empty() {
+            return 0.0;
+        }
+        self.at(t) - self.at(t - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> CarbonTrace {
+        CarbonTrace::new("test", vec![100.0, 200.0, 50.0, 300.0, 150.0])
+    }
+
+    #[test]
+    fn indexing_and_clamping() {
+        let t = trace();
+        assert_eq!(t.at(0), 100.0);
+        assert_eq!(t.at(4), 150.0);
+        assert_eq!(t.at(99), 150.0); // clamps
+    }
+
+    #[test]
+    fn windows() {
+        let t = trace();
+        assert_eq!(t.window(1, 2), &[200.0, 50.0]);
+        assert_eq!(t.window(3, 10), &[300.0, 150.0]); // clamped
+        assert!(t.window(99, 4).is_empty());
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let t = trace();
+        let s = t.slice(1, 3);
+        assert_eq!(s.hourly, vec![200.0, 50.0, 300.0]);
+        assert_eq!(s.region, "test");
+    }
+
+    #[test]
+    fn gradient_signs() {
+        let t = trace();
+        assert_eq!(t.gradient(0), 0.0);
+        assert_eq!(t.gradient(1), 100.0);
+        assert_eq!(t.gradient(2), -150.0);
+    }
+
+    #[test]
+    fn rank_in_window() {
+        let t = trace();
+        // at t=2 value 50 is the lowest of [50,300,150] → rank 0
+        assert_eq!(t.day_ahead_rank(2), 0.0);
+    }
+
+    #[test]
+    fn percentile_of_window() {
+        let t = trace();
+        let p0 = t.window_percentile(0, 5, 0.0);
+        assert_eq!(p0, 50.0);
+        let p100 = t.window_percentile(0, 5, 100.0);
+        assert_eq!(p100, 300.0);
+    }
+
+    #[test]
+    fn empty_trace_is_safe() {
+        let t = CarbonTrace::new("e", vec![]);
+        assert_eq!(t.at(3), 0.0);
+        assert!(t.window(0, 5).is_empty());
+        assert_eq!(t.gradient(2), 0.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Energy and carbon accounting (paper §5, Eq. 1–3).
+//!
+//! Per job j at scale s, per slot:
+//!
+//! `E_js = E_js^R + E_js^net`            (Eq. 2)
+//! `E_js^net = η_net · Mem_js`           (Eq. 3)
+//! `C_t = Σ_j E_js · CI_t`               (Eq. 1)
+//!
+//! Compute energy is `k · watts_per_unit` per hour (fixed per-resource CPU
+//! draw, per-workload heterogeneous GPU draw, as in the paper). Network
+//! energy uses η_net = 0.1 W/Gbps over ring-allreduce traffic.
+
+use crate::workload::job::Job;
+use crate::workload::profile::WorkloadSpec;
+
+/// Network energy efficiency, W/Gbps (paper §5 picks 0.1 within the
+/// three-orders-of-magnitude literature range).
+pub const ETA_NET_W_PER_GBPS: f64 = 0.1;
+
+/// Energy model for one cluster run.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    /// Catalog specs indexed by `Job::workload_idx`.
+    specs: Vec<WorkloadSpec>,
+    /// W/Gbps network efficiency.
+    pub eta_net: f64,
+    /// Server boot energy overhead, Wh per booted server (provisioning lag:
+    /// 3 min CPU / 5 min GPU at idle-ish draw, §6.8).
+    pub boot_wh_per_server: f64,
+    /// Checkpoint+restore wall time per rescale, hours (§6.8: ≤ 2.3 s).
+    pub ckpt_hours: f64,
+}
+
+impl EnergyModel {
+    pub fn new(specs: Vec<WorkloadSpec>, boot_minutes: f64, idle_watts: f64) -> Self {
+        EnergyModel {
+            specs,
+            eta_net: ETA_NET_W_PER_GBPS,
+            boot_wh_per_server: idle_watts * boot_minutes / 60.0,
+            ckpt_hours: 2.3 / 3600.0,
+        }
+    }
+
+    /// Standard model for a hardware class.
+    pub fn for_hardware(hw: crate::config::Hardware) -> Self {
+        use crate::config::Hardware;
+        let specs = crate::workload::profile::catalog_for(hw);
+        match hw {
+            Hardware::Cpu => EnergyModel::new(specs, 3.0, 20.0),
+            Hardware::Gpu => EnergyModel::new(specs, 5.0, 60.0),
+        }
+    }
+
+    /// Energy (kWh) consumed by `job` running at scale `k` for `fraction` of
+    /// one hour slot. Eq. 2: compute + network.
+    pub fn job_energy_kwh(&self, job: &Job, k: usize, fraction: f64) -> f64 {
+        if k == 0 || fraction <= 0.0 {
+            return 0.0;
+        }
+        let compute_wh = k as f64 * job.watts_per_unit * fraction;
+        let net_wh = self.network_wh(job, k, fraction);
+        (compute_wh + net_wh) / 1000.0
+    }
+
+    /// Network energy in Wh for `fraction` hours at scale k (Eq. 3).
+    pub fn network_wh(&self, job: &Job, k: usize, fraction: f64) -> f64 {
+        if k <= 1 {
+            return 0.0;
+        }
+        let spec = &self.specs[job.workload_idx];
+        // Sustained link rate while running: gbit/hour ÷ 3600 s = Gbps.
+        let rate_gbps = spec.network_gbit_per_hour(k) / 3600.0;
+        // P_net = η (W/Gbps) · rate (Gbps); energy = P_net · fraction hours.
+        self.eta_net * rate_gbps * fraction
+    }
+
+    /// Carbon (grams CO₂eq) for an energy draw at carbon intensity `ci`.
+    pub fn carbon_g(&self, energy_kwh: f64, ci: f64) -> f64 {
+        energy_kwh * ci
+    }
+
+    /// Boot energy (kWh) for acquiring `n` servers.
+    pub fn boot_energy_kwh(&self, n: usize) -> f64 {
+        n as f64 * self.boot_wh_per_server / 1000.0
+    }
+
+    /// Progress lost to one checkpoint/restore cycle, in base-hours, for a
+    /// job running at rate `rate`.
+    pub fn ckpt_progress_penalty(&self, rate: f64) -> f64 {
+        self.ckpt_hours * rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Hardware;
+    use crate::workload::profile::{catalog_for, ScalingProfile};
+
+    fn job(widx: usize, watts: f64, k_max: usize) -> Job {
+        Job {
+            id: 0,
+            workload: "t",
+            workload_idx: widx,
+            arrival: 0,
+            length_hours: 4.0,
+            queue: 0,
+            slack_hours: 6.0,
+            k_min: 1,
+            k_max,
+            profile: ScalingProfile::from_comm_ratio(0.05, k_max),
+            watts_per_unit: watts,
+        }
+    }
+
+    #[test]
+    fn compute_energy_scales_with_k_and_fraction() {
+        let m = EnergyModel::for_hardware(Hardware::Cpu);
+        let j = job(0, 40.0, 16);
+        let e1 = m.job_energy_kwh(&j, 1, 1.0);
+        assert!((e1 - 0.040).abs() < 1e-6, "{e1}");
+        let e2 = m.job_energy_kwh(&j, 2, 1.0);
+        assert!(e2 > 2.0 * e1 * 0.99); // ≥ 2x (plus network)
+        let eh = m.job_energy_kwh(&j, 1, 0.5);
+        assert!((eh - e1 / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_when_suspended() {
+        let m = EnergyModel::for_hardware(Hardware::Cpu);
+        let j = job(0, 40.0, 16);
+        assert_eq!(m.job_energy_kwh(&j, 0, 1.0), 0.0);
+        assert_eq!(m.job_energy_kwh(&j, 2, 0.0), 0.0);
+    }
+
+    #[test]
+    fn network_energy_small_but_positive() {
+        let m = EnergyModel::for_hardware(Hardware::Gpu);
+        let specs = catalog_for(Hardware::Gpu);
+        // ViT-B/32 = largest comm size → largest net energy.
+        let vit_idx = specs.iter().position(|w| w.name == "ViT-B/32").unwrap();
+        let alex_idx = specs.iter().position(|w| w.name == "AlexNet").unwrap();
+        let jv = job(vit_idx, 250.0, 8);
+        let ja = job(alex_idx, 150.0, 8);
+        let nv = m.network_wh(&jv, 8, 1.0);
+        let na = m.network_wh(&ja, 8, 1.0);
+        assert!(nv > 0.0 && na > 0.0);
+        // Network energy stays a small fraction of compute energy.
+        let total = m.job_energy_kwh(&jv, 8, 1.0) * 1000.0;
+        assert!(nv / total < 0.2, "net share {}", nv / total);
+    }
+
+    #[test]
+    fn carbon_is_linear_in_ci() {
+        let m = EnergyModel::for_hardware(Hardware::Cpu);
+        assert_eq!(m.carbon_g(2.0, 100.0), 200.0);
+        assert_eq!(m.carbon_g(2.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn boot_energy() {
+        let m = EnergyModel::for_hardware(Hardware::Cpu);
+        // 20 W idle for 3 min = 1 Wh per server.
+        assert!((m.boot_energy_kwh(10) - 0.010).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ckpt_penalty_proportional_to_rate() {
+        let m = EnergyModel::for_hardware(Hardware::Gpu);
+        let p1 = m.ckpt_progress_penalty(1.0);
+        let p4 = m.ckpt_progress_penalty(4.0);
+        assert!((p4 - 4.0 * p1).abs() < 1e-12);
+        assert!(p1 < 0.01); // seconds-scale, not minutes
+    }
+}

@@ -1,0 +1,185 @@
+//! Run-level metrics: emissions, savings, delay, waiting, SLO violations,
+//! utilization — the quantities every figure in the paper reports.
+
+use crate::util::stats;
+
+/// Outcome of one completed job.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub id: usize,
+    pub arrival: usize,
+    /// Slot in which the job finished (inclusive).
+    pub completion: usize,
+    /// Base-scale length, hours.
+    pub length_hours: f64,
+    /// Queue slack, hours.
+    pub slack_hours: f64,
+    /// Total energy attributed to the job, kWh.
+    pub energy_kwh: f64,
+    /// Total carbon attributed to the job, grams.
+    pub carbon_g: f64,
+    /// Number of rescale (checkpoint/restore) events.
+    pub rescales: usize,
+}
+
+impl JobOutcome {
+    /// Delay beyond the job's ideal base-scale completion, hours (≥ 0).
+    /// The paper's Fig. 6b/9b "delay"/"waiting time" metric.
+    pub fn delay_hours(&self) -> f64 {
+        let ideal = self.arrival as f64 + self.length_hours;
+        ((self.completion + 1) as f64 - ideal).max(0.0)
+    }
+
+    /// Did the job exceed its allowed slack? Consistent with the slot
+    /// window `[arrival, arrival + ceil(length + slack))` every policy
+    /// (and the oracle) schedules within: completing in the window's last
+    /// slot is on time.
+    pub fn violated_slo(&self) -> bool {
+        let deadline_slot = self.arrival + (self.length_hours + self.slack_hours).ceil() as usize;
+        self.completion + 1 > deadline_slot
+    }
+}
+
+/// Aggregate metrics for one policy run.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub policy: String,
+    /// Total operational carbon, grams CO₂eq.
+    pub carbon_g: f64,
+    /// Total energy, kWh.
+    pub energy_kwh: f64,
+    pub completed: usize,
+    /// Jobs still unfinished at horizon end (simulator runs past the horizon
+    /// until drain, so this is normally 0).
+    pub unfinished: usize,
+    pub mean_delay_hours: f64,
+    pub p95_delay_hours: f64,
+    pub violations: usize,
+    /// Mean cluster utilization (allocated / max capacity) over the horizon.
+    pub mean_utilization: f64,
+    /// Peak allocated servers.
+    pub peak_allocated: usize,
+    /// Total rescale events (checkpoint/restore cycles).
+    pub total_rescales: usize,
+    /// Slot at which the last job completed.
+    pub makespan: usize,
+}
+
+impl RunMetrics {
+    /// Build from job outcomes plus slot-level usage series.
+    pub fn from_outcomes(
+        policy: &str,
+        outcomes: &[JobOutcome],
+        unfinished: usize,
+        usage_per_slot: &[usize],
+        max_capacity: usize,
+        horizon: usize,
+    ) -> RunMetrics {
+        let delays: Vec<f64> = outcomes.iter().map(|o| o.delay_hours()).collect();
+        let carbon_g = outcomes.iter().map(|o| o.carbon_g).sum();
+        let energy_kwh = outcomes.iter().map(|o| o.energy_kwh).sum();
+        let violations = outcomes.iter().filter(|o| o.violated_slo()).count();
+        let horizon_usage = &usage_per_slot[..usage_per_slot.len().min(horizon)];
+        let mean_utilization = if horizon_usage.is_empty() || max_capacity == 0 {
+            0.0
+        } else {
+            horizon_usage.iter().map(|&u| u as f64).sum::<f64>()
+                / (max_capacity as f64 * horizon_usage.len() as f64)
+        };
+        RunMetrics {
+            policy: policy.to_string(),
+            carbon_g,
+            energy_kwh,
+            completed: outcomes.len(),
+            unfinished,
+            mean_delay_hours: stats::mean(&delays),
+            p95_delay_hours: if delays.is_empty() { 0.0 } else { stats::percentile(&delays, 95.0) },
+            violations,
+            mean_utilization,
+            peak_allocated: usage_per_slot.iter().copied().max().unwrap_or(0),
+            total_rescales: outcomes.iter().map(|o| o.rescales).sum(),
+            makespan: outcomes.iter().map(|o| o.completion).max().unwrap_or(0),
+        }
+    }
+
+    /// Carbon savings (%) relative to a baseline run (the carbon-agnostic
+    /// policy in every paper figure).
+    pub fn savings_vs(&self, baseline: &RunMetrics) -> f64 {
+        if baseline.carbon_g <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.carbon_g / baseline.carbon_g) * 100.0
+    }
+
+    /// Carbon in kilograms (reporting convenience).
+    pub fn carbon_kg(&self) -> f64 {
+        self.carbon_g / 1000.0
+    }
+
+    /// SLO violation rate among completed jobs.
+    pub fn violation_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.violations as f64 / self.completed as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(arrival: usize, completion: usize, length: f64, slack: f64) -> JobOutcome {
+        JobOutcome {
+            id: 0,
+            arrival,
+            completion,
+            length_hours: length,
+            slack_hours: slack,
+            energy_kwh: 1.0,
+            carbon_g: 100.0,
+            rescales: 1,
+        }
+    }
+
+    #[test]
+    fn delay_is_clamped_nonnegative() {
+        // Completed faster than base scale (elastic speedup) → delay 0.
+        let o = outcome(0, 1, 4.0, 6.0);
+        assert_eq!(o.delay_hours(), 0.0);
+    }
+
+    #[test]
+    fn delay_and_violation() {
+        // arrival 0, length 2h → ideal end at t=2; completion slot 9 → end 10.
+        let o = outcome(0, 9, 2.0, 6.0);
+        assert!((o.delay_hours() - 8.0).abs() < 1e-9);
+        assert!(o.violated_slo());
+        let ok = outcome(0, 7, 2.0, 6.0);
+        assert!(!ok.violated_slo());
+    }
+
+    #[test]
+    fn aggregate_metrics() {
+        let outcomes = vec![outcome(0, 3, 2.0, 6.0), outcome(1, 12, 2.0, 6.0)];
+        let usage = vec![2, 2, 1, 1, 0, 0];
+        let m = RunMetrics::from_outcomes("test", &outcomes, 0, &usage, 4, 6);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.violations, 1);
+        assert!((m.mean_utilization - 0.25).abs() < 1e-9);
+        assert_eq!(m.peak_allocated, 2);
+        assert_eq!(m.makespan, 12);
+        assert!((m.carbon_g - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn savings_math() {
+        let mut a = RunMetrics::from_outcomes("base", &[outcome(0, 3, 2.0, 6.0)], 0, &[1], 1, 1);
+        a.carbon_g = 1000.0;
+        let mut b = a.clone();
+        b.carbon_g = 425.0;
+        assert!((b.savings_vs(&a) - 57.5).abs() < 1e-9);
+        assert_eq!(a.savings_vs(&a), 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Cluster substrate: the slot-based simulator, energy/carbon accounting
+//! (Eq. 1–3), and run metrics.
+
+pub mod energy;
+pub mod metrics;
+pub mod sim;
+
+pub use energy::EnergyModel;
+pub use metrics::{JobOutcome, RunMetrics};
+pub use sim::{ClusterEngine, SimResult, Simulator, SlotRecord, RHO_IDLE};

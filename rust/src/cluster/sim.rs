@@ -1,0 +1,685 @@
+//! Slot-based cluster engine (the CarbonFlex-Simulator of paper §5).
+//!
+//! [`ClusterEngine`] owns the per-job runtime state and advances one slot at
+//! a time: admit arrivals, build the policy's [`SlotCtx`] view, apply its
+//! [`Decision`], enforce the invariants the prototype's Slurm substrate
+//! enforced (capacity cap, SLO force-run, checkpoint cost on rescale, boot
+//! lag energy on scale-up), advance job progress by each job's throughput
+//! profile, and integrate energy and carbon per Eq. 1–3.
+//!
+//! Two drivers share the engine: [`Simulator::run`] (batch: replay a whole
+//! trace until drain) and the live [`crate::coordinator`] service (jobs are
+//! submitted over a channel and slots tick in real or virtual time).
+
+use std::collections::VecDeque;
+
+use crate::carbon::forecast::Forecaster;
+use crate::cluster::energy::EnergyModel;
+use crate::cluster::metrics::{JobOutcome, RunMetrics};
+use crate::sched::{Decision, JobView, Policy, SlotCtx};
+use crate::workload::job::Job;
+
+/// Per-slot record of what the policy did — the raw material for the
+/// learning phase's `(STATE → m_t, ρ)` mappings (paper §4.2) and for
+/// plotting capacity curves.
+#[derive(Debug, Clone)]
+pub struct SlotRecord {
+    pub t: usize,
+    /// Carbon intensity this slot, g/kWh.
+    pub ci: f64,
+    /// Capacity the policy provisioned (after clamping to M).
+    pub provisioned: usize,
+    /// Servers actually allocated to jobs.
+    pub used: usize,
+    /// Implied scheduling threshold ρ: the smallest marginal throughput
+    /// among granted servers; 1.0 when only base allocations ran;
+    /// [`RHO_IDLE`] when jobs were queued but nothing ran.
+    pub rho: f64,
+    /// Active jobs per queue at decision time.
+    pub queue_lengths: Vec<usize>,
+    /// Mean elasticity of active jobs.
+    pub mean_elasticity: f64,
+    /// Energy consumed this slot, kWh (jobs only).
+    pub energy_kwh: f64,
+    /// Carbon emitted this slot, grams (jobs only).
+    pub carbon_g: f64,
+}
+
+/// Sentinel ρ recorded when the policy deliberately idled a non-empty queue
+/// (no marginal throughput qualifies: with `p ≤ 1`, a threshold above 1
+/// excludes every job).
+pub const RHO_IDLE: f64 = 1.01;
+
+/// Result of one simulation run.
+#[derive(Debug)]
+pub struct SimResult {
+    pub metrics: RunMetrics,
+    pub outcomes: Vec<JobOutcome>,
+    pub slots: Vec<SlotRecord>,
+    /// Cluster-level overheads (boot energy) folded into `metrics` totals.
+    pub overhead_energy_kwh: f64,
+    pub overhead_carbon_g: f64,
+}
+
+/// Engine configuration shared by the batch simulator and the coordinator.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    /// Maximum cluster capacity M.
+    pub max_capacity: usize,
+    pub energy: EnergyModel,
+    pub num_queues: usize,
+    /// Trace horizon in hours (utilization is reported over this window; the
+    /// run itself continues until drain).
+    pub horizon: usize,
+    /// Hard cap on extra drain slots after the horizon (guards against a
+    /// policy that never schedules).
+    pub max_drain_slots: usize,
+}
+
+/// Internal per-job runtime state.
+#[derive(Debug)]
+struct JobState {
+    remaining: f64,
+    prev_alloc: usize,
+    started: bool,
+    done: bool,
+    energy_kwh: f64,
+    carbon_g: f64,
+    rescales: usize,
+}
+
+/// The stepping core: job state + accounting, advanced one slot at a time.
+pub struct ClusterEngine {
+    cfg: Simulator,
+    jobs: Vec<Job>,
+    st: Vec<JobState>,
+    outcomes: Vec<JobOutcome>,
+    slots: Vec<SlotRecord>,
+    usage_per_slot: Vec<usize>,
+    prev_capacity: usize,
+    prev_used: usize,
+    overhead_energy: f64,
+    overhead_carbon: f64,
+    /// Completions in the trailing 24 slots: (slot, violated).
+    recent: VecDeque<(usize, bool)>,
+    active_jobs: usize,
+}
+
+impl ClusterEngine {
+    pub fn new(cfg: Simulator) -> Self {
+        let prev_capacity = cfg.max_capacity;
+        ClusterEngine {
+            cfg,
+            jobs: vec![],
+            st: vec![],
+            outcomes: vec![],
+            slots: vec![],
+            usage_per_slot: vec![],
+            prev_capacity,
+            prev_used: 0,
+            overhead_energy: 0.0,
+            overhead_carbon: 0.0,
+            recent: VecDeque::new(),
+            active_jobs: 0,
+        }
+    }
+
+    /// Register a job. `job.id` must equal its submission index.
+    pub fn add_job(&mut self, job: Job) {
+        assert_eq!(job.id, self.jobs.len(), "job ids must be dense submission indices");
+        self.jobs.push(job);
+        self.st.push(JobState {
+            remaining: self.jobs.last().unwrap().work(),
+            prev_alloc: 0,
+            started: false,
+            done: false,
+            energy_kwh: 0.0,
+            carbon_g: 0.0,
+            rescales: 0,
+        });
+        self.active_jobs += 1;
+    }
+
+    /// Jobs not yet completed (arrived or not).
+    pub fn pending_jobs(&self) -> usize {
+        self.active_jobs
+    }
+
+    pub fn outcomes(&self) -> &[JobOutcome] {
+        &self.outcomes
+    }
+
+    pub fn slots(&self) -> &[SlotRecord] {
+        &self.slots
+    }
+
+    /// Advance one slot. Returns the slot record.
+    pub fn step(&mut self, t: usize, forecaster: &Forecaster, policy: &mut dyn Policy) -> &SlotRecord {
+        let n = self.jobs.len();
+        let active: Vec<usize> =
+            (0..n).filter(|&i| !self.st[i].done && self.jobs[i].arrival <= t).collect();
+
+        if active.is_empty() {
+            self.prev_used = 0;
+            self.usage_per_slot.push(0);
+            self.slots.push(SlotRecord {
+                t,
+                ci: forecaster.truth().at(t),
+                provisioned: 0,
+                used: 0,
+                rho: 1.0,
+                queue_lengths: vec![0; self.cfg.num_queues],
+                mean_elasticity: 0.0,
+                energy_kwh: 0.0,
+                carbon_g: 0.0,
+            });
+            return self.slots.last().unwrap();
+        }
+
+        while let Some(&(ct, _)) = self.recent.front() {
+            if ct + 24 <= t {
+                self.recent.pop_front();
+            } else {
+                break;
+            }
+        }
+        let recent_violation_rate = if self.recent.is_empty() {
+            0.0
+        } else {
+            self.recent.iter().filter(|(_, v)| *v).count() as f64 / self.recent.len() as f64
+        };
+
+        let views: Vec<JobView> = active
+            .iter()
+            .map(|&i| {
+                let jv = JobView {
+                    job: &self.jobs[i],
+                    remaining: self.st[i].remaining,
+                    prev_alloc: self.st[i].prev_alloc,
+                    overdue: false,
+                };
+                let overdue = jv.slack_left(t) <= 0.0;
+                JobView { overdue, ..jv }
+            })
+            .collect();
+
+        let ctx = SlotCtx {
+            t,
+            jobs: &views,
+            forecaster,
+            max_capacity: self.cfg.max_capacity,
+            num_queues: self.cfg.num_queues,
+            prev_capacity: self.prev_capacity,
+            prev_used: self.prev_used,
+            recent_violation_rate,
+        };
+        let queue_lengths = ctx.queue_lengths();
+        let mean_elasticity = ctx.mean_elasticity();
+        let decision = policy.decide(&ctx);
+
+        let (provisioned, alloc) = sanitize(self.cfg.max_capacity, &decision, &views);
+
+        // --- Advance jobs ---
+        let ci = forecaster.truth().at(t);
+        let mut slot_energy = 0.0f64;
+        let mut slot_carbon = 0.0f64;
+        let mut used = 0usize;
+        let mut rho: f64 = f64::INFINITY;
+        let mut any_ran = false;
+
+        for (idx, &i) in active.iter().enumerate() {
+            let k = alloc[idx];
+            let s = &mut self.st[i];
+            let job = &self.jobs[i];
+            if k == 0 {
+                // Suspension of a running job is a checkpoint event.
+                if s.prev_alloc > 0 {
+                    s.rescales += 1;
+                }
+                s.prev_alloc = 0;
+                continue;
+            }
+            any_ran = true;
+            used += k;
+            rho = rho.min(job.marginal(k));
+
+            let rate = job.rate(k);
+            let mut penalty = 0.0;
+            if s.started && s.prev_alloc != k && s.prev_alloc > 0 {
+                s.rescales += 1;
+                penalty = self.cfg.energy.ckpt_progress_penalty(rate);
+            }
+            s.started = true;
+            let progress = (rate - penalty).max(0.0);
+            let (fraction, finished) = if s.remaining <= progress {
+                ((s.remaining + penalty) / rate, true)
+            } else {
+                (1.0, false)
+            };
+            let e = self.cfg.energy.job_energy_kwh(job, k, fraction.min(1.0));
+            s.energy_kwh += e;
+            s.carbon_g += e * ci;
+            slot_energy += e;
+            slot_carbon += e * ci;
+
+            if finished {
+                s.remaining = 0.0;
+                s.done = true;
+                s.prev_alloc = 0;
+                self.active_jobs -= 1;
+                let outcome = JobOutcome {
+                    id: job.id,
+                    arrival: job.arrival,
+                    completion: t,
+                    length_hours: job.length_hours,
+                    slack_hours: job.slack_hours,
+                    energy_kwh: s.energy_kwh,
+                    carbon_g: s.carbon_g,
+                    rescales: s.rescales,
+                };
+                self.recent.push_back((t, outcome.violated_slo()));
+                policy.on_complete(job.id, t);
+                self.outcomes.push(outcome);
+            } else {
+                s.remaining -= progress;
+                s.prev_alloc = k;
+            }
+        }
+
+        // Boot energy for newly provisioned servers (3–5 min lag, §6.8).
+        if provisioned > self.prev_capacity {
+            let boot = self.cfg.energy.boot_energy_kwh(provisioned - self.prev_capacity);
+            self.overhead_energy += boot;
+            self.overhead_carbon += boot * ci;
+        }
+        self.prev_capacity = provisioned;
+        self.prev_used = used;
+
+        let rho = if any_ran {
+            rho
+        } else if views.is_empty() {
+            1.0
+        } else {
+            RHO_IDLE
+        };
+
+        self.usage_per_slot.push(used);
+        self.slots.push(SlotRecord {
+            t,
+            ci,
+            provisioned,
+            used,
+            rho,
+            queue_lengths,
+            mean_elasticity,
+            energy_kwh: slot_energy,
+            carbon_g: slot_carbon,
+        });
+        self.slots.last().unwrap()
+    }
+
+    /// Finalize into a [`SimResult`].
+    pub fn finish(self, policy_name: &str) -> SimResult {
+        let unfinished = self.st.iter().filter(|s| !s.done).count();
+        let mut metrics = RunMetrics::from_outcomes(
+            policy_name,
+            &self.outcomes,
+            unfinished,
+            &self.usage_per_slot,
+            self.cfg.max_capacity,
+            self.cfg.horizon,
+        );
+        metrics.energy_kwh += self.overhead_energy;
+        metrics.carbon_g += self.overhead_carbon;
+        SimResult {
+            metrics,
+            outcomes: self.outcomes,
+            slots: self.slots,
+            overhead_energy_kwh: self.overhead_energy,
+            overhead_carbon_g: self.overhead_carbon,
+        }
+    }
+}
+
+/// Enforce engine invariants on a raw decision:
+/// 1. `m_t ≤ M`;
+/// 2. every allocation within the job's `[k_min, k_max]`;
+/// 3. overdue jobs are force-run at ≥ k_min (paper: run-to-completion once
+///    slack is exhausted), even past `m_t`, but never past M;
+/// 4. total allocation fits within `max(m_t, forced)`, trimming the
+///    lowest-marginal servers first (scaled servers before suspensions).
+///
+/// Returns (provisioned, per-active-job allocation aligned with `views`).
+fn sanitize(max_capacity: usize, decision: &Decision, views: &[JobView]) -> (usize, Vec<usize>) {
+    let provisioned = decision.capacity.min(max_capacity);
+    let mut alloc = vec![0usize; views.len()];
+    // id → view index map (§Perf: a linear scan per allocation made this
+    // O(n²) per slot and dominated oracle replays).
+    let index_of: std::collections::HashMap<usize, usize> =
+        views.iter().enumerate().map(|(i, v)| (v.job.id, i)).collect();
+    for &(id, k) in &decision.alloc {
+        if let Some(&idx) = index_of.get(&id) {
+            if k > 0 {
+                alloc[idx] = k.clamp(views[idx].job.k_min, views[idx].job.k_max);
+            }
+        }
+    }
+    // Force-run overdue jobs.
+    for (idx, v) in views.iter().enumerate() {
+        if v.overdue && alloc[idx] == 0 {
+            alloc[idx] = v.job.k_min;
+        }
+    }
+    let forced: usize =
+        views.iter().enumerate().filter(|(_, v)| v.overdue).map(|(i, _)| alloc[i]).sum();
+    let budget = provisioned.max(forced).min(max_capacity);
+
+    // Trim until the allocation fits the budget.
+    let mut total: usize = alloc.iter().sum();
+    while total > budget {
+        // Victim: the allocated top server with the lowest marginal
+        // throughput. Prefer shrinking scaled jobs; suspend non-overdue base
+        // allocations only if nothing is scaled; never shrink an overdue job
+        // below k_min.
+        let mut best: Option<(usize, f64, bool)> = None; // (idx, marginal, is_base)
+        for (idx, v) in views.iter().enumerate() {
+            let k = alloc[idx];
+            if k == 0 {
+                continue;
+            }
+            let is_base = k == v.job.k_min;
+            if is_base && v.overdue {
+                continue; // untouchable
+            }
+            let m = v.job.marginal(k);
+            let candidate = (idx, m, is_base);
+            best = match best {
+                None => Some(candidate),
+                Some((_, bm, bbase)) => {
+                    // Prefer non-base victims; among same class, lowest marginal.
+                    if (is_base, m) < (bbase, bm) {
+                        Some(candidate)
+                    } else {
+                        best
+                    }
+                }
+            };
+        }
+        match best {
+            Some((idx, _, is_base)) => {
+                if is_base {
+                    total -= alloc[idx];
+                    alloc[idx] = 0;
+                } else {
+                    alloc[idx] -= 1;
+                    total -= 1;
+                }
+            }
+            None => break, // only overdue base allocations remain
+        }
+    }
+    // M is a hard physical limit: if overdue base allocations alone exceed
+    // it, defer the ones with the latest deadlines (they are already late;
+    // capacity simply does not exist).
+    while total > max_capacity {
+        let victim = views
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| alloc[*i] > 0)
+            .max_by_key(|(_, v)| v.job.deadline_slot());
+        match victim {
+            Some((idx, _)) => {
+                total -= alloc[idx];
+                alloc[idx] = 0;
+            }
+            None => break,
+        }
+    }
+    (provisioned, alloc)
+}
+
+impl Simulator {
+    pub fn new(max_capacity: usize, energy: EnergyModel, num_queues: usize, horizon: usize) -> Self {
+        Simulator { max_capacity, energy, num_queues, horizon, max_drain_slots: 4096 }
+    }
+
+    /// Batch driver: run `policy` over `jobs` until every job drains.
+    pub fn run(&self, jobs: &[Job], forecaster: &Forecaster, policy: &mut dyn Policy) -> SimResult {
+        let mut engine = ClusterEngine::new(self.clone());
+        for job in jobs {
+            engine.add_job(job.clone());
+        }
+        let last_arrival = jobs.iter().map(|j| j.arrival).max().unwrap_or(0);
+        let t_end = last_arrival + self.horizon + self.max_drain_slots;
+        let mut t = 0usize;
+        while engine.pending_jobs() > 0 && t < t_end {
+            engine.step(t, forecaster, policy);
+            t += 1;
+        }
+        engine.finish(policy.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::trace::CarbonTrace;
+    use crate::config::Hardware;
+    use crate::workload::profile::ScalingProfile;
+
+    fn flat_forecaster(hours: usize, ci: f64) -> Forecaster {
+        Forecaster::perfect(CarbonTrace::new("flat", vec![ci; hours]))
+    }
+
+    fn job(id: usize, arrival: usize, length: f64, slack: f64, k_max: usize) -> Job {
+        Job {
+            id,
+            workload: "N-body(N=100k)",
+            workload_idx: 0,
+            arrival,
+            length_hours: length,
+            queue: 0,
+            slack_hours: slack,
+            k_min: 1,
+            k_max,
+            profile: ScalingProfile::from_comm_ratio(0.02, k_max),
+            watts_per_unit: 40.0,
+        }
+    }
+
+    fn sim(cap: usize, horizon: usize) -> Simulator {
+        Simulator::new(cap, EnergyModel::for_hardware(Hardware::Cpu), 3, horizon)
+    }
+
+    /// Policy: run everything at k_min, full capacity.
+    struct RunAll;
+    impl Policy for RunAll {
+        fn name(&self) -> &'static str {
+            "run-all"
+        }
+        fn decide(&mut self, ctx: &SlotCtx) -> Decision {
+            Decision {
+                capacity: ctx.max_capacity,
+                alloc: ctx.jobs.iter().map(|v| (v.job.id, v.job.k_min)).collect(),
+            }
+        }
+    }
+
+    /// Policy: never schedule anything (tests force-run).
+    struct NeverRun;
+    impl Policy for NeverRun {
+        fn name(&self) -> &'static str {
+            "never"
+        }
+        fn decide(&mut self, _ctx: &SlotCtx) -> Decision {
+            Decision { capacity: 0, alloc: vec![] }
+        }
+    }
+
+    /// Policy: scale everything to the max.
+    struct ScaleAll;
+    impl Policy for ScaleAll {
+        fn name(&self) -> &'static str {
+            "scale-all"
+        }
+        fn decide(&mut self, ctx: &SlotCtx) -> Decision {
+            Decision {
+                capacity: ctx.max_capacity,
+                alloc: ctx.jobs.iter().map(|v| (v.job.id, v.job.k_max)).collect(),
+            }
+        }
+    }
+
+    #[test]
+    fn single_job_runs_to_completion() {
+        let jobs = vec![job(0, 0, 3.0, 6.0, 4)];
+        let f = flat_forecaster(100, 100.0);
+        let r = sim(10, 24).run(&jobs, &f, &mut RunAll);
+        assert_eq!(r.metrics.completed, 1);
+        assert_eq!(r.metrics.unfinished, 0);
+        // 3 hours at 40 W = 0.12 kWh → 12 g at CI 100.
+        assert!((r.metrics.energy_kwh - 0.12).abs() < 1e-6, "{}", r.metrics.energy_kwh);
+        assert!((r.metrics.carbon_g - 12.0).abs() < 1e-4);
+        assert_eq!(r.outcomes[0].completion, 2);
+        assert_eq!(r.outcomes[0].rescales, 0);
+    }
+
+    #[test]
+    fn never_run_policy_is_forced_at_deadline() {
+        let jobs = vec![job(0, 0, 2.0, 3.0, 4)];
+        let f = flat_forecaster(100, 100.0);
+        let r = sim(10, 24).run(&jobs, &f, &mut NeverRun);
+        assert_eq!(r.metrics.completed, 1);
+        let o = &r.outcomes[0];
+        // deadline slot = 0 + ceil(2+3) = 5; forced when slack_left ≤ 0
+        // (t=3: 5−3−2=0) → runs slots 3,4 → completes at 4, inside SLO.
+        assert_eq!(o.completion, 4);
+        assert!(!o.violated_slo());
+    }
+
+    #[test]
+    fn scaling_speeds_up_completion() {
+        let jobs = vec![job(0, 0, 4.0, 6.0, 4)];
+        let f = flat_forecaster(100, 100.0);
+        let base = sim(10, 24).run(&jobs, &f, &mut RunAll);
+        let scaled = sim(10, 24).run(&jobs, &f, &mut ScaleAll);
+        assert!(scaled.outcomes[0].completion < base.outcomes[0].completion);
+        // Scaling uses more energy (sub-linear throughput).
+        assert!(scaled.metrics.energy_kwh > base.metrics.energy_kwh);
+    }
+
+    #[test]
+    fn capacity_cap_is_enforced() {
+        // 5 jobs, capacity 3, all want k_min=1 → at most 3 run per slot.
+        let jobs: Vec<Job> = (0..5).map(|i| job(i, 0, 2.0, 24.0, 4)).collect();
+        let f = flat_forecaster(200, 100.0);
+        let r = sim(3, 48).run(&jobs, &f, &mut RunAll);
+        assert_eq!(r.metrics.completed, 5);
+        assert!(r.slots.iter().all(|s| s.used <= 3), "capacity exceeded");
+    }
+
+    #[test]
+    fn trimming_prefers_scaled_servers() {
+        // 2 jobs want k=4 each, capacity 5 → trim to fit; both should keep
+        // at least k_min.
+        let jobs: Vec<Job> = (0..2).map(|i| job(i, 0, 4.0, 24.0, 4)).collect();
+        let f = flat_forecaster(200, 100.0);
+        let r = sim(5, 48).run(&jobs, &f, &mut ScaleAll);
+        let first = &r.slots[0];
+        assert!(first.used <= 5);
+        assert!(first.used >= 2, "both jobs should run at least base scale");
+    }
+
+    #[test]
+    fn rescale_counted_and_penalized() {
+        struct Flip(bool);
+        impl Policy for Flip {
+            fn name(&self) -> &'static str {
+                "flip"
+            }
+            fn decide(&mut self, ctx: &SlotCtx) -> Decision {
+                self.0 = !self.0;
+                let k = if self.0 { 1 } else { 4 };
+                Decision {
+                    capacity: ctx.max_capacity,
+                    alloc: ctx.jobs.iter().map(|v| (v.job.id, k)).collect(),
+                }
+            }
+        }
+        let jobs = vec![job(0, 0, 6.0, 24.0, 4)];
+        let f = flat_forecaster(200, 100.0);
+        let r = sim(10, 48).run(&jobs, &f, &mut Flip(false));
+        assert!(r.outcomes[0].rescales >= 2, "rescales {}", r.outcomes[0].rescales);
+    }
+
+    #[test]
+    fn slot_records_capture_rho() {
+        let jobs = vec![job(0, 0, 2.0, 6.0, 4)];
+        let f = flat_forecaster(100, 100.0);
+        let r = sim(10, 24).run(&jobs, &f, &mut ScaleAll);
+        // Scaled to k=4 → rho = marginal(4) < 1.
+        assert!(r.slots[0].rho < 1.0);
+        let r2 = sim(10, 24).run(&jobs, &f, &mut RunAll);
+        assert_eq!(r2.slots[0].rho, 1.0);
+        // NeverRun with queued jobs → RHO_IDLE until forced.
+        let r3 = sim(10, 24).run(&jobs, &f, &mut NeverRun);
+        assert_eq!(r3.slots[0].rho, RHO_IDLE);
+    }
+
+    #[test]
+    fn arrivals_respected() {
+        let jobs = vec![job(0, 5, 2.0, 6.0, 4)];
+        let f = flat_forecaster(100, 100.0);
+        let r = sim(10, 24).run(&jobs, &f, &mut RunAll);
+        assert!(r.slots[..5].iter().all(|s| s.used == 0));
+        assert_eq!(r.outcomes[0].completion, 6);
+    }
+
+    #[test]
+    fn queue_lengths_in_slot_records() {
+        let mut j0 = job(0, 0, 2.0, 6.0, 4);
+        j0.queue = 0;
+        let mut j1 = job(1, 0, 2.0, 6.0, 4);
+        j1.queue = 2;
+        let f = flat_forecaster(100, 100.0);
+        let r = sim(10, 24).run(&[j0, j1], &f, &mut RunAll);
+        assert_eq!(r.slots[0].queue_lengths, vec![1, 0, 1]);
+    }
+
+    #[test]
+    fn partial_final_slot_energy() {
+        // 1.5 h job at k_min: second slot only half-charged.
+        let jobs = vec![job(0, 0, 1.5, 6.0, 4)];
+        let f = flat_forecaster(100, 100.0);
+        let r = sim(10, 24).run(&jobs, &f, &mut RunAll);
+        assert!((r.metrics.energy_kwh - 0.06).abs() < 1e-6, "{}", r.metrics.energy_kwh);
+    }
+
+    #[test]
+    fn drain_cap_prevents_infinite_loop() {
+        let mut s = sim(10, 24);
+        s.max_drain_slots = 8;
+        let jobs = vec![job(0, 0, 2.0, 1e6, 4)];
+        let f = flat_forecaster(100, 100.0);
+        let r = s.run(&jobs, &f, &mut NeverRun);
+        assert_eq!(r.metrics.unfinished, 1);
+    }
+
+    #[test]
+    fn engine_incremental_submission() {
+        // Coordinator-style use: submit mid-run.
+        let f = flat_forecaster(50, 100.0);
+        let mut engine = ClusterEngine::new(sim(10, 24));
+        engine.add_job(job(0, 0, 2.0, 6.0, 4));
+        let mut policy = RunAll;
+        engine.step(0, &f, &mut policy);
+        let mut late = job(1, 0, 2.0, 6.0, 4);
+        late.arrival = 2;
+        engine.add_job(late);
+        for t in 1..10 {
+            engine.step(t, &f, &mut policy);
+        }
+        let r = engine.finish("run-all");
+        assert_eq!(r.metrics.completed, 2);
+    }
+}

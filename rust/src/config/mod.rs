@@ -1,0 +1,10 @@
+//! Configuration system: a TOML-subset parser plus the typed
+//! [`schema::ExperimentConfig`] every launcher entrypoint consumes.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{
+    default_queues, ConfigError, ElasticityScenario, ExperimentConfig, Hardware, QueueConfig,
+    TraceFamily,
+};

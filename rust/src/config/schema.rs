@@ -1,0 +1,477 @@
+//! Typed experiment configuration extracted from TOML.
+//!
+//! A config file fully pins an experiment: the cluster (capacity, hardware
+//! class), the carbon region, the workload trace family and its knobs, the
+//! queue/slack setup, the policy under test, and the RNG seed. Every figure
+//! in `configs/` is one of these plus a sweep axis.
+
+use std::path::Path;
+
+use crate::config::toml::{self, Value};
+
+/// Configuration error.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io error reading config: {0}")]
+    Io(#[from] std::io::Error),
+    #[error(transparent)]
+    Parse(#[from] toml::TomlError),
+    #[error("config field '{0}': {1}")]
+    Field(String, String),
+}
+
+fn field_err(field: &str, msg: impl Into<String>) -> ConfigError {
+    ConfigError::Field(field.to_string(), msg.into())
+}
+
+/// Hardware class of the homogeneous cluster (paper §6.1: C8 CPU / G6 GPU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hardware {
+    Cpu,
+    Gpu,
+}
+
+impl Hardware {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s.to_ascii_lowercase().as_str() {
+            "cpu" => Ok(Hardware::Cpu),
+            "gpu" => Ok(Hardware::Gpu),
+            other => Err(field_err("cluster.hardware", format!("unknown hardware '{other}'"))),
+        }
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Hardware::Cpu => "cpu",
+            Hardware::Gpu => "gpu",
+        }
+    }
+}
+
+/// Workload trace family (paper §6.1: Azure, Alibaba-PAI, SURF Lisa).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFamily {
+    AzureLike,
+    AlibabaLike,
+    SurfLike,
+}
+
+impl TraceFamily {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s.to_ascii_lowercase().as_str() {
+            "azure" | "azure-like" => Ok(TraceFamily::AzureLike),
+            "alibaba" | "alibaba-like" | "pai" => Ok(TraceFamily::AlibabaLike),
+            "surf" | "surf-like" | "lisa" => Ok(TraceFamily::SurfLike),
+            other => Err(field_err("workload.trace", format!("unknown trace family '{other}'"))),
+        }
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TraceFamily::AzureLike => "azure",
+            TraceFamily::AlibabaLike => "alibaba",
+            TraceFamily::SurfLike => "surf",
+        }
+    }
+}
+
+/// Elasticity scenario (Fig. 10): which profiles jobs draw.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElasticityScenario {
+    /// Random assignment from the Table 3 catalog (the paper's default).
+    Mix,
+    /// All jobs highly scalable.
+    High,
+    /// All jobs moderately scalable.
+    Moderate,
+    /// All jobs poorly scalable.
+    Low,
+    /// Jobs cannot scale (k_min == k_max); provisioning-only benefits.
+    NoScaling,
+}
+
+impl ElasticityScenario {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s.to_ascii_lowercase().as_str() {
+            "mix" => Ok(Self::Mix),
+            "high" => Ok(Self::High),
+            "moderate" => Ok(Self::Moderate),
+            "low" => Ok(Self::Low),
+            "noscaling" | "no-scaling" | "none" => Ok(Self::NoScaling),
+            other => Err(field_err("workload.elasticity", format!("unknown scenario '{other}'"))),
+        }
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Mix => "mix",
+            Self::High => "high",
+            Self::Moderate => "moderate",
+            Self::Low => "low",
+            Self::NoScaling => "noscaling",
+        }
+    }
+}
+
+/// A submission queue: jobs with base-length in `(min_len, max_len]` hours get
+/// slack `delay_hours` (paper default: short ≤2h → 6h, medium ≤12h → 24h,
+/// long → 48h).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueueConfig {
+    pub name: String,
+    pub max_len_hours: f64,
+    pub delay_hours: f64,
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    /// Maximum allowed cluster capacity M (servers).
+    pub capacity: usize,
+    pub hardware: Hardware,
+    /// Carbon region key (see `carbon::synth::Region`).
+    pub region: String,
+    pub trace: TraceFamily,
+    pub elasticity: ElasticityScenario,
+    /// Target mean utilization used to scale arrival rate (paper: ~50%).
+    pub target_utilization: f64,
+    /// Evaluation horizon in hours (paper: one week = 168).
+    pub horizon_hours: usize,
+    /// Historical learning window in hours (paper: two weeks).
+    pub history_hours: usize,
+    /// Extra replay offsets for the learning phase (paper: multiple start times).
+    pub replay_offsets: usize,
+    pub queues: Vec<QueueConfig>,
+    /// Arrival-rate multiplier for distribution-shift studies (Fig. 13).
+    pub arrival_scale: f64,
+    /// Job-length multiplier for distribution-shift studies (Fig. 13).
+    pub length_scale: f64,
+    /// Override every queue's slack with this many hours (Fig. 9 sweeps).
+    pub uniform_delay_hours: Option<f64>,
+    /// k=5 nearest neighbours for the CBR match (paper §5).
+    pub knn_k: usize,
+    /// Alg. 2 fallback knobs: violation tolerance ε and distance bound δ.
+    pub violation_tolerance: f64,
+    pub distance_bound: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            seed: 42,
+            capacity: 150,
+            hardware: Hardware::Cpu,
+            region: "south-australia".into(),
+            trace: TraceFamily::AzureLike,
+            elasticity: ElasticityScenario::Mix,
+            target_utilization: 0.5,
+            horizon_hours: 168,
+            history_hours: 336,
+            replay_offsets: 8,
+            queues: default_queues(),
+            arrival_scale: 1.0,
+            length_scale: 1.0,
+            uniform_delay_hours: None,
+            knn_k: 5,
+            violation_tolerance: 0.2,
+            distance_bound: 1.5,
+        }
+    }
+}
+
+/// The paper's three length-based queues (§6.1).
+pub fn default_queues() -> Vec<QueueConfig> {
+    vec![
+        QueueConfig { name: "short".into(), max_len_hours: 2.0, delay_hours: 6.0 },
+        QueueConfig { name: "medium".into(), max_len_hours: 12.0, delay_hours: 24.0 },
+        QueueConfig { name: "long".into(), max_len_hours: f64::INFINITY, delay_hours: 48.0 },
+    ]
+}
+
+impl ExperimentConfig {
+    /// Load and validate from a TOML file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, ConfigError> {
+        let src = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&src)
+    }
+
+    /// Parse from TOML source. Missing fields take defaults; present fields
+    /// are validated.
+    pub fn from_toml_str(src: &str) -> Result<Self, ConfigError> {
+        let root = toml::parse(src)?;
+        let mut cfg = ExperimentConfig::default();
+
+        if let Some(v) = root.get_path("experiment.name") {
+            cfg.name = req_str(v, "experiment.name")?.to_string();
+        }
+        if let Some(v) = root.get_path("experiment.seed") {
+            cfg.seed = req_int(v, "experiment.seed")? as u64;
+        }
+        if let Some(v) = root.get_path("experiment.horizon_hours") {
+            cfg.horizon_hours = pos_usize(v, "experiment.horizon_hours")?;
+        }
+        if let Some(v) = root.get_path("experiment.history_hours") {
+            cfg.history_hours = pos_usize(v, "experiment.history_hours")?;
+        }
+        if let Some(v) = root.get_path("experiment.replay_offsets") {
+            cfg.replay_offsets = pos_usize(v, "experiment.replay_offsets")?;
+        }
+        if let Some(v) = root.get_path("cluster.capacity") {
+            cfg.capacity = pos_usize(v, "cluster.capacity")?;
+        }
+        if let Some(v) = root.get_path("cluster.hardware") {
+            cfg.hardware = Hardware::parse(req_str(v, "cluster.hardware")?)?;
+        }
+        if let Some(v) = root.get_path("cluster.region") {
+            cfg.region = req_str(v, "cluster.region")?.to_string();
+        }
+        if let Some(v) = root.get_path("workload.trace") {
+            cfg.trace = TraceFamily::parse(req_str(v, "workload.trace")?)?;
+        }
+        if let Some(v) = root.get_path("workload.elasticity") {
+            cfg.elasticity = ElasticityScenario::parse(req_str(v, "workload.elasticity")?)?;
+        }
+        if let Some(v) = root.get_path("workload.target_utilization") {
+            cfg.target_utilization = unit_f64(v, "workload.target_utilization")?;
+        }
+        if let Some(v) = root.get_path("workload.arrival_scale") {
+            cfg.arrival_scale = pos_f64(v, "workload.arrival_scale")?;
+        }
+        if let Some(v) = root.get_path("workload.length_scale") {
+            cfg.length_scale = pos_f64(v, "workload.length_scale")?;
+        }
+        if let Some(v) = root.get_path("scheduler.uniform_delay_hours") {
+            cfg.uniform_delay_hours = Some(nonneg_f64(v, "scheduler.uniform_delay_hours")?);
+        }
+        if let Some(v) = root.get_path("scheduler.knn_k") {
+            cfg.knn_k = pos_usize(v, "scheduler.knn_k")?;
+        }
+        if let Some(v) = root.get_path("scheduler.violation_tolerance") {
+            cfg.violation_tolerance = unit_f64(v, "scheduler.violation_tolerance")?;
+        }
+        if let Some(v) = root.get_path("scheduler.distance_bound") {
+            cfg.distance_bound = pos_f64(v, "scheduler.distance_bound")?;
+        }
+        if let Some(v) = root.get("queue") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| field_err("queue", "expected array of [[queue]] tables"))?;
+            let mut queues = Vec::new();
+            for (i, q) in arr.iter().enumerate() {
+                let name = q
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| field_err(&format!("queue[{i}].name"), "missing string"))?
+                    .to_string();
+                let max_len_hours = match q.get("max_len_hours") {
+                    Some(v) => pos_f64(v, &format!("queue[{i}].max_len_hours"))?,
+                    None => f64::INFINITY,
+                };
+                let delay_hours = nonneg_f64(
+                    q.get("delay_hours")
+                        .ok_or_else(|| field_err(&format!("queue[{i}].delay_hours"), "missing"))?,
+                    &format!("queue[{i}].delay_hours"),
+                )?;
+                queues.push(QueueConfig { name, max_len_hours, delay_hours });
+            }
+            if queues.is_empty() {
+                return Err(field_err("queue", "at least one queue required"));
+            }
+            cfg.queues = queues;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Structural validation beyond per-field checks.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.capacity == 0 {
+            return Err(field_err("cluster.capacity", "must be > 0"));
+        }
+        if self.horizon_hours < 24 {
+            return Err(field_err("experiment.horizon_hours", "must be >= 24"));
+        }
+        if self.history_hours < self.horizon_hours {
+            return Err(field_err(
+                "experiment.history_hours",
+                "history window must be >= evaluation horizon",
+            ));
+        }
+        let mut prev = 0.0;
+        for q in &self.queues {
+            if q.max_len_hours <= prev {
+                return Err(field_err(
+                    "queue",
+                    "queues must have strictly increasing max_len_hours",
+                ));
+            }
+            prev = q.max_len_hours;
+        }
+        if !self.queues.last().map(|q| q.max_len_hours.is_infinite()).unwrap_or(false) {
+            return Err(field_err("queue", "last queue must be unbounded (omit max_len_hours)"));
+        }
+        Ok(())
+    }
+
+    /// Slack (hours) for a job of base length `len_hours`, honoring the
+    /// uniform-delay override used by the Fig. 9 sweep.
+    pub fn slack_for_length(&self, len_hours: f64) -> f64 {
+        if let Some(d) = self.uniform_delay_hours {
+            return d;
+        }
+        for q in &self.queues {
+            if len_hours <= q.max_len_hours {
+                return q.delay_hours;
+            }
+        }
+        self.queues.last().map(|q| q.delay_hours).unwrap_or(0.0)
+    }
+
+    /// Index of the queue a job of this length lands in.
+    pub fn queue_for_length(&self, len_hours: f64) -> usize {
+        for (i, q) in self.queues.iter().enumerate() {
+            if len_hours <= q.max_len_hours {
+                return i;
+            }
+        }
+        self.queues.len() - 1
+    }
+}
+
+fn req_str<'a>(v: &'a Value, field: &str) -> Result<&'a str, ConfigError> {
+    v.as_str().ok_or_else(|| field_err(field, "expected string"))
+}
+fn req_int(v: &Value, field: &str) -> Result<i64, ConfigError> {
+    v.as_int().ok_or_else(|| field_err(field, "expected integer"))
+}
+fn pos_usize(v: &Value, field: &str) -> Result<usize, ConfigError> {
+    let i = req_int(v, field)?;
+    if i <= 0 {
+        return Err(field_err(field, "must be positive"));
+    }
+    Ok(i as usize)
+}
+fn pos_f64(v: &Value, field: &str) -> Result<f64, ConfigError> {
+    let f = v.as_f64().ok_or_else(|| field_err(field, "expected number"))?;
+    if f <= 0.0 {
+        return Err(field_err(field, "must be positive"));
+    }
+    Ok(f)
+}
+fn nonneg_f64(v: &Value, field: &str) -> Result<f64, ConfigError> {
+    let f = v.as_f64().ok_or_else(|| field_err(field, "expected number"))?;
+    if f < 0.0 {
+        return Err(field_err(field, "must be non-negative"));
+    }
+    Ok(f)
+}
+fn unit_f64(v: &Value, field: &str) -> Result<f64, ConfigError> {
+    let f = v.as_f64().ok_or_else(|| field_err(field, "expected number"))?;
+    if !(0.0..=1.0).contains(&f) {
+        return Err(field_err(field, "must be in [0, 1]"));
+    }
+    Ok(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[experiment]
+name = "fig6-cpu"
+seed = 7
+horizon_hours = 168
+history_hours = 336
+
+[cluster]
+capacity = 150
+hardware = "cpu"
+region = "south-australia"
+
+[workload]
+trace = "azure"
+elasticity = "mix"
+target_utilization = 0.5
+
+[[queue]]
+name = "short"
+max_len_hours = 2.0
+delay_hours = 6.0
+
+[[queue]]
+name = "medium"
+max_len_hours = 12.0
+delay_hours = 24.0
+
+[[queue]]
+name = "long"
+delay_hours = 48.0
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let cfg = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(cfg.name, "fig6-cpu");
+        assert_eq!(cfg.capacity, 150);
+        assert_eq!(cfg.hardware, Hardware::Cpu);
+        assert_eq!(cfg.queues.len(), 3);
+        assert!(cfg.queues[2].max_len_hours.is_infinite());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cfg = ExperimentConfig::from_toml_str("").unwrap();
+        assert_eq!(cfg.capacity, 150);
+        assert_eq!(cfg.knn_k, 5);
+        assert_eq!(cfg.queues.len(), 3);
+    }
+
+    #[test]
+    fn queue_routing() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.queue_for_length(1.0), 0);
+        assert_eq!(cfg.queue_for_length(5.0), 1);
+        assert_eq!(cfg.queue_for_length(100.0), 2);
+        assert_eq!(cfg.slack_for_length(1.0), 6.0);
+        assert_eq!(cfg.slack_for_length(100.0), 48.0);
+    }
+
+    #[test]
+    fn uniform_delay_override() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.uniform_delay_hours = Some(12.0);
+        assert_eq!(cfg.slack_for_length(0.5), 12.0);
+        assert_eq!(cfg.slack_for_length(99.0), 12.0);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ExperimentConfig::from_toml_str("[cluster]\ncapacity = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[cluster]\nhardware = \"tpu\"\n").is_err());
+        assert!(ExperimentConfig::from_toml_str(
+            "[workload]\ntarget_utilization = 1.5\n"
+        )
+        .is_err());
+        // horizon > history
+        assert!(ExperimentConfig::from_toml_str(
+            "[experiment]\nhorizon_hours = 500\nhistory_hours = 100\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_unordered_queues() {
+        let bad = r#"
+[[queue]]
+name = "a"
+max_len_hours = 12.0
+delay_hours = 6.0
+[[queue]]
+name = "b"
+max_len_hours = 2.0
+delay_hours = 24.0
+"#;
+        assert!(ExperimentConfig::from_toml_str(bad).is_err());
+    }
+}

@@ -1,0 +1,393 @@
+//! TOML-subset parser (no `toml`/`serde` crates offline).
+//!
+//! Supports the subset CarbonFlex's config files use:
+//! - `[table]` and dotted `[table.sub]` headers
+//! - `[[array-of-tables]]` headers
+//! - `key = value` with basic strings (`"..."`), integers, floats, booleans,
+//!   and homogeneous arrays `[v1, v2, ...]` (nesting allowed)
+//! - `#` comments and blank lines
+//!
+//! Values parse into [`Value`]; [`Value::get_path`] provides dotted lookup.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Numeric coercion: ints widen to f64.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_table().and_then(|t| t.get(key))
+    }
+    /// Dotted-path lookup, e.g. `get_path("cluster.capacity")`.
+    pub fn get_path(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, TomlError> {
+    Err(TomlError { line, msg: msg.into() })
+}
+
+/// Parse a TOML document into a root table.
+pub fn parse(src: &str) -> Result<Value, TomlError> {
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    // Path of the currently-open table ([] = root).
+    let mut current: Vec<String> = Vec::new();
+
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix("[[").and_then(|l| l.strip_suffix("]]")) {
+            // Array-of-tables: append a fresh table to the array at `inner`.
+            let path: Vec<String> = inner.split('.').map(|p| p.trim().to_string()).collect();
+            if path.iter().any(|p| p.is_empty()) {
+                return err(lineno, "empty table name");
+            }
+            let arr = ensure_array(&mut root, &path, lineno)?;
+            arr.push(Value::Table(BTreeMap::new()));
+            // The traversal in `insert`/`ensure_table` resolves an array
+            // segment to its most recently opened table, so the plain path
+            // addresses the new element.
+            current = path;
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            let path: Vec<String> = inner.split('.').map(|p| p.trim().to_string()).collect();
+            if path.iter().any(|p| p.is_empty()) {
+                return err(lineno, "empty table name");
+            }
+            ensure_table(&mut root, &path, lineno)?;
+            current = path;
+        } else if let Some(eq) = find_eq(line) {
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return err(lineno, "empty key");
+            }
+            let vsrc = line[eq + 1..].trim();
+            let value = parse_value(vsrc, lineno)?;
+            insert(&mut root, &current, key, value, lineno)?;
+        } else {
+            return err(lineno, format!("unrecognized line: '{line}'"));
+        }
+    }
+    Ok(Value::Table(root))
+}
+
+/// Find the `=` separating key from value, ignoring any inside quotes.
+fn find_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Value>, TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur.entry(part.clone()).or_insert_with(|| Value::Table(BTreeMap::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            Value::Arr(a) => match a.last_mut() {
+                Some(Value::Table(t)) => t,
+                _ => return err(lineno, format!("'{part}' is not a table")),
+            },
+            _ => return err(lineno, format!("'{part}' is not a table")),
+        };
+    }
+    Ok(cur)
+}
+
+fn ensure_array<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut Vec<Value>, TomlError> {
+    let (last, prefix) = path.split_last().unwrap();
+    let parent = ensure_table(root, prefix, lineno)?;
+    let entry = parent.entry(last.clone()).or_insert_with(|| Value::Arr(vec![]));
+    match entry {
+        Value::Arr(a) => Ok(a),
+        _ => err(lineno, format!("'{last}' is not an array of tables")),
+    }
+}
+
+fn insert(
+    root: &mut BTreeMap<String, Value>,
+    current: &[String],
+    key: &str,
+    value: Value,
+    lineno: usize,
+) -> Result<(), TomlError> {
+    // Resolve the current table, traversing synthetic array indices.
+    let mut cur: &mut BTreeMap<String, Value> = root;
+    for part in current {
+        let next = match cur.get_mut(part.as_str()) {
+            Some(v) => v,
+            None => return err(lineno, format!("missing table '{part}'")),
+        };
+        cur = match next {
+            Value::Table(t) => t,
+            // An array segment addresses its most recently opened table.
+            Value::Arr(a) => match a.last_mut() {
+                Some(Value::Table(t)) => t,
+                _ => return err(lineno, format!("'{part}' has no open table")),
+            },
+            _ => return err(lineno, format!("'{part}' is not a table")),
+        };
+    }
+    if cur.contains_key(key) {
+        return err(lineno, format!("duplicate key '{key}'"));
+    }
+    cur.insert(key.to_string(), value);
+    Ok(())
+}
+
+fn parse_value(src: &str, lineno: usize) -> Result<Value, TomlError> {
+    let src = src.trim();
+    if src.is_empty() {
+        return err(lineno, "missing value");
+    }
+    if let Some(rest) = src.strip_prefix('"') {
+        let Some(end) = rest.find('"') else { return err(lineno, "unterminated string") };
+        if !rest[end + 1..].trim().is_empty() {
+            return err(lineno, "trailing characters after string");
+        }
+        return Ok(Value::Str(rest[..end].to_string()));
+    }
+    if src == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if src == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if src.starts_with('[') {
+        return parse_array(src, lineno);
+    }
+    // Number: int if no '.', 'e' or 'E'.
+    let clean = src.replace('_', "");
+    if !clean.contains('.') && !clean.contains(['e', 'E']) {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    err(lineno, format!("cannot parse value '{src}'"))
+}
+
+fn parse_array(src: &str, lineno: usize) -> Result<Value, TomlError> {
+    // Split top-level commas, respecting nested brackets and strings.
+    let inner = src
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| TomlError { line: lineno, msg: "unterminated array".into() })?;
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                let piece = inner[start..i].trim();
+                if !piece.is_empty() {
+                    items.push(parse_value(piece, lineno)?);
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let piece = inner[start..].trim();
+    if !piece.is_empty() {
+        items.push(parse_value(piece, lineno)?);
+    }
+    Ok(Value::Arr(items))
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Arr(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Value::Table(t) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in t.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k} = {v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_keys() {
+        let v = parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_int(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get("c").unwrap().as_str(), Some("hi"));
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn tables_and_dotted() {
+        let src = "[cluster]\ncapacity = 150\n[cluster.power]\nwatts = 100.0\n";
+        let v = parse(src).unwrap();
+        assert_eq!(v.get_path("cluster.capacity").unwrap().as_int(), Some(150));
+        assert_eq!(v.get_path("cluster.power.watts").unwrap().as_f64(), Some(100.0));
+    }
+
+    #[test]
+    fn arrays() {
+        let v = parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nnested = [[1, 2], [3]]\n").unwrap();
+        assert_eq!(v.get("xs").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("ys").unwrap().as_arr().unwrap()[1].as_str(), Some("b"));
+        let nested = v.get("nested").unwrap().as_arr().unwrap();
+        assert_eq!(nested[0].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let src = "[[queue]]\nname = \"short\"\ndelay = 6\n[[queue]]\nname = \"long\"\ndelay = 48\n";
+        let v = parse(src).unwrap();
+        let queues = v.get("queue").unwrap().as_arr().unwrap();
+        assert_eq!(queues.len(), 2);
+        assert_eq!(queues[0].get("name").unwrap().as_str(), Some("short"));
+        assert_eq!(queues[1].get("delay").unwrap().as_int(), Some(48));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let src = "# header\n\na = 1 # trailing\ns = \"with # inside\"\n";
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("a").unwrap().as_int(), Some(1));
+        assert_eq!(v.get("s").unwrap().as_str(), Some("with # inside"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let v = parse("big = 1_000_000\n").unwrap();
+        assert_eq!(v.get("big").unwrap().as_int(), Some(1_000_000));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("= 1\n").is_err());
+        assert!(parse("a = \n").is_err());
+        assert!(parse("a = 1\na = 2\n").is_err());
+        assert!(parse("??\n").is_err());
+        assert!(parse("a = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn negative_and_exp_numbers() {
+        let v = parse("a = -5\nb = -2.5\nc = 1e-3\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_int(), Some(-5));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(-2.5));
+        assert_eq!(v.get("c").unwrap().as_f64(), Some(0.001));
+    }
+}

@@ -1,0 +1,217 @@
+//! Coordinator request/response types and their JSON line codec.
+//!
+//! The coordinator speaks a newline-delimited JSON protocol so external
+//! clients (and the `serve` CLI subcommand) can submit jobs and poll status
+//! without linking the library. The codec is built on `util::json` (no
+//! serde offline).
+
+use crate::util::json::{self, Json};
+
+/// A job submission as it arrives over the API: the user picks a workload
+/// from the catalog and a queue (paper §3: "users submit their batch jobs to
+/// a specific queue according to their willingness to delay").
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitRequest {
+    /// Catalog workload name (e.g. "ResNet18").
+    pub workload: String,
+    /// Base-scale length in hours.
+    pub length_hours: f64,
+    /// Queue index (0 = shortest slack).
+    pub queue: usize,
+}
+
+/// Requests accepted by the coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Submit(SubmitRequest),
+    /// Advance one slot (virtual time).
+    Tick,
+    /// Current cluster status.
+    Status,
+    /// Finish all work and return the final report.
+    Drain,
+}
+
+/// Responses produced by the coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatusResponse {
+    pub slot: usize,
+    pub active_jobs: usize,
+    pub completed: usize,
+    pub provisioned: usize,
+    pub used: usize,
+    pub carbon_g: f64,
+    pub energy_kwh: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Submitted { job_id: usize },
+    Ticked { slot: usize },
+    Status(StatusResponse),
+    Drained { completed: usize, carbon_g: f64, mean_delay_hours: f64 },
+    Error { message: String },
+}
+
+impl Request {
+    pub fn to_json_line(&self) -> String {
+        let v = match self {
+            Request::Submit(s) => Json::obj(vec![
+                ("op", Json::Str("submit".into())),
+                ("workload", Json::Str(s.workload.clone())),
+                ("length_hours", Json::Num(s.length_hours)),
+                ("queue", Json::Num(s.queue as f64)),
+            ]),
+            Request::Tick => Json::obj(vec![("op", Json::Str("tick".into()))]),
+            Request::Status => Json::obj(vec![("op", Json::Str("status".into()))]),
+            Request::Drain => Json::obj(vec![("op", Json::Str("drain".into()))]),
+        };
+        v.to_string()
+    }
+
+    pub fn from_json_line(line: &str) -> Result<Request, String> {
+        let v = json::parse(line.trim()).map_err(|e| e.to_string())?;
+        let op = v.get("op").and_then(Json::as_str).ok_or("missing 'op'")?;
+        match op {
+            "submit" => Ok(Request::Submit(SubmitRequest {
+                workload: v
+                    .get("workload")
+                    .and_then(Json::as_str)
+                    .ok_or("missing 'workload'")?
+                    .to_string(),
+                length_hours: v
+                    .get("length_hours")
+                    .and_then(Json::as_f64)
+                    .ok_or("missing 'length_hours'")?,
+                queue: v.get("queue").and_then(Json::as_usize).unwrap_or(0),
+            })),
+            "tick" => Ok(Request::Tick),
+            "status" => Ok(Request::Status),
+            "drain" => Ok(Request::Drain),
+            other => Err(format!("unknown op '{other}'")),
+        }
+    }
+}
+
+impl Response {
+    pub fn to_json_line(&self) -> String {
+        let v = match self {
+            Response::Submitted { job_id } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("job_id", Json::Num(*job_id as f64)),
+            ]),
+            Response::Ticked { slot } => {
+                Json::obj(vec![("ok", Json::Bool(true)), ("slot", Json::Num(*slot as f64))])
+            }
+            Response::Status(s) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("slot", Json::Num(s.slot as f64)),
+                ("active_jobs", Json::Num(s.active_jobs as f64)),
+                ("completed", Json::Num(s.completed as f64)),
+                ("provisioned", Json::Num(s.provisioned as f64)),
+                ("used", Json::Num(s.used as f64)),
+                ("carbon_g", Json::Num(s.carbon_g)),
+                ("energy_kwh", Json::Num(s.energy_kwh)),
+            ]),
+            Response::Drained { completed, carbon_g, mean_delay_hours } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("completed", Json::Num(*completed as f64)),
+                ("carbon_g", Json::Num(*carbon_g)),
+                ("mean_delay_hours", Json::Num(*mean_delay_hours)),
+            ]),
+            Response::Error { message } => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(message.clone())),
+            ]),
+        };
+        v.to_string()
+    }
+
+    pub fn from_json_line(line: &str) -> Result<Response, String> {
+        let v = json::parse(line.trim()).map_err(|e| e.to_string())?;
+        let ok = v.get("ok").and_then(Json::as_bool).ok_or("missing 'ok'")?;
+        if !ok {
+            return Ok(Response::Error {
+                message: v.get("error").and_then(Json::as_str).unwrap_or("?").to_string(),
+            });
+        }
+        if let Some(id) = v.get("job_id").and_then(Json::as_usize) {
+            return Ok(Response::Submitted { job_id: id });
+        }
+        if v.get("active_jobs").is_some() {
+            return Ok(Response::Status(StatusResponse {
+                slot: v.get("slot").and_then(Json::as_usize).unwrap_or(0),
+                active_jobs: v.get("active_jobs").and_then(Json::as_usize).unwrap_or(0),
+                completed: v.get("completed").and_then(Json::as_usize).unwrap_or(0),
+                provisioned: v.get("provisioned").and_then(Json::as_usize).unwrap_or(0),
+                used: v.get("used").and_then(Json::as_usize).unwrap_or(0),
+                carbon_g: v.get("carbon_g").and_then(Json::as_f64).unwrap_or(0.0),
+                energy_kwh: v.get("energy_kwh").and_then(Json::as_f64).unwrap_or(0.0),
+            }));
+        }
+        if v.get("mean_delay_hours").is_some() {
+            return Ok(Response::Drained {
+                completed: v.get("completed").and_then(Json::as_usize).unwrap_or(0),
+                carbon_g: v.get("carbon_g").and_then(Json::as_f64).unwrap_or(0.0),
+                mean_delay_hours: v.get("mean_delay_hours").and_then(Json::as_f64).unwrap_or(0.0),
+            });
+        }
+        if let Some(slot) = v.get("slot").and_then(Json::as_usize) {
+            return Ok(Response::Ticked { slot });
+        }
+        Err("unrecognized response".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = vec![
+            Request::Submit(SubmitRequest {
+                workload: "ResNet18".into(),
+                length_hours: 4.5,
+                queue: 1,
+            }),
+            Request::Tick,
+            Request::Status,
+            Request::Drain,
+        ];
+        for r in reqs {
+            let line = r.to_json_line();
+            assert_eq!(Request::from_json_line(&line).unwrap(), r, "{line}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resps = vec![
+            Response::Submitted { job_id: 42 },
+            Response::Ticked { slot: 7 },
+            Response::Status(StatusResponse {
+                slot: 3,
+                active_jobs: 5,
+                completed: 2,
+                provisioned: 100,
+                used: 80,
+                carbon_g: 123.5,
+                energy_kwh: 4.25,
+            }),
+            Response::Drained { completed: 10, carbon_g: 500.0, mean_delay_hours: 2.5 },
+            Response::Error { message: "nope".into() },
+        ];
+        for r in resps {
+            let line = r.to_json_line();
+            assert_eq!(Response::from_json_line(&line).unwrap(), r, "{line}");
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Request::from_json_line("{}").is_err());
+        assert!(Request::from_json_line("not json").is_err());
+        assert!(Request::from_json_line(r#"{"op": "fly"}"#).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! The coordinator service: a leader thread owning the cluster engine and a
+//! policy, with a channel-based submission/status API and a JSON line codec
+//! for external clients.
+
+pub mod api;
+pub mod server;
+
+pub use api::{Request, Response, StatusResponse, SubmitRequest};
+pub use server::{ClusterHandle, Coordinator, CoordinatorConfig};

@@ -1,0 +1,263 @@
+//! The coordinator leader: a long-running service that owns the cluster
+//! engine and a scheduling policy, accepts job submissions over a channel,
+//! and advances slots in virtual time.
+//!
+//! This is the deployment shape of the paper's prototype (§5): AWS
+//! ParallelCluster + PySlurm replaced by our in-process cluster engine, with
+//! the same separation — the policy decides, the engine actuates. The
+//! leader runs on a dedicated thread (no tokio offline); clients hold a
+//! cheap [`ClusterHandle`] of mpsc senders.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::carbon::forecast::Forecaster;
+use crate::cluster::metrics::RunMetrics;
+use crate::cluster::sim::{ClusterEngine, Simulator};
+use crate::config::Hardware;
+use crate::coordinator::api::{Request, Response, StatusResponse, SubmitRequest};
+use crate::sched::Policy;
+use crate::workload::job::Job;
+use crate::workload::profile;
+
+/// Message envelope: request + reply channel.
+struct Envelope {
+    req: Request,
+    reply: mpsc::Sender<Response>,
+}
+
+/// Client handle to a running coordinator.
+#[derive(Clone)]
+pub struct ClusterHandle {
+    tx: mpsc::Sender<Envelope>,
+}
+
+/// A running coordinator (leader thread).
+pub struct Coordinator {
+    handle: Option<JoinHandle<RunMetrics>>,
+    tx: mpsc::Sender<Envelope>,
+}
+
+/// Coordinator configuration.
+pub struct CoordinatorConfig {
+    pub max_capacity: usize,
+    pub hardware: Hardware,
+    pub num_queues: usize,
+    /// Per-queue slack hours indexed by queue.
+    pub queue_slack_hours: Vec<f64>,
+    pub horizon: usize,
+}
+
+impl Coordinator {
+    /// Start the leader thread.
+    pub fn start(
+        cfg: CoordinatorConfig,
+        forecaster: Forecaster,
+        policy: Box<dyn Policy + Send>,
+    ) -> Coordinator {
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let handle = std::thread::spawn(move || leader_loop(cfg, forecaster, policy, rx));
+        Coordinator { handle: Some(handle), tx }
+    }
+
+    pub fn handle(&self) -> ClusterHandle {
+        ClusterHandle { tx: self.tx.clone() }
+    }
+
+    /// Drain all jobs, stop the leader, and return the final metrics.
+    pub fn shutdown(mut self) -> RunMetrics {
+        let h = self.handle();
+        let _ = h.request(Request::Drain);
+        drop(self.tx);
+        self.handle.take().expect("shutdown called once").join().expect("leader panicked")
+    }
+}
+
+impl ClusterHandle {
+    /// Send a request and wait for the reply.
+    pub fn request(&self, req: Request) -> Response {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if self.tx.send(Envelope { req, reply: reply_tx }).is_err() {
+            return Response::Error { message: "coordinator stopped".into() };
+        }
+        reply_rx.recv().unwrap_or(Response::Error { message: "coordinator stopped".into() })
+    }
+
+    pub fn submit(&self, workload: &str, length_hours: f64, queue: usize) -> Result<usize, String> {
+        match self.request(Request::Submit(SubmitRequest {
+            workload: workload.to_string(),
+            length_hours,
+            queue,
+        })) {
+            Response::Submitted { job_id } => Ok(job_id),
+            Response::Error { message } => Err(message),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
+    pub fn tick(&self) -> Result<usize, String> {
+        match self.request(Request::Tick) {
+            Response::Ticked { slot } => Ok(slot),
+            Response::Error { message } => Err(message),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
+    pub fn status(&self) -> Result<StatusResponse, String> {
+        match self.request(Request::Status) {
+            Response::Status(s) => Ok(s),
+            Response::Error { message } => Err(message),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+}
+
+fn leader_loop(
+    cfg: CoordinatorConfig,
+    forecaster: Forecaster,
+    mut policy: Box<dyn Policy + Send>,
+    rx: mpsc::Receiver<Envelope>,
+) -> RunMetrics {
+    let catalog = profile::catalog_for(cfg.hardware);
+    let k_max = profile::default_k_max(cfg.hardware);
+    let sim = Simulator::new(
+        cfg.max_capacity,
+        crate::cluster::energy::EnergyModel::for_hardware(cfg.hardware),
+        cfg.num_queues,
+        cfg.horizon,
+    );
+    let mut engine = ClusterEngine::new(sim);
+    let mut slot = 0usize;
+    let mut next_id = 0usize;
+    let mut drained = false;
+
+    while let Ok(Envelope { req, reply }) = rx.recv() {
+        let resp = match req {
+            Request::Submit(s) => match catalog.iter().position(|w| w.name == s.workload) {
+                None => Response::Error { message: format!("unknown workload '{}'", s.workload) },
+                Some(widx) if s.length_hours <= 0.0 => {
+                    let _ = widx;
+                    Response::Error { message: "length_hours must be positive".into() }
+                }
+                Some(widx) => {
+                    let spec = &catalog[widx];
+                    let queue = s.queue.min(cfg.num_queues.saturating_sub(1));
+                    let job = Job {
+                        id: next_id,
+                        workload: spec.name,
+                        workload_idx: widx,
+                        arrival: slot,
+                        length_hours: s.length_hours,
+                        queue,
+                        slack_hours: cfg.queue_slack_hours.get(queue).copied().unwrap_or(24.0),
+                        k_min: 1,
+                        k_max,
+                        profile: spec.profile(k_max),
+                        watts_per_unit: spec.watts_per_unit,
+                    };
+                    engine.add_job(job);
+                    next_id += 1;
+                    Response::Submitted { job_id: next_id - 1 }
+                }
+            },
+            Request::Tick => {
+                engine.step(slot, &forecaster, policy.as_mut());
+                slot += 1;
+                Response::Ticked { slot }
+            }
+            Request::Status => {
+                let last = engine.slots().last();
+                Response::Status(StatusResponse {
+                    slot,
+                    active_jobs: engine.pending_jobs(),
+                    completed: engine.outcomes().len(),
+                    provisioned: last.map(|s| s.provisioned).unwrap_or(0),
+                    used: last.map(|s| s.used).unwrap_or(0),
+                    carbon_g: engine.outcomes().iter().map(|o| o.carbon_g).sum(),
+                    energy_kwh: engine.outcomes().iter().map(|o| o.energy_kwh).sum(),
+                })
+            }
+            Request::Drain => {
+                let mut guard = 0usize;
+                while engine.pending_jobs() > 0 && guard < 100_000 {
+                    engine.step(slot, &forecaster, policy.as_mut());
+                    slot += 1;
+                    guard += 1;
+                }
+                drained = true;
+                let delays: Vec<f64> =
+                    engine.outcomes().iter().map(|o| o.delay_hours()).collect();
+                Response::Drained {
+                    completed: engine.outcomes().len(),
+                    carbon_g: engine.outcomes().iter().map(|o| o.carbon_g).sum(),
+                    mean_delay_hours: crate::util::stats::mean(&delays),
+                }
+            }
+        };
+        let _ = reply.send(resp);
+        if drained {
+            break;
+        }
+    }
+    engine.finish(policy.name()).metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::trace::CarbonTrace;
+    use crate::sched::carbon_agnostic::CarbonAgnostic;
+
+    fn start_coordinator() -> Coordinator {
+        let trace = CarbonTrace::new("flat", vec![100.0; 500]);
+        Coordinator::start(
+            CoordinatorConfig {
+                max_capacity: 10,
+                hardware: Hardware::Cpu,
+                num_queues: 3,
+                queue_slack_hours: vec![6.0, 24.0, 48.0],
+                horizon: 100,
+            },
+            Forecaster::perfect(trace),
+            Box::new(CarbonAgnostic),
+        )
+    }
+
+    #[test]
+    fn submit_tick_status_drain() {
+        let coord = start_coordinator();
+        let h = coord.handle();
+        let id0 = h.submit("N-body(N=100k)", 2.0, 0).unwrap();
+        let id1 = h.submit("Jacobi(N=1k)", 3.0, 1).unwrap();
+        assert_eq!((id0, id1), (0, 1));
+        assert_eq!(h.tick().unwrap(), 1);
+        let s = h.status().unwrap();
+        assert_eq!(s.slot, 1);
+        assert_eq!(s.used, 2);
+        let metrics = coord.shutdown();
+        assert_eq!(metrics.completed, 2);
+        assert_eq!(metrics.unfinished, 0);
+        assert!(metrics.carbon_g > 0.0);
+    }
+
+    #[test]
+    fn unknown_workload_rejected() {
+        let coord = start_coordinator();
+        let h = coord.handle();
+        assert!(h.submit("NotAWorkload", 2.0, 0).is_err());
+        assert!(h.submit("N-body(N=100k)", -1.0, 0).is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn late_submission_after_ticks() {
+        let coord = start_coordinator();
+        let h = coord.handle();
+        h.tick().unwrap();
+        h.tick().unwrap();
+        let id = h.submit("Heat(N=1k)", 1.0, 0).unwrap();
+        assert_eq!(id, 0);
+        let metrics = coord.shutdown();
+        assert_eq!(metrics.completed, 1);
+    }
+}

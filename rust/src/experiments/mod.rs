@@ -1,0 +1,13 @@
+//! Experiment drivers — one per figure/table in the paper's evaluation
+//! (§6). Each driver builds traces + jobs from an [`ExperimentConfig`], runs
+//! the requested policies, and returns paper-shaped rows. The `benches/`
+//! binaries and the CLI `experiment` subcommand are thin wrappers over
+//! these.
+
+pub mod figures;
+pub mod forecast_noise;
+pub mod runner;
+pub mod spatial;
+pub mod yearlong;
+
+pub use runner::{run_policies, run_policy, ExperimentRow, PreparedExperiment};

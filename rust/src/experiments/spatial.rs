@@ -1,0 +1,300 @@
+//! Spatial-shifting extension (the paper's §8 future work: "distributed
+//! cluster settings"; §2.1 motivates spatial as well as temporal shifting).
+//!
+//! A geo-dispatcher owns one cluster per region and routes each job at
+//! arrival; every regional cluster then schedules locally with its own
+//! policy. This composes the existing substrates — per-region carbon
+//! traces, the [`ClusterEngine`], and the CarbonFlex learning loop — into
+//! a multi-region deployment, quantifying how much spatial freedom adds on
+//! top of CarbonFlex's temporal/elastic savings.
+
+use crate::carbon::forecast::Forecaster;
+use crate::carbon::synth::Region;
+use crate::cluster::energy::EnergyModel;
+use crate::cluster::metrics::RunMetrics;
+use crate::cluster::sim::{ClusterEngine, Simulator};
+use crate::config::ExperimentConfig;
+use crate::experiments::runner::PreparedExperiment;
+use crate::sched::{Policy, PolicyKind};
+use crate::workload::job::Job;
+use crate::workload::tracegen;
+
+/// How the dispatcher picks a region for an arriving job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchStrategy {
+    /// Round-robin — the carbon-agnostic baseline for spatial decisions.
+    RoundRobin,
+    /// Route to the region with the lowest *current* carbon intensity.
+    LowestCurrentCi,
+    /// Route to the region whose forecast is cleanest over the job's
+    /// expected window (arrival → deadline), weighted by base length.
+    LowestWindowCi,
+}
+
+impl DispatchStrategy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DispatchStrategy::RoundRobin => "round-robin",
+            DispatchStrategy::LowestCurrentCi => "lowest-current-CI",
+            DispatchStrategy::LowestWindowCi => "lowest-window-CI",
+        }
+    }
+}
+
+/// Result of one multi-region run.
+#[derive(Debug)]
+pub struct SpatialResult {
+    pub strategy: DispatchStrategy,
+    /// Local (per-cluster) scheduling policy used everywhere.
+    pub local_policy: PolicyKind,
+    /// Summed metrics across regions.
+    pub carbon_g: f64,
+    pub completed: usize,
+    pub unfinished: usize,
+    pub mean_delay_hours: f64,
+    /// Jobs routed to each region.
+    pub jobs_per_region: Vec<usize>,
+}
+
+/// One regional cluster: engine + forecaster + local policy.
+struct RegionalCluster {
+    engine: ClusterEngine,
+    forecaster: Forecaster,
+    policy: Box<dyn Policy>,
+    next_id: usize,
+}
+
+/// Run a multi-region deployment: `regions.len()` clusters of
+/// `cfg.capacity / regions.len()` servers each, one shared arrival stream.
+pub fn run_spatial(
+    cfg: &ExperimentConfig,
+    regions: &[Region],
+    strategy: DispatchStrategy,
+    local_policy: PolicyKind,
+) -> SpatialResult {
+    assert!(!regions.is_empty());
+    let per_region_capacity = (cfg.capacity / regions.len()).max(1);
+    let horizon = cfg.horizon_hours;
+    let energy = EnergyModel::for_hardware(cfg.hardware);
+
+    // Build the regional clusters (each with its own trace and, for
+    // CarbonFlex, its own locally learned knowledge base).
+    let mut clusters: Vec<RegionalCluster> = regions
+        .iter()
+        .map(|&region| {
+            let mut rcfg = cfg.clone();
+            rcfg.region = region.key().to_string();
+            rcfg.capacity = per_region_capacity;
+            let mut prep = PreparedExperiment::prepare(&rcfg);
+            let policy: Box<dyn Policy> = match local_policy {
+                PolicyKind::CarbonFlex => prep.build_policy(PolicyKind::CarbonFlex),
+                other => {
+                    // Non-learning policies don't need the prep history.
+                    prep.build_policy(other)
+                }
+            };
+            let sim = Simulator::new(per_region_capacity, energy.clone(), cfg.queues.len(), horizon);
+            RegionalCluster {
+                engine: ClusterEngine::new(sim),
+                forecaster: Forecaster::perfect(prep.eval_trace.clone()),
+                policy,
+                next_id: 0,
+            }
+        })
+        .collect();
+
+    // One global arrival stream sized for the aggregate capacity.
+    let jobs = tracegen::generate(cfg, horizon, cfg.seed ^ 0x5EA7);
+    let mut jobs_per_region = vec![0usize; regions.len()];
+    let mut rr = 0usize;
+
+    // Dispatch + step in lockstep.
+    let mut by_arrival: Vec<&Job> = jobs.iter().collect();
+    by_arrival.sort_by_key(|j| j.arrival);
+    let mut next_job = 0usize;
+    let last_arrival = by_arrival.last().map(|j| j.arrival).unwrap_or(0);
+    let t_end = last_arrival + horizon + 4096;
+
+    for t in 0..t_end {
+        // Route this slot's arrivals.
+        while next_job < by_arrival.len() && by_arrival[next_job].arrival == t {
+            let job = by_arrival[next_job];
+            let r = match strategy {
+                DispatchStrategy::RoundRobin => {
+                    rr = (rr + 1) % clusters.len();
+                    rr
+                }
+                DispatchStrategy::LowestCurrentCi => clusters
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| {
+                        a.forecaster.predict(t).partial_cmp(&b.forecaster.predict(t)).unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap(),
+                DispatchStrategy::LowestWindowCi => {
+                    let window = (job.length_hours + job.slack_hours).ceil() as usize;
+                    clusters
+                        .iter()
+                        .enumerate()
+                        .min_by(|(_, a), (_, b)| {
+                            let ma = mean_of(&a.forecaster.predict_window(t, window));
+                            let mb = mean_of(&b.forecaster.predict_window(t, window));
+                            ma.partial_cmp(&mb).unwrap()
+                        })
+                        .map(|(i, _)| i)
+                        .unwrap()
+                }
+            };
+            let c = &mut clusters[r];
+            // Re-id within the destination cluster (engines need dense ids).
+            let local = Job { id: c.next_id, arrival: t, ..job.clone() };
+            c.next_id += 1;
+            c.engine.add_job(local);
+            jobs_per_region[r] += 1;
+            next_job += 1;
+        }
+        // Advance every region one slot.
+        let mut any_pending = next_job < by_arrival.len();
+        for c in clusters.iter_mut() {
+            if c.engine.pending_jobs() > 0 {
+                c.engine.step(t, &c.forecaster, c.policy.as_mut());
+                any_pending = true;
+            }
+        }
+        if !any_pending {
+            break;
+        }
+    }
+
+    // Aggregate.
+    let metrics: Vec<RunMetrics> = clusters
+        .into_iter()
+        .map(|c| c.engine.finish("regional").metrics)
+        .collect();
+    let completed = metrics.iter().map(|m| m.completed).sum();
+    let delay_weighted: f64 =
+        metrics.iter().map(|m| m.mean_delay_hours * m.completed as f64).sum();
+    SpatialResult {
+        strategy,
+        local_policy,
+        carbon_g: metrics.iter().map(|m| m.carbon_g).sum(),
+        completed,
+        unfinished: metrics.iter().map(|m| m.unfinished).sum(),
+        mean_delay_hours: if completed == 0 { 0.0 } else { delay_weighted / completed as f64 },
+        jobs_per_region,
+    }
+}
+
+fn mean_of(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Print the spatial comparison table (used by the bench and CLI).
+pub fn print_spatial(cfg: &ExperimentConfig) {
+    use crate::util::bench::Table;
+    let regions = [Region::SouthAustralia, Region::California, Region::GreatBritain];
+    println!(
+        "\n== Extension: spatial shifting across {} regions ({} servers each) ==",
+        regions.len(),
+        cfg.capacity / regions.len()
+    );
+    let mut t = Table::new(&[
+        "dispatch",
+        "local policy",
+        "carbon (kg)",
+        "savings %",
+        "mean delay (h)",
+        "jobs/region",
+    ]);
+    let combos = [
+        (DispatchStrategy::RoundRobin, PolicyKind::CarbonAgnostic),
+        (DispatchStrategy::LowestCurrentCi, PolicyKind::CarbonAgnostic),
+        (DispatchStrategy::LowestWindowCi, PolicyKind::CarbonAgnostic),
+        (DispatchStrategy::RoundRobin, PolicyKind::CarbonFlex),
+        (DispatchStrategy::LowestWindowCi, PolicyKind::CarbonFlex),
+    ];
+    let mut baseline = None;
+    for (strategy, local) in combos {
+        let r = run_spatial(cfg, &regions, strategy, local);
+        let base = *baseline.get_or_insert(r.carbon_g);
+        t.row(&[
+            strategy.as_str().to_string(),
+            local.as_str().to_string(),
+            format!("{:.2}", r.carbon_g / 1000.0),
+            format!("{:.1}", (1.0 - r.carbon_g / base) * 100.0),
+            format!("{:.2}", r.mean_delay_hours),
+            format!("{:?}", r.jobs_per_region),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 30; // 10 per region
+        cfg.horizon_hours = 72;
+        cfg.history_hours = 120;
+        cfg.replay_offsets = 1;
+        cfg
+    }
+
+    const REGIONS: [Region; 3] = [Region::SouthAustralia, Region::California, Region::Virginia];
+
+    #[test]
+    fn all_jobs_complete_under_every_strategy() {
+        for strategy in [
+            DispatchStrategy::RoundRobin,
+            DispatchStrategy::LowestCurrentCi,
+            DispatchStrategy::LowestWindowCi,
+        ] {
+            let r = run_spatial(&cfg(), &REGIONS, strategy, PolicyKind::CarbonAgnostic);
+            assert_eq!(r.unfinished, 0, "{strategy:?}");
+            assert!(r.completed > 0);
+            assert_eq!(r.jobs_per_region.iter().sum::<usize>(), r.completed);
+        }
+    }
+
+    #[test]
+    fn carbon_aware_dispatch_beats_round_robin() {
+        let rr = run_spatial(&cfg(), &REGIONS, DispatchStrategy::RoundRobin, PolicyKind::CarbonAgnostic);
+        let geo = run_spatial(&cfg(), &REGIONS, DispatchStrategy::LowestWindowCi, PolicyKind::CarbonAgnostic);
+        assert!(
+            geo.carbon_g < rr.carbon_g * 0.95,
+            "geo {} vs rr {}",
+            geo.carbon_g,
+            rr.carbon_g
+        );
+        // The dirty region (Virginia) should receive the fewest jobs.
+        assert!(geo.jobs_per_region[2] < geo.jobs_per_region[0]);
+    }
+
+    #[test]
+    fn spatial_and_temporal_compose_vs_baseline() {
+        // CarbonFlex locally + geo dispatch must clearly beat the fully
+        // carbon-agnostic deployment (round-robin + FCFS). Note it does
+        // NOT always beat geo + agnostic: carbon-aware dispatch skews each
+        // region's load away from the distribution its knowledge base was
+        // learned on — an interaction worth reporting, not hiding (see the
+        // spatial_shifting bench output).
+        let baseline =
+            run_spatial(&cfg(), &REGIONS, DispatchStrategy::RoundRobin, PolicyKind::CarbonAgnostic);
+        let both =
+            run_spatial(&cfg(), &REGIONS, DispatchStrategy::LowestWindowCi, PolicyKind::CarbonFlex);
+        assert!(
+            both.carbon_g < baseline.carbon_g * 0.9,
+            "both {} vs baseline {}",
+            both.carbon_g,
+            baseline.carbon_g
+        );
+        assert_eq!(both.unfinished, 0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Year-long continuous-learning evaluation (paper §5: "we integrate the
+//! online and offline scheduling policies … into a simulation environment,
+//! denoted CarbonFlex-Simulator, which enables year-long evaluation";
+//! §4.2: "older mappings from the knowledge base are aged out over a
+//! rolling window").
+//!
+//! The driver walks the year week by week: before each evaluation week it
+//! re-runs the learning phase over the trailing history window, ages the
+//! knowledge base, and evaluates CarbonFlex against the carbon-agnostic
+//! baseline and the per-week oracle. This exercises the paper's continuous
+//! learning loop end to end, including seasonal drift in the carbon traces.
+
+use crate::carbon::forecast::Forecaster;
+use crate::carbon::synth::{self, Region};
+use crate::cluster::energy::EnergyModel;
+use crate::cluster::sim::Simulator;
+use crate::config::ExperimentConfig;
+use crate::learning::kb::{Case, KnowledgeBase};
+use crate::learning::replay::{learn, LearnConfig};
+use crate::sched::carbon_agnostic::CarbonAgnostic;
+use crate::sched::carbonflex::{CarbonFlex, CarbonFlexParams};
+use crate::sched::oracle::Oracle;
+use crate::util::stats;
+use crate::workload::tracegen;
+
+/// One evaluated week.
+#[derive(Debug, Clone)]
+pub struct WeekResult {
+    pub week: usize,
+    /// Mean CI of the week's trace (seasonality indicator).
+    pub mean_ci: f64,
+    pub savings_pct: f64,
+    pub oracle_savings_pct: f64,
+    pub kb_cases: usize,
+    pub violations: usize,
+}
+
+/// Aggregate over the evaluated weeks.
+#[derive(Debug)]
+pub struct YearResult {
+    pub weeks: Vec<WeekResult>,
+}
+
+impl YearResult {
+    pub fn mean_savings(&self) -> f64 {
+        stats::mean(&self.weeks.iter().map(|w| w.savings_pct).collect::<Vec<_>>())
+    }
+    pub fn mean_oracle_savings(&self) -> f64 {
+        stats::mean(&self.weeks.iter().map(|w| w.oracle_savings_pct).collect::<Vec<_>>())
+    }
+    /// Worst week — continuous learning should keep this bounded.
+    pub fn min_savings(&self) -> f64 {
+        self.weeks.iter().map(|w| w.savings_pct).fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Run the continuous-learning loop over `weeks` evaluation weeks.
+///
+/// `aging_window_hours` bounds the knowledge base's memory (paper: a
+/// rolling window; we default to ~4 weeks). Weeks before the first full
+/// history window are skipped.
+pub fn run_yearlong(cfg: &ExperimentConfig, weeks: usize, aging_window_hours: usize) -> YearResult {
+    let region = Region::parse(&cfg.region).expect("region");
+    let total_hours = cfg.history_hours + weeks * 168 + 336;
+    let year = synth::synthesize(region, total_hours.max(8760), cfg.seed);
+    let energy = EnergyModel::for_hardware(cfg.hardware);
+
+    let mut kb = KnowledgeBase::new();
+    let mut results = Vec::new();
+
+    for week in 0..weeks {
+        let eval_start = cfg.history_hours + week * 168;
+        let hist_start = eval_start - cfg.history_hours;
+
+        // --- Learning phase on the trailing window, then age the KB ---
+        let hist_trace = year.slice(hist_start, cfg.history_hours);
+        let hist_jobs =
+            tracegen::generate(cfg, cfg.history_hours, cfg.seed ^ (week as u64) << 8 ^ 0x1157);
+        let fresh = learn(
+            &hist_jobs,
+            &hist_trace,
+            &LearnConfig {
+                max_capacity: cfg.capacity,
+                num_queues: cfg.queues.len(),
+                offsets: cfg.replay_offsets,
+                energy: energy.clone(),
+            },
+        );
+        for c in fresh.cases() {
+            // Stamp cases with absolute time so aging works across weeks.
+            kb.push(Case { recorded_at: hist_start + c.recorded_at, ..c.clone() });
+        }
+        kb.age_out(eval_start, aging_window_hours);
+        kb.rebuild();
+
+        // --- Evaluation week ---
+        let eval_trace = year.slice(eval_start, 168 + 168); // + drain week
+        let eval_jobs = tracegen::generate(cfg, 168, cfg.seed ^ (week as u64) << 8 ^ 0xE7A1);
+        let forecaster = Forecaster::perfect(eval_trace.clone());
+        let sim = Simulator::new(cfg.capacity, energy.clone(), cfg.queues.len(), 168);
+
+        let baseline = sim.run(&eval_jobs, &forecaster, &mut CarbonAgnostic);
+        let mut flex = CarbonFlex::new(
+            KnowledgeBase::from_cases(kb.cases().to_vec()),
+            CarbonFlexParams {
+                knn_k: cfg.knn_k,
+                violation_tolerance: cfg.violation_tolerance,
+                distance_bound: cfg.distance_bound,
+                ..Default::default()
+            },
+        );
+        let flex_result = sim.run(&eval_jobs, &forecaster, &mut flex);
+        let mut oracle = Oracle::new(&eval_jobs, &eval_trace, cfg.capacity);
+        let oracle_result = sim.run(&eval_jobs, &forecaster, &mut oracle);
+
+        let base = baseline.metrics.carbon_g;
+        results.push(WeekResult {
+            week,
+            mean_ci: year.slice(eval_start, 168).mean(),
+            savings_pct: (1.0 - flex_result.metrics.carbon_g / base) * 100.0,
+            oracle_savings_pct: (1.0 - oracle_result.metrics.carbon_g / base) * 100.0,
+            kb_cases: kb.cases().len(),
+            violations: flex_result.metrics.violations,
+        });
+    }
+    YearResult { weeks: results }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 24;
+        cfg.history_hours = 168;
+        cfg.replay_offsets = 2;
+        cfg
+    }
+
+    #[test]
+    fn continuous_learning_sustains_savings() {
+        let r = run_yearlong(&small_cfg(), 4, 24 * 28);
+        assert_eq!(r.weeks.len(), 4);
+        assert!(r.mean_savings() > 10.0, "mean savings {:.1}", r.mean_savings());
+        assert!(r.mean_oracle_savings() >= r.mean_savings() - 2.0);
+        // The KB never grows unbounded thanks to aging.
+        let max_cases = r.weeks.iter().map(|w| w.kb_cases).max().unwrap();
+        assert!(max_cases < 20_000, "kb grew to {max_cases}");
+    }
+
+    #[test]
+    fn aging_bounds_kb_size() {
+        // With a tiny aging window the KB stays ~one learning pass big.
+        let r = run_yearlong(&small_cfg(), 3, 168);
+        let sizes: Vec<usize> = r.weeks.iter().map(|w| w.kb_cases).collect();
+        assert!(sizes[2] <= sizes[1] * 2, "sizes {sizes:?}");
+    }
+}

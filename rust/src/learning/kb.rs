@@ -1,0 +1,326 @@
+//! The knowledge base: `(STATE → m_t, ρ)` cases recorded from simulated
+//! oracle runs (paper §4.2), with rolling-window aging and CSV persistence.
+//!
+//! Matching is case-based reasoning (§5): the runtime queries the top-k
+//! closest historical states (Euclidean, KD-tree) and mimics their
+//! decisions. Two interchangeable matcher backends exist: this module's
+//! native KD-tree and the PJRT-executed Pallas distance kernel
+//! (`runtime::matcher`) — tests assert they agree.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::learning::kdtree::KdTree;
+use crate::learning::state::{StateVector, STATE_DIM};
+
+/// One recorded oracle decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Case {
+    /// Slot timestamp (hours since the epoch of the learning trace) — used
+    /// only for aging.
+    pub recorded_at: usize,
+    pub state: StateVector,
+    /// Cluster capacity the oracle used in this state.
+    pub capacity: usize,
+    /// Scheduling threshold ρ implied by the oracle's allocation.
+    pub rho: f64,
+}
+
+/// A k-NN match result carrying the neighbour's decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    pub dist: f64,
+    pub capacity: usize,
+    pub rho: f64,
+    /// The case's queue-pressure feature (state\[7\]) — used for CBR case
+    /// adaptation: the retrieved capacity is rescaled by the ratio of the
+    /// query's pressure to the case's.
+    pub pressure: f64,
+}
+
+/// Matcher abstraction so the CarbonFlex policy can run against either the
+/// native KD-tree or the AOT/PJRT kernel. (Deliberately not `Send`-bound:
+/// PJRT client handles are thread-local; `CarbonFlex<KnowledgeBase>` remains
+/// `Send` for the coordinator, `CarbonFlex<PjrtMatcher>` is single-thread.)
+pub trait Matcher {
+    /// Top-k nearest recorded cases, ascending by distance.
+    fn top_k(&self, query: &StateVector, k: usize) -> Vec<Neighbor>;
+    /// Number of cases available.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Per-feature z-score scaler fitted on the knowledge base's cases, so the
+/// Euclidean match weighs every feature by its actual variability (the
+/// stock preprocessing for scikit-learn KNN, which the paper's prototype
+/// uses). Shared with the PJRT matcher so both backends agree bit-for-bit
+/// on the normalized space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scaler {
+    pub mean: [f64; STATE_DIM],
+    pub std: [f64; STATE_DIM],
+}
+
+impl Scaler {
+    /// Fit over a set of cases. Near-constant features get σ = 1 so they
+    /// contribute their raw (tiny) differences instead of exploding.
+    pub fn fit(cases: &[Case]) -> Scaler {
+        let n = cases.len().max(1) as f64;
+        let mut mean = [0.0f64; STATE_DIM];
+        let mut std = [0.0f64; STATE_DIM];
+        for c in cases {
+            for (i, v) in c.state.0.iter().enumerate() {
+                mean[i] += v;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n;
+        }
+        for c in cases {
+            for (i, v) in c.state.0.iter().enumerate() {
+                std[i] += (v - mean[i]) * (v - mean[i]);
+            }
+        }
+        for s in std.iter_mut() {
+            *s = (*s / n).sqrt();
+            if *s < 1e-3 {
+                *s = 1.0;
+            }
+        }
+        Scaler { mean, std }
+    }
+
+    /// Identity scaler (used before any cases exist).
+    pub fn identity() -> Scaler {
+        Scaler { mean: [0.0; STATE_DIM], std: [1.0; STATE_DIM] }
+    }
+
+    /// Normalize a state into z-space.
+    pub fn apply(&self, s: &StateVector) -> StateVector {
+        let mut out = [0.0f64; STATE_DIM];
+        for i in 0..STATE_DIM {
+            out[i] = (s.0[i] - self.mean[i]) / self.std[i];
+        }
+        StateVector(out)
+    }
+}
+
+/// The knowledge base.
+pub struct KnowledgeBase {
+    cases: Vec<Case>,
+    scaler: Scaler,
+    tree: Option<KdTree>,
+}
+
+impl std::fmt::Debug for KnowledgeBase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KnowledgeBase({} cases)", self.cases.len())
+    }
+}
+
+impl KnowledgeBase {
+    pub fn new() -> Self {
+        KnowledgeBase { cases: vec![], scaler: Scaler::identity(), tree: None }
+    }
+
+    pub fn from_cases(cases: Vec<Case>) -> Self {
+        let mut kb = KnowledgeBase { cases, scaler: Scaler::identity(), tree: None };
+        kb.rebuild();
+        kb
+    }
+
+    /// The scaler fitted at the last [`rebuild`].
+    pub fn scaler(&self) -> Scaler {
+        self.scaler
+    }
+
+    pub fn cases(&self) -> &[Case] {
+        &self.cases
+    }
+
+    /// Add a case (invalidates the index; call [`rebuild`] before matching).
+    pub fn push(&mut self, case: Case) {
+        self.cases.push(case);
+        self.tree = None;
+    }
+
+    /// Drop cases older than `window` relative to `now` (the paper ages out
+    /// old mappings over a rolling window to track seasonal drift).
+    pub fn age_out(&mut self, now: usize, window: usize) {
+        let before = self.cases.len();
+        self.cases.retain(|c| c.recorded_at + window >= now);
+        if self.cases.len() != before {
+            self.tree = None;
+        }
+    }
+
+    /// (Re)build the KD-tree index (and refit the feature scaler).
+    pub fn rebuild(&mut self) {
+        self.scaler = Scaler::fit(&self.cases);
+        let scaler = self.scaler;
+        self.tree =
+            Some(KdTree::build(self.cases.iter().map(|c| scaler.apply(&c.state)).collect()));
+    }
+
+    /// Persist as CSV: `recorded_at,state(;-separated),capacity,rho`.
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "recorded_at,state,capacity,rho")?;
+        for c in &self.cases {
+            writeln!(f, "{},{},{},{:.6}", c.recorded_at, c.state.to_csv_cell(), c.capacity, c.rho)?;
+        }
+        Ok(())
+    }
+
+    /// Load the [`save_csv`] format.
+    pub fn load_csv(path: impl AsRef<Path>) -> std::io::Result<KnowledgeBase> {
+        let src = std::fs::read_to_string(path)?;
+        let mut cases = Vec::new();
+        for (i, line) in src.lines().enumerate() {
+            if i == 0 || line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split(',').collect();
+            let bad = || std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {}", i + 1));
+            if parts.len() != 4 {
+                return Err(bad());
+            }
+            cases.push(Case {
+                recorded_at: parts[0].trim().parse().map_err(|_| bad())?,
+                state: StateVector::from_csv_cell(parts[1]).ok_or_else(bad)?,
+                capacity: parts[2].trim().parse().map_err(|_| bad())?,
+                rho: parts[3].trim().parse().map_err(|_| bad())?,
+            });
+        }
+        Ok(KnowledgeBase::from_cases(cases))
+    }
+}
+
+impl Default for KnowledgeBase {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Matcher for KnowledgeBase {
+    fn top_k(&self, query: &StateVector, k: usize) -> Vec<Neighbor> {
+        let q = self.scaler.apply(query);
+        let Some(tree) = &self.tree else {
+            // Unindexed fallback: brute force in z-space (small KBs, tests;
+            // note the identity scaler applies until the first rebuild).
+            let mut hits: Vec<Neighbor> = self
+                .cases
+                .iter()
+                .map(|c| Neighbor {
+                    dist: self.scaler.apply(&c.state).dist(&q),
+                    capacity: c.capacity,
+                    rho: c.rho,
+                    pressure: c.state.0[7],
+                })
+                .collect();
+            hits.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap());
+            hits.truncate(k);
+            return hits;
+        };
+        tree.knn(&q, k)
+            .into_iter()
+            .map(|h| Neighbor {
+                dist: h.dist,
+                capacity: self.cases[h.index].capacity,
+                rho: self.cases[h.index].rho,
+                pressure: self.cases[h.index].state.0[7],
+            })
+            .collect()
+    }
+
+    fn len(&self) -> usize {
+        self.cases.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case(at: usize, ci: f64, cap: usize, rho: f64) -> Case {
+        Case {
+            recorded_at: at,
+            state: StateVector::from_raw(ci, 0.0, 0.5, &[2, 1, 0], 0.6),
+            capacity: cap,
+            rho,
+        }
+    }
+
+    #[test]
+    fn match_returns_nearest_decision() {
+        let mut kb = KnowledgeBase::new();
+        kb.push(case(0, 100.0, 50, 0.8));
+        kb.push(case(1, 600.0, 10, 1.01));
+        kb.rebuild();
+        let q = StateVector::from_raw(120.0, 0.0, 0.5, &[2, 1, 0], 0.6);
+        let hits = kb.top_k(&q, 1);
+        assert_eq!(hits[0].capacity, 50);
+        assert!((hits[0].rho - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn indexed_matches_brute_force_in_z_space() {
+        let mut kb = KnowledgeBase::new();
+        for i in 0..50 {
+            kb.push(case(i, 50.0 * i as f64 % 700.0, i, 0.5 + (i % 5) as f64 / 10.0));
+        }
+        kb.rebuild();
+        let q = StateVector::from_raw(333.0, 0.0, 0.5, &[2, 1, 0], 0.6);
+        let indexed = kb.top_k(&q, 5);
+        // Brute force with the fitted scaler.
+        let scaler = kb.scaler();
+        let zq = scaler.apply(&q);
+        let mut brute: Vec<f64> =
+            kb.cases().iter().map(|c| scaler.apply(&c.state).dist(&zq)).collect();
+        brute.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (a, b) in indexed.iter().zip(&brute) {
+            assert!((a.dist - b).abs() < 1e-9, "{} vs {}", a.dist, b);
+        }
+    }
+
+    #[test]
+    fn aging_drops_old_cases() {
+        let mut kb = KnowledgeBase::new();
+        for i in 0..10 {
+            kb.push(case(i * 100, 200.0, i, 1.0));
+        }
+        kb.age_out(1000, 350);
+        assert_eq!(kb.len(), 3); // recorded_at ≥ 650 → 700, 800, 900
+        assert!(kb.cases().iter().all(|c| c.recorded_at + 350 >= 1000));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut kb = KnowledgeBase::new();
+        for i in 0..20 {
+            kb.push(case(i, 37.0 * i as f64, 150 - i, 0.25 + i as f64 / 100.0));
+        }
+        let dir = std::env::temp_dir().join("carbonflex_kb_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("kb.csv");
+        kb.save_csv(&path).unwrap();
+        let loaded = KnowledgeBase::load_csv(&path).unwrap();
+        assert_eq!(loaded.len(), 20);
+        for (a, b) in kb.cases().iter().zip(loaded.cases()) {
+            assert_eq!(a.recorded_at, b.recorded_at);
+            assert_eq!(a.capacity, b.capacity);
+            assert!((a.rho - b.rho).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn load_rejects_malformed() {
+        let dir = std::env::temp_dir().join("carbonflex_kb_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "recorded_at,state,capacity,rho\n1,notastate,5,0.5\n").unwrap();
+        assert!(KnowledgeBase::load_csv(&path).is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! KD-tree for k-nearest-neighbour state matching.
+//!
+//! The paper's prototype uses scikit-learn's KD-tree (§5, "represent the
+//! historical cases in a KD-Tree for fast access"); this is the equivalent
+//! Rust substrate. Points are [`STATE_DIM`]-dimensional; payloads are case
+//! indices into the knowledge base.
+
+use crate::learning::state::{StateVector, STATE_DIM};
+
+#[derive(Debug)]
+struct Node {
+    /// Index into `points`.
+    point: usize,
+    axis: usize,
+    left: Option<Box<Node>>,
+    right: Option<Box<Node>>,
+}
+
+/// Immutable KD-tree built over a set of state vectors.
+#[derive(Debug)]
+pub struct KdTree {
+    points: Vec<StateVector>,
+    root: Option<Box<Node>>,
+}
+
+/// One k-NN result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hit {
+    /// Index of the matched point (case index).
+    pub index: usize,
+    /// Euclidean distance.
+    pub dist: f64,
+}
+
+impl KdTree {
+    /// Build from points (O(n log² n) median splits).
+    pub fn build(points: Vec<StateVector>) -> KdTree {
+        let mut idx: Vec<usize> = (0..points.len()).collect();
+        let root = Self::build_node(&points, &mut idx, 0);
+        KdTree { points, root }
+    }
+
+    fn build_node(points: &[StateVector], idx: &mut [usize], depth: usize) -> Option<Box<Node>> {
+        if idx.is_empty() {
+            return None;
+        }
+        let axis = depth % STATE_DIM;
+        idx.sort_by(|&a, &b| points[a].0[axis].partial_cmp(&points[b].0[axis]).unwrap());
+        let mid = idx.len() / 2;
+        let point = idx[mid];
+        let (left, rest) = idx.split_at_mut(mid);
+        let right = &mut rest[1..];
+        Some(Box::new(Node {
+            point,
+            axis,
+            left: Self::build_node(points, left, depth + 1),
+            right: Self::build_node(points, right, depth + 1),
+        }))
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// k nearest neighbours of `query`, sorted by ascending distance.
+    pub fn knn(&self, query: &StateVector, k: usize) -> Vec<Hit> {
+        if k == 0 || self.points.is_empty() {
+            return vec![];
+        }
+        // Small bounded max-heap as a sorted vec (k ≤ ~16 in practice).
+        let mut best: Vec<Hit> = Vec::with_capacity(k + 1);
+        self.search(self.root.as_deref(), query, k, &mut best);
+        for h in best.iter_mut() {
+            h.dist = h.dist.sqrt();
+        }
+        best
+    }
+
+    fn search(&self, node: Option<&Node>, query: &StateVector, k: usize, best: &mut Vec<Hit>) {
+        let Some(n) = node else { return };
+        let d2 = self.points[n.point].dist2(query);
+        // Insert into the sorted result list (dist field holds d² here).
+        let pos = best.partition_point(|h| h.dist <= d2);
+        if pos < k {
+            best.insert(pos, Hit { index: n.point, dist: d2 });
+            if best.len() > k {
+                best.pop();
+            }
+        }
+        let diff = query.0[n.axis] - self.points[n.point].0[n.axis];
+        let (near, far) = if diff <= 0.0 {
+            (n.left.as_deref(), n.right.as_deref())
+        } else {
+            (n.right.as_deref(), n.left.as_deref())
+        };
+        self.search(near, query, k, best);
+        // Prune the far side unless the splitting plane is closer than the
+        // current k-th best.
+        let worst = best.last().map(|h| h.dist).unwrap_or(f64::INFINITY);
+        if best.len() < k || diff * diff < worst {
+            self.search(far, query, k, best);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_state(rng: &mut Rng) -> StateVector {
+        let mut f = [0.0; STATE_DIM];
+        for v in f.iter_mut() {
+            *v = rng.range(-1.0, 1.0);
+        }
+        StateVector(f)
+    }
+
+    /// Brute-force k-NN for cross-checking.
+    fn brute(points: &[StateVector], q: &StateVector, k: usize) -> Vec<Hit> {
+        let mut hits: Vec<Hit> = points
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Hit { index: i, dist: p.dist(q) })
+            .collect();
+        hits.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap());
+        hits.truncate(k);
+        hits
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let mut rng = Rng::new(42);
+        let points: Vec<StateVector> = (0..500).map(|_| random_state(&mut rng)).collect();
+        let tree = KdTree::build(points.clone());
+        for _ in 0..50 {
+            let q = random_state(&mut rng);
+            let got = tree.knn(&q, 5);
+            let want = brute(&points, &q, 5);
+            assert_eq!(got.len(), 5);
+            for (g, w) in got.iter().zip(&want) {
+                // Distances must agree (indices may tie-swap).
+                assert!((g.dist - w.dist).abs() < 1e-9, "got {g:?} want {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_match_found() {
+        let mut rng = Rng::new(7);
+        let points: Vec<StateVector> = (0..100).map(|_| random_state(&mut rng)).collect();
+        let tree = KdTree::build(points.clone());
+        let hits = tree.knn(&points[37], 1);
+        assert_eq!(hits[0].index, 37);
+        assert!(hits[0].dist < 1e-12);
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let mut rng = Rng::new(9);
+        let points: Vec<StateVector> = (0..3).map(|_| random_state(&mut rng)).collect();
+        let tree = KdTree::build(points);
+        assert_eq!(tree.knn(&random_state(&mut rng), 10).len(), 3);
+    }
+
+    #[test]
+    fn empty_tree() {
+        let tree = KdTree::build(vec![]);
+        assert!(tree.knn(&StateVector([0.0; STATE_DIM]), 5).is_empty());
+        assert!(tree.is_empty());
+    }
+
+    #[test]
+    fn results_sorted_ascending() {
+        let mut rng = Rng::new(11);
+        let points: Vec<StateVector> = (0..200).map(|_| random_state(&mut rng)).collect();
+        let tree = KdTree::build(points);
+        let hits = tree.knn(&random_state(&mut rng), 8);
+        for w in hits.windows(2) {
+            assert!(w[0].dist <= w[1].dist);
+        }
+    }
+}

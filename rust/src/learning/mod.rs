@@ -1,0 +1,12 @@
+//! Continuous historical learning (paper §4.2): state features (Table 2),
+//! the knowledge base of oracle decisions, KD-tree k-NN matching, and the
+//! oracle-replay learning phase.
+
+pub mod kb;
+pub mod kdtree;
+pub mod replay;
+pub mod state;
+
+pub use kb::{Case, KnowledgeBase, Matcher, Neighbor};
+pub use replay::{learn, LearnConfig};
+pub use state::{StateVector, STATE_DIM};

@@ -1,0 +1,143 @@
+//! The learning phase (paper §4.2): replay historical windows through the
+//! offline oracle and record its `(STATE → m_t, ρ)` decisions.
+//!
+//! The oracle is simulated — not just planned — so recorded decisions include
+//! the effects the prototype would see (forced SLO runs, checkpoint costs).
+//! As in the paper's deployment (§6.1), the historical trace is replayed
+//! with several start-time offsets to densify the knowledge base.
+
+use crate::carbon::forecast::Forecaster;
+use crate::carbon::trace::CarbonTrace;
+use crate::cluster::energy::EnergyModel;
+use crate::cluster::sim::Simulator;
+use crate::learning::kb::{Case, KnowledgeBase};
+use crate::learning::state::StateVector;
+use crate::sched::oracle::Oracle;
+use crate::workload::job::Job;
+
+/// Learning-phase configuration.
+#[derive(Debug, Clone)]
+pub struct LearnConfig {
+    pub max_capacity: usize,
+    pub num_queues: usize,
+    /// Number of start-time offsets to replay (≥ 1); each shifts the carbon
+    /// trace by 24 h, exposing the oracle to different job/carbon alignments.
+    pub offsets: usize,
+    pub energy: EnergyModel,
+}
+
+/// Run the learning phase over one historical window.
+pub fn learn(jobs: &[Job], trace: &CarbonTrace, cfg: &LearnConfig) -> KnowledgeBase {
+    let mut kb = KnowledgeBase::new();
+    for o in 0..cfg.offsets.max(1) {
+        let shift = o * 24;
+        if shift + 48 >= trace.len() {
+            break; // not enough trace left for a meaningful replay
+        }
+        let shifted = trace.slice(shift, trace.len() - shift);
+        record_replay(jobs, &shifted, cfg, &mut kb);
+    }
+    kb.rebuild();
+    kb
+}
+
+/// Replay one oracle run and append its per-slot cases.
+fn record_replay(jobs: &[Job], trace: &CarbonTrace, cfg: &LearnConfig, kb: &mut KnowledgeBase) {
+    let horizon = jobs.iter().map(|j| j.arrival).max().unwrap_or(0) + 24;
+    let forecaster = Forecaster::perfect(trace.clone());
+    let mut oracle = Oracle::new(jobs, trace, cfg.max_capacity);
+    let sim = Simulator::new(cfg.max_capacity, cfg.energy.clone(), cfg.num_queues, horizon);
+    let result = sim.run(jobs, &forecaster, &mut oracle);
+
+    for rec in &result.slots {
+        let state = StateVector::from_raw(
+            rec.ci,
+            trace.gradient(rec.t),
+            trace.day_ahead_rank(rec.t),
+            &rec.queue_lengths,
+            rec.mean_elasticity,
+        );
+        kb.push(Case { recorded_at: rec.t, state, capacity: rec.used, rho: rec.rho });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::synth::{synthesize, Region};
+    use crate::config::{ExperimentConfig, Hardware};
+    use crate::learning::kb::Matcher;
+    use crate::workload::tracegen;
+
+    fn learn_config() -> LearnConfig {
+        LearnConfig {
+            max_capacity: 20,
+            num_queues: 3,
+            offsets: 2,
+            energy: EnergyModel::for_hardware(Hardware::Cpu),
+        }
+    }
+
+    #[test]
+    fn learning_builds_nonempty_kb() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 20;
+        let jobs = tracegen::generate(&cfg, 96, 1);
+        let trace = synthesize(Region::SouthAustralia, 400, 2);
+        let kb = learn(&jobs, &trace, &learn_config());
+        assert!(kb.len() > 100, "kb has {} cases", kb.len());
+        // Matching works end-to-end.
+        let q = StateVector::from_raw(200.0, 0.0, 0.3, &[2, 1, 0], 0.6);
+        let hits = kb.top_k(&q, 5);
+        assert_eq!(hits.len(), 5);
+    }
+
+    #[test]
+    fn offsets_densify_kb() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 20;
+        let jobs = tracegen::generate(&cfg, 96, 3);
+        let trace = synthesize(Region::California, 600, 4);
+        let mut one = learn_config();
+        one.offsets = 1;
+        let mut three = learn_config();
+        three.offsets = 3;
+        let kb1 = learn(&jobs, &trace, &one);
+        let kb3 = learn(&jobs, &trace, &three);
+        assert!(kb3.len() > kb1.len() * 2, "{} vs {}", kb3.len(), kb1.len());
+    }
+
+    #[test]
+    fn low_ci_states_learn_higher_capacity() {
+        // In a variable region, the oracle should on average use more
+        // servers in clean slots than in dirty ones.
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 20;
+        let jobs = tracegen::generate(&cfg, 168, 5);
+        let trace = synthesize(Region::SouthAustralia, 600, 6);
+        let kb = learn(&jobs, &trace, &learn_config());
+        let mean_ci = trace.mean();
+        let (mut clean_cap, mut clean_n, mut dirty_cap, mut dirty_n) = (0.0, 0, 0.0, 0);
+        for c in kb.cases() {
+            // Only consider states with work available.
+            if c.state.0[3] + c.state.0[4] + c.state.0[5] <= 0.0 {
+                continue;
+            }
+            let ci = c.state.0[0] * 700.0;
+            if ci < mean_ci * 0.7 {
+                clean_cap += c.capacity as f64;
+                clean_n += 1;
+            } else if ci > mean_ci * 1.3 {
+                dirty_cap += c.capacity as f64;
+                dirty_n += 1;
+            }
+        }
+        assert!(clean_n > 0 && dirty_n > 0);
+        let clean_avg = clean_cap / clean_n as f64;
+        let dirty_avg = dirty_cap / dirty_n as f64;
+        assert!(
+            clean_avg > dirty_avg,
+            "oracle should provision more in clean slots: clean {clean_avg:.1} dirty {dirty_avg:.1}"
+        );
+    }
+}

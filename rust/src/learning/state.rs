@@ -1,0 +1,153 @@
+//! System-state representation (paper Table 2).
+//!
+//! The state captured per slot, used both when recording oracle decisions
+//! (learning phase) and when matching at runtime (execution phase):
+//!
+//! | feature | Table 2 entry |
+//! |---|---|
+//! | 0 | CI_t (normalized) |
+//! | 1 | CI gradient ∇CI (normalized, signed) |
+//! | 2 | CI^R: day-ahead rank of slot t |
+//! | 3–5 | queue length per queue (short/medium/long) |
+//! | 6 | mean elasticity of active jobs |
+//! | 7 | total queued jobs (system pressure) |
+//!
+//! Raw features are pre-scaled to comparable ranges here; the knowledge
+//! base additionally z-score-normalizes them over its cases before the
+//! Euclidean k-NN match (the paper uses scikit-learn KNN, where
+//! standardization is the stock preprocessing). The vector is fixed at
+//! [`STATE_DIM`] = 8 — the same dimension the AOT-compiled Pallas distance
+//! kernel is built for.
+
+/// Dimensionality of the state vector (must match `python/compile/model.py`).
+pub const STATE_DIM: usize = 8;
+
+/// Normalization constants.
+const CI_SCALE: f64 = 700.0; // g/kWh full scale
+const GRAD_SCALE: f64 = 100.0; // g/kWh per hour
+const QUEUE_SCALE: f64 = 50.0; // jobs per queue
+
+/// A normalized state vector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StateVector(pub [f64; STATE_DIM]);
+
+impl StateVector {
+    /// Build from raw system measurements.
+    ///
+    /// `queue_lengths` is padded/truncated to 3 queues (the paper's
+    /// short/medium/long setup).
+    pub fn from_raw(
+        ci: f64,
+        ci_gradient: f64,
+        day_ahead_rank: f64,
+        queue_lengths: &[usize],
+        mean_elasticity: f64,
+    ) -> StateVector {
+        let mut f = [0.0f64; STATE_DIM];
+        f[0] = (ci / CI_SCALE).clamp(0.0, 2.0);
+        f[1] = (ci_gradient / GRAD_SCALE).clamp(-2.0, 2.0);
+        f[2] = day_ahead_rank.clamp(0.0, 1.0);
+        let mut total = 0usize;
+        for q in 0..3 {
+            let len = queue_lengths.get(q).copied().unwrap_or(0);
+            total += len;
+            f[3 + q] = (len as f64 / QUEUE_SCALE).min(2.0);
+        }
+        f[6] = mean_elasticity.clamp(0.0, 1.0);
+        f[7] = (total as f64 / (3.0 * QUEUE_SCALE)).min(2.0);
+        StateVector(f)
+    }
+
+    /// Squared Euclidean distance.
+    pub fn dist2(&self, other: &StateVector) -> f64 {
+        self.0
+            .iter()
+            .zip(other.0.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum()
+    }
+
+    /// Euclidean distance.
+    pub fn dist(&self, other: &StateVector) -> f64 {
+        self.dist2(other).sqrt()
+    }
+
+    pub fn as_array(&self) -> &[f64; STATE_DIM] {
+        &self.0
+    }
+
+    /// Lossless CSV cell encoding (semicolon-separated features).
+    pub fn to_csv_cell(&self) -> String {
+        self.0.iter().map(|v| format!("{v:.6}")).collect::<Vec<_>>().join(";")
+    }
+
+    /// Parse the [`to_csv_cell`] encoding.
+    pub fn from_csv_cell(s: &str) -> Option<StateVector> {
+        let parts: Vec<f64> = s.split(';').map(|p| p.trim().parse().ok()).collect::<Option<_>>()?;
+        if parts.len() != STATE_DIM {
+            return None;
+        }
+        let mut f = [0.0; STATE_DIM];
+        f.copy_from_slice(&parts);
+        Some(StateVector(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization_ranges() {
+        let s = StateVector::from_raw(350.0, -50.0, 0.3, &[10, 5, 0], 0.8);
+        assert!((s.0[0] - 0.5).abs() < 1e-9);
+        assert!((s.0[1] + 0.5).abs() < 1e-9);
+        assert_eq!(s.0[2], 0.3);
+        assert!((s.0[3] - 0.2).abs() < 1e-9);
+        assert!((s.0[4] - 0.1).abs() < 1e-9);
+        assert_eq!(s.0[5], 0.0);
+        assert_eq!(s.0[6], 0.8);
+        // total 15 jobs / 150 = 0.1
+        assert!((s.0[7] - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clamping() {
+        let s = StateVector::from_raw(1e6, -1e6, 7.0, &[1000, 0, 0], 3.0);
+        assert_eq!(s.0[0], 2.0);
+        assert_eq!(s.0[1], -2.0);
+        assert_eq!(s.0[2], 1.0);
+        assert_eq!(s.0[3], 2.0);
+        assert_eq!(s.0[6], 1.0);
+        assert_eq!(s.0[7], 2.0);
+    }
+
+    #[test]
+    fn distance_metric() {
+        let a = StateVector::from_raw(100.0, 0.0, 0.5, &[1, 1, 1], 0.5);
+        let b = a;
+        assert_eq!(a.dist(&b), 0.0);
+        let c = StateVector::from_raw(800.0, 0.0, 0.5, &[1, 1, 1], 0.5);
+        assert!(a.dist(&c) > 0.5);
+        // Symmetry + triangle sanity.
+        assert!((a.dist(&c) - c.dist(&a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let s = StateVector::from_raw(421.5, 13.0, 0.7, &[3, 9, 2], 0.66);
+        let cell = s.to_csv_cell();
+        let back = StateVector::from_csv_cell(&cell).unwrap();
+        for i in 0..STATE_DIM {
+            assert!((s.0[i] - back.0[i]).abs() < 1e-5);
+        }
+        assert!(StateVector::from_csv_cell("1;2;3").is_none());
+        assert!(StateVector::from_csv_cell("a;b;c;d;e;f;g;h").is_none());
+    }
+
+    #[test]
+    fn short_queue_vector_padded() {
+        let s = StateVector::from_raw(100.0, 0.0, 0.5, &[4], 0.5);
+        assert!(s.0[4] == 0.0 && s.0[5] == 0.0);
+    }
+}

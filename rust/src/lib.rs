@@ -1,0 +1,42 @@
+//! # CarbonFlex
+//!
+//! A from-scratch reproduction of *CarbonFlex: Enabling Carbon-aware
+//! Provisioning and Scheduling for Cloud Clusters* (Hanafy et al., 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: cluster simulator, the
+//!   offline oracle (Alg. 1), runtime provisioning (Alg. 2) and scheduling
+//!   (Alg. 3), five baseline policies, the case-based-reasoning knowledge
+//!   base, trace synthesizers, and energy/carbon accounting.
+//! - **Layer 2 (JAX, `python/compile/model.py`)** — the state-match and
+//!   oracle-score compute graphs, AOT-lowered to HLO text.
+//! - **Layer 1 (Pallas, `python/compile/kernels/`)** — tiled distance and
+//!   score kernels called from Layer 2.
+//!
+//! The Rust binary loads the AOT artifacts via PJRT (`runtime::engine`) and
+//! never invokes Python at runtime.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod carbon;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod learning;
+pub mod runtime;
+pub mod sched;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::carbon::{synth::Region, trace::CarbonTrace};
+    pub use crate::cluster::metrics::RunMetrics;
+    pub use crate::cluster::sim::Simulator;
+    pub use crate::config::{ExperimentConfig, Hardware, TraceFamily};
+    pub use crate::sched::{Policy, PolicyKind};
+    pub use crate::util::rng::Rng;
+    pub use crate::workload::{job::Job, tracegen};
+}

@@ -1,0 +1,243 @@
+//! CarbonFlex CLI — the launcher.
+//!
+//! Subcommands:
+//! - `simulate --config <file> [--policy <name>]` — run one policy
+//! - `compare  --config <file>` — run the headline policy comparison
+//! - `learn    --config <file> --out kb.csv` — run the learning phase
+//! - `gen-traces --region <key> --hours <n> --out <csv>` — export CI traces
+//! - `catalog` — print the Table 3 workload catalog
+//! - `experiment <fig5|fig6|...|fig14|overheads>` — regenerate a paper figure
+//! - `serve [--policy <name>]` — run the coordinator on stdin/stdout JSON lines
+
+use carbonflex::carbon::synth::{self, Region};
+use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::runner;
+use carbonflex::sched::PolicyKind;
+use carbonflex::util::bench::Table;
+use carbonflex::util::cli::Args;
+use carbonflex::workload::profile;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("learn") => cmd_learn(&args),
+        Some("gen-traces") => cmd_gen_traces(&args),
+        Some("catalog") => cmd_catalog(),
+        Some("experiment") => cmd_experiment(&args),
+        Some("serve") => cmd_serve(&args),
+        _ => {
+            print_usage();
+            if args.command.is_none() || args.flag("help") {
+                0
+            } else {
+                eprintln!("unknown command: {:?}", args.command);
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    eprintln!(
+        "carbonflex — carbon-aware provisioning and scheduling for cloud clusters\n\
+         \n\
+         USAGE: carbonflex <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+         \x20 simulate    --config <file> [--policy carbonflex] run one policy\n\
+         \x20 compare     --config <file>                       headline comparison (Fig. 6)\n\
+         \x20 learn       --config <file> [--out kb.csv]        learning phase → knowledge base\n\
+         \x20 gen-traces  [--region south-australia] [--hours 8760] [--out trace.csv]\n\
+         \x20 catalog                                           Table 3 workload catalog\n\
+         \x20 experiment  <fig5..fig14|overheads|yearlong|noise|spatial>\n\
+         \x20 serve       [--config <file>] [--policy <name>]   JSON-line coordinator on stdio"
+    );
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig, String> {
+    match args.get("config") {
+        Some(path) => ExperimentConfig::load(path).map_err(|e| e.to_string()),
+        None => Ok(ExperimentConfig::default()),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => return fail(&e),
+    };
+    let kind = match PolicyKind::parse(args.get_or("policy", "carbonflex")) {
+        Some(k) => k,
+        None => return fail("unknown policy"),
+    };
+    let row = runner::run_policy(&cfg, kind);
+    let m = &row.result.metrics;
+    println!("policy:     {}", m.policy);
+    println!("carbon:     {:.2} kg", m.carbon_kg());
+    println!("energy:     {:.2} kWh", m.energy_kwh);
+    println!("savings:    {:.1} % vs Carbon-Agnostic", row.savings_pct);
+    println!("completed:  {} ({} violations)", m.completed, m.violations);
+    println!("mean delay: {:.2} h (p95 {:.2} h)", m.mean_delay_hours, m.p95_delay_hours);
+    println!("util:       {:.1} %", m.mean_utilization * 100.0);
+    0
+}
+
+fn cmd_compare(args: &Args) -> i32 {
+    let cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => return fail(&e),
+    };
+    let rows = runner::run_policies(&cfg, &PolicyKind::HEADLINE);
+    let mut table =
+        Table::new(&["policy", "carbon (kg)", "savings %", "mean delay (h)", "violations"]);
+    for row in &rows {
+        let m = &row.result.metrics;
+        table.row(&[
+            m.policy.clone(),
+            format!("{:.2}", m.carbon_kg()),
+            format!("{:.1}", row.savings_pct),
+            format!("{:.2}", m.mean_delay_hours),
+            format!("{}", m.violations),
+        ]);
+    }
+    table.print();
+    0
+}
+
+fn cmd_learn(args: &Args) -> i32 {
+    let cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => return fail(&e),
+    };
+    let mut prep = runner::PreparedExperiment::prepare(&cfg);
+    let n_hist = prep.hist_jobs.len();
+    let kb = prep.knowledge_base();
+    println!("learned {} cases from {} historical jobs", kb.cases().len(), n_hist);
+    if let Some(out) = args.get("out") {
+        if let Err(e) = kb.save_csv(out) {
+            return fail(&format!("saving {out}: {e}"));
+        }
+        println!("knowledge base written to {out}");
+    }
+    0
+}
+
+fn cmd_gen_traces(args: &Args) -> i32 {
+    let region_key = args.get_or("region", "south-australia");
+    let Some(region) = Region::parse(region_key) else {
+        return fail(&format!(
+            "unknown region '{region_key}'; known: {}",
+            Region::ALL.map(|r| r.key()).join(", ")
+        ));
+    };
+    let hours = match args.num_or::<usize>("hours", 8760) {
+        Ok(h) => h,
+        Err(e) => return fail(&e),
+    };
+    let seed = match args.num_or::<u64>("seed", 42) {
+        Ok(s) => s,
+        Err(e) => return fail(&e),
+    };
+    let trace = synth::synthesize(region, hours, seed);
+    let out = args.get_or("out", "trace.csv");
+    if let Err(e) = carbonflex::carbon::io::save_csv(&trace, out) {
+        return fail(&format!("saving {out}: {e}"));
+    }
+    println!(
+        "wrote {} hours for {} (mean {:.0} g/kWh, daily CoV {:.2}) to {out}",
+        hours,
+        region.key(),
+        trace.mean(),
+        trace.daily_cov()
+    );
+    0
+}
+
+fn cmd_catalog() -> i32 {
+    let mut table =
+        Table::new(&["workload", "impl", "comm (MB)", "GFLOPs", "scalability", "W/unit"]);
+    for w in profile::catalog() {
+        table.row(&[
+            w.name.to_string(),
+            w.hardware.as_str().to_string(),
+            format!("{:.2}", w.comm_mb),
+            format!("{:.2}", w.gflops),
+            w.scalability.as_str().to_string(),
+            format!("{:.0}", w.watts_per_unit),
+        ]);
+    }
+    table.print();
+    0
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let Some(which) = args.positional.first() else {
+        return fail("experiment requires an id (fig2, fig5..fig14, overheads, yearlong, noise, spatial)");
+    };
+    carbonflex::experiments::figures::run_by_name(which, args.get("config"))
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    use carbonflex::carbon::forecast::Forecaster;
+    use carbonflex::coordinator::{Coordinator, CoordinatorConfig, Request};
+    let cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => return fail(&e),
+    };
+    let kind =
+        PolicyKind::parse(args.get_or("policy", "agnostic")).unwrap_or(PolicyKind::CarbonAgnostic);
+    let mut prep = runner::PreparedExperiment::prepare(&cfg);
+    let policy = prep.build_policy(kind);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            max_capacity: cfg.capacity,
+            hardware: cfg.hardware,
+            num_queues: cfg.queues.len(),
+            queue_slack_hours: cfg.queues.iter().map(|q| q.delay_hours).collect(),
+            horizon: cfg.horizon_hours,
+        },
+        Forecaster::perfect(prep.eval_trace.clone()),
+        policy,
+    );
+    let handle = coord.handle();
+    eprintln!("carbonflex coordinator ready (policy: {}); JSON lines on stdin", kind.as_str());
+    let stdin = std::io::stdin();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match stdin.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Request::from_json_line(&line) {
+            Ok(req) => {
+                let drain = req == Request::Drain;
+                let resp = handle.request(req);
+                println!("{}", resp.to_json_line());
+                if drain {
+                    return 0;
+                }
+            }
+            Err(e) => {
+                println!(
+                    "{}",
+                    carbonflex::coordinator::Response::Error { message: e }.to_json_line()
+                );
+            }
+        }
+    }
+    let metrics = coord.shutdown();
+    eprintln!("coordinator done: {} jobs, {:.2} kg CO2", metrics.completed, metrics.carbon_kg());
+    0
+}
+
+fn fail(msg: &str) -> i32 {
+    eprintln!("error: {msg}");
+    1
+}

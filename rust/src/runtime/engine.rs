@@ -1,0 +1,193 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from Rust.
+//!
+//! The compile path (`python/compile/aot.py`) lowers the JAX/Pallas graphs to
+//! **HLO text** — not serialized protos, which jax ≥ 0.5 emits with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects. The text parser
+//! reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+//!
+//! Python never runs at runtime: after `make artifacts` the Rust binary is
+//! self-contained.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Runtime errors.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("artifact missing: {0} (run `make artifacts`)")]
+    MissingArtifact(PathBuf),
+    #[error("artifact metadata: {0}")]
+    Metadata(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// Shapes of the AOT-compiled kernels, read from `artifacts/meta.json`
+/// (written by `aot.py`; Rust pads its inputs to these static shapes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// Knowledge-base rows the match kernel was compiled for.
+    pub match_cases: usize,
+    /// State-vector features (must equal `learning::STATE_DIM`).
+    pub match_features: usize,
+    /// Top-k width of the match kernel.
+    pub match_k: usize,
+    /// (jobs × scales) rows of the score kernel.
+    pub score_jk: usize,
+    /// Time slots of the score kernel.
+    pub score_t: usize,
+}
+
+impl ArtifactMeta {
+    /// Parse `meta.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactMeta, RuntimeError> {
+        let path = dir.join("meta.json");
+        if !path.exists() {
+            return Err(RuntimeError::MissingArtifact(path));
+        }
+        let src = std::fs::read_to_string(&path)?;
+        let v = json::parse(&src).map_err(|e| RuntimeError::Metadata(e.to_string()))?;
+        let get = |obj: &Json, key: &str| -> Result<usize, RuntimeError> {
+            obj.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| RuntimeError::Metadata(format!("missing field {key}")))
+        };
+        let m = v.get("match").ok_or_else(|| RuntimeError::Metadata("missing 'match'".into()))?;
+        let s = v.get("score").ok_or_else(|| RuntimeError::Metadata("missing 'score'".into()))?;
+        Ok(ArtifactMeta {
+            match_cases: get(m, "cases")?,
+            match_features: get(m, "features")?,
+            match_k: get(m, "k")?,
+            score_jk: get(s, "jk")?,
+            score_t: get(s, "t")?,
+        })
+    }
+}
+
+/// A PJRT CPU client plus compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    meta: ArtifactMeta,
+}
+
+/// One compiled HLO computation.
+pub struct Computation {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Default artifacts directory: `$CARBONFLEX_ARTIFACTS` or `artifacts/`.
+    pub fn default_artifacts_dir() -> PathBuf {
+        std::env::var("CARBONFLEX_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Create a CPU PJRT client over an artifacts directory.
+    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Engine, RuntimeError> {
+        let artifacts_dir = artifacts_dir.into();
+        let meta = ArtifactMeta::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, artifacts_dir, meta })
+    }
+
+    pub fn meta(&self) -> ArtifactMeta {
+        self.meta
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact by file name (e.g. "match.hlo.txt").
+    pub fn load(&self, name: &str) -> Result<Computation, RuntimeError> {
+        let path = self.artifacts_dir.join(name);
+        if !path.exists() {
+            return Err(RuntimeError::MissingArtifact(path));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("artifact path must be valid utf-8"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Computation { exe })
+    }
+}
+
+impl Computation {
+    /// Execute with f32 inputs, returning the tuple elements as flat f32
+    /// vectors. Each input is (data, dims).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>, RuntimeError> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let expected: i64 = dims.iter().product();
+                assert_eq!(expected as usize, data.len(), "input size/shape mismatch");
+                xla::Literal::vec1(data).reshape(dims)
+            })
+            .collect::<Result<_, _>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → always a tuple.
+        let elems = result.to_tuple()?;
+        elems
+            .into_iter()
+            .map(|l| {
+                // Outputs may be f32 already; convert defensively (top_k
+                // indices come back as s32).
+                let l = l.convert(xla::PrimitiveType::F32)?;
+                Ok(l.to_vec::<f32>()?)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("carbonflex_engine_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"match": {"cases": 4096, "features": 8, "k": 5}, "score": {"jk": 1024, "t": 168}}"#,
+        )
+        .unwrap();
+        let m = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(m.match_cases, 4096);
+        assert_eq!(m.match_features, 8);
+        assert_eq!(m.match_k, 5);
+        assert_eq!(m.score_jk, 1024);
+        assert_eq!(m.score_t, 168);
+    }
+
+    #[test]
+    fn missing_artifacts_is_a_clean_error() {
+        let dir = std::env::temp_dir().join("carbonflex_engine_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        match ArtifactMeta::load(&dir) {
+            Err(RuntimeError::MissingArtifact(p)) => assert!(p.ends_with("meta.json")),
+            other => panic!("expected MissingArtifact, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_meta_rejected() {
+        let dir = std::env::temp_dir().join("carbonflex_engine_badmeta");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.json"), r#"{"match": {}}"#).unwrap();
+        assert!(matches!(ArtifactMeta::load(&dir), Err(RuntimeError::Metadata(_))));
+    }
+}

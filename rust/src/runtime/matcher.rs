@@ -1,0 +1,118 @@
+//! PJRT-backed state matcher: the AOT-compiled Pallas distance kernel +
+//! `lax.top_k` as a [`Matcher`] backend for the CarbonFlex policy.
+//!
+//! The knowledge base is uploaded once as padded f32 tensors
+//! (`[C, F]` states, `[C]` capacities, `[C]` thresholds); each slot the
+//! query state `[1, F]` is matched in a single PJRT execution. Padding rows
+//! sit at coordinate `PAD_COORD` so their distance is astronomically large
+//! and they never enter the top-k of a real query.
+
+use crate::learning::kb::{KnowledgeBase, Matcher, Neighbor};
+use crate::learning::state::{StateVector, STATE_DIM};
+use crate::runtime::engine::{Computation, Engine, RuntimeError};
+
+/// Coordinate value for padding rows (distance² ≥ (1e3)²·F ≫ any real dist).
+const PAD_COORD: f32 = 1e3;
+
+/// Threshold recorded for padding rows: above 1 ⇒ "schedule nothing".
+const PAD_RHO: f32 = 1.01;
+
+/// [`Matcher`] that executes the match artifact via PJRT.
+pub struct PjrtMatcher {
+    comp: Computation,
+    /// Padded KB tensors (host copies, uploaded per call).
+    states: Vec<f32>,
+    caps: Vec<f32>,
+    rhos: Vec<f32>,
+    pressures: Vec<f32>,
+    scaler: crate::learning::kb::Scaler,
+    cases: usize,
+    valid: usize,
+    k: usize,
+}
+
+impl PjrtMatcher {
+    /// Build from a knowledge base. If the KB exceeds the compiled case
+    /// count, the most recent cases win (consistent with aging).
+    pub fn from_kb(engine: &Engine, kb: &KnowledgeBase) -> Result<PjrtMatcher, RuntimeError> {
+        let meta = engine.meta();
+        assert_eq!(
+            meta.match_features, STATE_DIM,
+            "artifact feature dim {} != STATE_DIM {}",
+            meta.match_features, STATE_DIM
+        );
+        let comp = engine.load("match.hlo.txt")?;
+        let c = meta.match_cases;
+        let scaler = kb.scaler();
+        let mut states = vec![PAD_COORD; c * STATE_DIM];
+        let mut caps = vec![0.0f32; c];
+        let mut rhos = vec![PAD_RHO; c];
+        let mut pressures = vec![0.0f32; c];
+        let all = kb.cases();
+        let take = all.len().min(c);
+        let skip = all.len() - take; // drop oldest overflow
+        for (row, case) in all[skip..].iter().enumerate() {
+            // Upload in the KB's z-space so both backends match identically.
+            let z = scaler.apply(&case.state);
+            for (f, &v) in z.as_array().iter().enumerate() {
+                states[row * STATE_DIM + f] = v as f32;
+            }
+            caps[row] = case.capacity as f32;
+            rhos[row] = case.rho as f32;
+            pressures[row] = case.state.0[7] as f32;
+        }
+        Ok(PjrtMatcher {
+            comp,
+            states,
+            caps,
+            rhos,
+            pressures,
+            scaler,
+            cases: c,
+            valid: take,
+            k: meta.match_k,
+        })
+    }
+
+    /// Compiled top-k width.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+impl Matcher for PjrtMatcher {
+    fn top_k(&self, query: &StateVector, k: usize) -> Vec<Neighbor> {
+        let z = self.scaler.apply(query);
+        let q: Vec<f32> = z.as_array().iter().map(|&v| v as f32).collect();
+        let outputs = self
+            .comp
+            .run_f32(&[
+                (&q, &[1, STATE_DIM as i64]),
+                (&self.states, &[self.cases as i64, STATE_DIM as i64]),
+                (&self.caps, &[self.cases as i64]),
+                (&self.rhos, &[self.cases as i64]),
+                (&self.pressures, &[self.cases as i64]),
+            ])
+            .expect("PJRT match execution failed");
+        // Outputs: (top-k d², capacities, rhos, pressures), each [1, k].
+        let (d2, caps, rhos, pressures) = (&outputs[0], &outputs[1], &outputs[2], &outputs[3]);
+        let take = k.min(self.k).min(self.valid);
+        (0..take)
+            .map(|i| Neighbor {
+                dist: (d2[i].max(0.0) as f64).sqrt(),
+                capacity: caps[i].round() as usize,
+                rho: rhos[i] as f64,
+                pressure: pressures[i] as f64,
+            })
+            .collect()
+    }
+
+    fn len(&self) -> usize {
+        self.valid
+    }
+}
+
+// No #[cfg(test)] unit tests here: exercising PJRT requires the AOT
+// artifacts, which are built by `make artifacts`. The integration test
+// `rust/tests/pjrt_matcher.rs` cross-checks this backend against the native
+// KD-tree and is skipped with a notice when artifacts are absent.

@@ -1,0 +1,11 @@
+//! PJRT runtime layer: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path. See
+//! DESIGN.md §2 for the three-layer architecture.
+
+pub mod engine;
+pub mod matcher;
+pub mod score;
+
+pub use engine::{ArtifactMeta, Computation, Engine, RuntimeError};
+pub use matcher::PjrtMatcher;
+pub use score::ScoreKernel;

@@ -1,0 +1,83 @@
+//! PJRT-backed oracle score kernel: computes the Algorithm 1 score tensor
+//! `score[j·K + k, t] = p_j(k) / CI_t` (masked outside each job's window)
+//! with the AOT-compiled Pallas kernel — the `O(N·K·T)` inner loop of the
+//! learning phase, offloaded.
+
+use crate::runtime::engine::{Computation, Engine, RuntimeError};
+
+/// Wrapper over the `score.hlo.txt` artifact.
+pub struct ScoreKernel {
+    comp: Computation,
+    jk: usize,
+    t: usize,
+}
+
+impl ScoreKernel {
+    pub fn load(engine: &Engine) -> Result<ScoreKernel, RuntimeError> {
+        let meta = engine.meta();
+        Ok(ScoreKernel { comp: engine.load("score.hlo.txt")?, jk: meta.score_jk, t: meta.score_t })
+    }
+
+    /// Compiled (rows, slots) shape.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.jk, self.t)
+    }
+
+    /// Compute the score matrix.
+    ///
+    /// - `marginals[r]`: marginal throughput of row r (a (job, k) pair).
+    /// - `ci[t]`: carbon intensity per slot.
+    /// - `window[r*T + t]`: 1.0 when slot t is inside row r's job window.
+    ///
+    /// Rows beyond the compiled shape must be pre-padded by the caller
+    /// (marginal 0 ⇒ score 0, never chosen). Returns row-major `[jk × t]`.
+    pub fn run(
+        &self,
+        marginals: &[f32],
+        ci: &[f32],
+        window: &[f32],
+    ) -> Result<Vec<f32>, RuntimeError> {
+        assert_eq!(marginals.len(), self.jk, "marginals must be padded to {}", self.jk);
+        assert_eq!(ci.len(), self.t, "ci must be padded to {}", self.t);
+        assert_eq!(window.len(), self.jk * self.t);
+        let outputs = self.comp.run_f32(&[
+            (marginals, &[self.jk as i64]),
+            (ci, &[self.t as i64]),
+            (window, &[self.jk as i64, self.t as i64]),
+        ])?;
+        Ok(outputs.into_iter().next().expect("score kernel returns one output"))
+    }
+}
+
+/// Pure-Rust reference of the same computation (used by benches to compare
+/// the native loop against the PJRT kernel, and by tests for equality).
+pub fn score_native(marginals: &[f32], ci: &[f32], window: &[f32]) -> Vec<f32> {
+    let (jk, t) = (marginals.len(), ci.len());
+    assert_eq!(window.len(), jk * t);
+    let mut out = vec![0.0f32; jk * t];
+    for r in 0..jk {
+        let m = marginals[r];
+        for s in 0..t {
+            let w = window[r * t + s];
+            out[r * t + s] = w * m / ci[s].max(1e-9);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_score_masks_and_divides() {
+        let m = [1.0f32, 0.5];
+        let ci = [100.0f32, 50.0];
+        let w = [1.0f32, 0.0, 1.0, 1.0];
+        let s = score_native(&m, &ci, &w);
+        assert!((s[0] - 0.01).abs() < 1e-7);
+        assert_eq!(s[1], 0.0);
+        assert!((s[2] - 0.005).abs() < 1e-7);
+        assert!((s[3] - 0.01).abs() < 1e-7);
+    }
+}

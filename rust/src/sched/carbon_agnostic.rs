@@ -1,0 +1,80 @@
+//! Carbon-Agnostic baseline (paper §6.1): the status quo — FCFS at full
+//! cluster capacity, no elastic scaling, no carbon awareness. Every figure's
+//! savings percentages are computed against this policy's emissions.
+
+use crate::sched::{Decision, Policy, SlotCtx};
+
+/// FCFS, base-scale, full-capacity scheduler.
+#[derive(Debug, Default)]
+pub struct CarbonAgnostic;
+
+impl Policy for CarbonAgnostic {
+    fn name(&self) -> &'static str {
+        "Carbon-Agnostic"
+    }
+
+    fn decide(&mut self, ctx: &SlotCtx) -> Decision {
+        let mut alloc = Vec::with_capacity(ctx.jobs.len());
+        let mut used = 0usize;
+        // Jobs arrive sorted by arrival time; FCFS = take them in order.
+        for v in ctx.jobs {
+            let k = v.job.k_min;
+            if used + k > ctx.max_capacity {
+                continue; // queue (FCFS head-of-line within capacity)
+            }
+            used += k;
+            alloc.push((v.job.id, k));
+        }
+        Decision { capacity: ctx.max_capacity, alloc }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::forecast::Forecaster;
+    use crate::carbon::trace::CarbonTrace;
+    use crate::workload::job::Job;
+    use crate::workload::profile::ScalingProfile;
+
+    fn job(id: usize, arrival: usize) -> Job {
+        Job {
+            id,
+            workload: "t",
+            workload_idx: 0,
+            arrival,
+            length_hours: 2.0,
+            queue: 0,
+            slack_hours: 6.0,
+            k_min: 1,
+            k_max: 4,
+            profile: ScalingProfile::from_comm_ratio(0.05, 4),
+            watts_per_unit: 40.0,
+        }
+    }
+
+    #[test]
+    fn fcfs_respects_capacity_and_never_scales() {
+        let jobs: Vec<Job> = (0..5).map(|i| job(i, 0)).collect();
+        let views: Vec<crate::sched::JobView> = jobs
+            .iter()
+            .map(|j| crate::sched::JobView { job: j, remaining: 2.0, prev_alloc: 0, overdue: false })
+            .collect();
+        let f = Forecaster::perfect(CarbonTrace::new("x", vec![100.0; 10]));
+        let ctx = SlotCtx {
+            t: 0,
+            jobs: &views,
+            forecaster: &f,
+            max_capacity: 3,
+            num_queues: 3,
+            prev_capacity: 3,
+            prev_used: 0,
+            recent_violation_rate: 0.0,
+        };
+        let d = CarbonAgnostic.decide(&ctx);
+        assert_eq!(d.alloc.len(), 3);
+        assert!(d.alloc.iter().all(|&(_, k)| k == 1));
+        // FCFS: earliest ids win.
+        assert_eq!(d.alloc.iter().map(|&(id, _)| id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+}

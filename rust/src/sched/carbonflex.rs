@@ -1,0 +1,386 @@
+//! CarbonFlex runtime provisioning (Algorithm 2) and scheduling
+//! (Algorithm 3).
+//!
+//! At each slot the policy computes the Table 2 state, queries the knowledge
+//! base for the top-k closest historical oracle decisions (case-based
+//! reasoning), and mimics them:
+//!
+//! - **Provisioning φ (Alg. 2)**: the capacity is the mean of the matched
+//!   capacities; if recent delay violations exceed the tolerance ε, fall
+//!   back to the max of the matches (and, when matches are also distant
+//!   — dist > δ — provision full M, i.e. carbon-agnostic).
+//! - **Scheduling ψ (Alg. 3)**: allocate server increments whose marginal
+//!   throughput `p_j(k)` meets the learned threshold ρ, ordered by marginal
+//!   throughput with remaining-slack tie-breaks, until m_t is filled. Base
+//!   allocations (`p = 1`) sort first, so no job is starved before any job
+//!   scales, exactly as in Algorithm 1.
+//!
+//! The matcher backend is pluggable: the native KD-tree, or the AOT-compiled
+//! Pallas kernel executed via PJRT (`runtime::matcher`) — Python stays off
+//! the request path either way.
+
+use crate::learning::kb::{Matcher, Neighbor};
+use crate::learning::state::StateVector;
+use crate::sched::{Decision, Policy, SlotCtx};
+
+/// Tunables for Algorithm 2.
+#[derive(Debug, Clone, Copy)]
+pub struct CarbonFlexParams {
+    /// Neighbours to match (paper: k = 5).
+    pub knn_k: usize,
+    /// Violation tolerance ε on the recent delay-violation rate.
+    pub violation_tolerance: f64,
+    /// Expected-distance bound δ: matches farther than this are distrusted.
+    pub distance_bound: f64,
+    /// Urgency look-ahead (hours): provisioning never drops below the base
+    /// allocation of jobs whose remaining slack is within this window. This
+    /// is the feedback the paper describes as "considering the utility of
+    /// these decisions in previous time slots" — without it, a mimicked
+    /// low-capacity decision can push a cohort over its deadline cliff and
+    /// force dirty-slot runs.
+    pub urgency_window: f64,
+}
+
+impl Default for CarbonFlexParams {
+    fn default() -> Self {
+        CarbonFlexParams {
+            knn_k: 5,
+            violation_tolerance: 0.2,
+            distance_bound: 1.5,
+            urgency_window: 2.0,
+        }
+    }
+}
+
+/// The CarbonFlex online policy, generic over the matcher backend (native
+/// KD-tree knowledge base, or the PJRT-executed Pallas kernel).
+pub struct CarbonFlex<M: Matcher> {
+    matcher: M,
+    params: CarbonFlexParams,
+}
+
+impl<M: Matcher> CarbonFlex<M> {
+    pub fn new(matcher: M, params: CarbonFlexParams) -> Self {
+        CarbonFlex { matcher, params }
+    }
+
+    /// Build the Table 2 state for the current slot.
+    fn state_of(ctx: &SlotCtx) -> StateVector {
+        let ci = ctx.forecaster.predict(ctx.t);
+        let ci_prev = if ctx.t == 0 { ci } else { ctx.forecaster.predict(ctx.t - 1) };
+        StateVector::from_raw(
+            ci,
+            ci - ci_prev,
+            ctx.forecaster.day_ahead_rank(ctx.t),
+            &ctx.queue_lengths(),
+            ctx.mean_elasticity(),
+        )
+    }
+
+    /// Base servers needed by jobs about to exhaust their slack.
+    fn urgent_floor(&self, ctx: &SlotCtx) -> usize {
+        ctx.jobs
+            .iter()
+            .filter(|v| v.slack_left(ctx.t) <= self.params.urgency_window)
+            .map(|v| v.job.k_min)
+            .sum()
+    }
+
+    /// Algorithm 2: the provisioning decision m_t.
+    fn provision(&self, ctx: &SlotCtx, matches: &[Neighbor]) -> usize {
+        let floor = self.urgent_floor(ctx).min(ctx.max_capacity);
+        if matches.is_empty() {
+            return ctx.max_capacity; // no knowledge → carbon-agnostic
+        }
+        let v = ctx.recent_violation_rate;
+        let eps = self.params.violation_tolerance;
+        let min_dist = matches[0].dist;
+        if min_dist > self.params.distance_bound && v > eps {
+            // Far from anything we have seen AND hurting SLOs: full capacity.
+            return ctx.max_capacity;
+        }
+        if v > eps {
+            // Violating: take the most generous of the matched capacities
+            // (not the previous provisioning — that would ratchet the
+            // cluster up permanently through dirty periods).
+            return matches
+                .iter()
+                .map(|m| m.capacity)
+                .max()
+                .unwrap_or(ctx.max_capacity)
+                .max(floor)
+                .min(ctx.max_capacity);
+        }
+        // Nominal aggregation over the matched capacities, selectable for
+        // the ablation bench (default: inverse-distance-weighted mean).
+        let agg = match std::env::var("CARBONFLEX_AGG").as_deref() {
+            Ok("min") => matches.iter().map(|m| m.capacity).min().unwrap_or(0) as f64,
+            Ok("max") => matches.iter().map(|m| m.capacity).max().unwrap_or(0) as f64,
+            Ok("median") => {
+                let mut caps: Vec<usize> = matches.iter().map(|m| m.capacity).collect();
+                caps.sort_unstable();
+                caps[caps.len() / 2] as f64
+            }
+            _ => {
+                let mut num = 0.0;
+                let mut den = 0.0;
+                for m in matches {
+                    let w = 1.0 / (m.dist + 1e-3);
+                    num += w * m.capacity as f64;
+                    den += w;
+                }
+                num / den
+            }
+        };
+        (agg.round() as usize).max(floor).min(ctx.max_capacity)
+    }
+
+    /// Aggregate the matched thresholds (selectable for the ablation bench;
+    /// default: median, robust to the RHO_IDLE sentinel mixing with real
+    /// marginals).
+    fn threshold(matches: &[Neighbor]) -> f64 {
+        if matches.is_empty() {
+            return 0.0; // schedule anything
+        }
+        let mut rhos: Vec<f64> = matches.iter().map(|m| m.rho).collect();
+        rhos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        match std::env::var("CARBONFLEX_RHO").as_deref() {
+            Ok("median") => rhos[rhos.len() / 2],
+            Ok("max") => rhos[rhos.len() - 1],
+            // Default: min — the most permissive matched threshold. The
+            // oracle's recorded ρ is the marginal of the LAST server it
+            // granted; taking the neighbourhood minimum lets leftover clean
+            // capacity be used for scaling instead of idling (fewer forced
+            // dirty runs, see the fig6 ablation bench).
+            _ => rhos[0],
+        }
+    }
+
+    /// Algorithm 3: fill m_t with the highest-marginal server increments at
+    /// or above the threshold ρ.
+    fn schedule(ctx: &SlotCtx, m_t: usize, rho: f64) -> Vec<(usize, usize)> {
+        // Candidate server increments (j, k) with p_j(k) ≥ ρ.
+        // Sort key: marginal desc, remaining slack asc (EDF), id.
+        let mut entries: Vec<(f64, f64, usize, usize)> = Vec::new();
+        for (i, v) in ctx.jobs.iter().enumerate() {
+            for k in v.job.k_min..=v.job.k_max {
+                let p = v.job.marginal(k);
+                let qualifies = p + 1e-9 >= rho || v.overdue;
+                if !qualifies {
+                    break; // marginals decrease in k
+                }
+                entries.push((p, v.slack_left(ctx.t), i, k));
+            }
+        }
+        entries.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap()
+                .then(a.1.partial_cmp(&b.1).unwrap())
+                .then(a.2.cmp(&b.2))
+                .then(a.3.cmp(&b.3))
+        });
+        let mut granted = vec![0usize; ctx.jobs.len()];
+        let mut used = 0usize;
+        for (_, _, i, k) in entries {
+            if used >= m_t {
+                break;
+            }
+            if granted[i] == k - 1 {
+                granted[i] = k;
+                used += 1;
+            }
+        }
+        granted
+            .iter()
+            .enumerate()
+            .filter(|(_, &k)| k > 0)
+            .map(|(i, &k)| (ctx.jobs[i].job.id, k))
+            .collect()
+    }
+}
+
+impl<M: Matcher> Policy for CarbonFlex<M> {
+    fn name(&self) -> &'static str {
+        "CarbonFlex"
+    }
+
+    fn decide(&mut self, ctx: &SlotCtx) -> Decision {
+        let state = Self::state_of(ctx);
+        let matches = self.matcher.top_k(&state, self.params.knn_k);
+        let m_t = self.provision(ctx, &matches);
+        let rho = Self::threshold(&matches);
+        let alloc = Self::schedule(ctx, m_t, rho);
+        Decision { capacity: m_t, alloc }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::forecast::Forecaster;
+    use crate::carbon::trace::CarbonTrace;
+    use crate::learning::kb::{Case, KnowledgeBase};
+    use crate::sched::JobView;
+    use crate::workload::job::Job;
+    use crate::workload::profile::ScalingProfile;
+
+    fn job(id: usize, arrival: usize, length: f64, slack: f64) -> Job {
+        Job {
+            id,
+            workload: "t",
+            workload_idx: 0,
+            arrival,
+            length_hours: length,
+            queue: 0,
+            slack_hours: slack,
+            k_min: 1,
+            k_max: 4,
+            profile: ScalingProfile::from_comm_ratio(0.03, 4),
+            watts_per_unit: 40.0,
+        }
+    }
+
+    fn kb_with(cap_low: usize, cap_high: usize) -> KnowledgeBase {
+        // Cases: at low CI provision high, at high CI provision low.
+        let mut kb = KnowledgeBase::new();
+        for i in 0..20 {
+            let (ci, cap, rho) = if i % 2 == 0 {
+                (60.0, cap_high, 0.5) // clean: scale out
+            } else {
+                (500.0, cap_low, 1.01) // dirty: idle
+            };
+            kb.push(Case {
+                recorded_at: i,
+                state: StateVector::from_raw(ci, 0.0, 0.0, &[2, 0, 0], 0.7),
+                capacity: cap,
+                rho,
+            });
+        }
+        kb.rebuild();
+        kb
+    }
+
+    fn ctx_at<'a>(
+        t: usize,
+        views: &'a [JobView<'a>],
+        f: &'a Forecaster,
+        violations: f64,
+    ) -> SlotCtx<'a> {
+        SlotCtx {
+            t,
+            jobs: views,
+            forecaster: f,
+            max_capacity: 20,
+            num_queues: 3,
+            prev_capacity: 10,
+            prev_used: 6,
+            recent_violation_rate: violations,
+        }
+    }
+
+    #[test]
+    fn mimics_clean_vs_dirty_decisions() {
+        // Trace: slot 0 clean, slot 12 dirty.
+        let mut hourly = vec![500.0; 24];
+        hourly[0] = 60.0;
+        let f = Forecaster::perfect(CarbonTrace::new("x", hourly));
+        let jobs: Vec<Job> = (0..2).map(|i| job(i, 0, 4.0, 24.0)).collect();
+        let views: Vec<JobView> = jobs
+            .iter()
+            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false })
+            .collect();
+        let mut cf = CarbonFlex::new(kb_with(0, 8), CarbonFlexParams::default());
+        // Clean slot → high capacity, scheduling happens.
+        let d0 = cf.decide(&ctx_at(0, &views, &f, 0.0));
+        assert!(d0.capacity >= 4, "clean capacity {}", d0.capacity);
+        assert!(!d0.alloc.is_empty());
+        // Dirty slot → low capacity, idle.
+        let d1 = cf.decide(&ctx_at(12, &views, &f, 0.0));
+        assert!(d1.capacity <= 4, "dirty capacity {}", d1.capacity);
+        assert!(d1.alloc.is_empty(), "scheduled {:?} in dirty slot", d1.alloc);
+    }
+
+    #[test]
+    fn violation_fallback_provisions_max_when_far() {
+        let f = Forecaster::perfect(CarbonTrace::new("x", vec![250.0; 24]));
+        let jobs = vec![job(0, 0, 4.0, 24.0)];
+        let views: Vec<JobView> = jobs
+            .iter()
+            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false })
+            .collect();
+        // KB with states far away from the query (extreme queue lengths).
+        let mut kb = KnowledgeBase::new();
+        kb.push(Case {
+            recorded_at: 0,
+            state: StateVector::from_raw(700.0, 200.0, 1.0, &[100, 100, 100], 0.0),
+            capacity: 1,
+            rho: 1.01,
+        });
+        kb.rebuild();
+        let mut cf = CarbonFlex::new(
+            kb,
+            CarbonFlexParams { knn_k: 5, violation_tolerance: 0.1, distance_bound: 0.5, ..Default::default() },
+        );
+        // Violations high + far matches → full M.
+        let d = cf.decide(&ctx_at(0, &views, &f, 0.5));
+        assert_eq!(d.capacity, 20);
+    }
+
+    #[test]
+    fn violation_fallback_takes_max_of_matches() {
+        let f = Forecaster::perfect(CarbonTrace::new("x", vec![60.0; 24]));
+        let jobs = vec![job(0, 0, 4.0, 24.0)];
+        let views: Vec<JobView> = jobs
+            .iter()
+            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false })
+            .collect();
+        let mut cf = CarbonFlex::new(kb_with(2, 8), CarbonFlexParams::default());
+        let d = cf.decide(&ctx_at(0, &views, &f, 0.9));
+        // max of the matched capacities (no prev-capacity ratchet) = 8.
+        assert_eq!(d.capacity, 8);
+    }
+
+    #[test]
+    fn empty_kb_falls_back_to_agnostic() {
+        let f = Forecaster::perfect(CarbonTrace::new("x", vec![100.0; 24]));
+        let jobs = vec![job(0, 0, 2.0, 6.0)];
+        let views: Vec<JobView> = jobs
+            .iter()
+            .map(|j| JobView { job: j, remaining: 2.0, prev_alloc: 0, overdue: false })
+            .collect();
+        let mut cf = CarbonFlex::new(KnowledgeBase::new(), CarbonFlexParams::default());
+        let d = cf.decide(&ctx_at(0, &views, &f, 0.0));
+        assert_eq!(d.capacity, 20);
+        assert_eq!(d.alloc.len(), 1);
+    }
+
+    #[test]
+    fn schedule_gives_base_before_scaling() {
+        // m_t = 3, two jobs: both must get k=1 before either gets k=2.
+        let f = Forecaster::perfect(CarbonTrace::new("x", vec![100.0; 24]));
+        let jobs: Vec<Job> = (0..2).map(|i| job(i, 0, 4.0, 24.0)).collect();
+        let views: Vec<JobView> = jobs
+            .iter()
+            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false })
+            .collect();
+        let ctx = ctx_at(0, &views, &f, 0.0);
+        let alloc = CarbonFlex::<KnowledgeBase>::schedule(&ctx, 3, 0.0);
+        let ks: std::collections::HashMap<usize, usize> = alloc.into_iter().collect();
+        assert!(ks[&0] >= 1 && ks[&1] >= 1);
+        assert_eq!(ks[&0] + ks[&1], 3);
+    }
+
+    #[test]
+    fn overdue_jobs_bypass_threshold() {
+        let f = Forecaster::perfect(CarbonTrace::new("x", vec![100.0; 24]));
+        let jobs = vec![job(0, 0, 2.0, 0.0)];
+        let views: Vec<JobView> = jobs
+            .iter()
+            .map(|j| JobView { job: j, remaining: 2.0, prev_alloc: 0, overdue: true })
+            .collect();
+        let ctx = ctx_at(0, &views, &f, 0.0);
+        // Threshold above 1 normally blocks everything; overdue must pass.
+        let alloc = CarbonFlex::<KnowledgeBase>::schedule(&ctx, 5, 1.01);
+        assert!(!alloc.is_empty());
+    }
+}

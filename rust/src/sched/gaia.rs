@@ -1,0 +1,155 @@
+//! GAIA baseline (paper §6.1, [28]): the Lowest-Window policy.
+//!
+//! Each job, at arrival, picks the start time within its allowed delay that
+//! minimizes the mean forecast carbon intensity over the job's *expected*
+//! duration (the historical mean job length — GAIA does not know true
+//! lengths). Execution is non-elastic and non-preemptive; when multiple jobs
+//! contend for the same slot the policy falls back to FCFS within the
+//! capacity limit.
+
+use std::collections::HashMap;
+
+use crate::sched::{Decision, Policy, SlotCtx};
+use crate::workload::job::JobId;
+
+/// Lowest-window start-time selection.
+pub struct Gaia {
+    /// Historical mean job length per queue (hours) — the expected duration
+    /// estimate. Queues are length-based, so per-queue means are what a
+    /// deployed GAIA would compute from its own history.
+    mean_length_by_queue: Vec<f64>,
+    /// Chosen start slot per job.
+    starts: HashMap<JobId, usize>,
+}
+
+impl Gaia {
+    pub fn new(mean_length_by_queue: Vec<f64>) -> Self {
+        assert!(!mean_length_by_queue.is_empty());
+        Gaia { mean_length_by_queue, starts: HashMap::new() }
+    }
+
+    fn expected_length(&self, queue: usize) -> f64 {
+        self.mean_length_by_queue[queue.min(self.mean_length_by_queue.len() - 1)].max(1.0)
+    }
+}
+
+impl Policy for Gaia {
+    fn name(&self) -> &'static str {
+        "GAIA"
+    }
+
+    fn decide(&mut self, ctx: &SlotCtx) -> Decision {
+        // Choose start times for newly seen jobs.
+        for v in ctx.jobs {
+            let id = v.job.id;
+            if self.starts.contains_key(&id) {
+                continue;
+            }
+            let dur = self.expected_length(v.job.queue).ceil() as usize;
+            let arrival = v.job.arrival;
+            let latest = arrival + v.job.slack_hours.floor() as usize;
+            let mut best = (f64::INFINITY, arrival);
+            for s in arrival.max(ctx.t)..=latest.max(ctx.t) {
+                let w = ctx.forecaster.predict_window(s, dur);
+                let mean = w.iter().sum::<f64>() / w.len().max(1) as f64;
+                if mean < best.0 {
+                    best = (mean, s);
+                }
+            }
+            self.starts.insert(id, best.1);
+        }
+
+        // FCFS among jobs whose start time has come; non-preemptive: once a
+        // job has begun (prev_alloc > 0) it keeps its server.
+        let mut alloc = Vec::new();
+        let mut used = 0usize;
+        let mut order: Vec<usize> = (0..ctx.jobs.len()).collect();
+        order.sort_by_key(|&i| {
+            let v = &ctx.jobs[i];
+            // Running jobs first (non-preemptive), then by planned start.
+            (v.prev_alloc == 0, *self.starts.get(&v.job.id).unwrap_or(&v.job.arrival), v.job.id)
+        });
+        for i in order {
+            let v = &ctx.jobs[i];
+            let start = *self.starts.get(&v.job.id).unwrap_or(&v.job.arrival);
+            let should_run = v.prev_alloc > 0 || ctx.t >= start;
+            if !should_run {
+                continue;
+            }
+            let k = v.job.k_min;
+            if used + k > ctx.max_capacity {
+                continue;
+            }
+            used += k;
+            alloc.push((v.job.id, k));
+        }
+        Decision { capacity: ctx.max_capacity, alloc }
+    }
+
+    fn on_complete(&mut self, job: JobId, _t: usize) {
+        self.starts.remove(&job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::forecast::Forecaster;
+    use crate::carbon::trace::CarbonTrace;
+    use crate::cluster::energy::EnergyModel;
+    use crate::cluster::sim::Simulator;
+    use crate::config::Hardware;
+    use crate::workload::job::Job;
+    use crate::workload::profile::ScalingProfile;
+
+    fn job(id: usize, arrival: usize, length: f64, slack: f64) -> Job {
+        Job {
+            id,
+            workload: "t",
+            workload_idx: 0,
+            arrival,
+            length_hours: length,
+            queue: 0,
+            slack_hours: slack,
+            k_min: 1,
+            k_max: 4,
+            profile: ScalingProfile::from_comm_ratio(0.05, 4),
+            watts_per_unit: 40.0,
+        }
+    }
+
+    #[test]
+    fn starts_in_cheapest_window() {
+        // Valley at slots 6..10.
+        let hourly: Vec<f64> =
+            (0..48).map(|t| if (6..10).contains(&t) { 50.0 } else { 400.0 }).collect();
+        let f = Forecaster::perfect(CarbonTrace::new("v", hourly));
+        let jobs = vec![job(0, 0, 2.0, 10.0)];
+        let sim = Simulator::new(10, EnergyModel::for_hardware(Hardware::Cpu), 3, 48);
+        let r = sim.run(&jobs, &f, &mut Gaia::new(vec![2.0]));
+        // Job should run within the valley.
+        let run_slots: Vec<usize> =
+            r.slots.iter().filter(|s| s.used > 0).map(|s| s.t).collect();
+        assert!(run_slots.iter().all(|t| (6..10).contains(t)), "{run_slots:?}");
+    }
+
+    #[test]
+    fn never_scales() {
+        let f = Forecaster::perfect(CarbonTrace::new("f", vec![100.0; 48]));
+        let jobs = vec![job(0, 0, 3.0, 6.0)];
+        let sim = Simulator::new(10, EnergyModel::for_hardware(Hardware::Cpu), 3, 48);
+        let r = sim.run(&jobs, &f, &mut Gaia::new(vec![3.0]));
+        assert!(r.slots.iter().all(|s| s.used <= 1));
+        assert_eq!(r.metrics.completed, 1);
+    }
+
+    #[test]
+    fn fcfs_under_contention() {
+        let f = Forecaster::perfect(CarbonTrace::new("f", vec![100.0; 96]));
+        let jobs: Vec<Job> = (0..4).map(|i| job(i, 0, 2.0, 0.0)).collect();
+        let sim = Simulator::new(2, EnergyModel::for_hardware(Hardware::Cpu), 3, 96);
+        let r = sim.run(&jobs, &f, &mut Gaia::new(vec![2.0]));
+        assert_eq!(r.metrics.completed, 4);
+        assert!(r.slots.iter().all(|s| s.used <= 2));
+    }
+}

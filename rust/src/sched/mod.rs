@@ -1,0 +1,183 @@
+//! Scheduling policies.
+//!
+//! A [`Policy`] makes the paper's two per-slot decisions (§3): the
+//! provisioning decision (cluster capacity `m_t ≤ M`) and the scheduling
+//! decision (how many servers each active job gets). The simulator invokes
+//! `decide` once per slot with a [`SlotCtx`] view of the system; online
+//! policies must only read the forecaster (never ground truth beyond `t`),
+//! while the offline oracle is explicitly constructed with full knowledge.
+
+pub mod carbon_agnostic;
+pub mod carbon_scaler;
+pub mod carbonflex;
+pub mod gaia;
+pub mod oracle;
+pub mod vcc;
+pub mod wait_awhile;
+
+use crate::carbon::forecast::Forecaster;
+use crate::workload::job::{Job, JobId};
+
+/// Per-job view the policy sees at slot `t`.
+#[derive(Debug, Clone)]
+pub struct JobView<'a> {
+    pub job: &'a Job,
+    /// Remaining work in base-hours.
+    pub remaining: f64,
+    /// Allocation in the previous slot (0 = suspended/queued).
+    pub prev_alloc: usize,
+    /// True once the job has exhausted its slack and must run to completion.
+    pub overdue: bool,
+}
+
+impl JobView<'_> {
+    /// Slack still available before the job becomes overdue, hours. The
+    /// remaining window is (deadline − t) and the job still needs
+    /// `remaining` base-hours at minimum scale.
+    pub fn slack_left(&self, t: usize) -> f64 {
+        self.job.deadline_slot() as f64 - t as f64 - self.remaining
+    }
+}
+
+/// A policy's decision for one slot.
+#[derive(Debug, Clone, Default)]
+pub struct Decision {
+    /// Provisioned cluster capacity m_t for this slot (will be clamped to M).
+    pub capacity: usize,
+    /// Server allocation per job (absent = suspended). Scales are clamped to
+    /// each job's [k_min, k_max] by the simulator.
+    pub alloc: Vec<(JobId, usize)>,
+}
+
+/// Immutable system view handed to `Policy::decide` each slot.
+pub struct SlotCtx<'a> {
+    /// Current slot (hours since trace start).
+    pub t: usize,
+    /// Active (queued + running) jobs, in arrival order.
+    pub jobs: &'a [JobView<'a>],
+    /// Day-ahead forecast service (the only carbon signal online policies
+    /// may consult).
+    pub forecaster: &'a Forecaster,
+    /// Maximum cluster capacity M.
+    pub max_capacity: usize,
+    /// Number of submission queues.
+    pub num_queues: usize,
+    /// Capacity provisioned in the previous slot.
+    pub prev_capacity: usize,
+    /// Servers actually allocated in the previous slot (utilization feature).
+    pub prev_used: usize,
+    /// Fraction of jobs completed in the trailing 24 h that violated their
+    /// slack (Alg. 2's `v`).
+    pub recent_violation_rate: f64,
+}
+
+impl SlotCtx<'_> {
+    /// Number of active jobs per queue — the Table 2 "queue length" feature.
+    pub fn queue_lengths(&self) -> Vec<usize> {
+        let mut lens = vec![0usize; self.num_queues.max(1)];
+        for jv in self.jobs {
+            let q = jv.job.queue.min(lens.len() - 1);
+            lens[q] += 1;
+        }
+        lens
+    }
+
+    /// Mean elasticity across active jobs (Table 2 feature); 0 when idle.
+    pub fn mean_elasticity(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        self.jobs.iter().map(|j| j.job.elasticity()).sum::<f64>() / self.jobs.len() as f64
+    }
+}
+
+/// A provisioning + scheduling policy.
+pub trait Policy {
+    /// Human-readable policy name used in reports.
+    fn name(&self) -> &'static str;
+
+    /// Decide capacity and allocations for slot `ctx.t`.
+    fn decide(&mut self, ctx: &SlotCtx) -> Decision;
+
+    /// Hook: called once when a job completes (policies with internal
+    /// schedules can garbage-collect).
+    fn on_complete(&mut self, _job: JobId, _t: usize) {}
+}
+
+/// Identifier for constructing policies by name (CLI / experiment grids).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    CarbonAgnostic,
+    Gaia,
+    WaitAwhile,
+    CarbonScaler,
+    Vcc,
+    VccScaling,
+    CarbonFlex,
+    Oracle,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 8] = [
+        PolicyKind::CarbonAgnostic,
+        PolicyKind::Gaia,
+        PolicyKind::WaitAwhile,
+        PolicyKind::CarbonScaler,
+        PolicyKind::Vcc,
+        PolicyKind::VccScaling,
+        PolicyKind::CarbonFlex,
+        PolicyKind::Oracle,
+    ];
+
+    /// The six policies of the paper's headline comparison (Fig. 6/7).
+    pub const HEADLINE: [PolicyKind; 6] = [
+        PolicyKind::CarbonAgnostic,
+        PolicyKind::Gaia,
+        PolicyKind::WaitAwhile,
+        PolicyKind::CarbonScaler,
+        PolicyKind::CarbonFlex,
+        PolicyKind::Oracle,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PolicyKind::CarbonAgnostic => "Carbon-Agnostic",
+            PolicyKind::Gaia => "GAIA",
+            PolicyKind::WaitAwhile => "Wait Awhile",
+            PolicyKind::CarbonScaler => "CarbonScaler",
+            PolicyKind::Vcc => "VCC",
+            PolicyKind::VccScaling => "VCC (Scaling)",
+            PolicyKind::CarbonFlex => "CarbonFlex",
+            PolicyKind::Oracle => "CarbonFlex(Oracle)",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        let norm = s.to_ascii_lowercase().replace([' ', '-', '_', '(', ')'], "");
+        Some(match norm.as_str() {
+            "carbonagnostic" | "agnostic" | "fcfs" => PolicyKind::CarbonAgnostic,
+            "gaia" => PolicyKind::Gaia,
+            "waitawhile" | "wait" => PolicyKind::WaitAwhile,
+            "carbonscaler" | "scaler" => PolicyKind::CarbonScaler,
+            "vcc" => PolicyKind::Vcc,
+            "vccscaling" => PolicyKind::VccScaling,
+            "carbonflex" | "flex" => PolicyKind::CarbonFlex,
+            "carbonflexoracle" | "oracle" => PolicyKind::Oracle,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_kind_parse_roundtrip() {
+        for k in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(k.as_str()), Some(k), "{}", k.as_str());
+        }
+        assert_eq!(PolicyKind::parse("oracle"), Some(PolicyKind::Oracle));
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,182 @@
+//! Mini benchmark harness for `harness = false` benches (criterion is not
+//! available in the offline environment).
+//!
+//! Provides warmup + timed iterations with mean/σ/min/max reporting, and a
+//! fixed-width table printer used by the per-figure benches to emit rows in
+//! the same shape as the paper's tables.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Online;
+
+/// Result of a timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>12} ± {:<10} (min {:>10}, max {:>10}, n={})",
+            self.name,
+            fmt_duration(self.mean),
+            fmt_duration(self.std_dev),
+            fmt_duration(self.min),
+            fmt_duration(self.max),
+            self.iters
+        )
+    }
+}
+
+/// Human duration formatting with unit auto-scaling.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Run `f` with `warmup` untimed iterations then `iters` timed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut acc = Online::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        acc.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: acc.count(),
+        mean: Duration::from_secs_f64(acc.mean()),
+        std_dev: Duration::from_secs_f64(acc.std_dev()),
+        min: Duration::from_secs_f64(acc.min()),
+        max: Duration::from_secs_f64(acc.max()),
+    }
+}
+
+/// Auto-calibrating variant: runs for roughly `budget` wall time.
+pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // One calibration call to estimate per-iter cost.
+    let t0 = Instant::now();
+    f();
+    let per_iter = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (budget.as_secs_f64() / per_iter.as_secs_f64()).clamp(3.0, 1000.0) as u64;
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+/// Fixed-width table printer for paper-style result rows.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        let widths = headers.iter().map(|h| h.len()).collect();
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), widths, rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        for (i, c) in cells.iter().enumerate() {
+            self.widths[i] = self.widths[i].max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: format heterogeneous cells.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s
+        };
+        out.push_str(&line(&self.headers, &self.widths));
+        out.push('\n');
+        out.push('|');
+        for w in &self.widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &self.widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0u64;
+        let r = bench("noop", 2, 10, || n += 1);
+        assert_eq!(r.iters, 10);
+        assert_eq!(n, 12);
+        assert!(r.min <= r.mean && r.mean <= r.max);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["policy", "savings"]);
+        t.row(&["CarbonFlex".into(), "57.5%".into()]);
+        t.row(&["GAIA".into(), "10%".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(s.contains("CarbonFlex"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

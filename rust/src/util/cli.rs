@@ -1,0 +1,121 @@
+//! Minimal command-line argument parser (no `clap` offline).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may be given as `--key=value` or `--key value`; `-h/--help` is
+//! handled by the caller via [`Args::flag`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Remaining positional arguments (after the subcommand).
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    args.options.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let val = it.next().unwrap();
+                    args.options.insert(rest.to_string(), val);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option access with a parse-or-default contract.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Option<Result<T, String>> {
+        self.get(name).map(|s| s.parse::<T>().map_err(|_| format!("invalid value for --{name}: '{s}'")))
+    }
+
+    /// Typed option with default; returns Err on malformed input.
+    pub fn num_or<T: std::str::FromStr + Copy>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.get_parsed::<T>(name) {
+            None => Ok(default),
+            Some(r) => r,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("simulate pos1 --config configs/fig6.toml --seed 7 --quiet");
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.get("config"), Some("configs/fig6.toml"));
+        assert_eq!(a.num_or::<u64>("seed", 0).unwrap(), 7);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("learn --window=336 --offsets=4");
+        assert_eq!(a.num_or::<usize>("window", 0).unwrap(), 336);
+        assert_eq!(a.num_or::<usize>("offsets", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --verbose");
+        assert!(a.flag("verbose"));
+        assert!(a.get("verbose").is_none());
+    }
+
+    #[test]
+    fn malformed_number_is_error() {
+        let a = parse("run --seed abc");
+        assert!(a.num_or::<u64>("seed", 0).is_err());
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse("");
+        assert!(a.command.is_none());
+        assert!(a.options.is_empty());
+    }
+}

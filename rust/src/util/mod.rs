@@ -1,0 +1,12 @@
+//! Infrastructure substrates built in-repo because the offline build has no
+//! access to `rand`, `serde`, `clap`, `criterion`, or `proptest`:
+//! deterministic RNG + distributions, statistics, JSON, logging, a CLI arg
+//! parser, a bench harness, and a property-testing helper.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;

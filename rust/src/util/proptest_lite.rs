@@ -1,0 +1,86 @@
+//! Hand-rolled property-testing substrate (no `proptest` offline).
+//!
+//! [`check`] runs a property over `cases` randomly generated inputs from a
+//! seeded generator; on failure it reports the case index and seed so the
+//! exact input can be regenerated. Generators compose via plain closures
+//! over [`crate::util::rng::Rng`].
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xCAFE_F00D }
+    }
+}
+
+/// Run `prop` over `cfg.cases` inputs drawn by `gen`. Panics with the failing
+/// case number and seed on the first violation (message from `prop`'s Err).
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = root.fork(case as u64);
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {:#x}):\n  {msg}\n  input: {input:?}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Like [`check`] but with the default config.
+pub fn quickcheck<T: std::fmt::Debug>(
+    name: &str,
+    generate: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(name, Config::default(), generate, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        quickcheck(
+            "abs is non-negative",
+            |r| r.normal_ms(0.0, 10.0),
+            |x| if x.abs() >= 0.0 { Ok(()) } else { Err("negative abs".into()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics() {
+        quickcheck("always-fails", |r| r.f64(), |_| Err("always-fails".into()));
+    }
+
+    #[test]
+    fn generator_sees_distinct_inputs() {
+        let mut seen = std::collections::BTreeSet::new();
+        check(
+            "inputs vary",
+            Config { cases: 32, seed: 1 },
+            |r| r.next_u64(),
+            |x| {
+                seen.insert(*x);
+                Ok(())
+            },
+        );
+        assert!(seen.len() > 30);
+    }
+}

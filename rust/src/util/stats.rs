@@ -1,0 +1,265 @@
+//! Descriptive statistics used by the trace synthesizers, metrics, and the
+//! bench harness: mean, variance, coefficient of variation, percentiles,
+//! histograms, and simple linear regression (for gradient estimation).
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0.0 for len < 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Coefficient of variation (σ/μ); 0.0 if mean is ~0.
+pub fn cov(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m.abs() < 1e-12 {
+        return 0.0;
+    }
+    std_dev(xs) / m
+}
+
+/// Mean per-day coefficient of variation — the "daily variability" metric of
+/// the paper's Fig. 5: CoV computed within each 24-sample day, averaged over
+/// days.
+pub fn daily_cov(hourly: &[f64]) -> f64 {
+    if hourly.len() < 24 {
+        return cov(hourly);
+    }
+    let days = hourly.len() / 24;
+    let covs: Vec<f64> = (0..days).map(|d| cov(&hourly[d * 24..(d + 1) * 24])).collect();
+    mean(&covs)
+}
+
+/// p-th percentile (0..=100) by linear interpolation; panics on empty input.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// p-th percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let p = p.clamp(0.0, 100.0);
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Min of a slice (NaN-free input assumed); panics on empty.
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+/// Max of a slice; panics on empty.
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Rank of `x` within `window` as a fraction in [0,1]: 0 = lowest value.
+/// Used for the day-ahead carbon-intensity rank feature (Table 2, CI^R).
+pub fn rank_fraction(x: f64, window: &[f64]) -> f64 {
+    if window.is_empty() {
+        return 0.5;
+    }
+    let below = window.iter().filter(|&&w| w < x).count();
+    below as f64 / window.len() as f64
+}
+
+/// Least-squares slope of y over x = 0..n (per-step gradient).
+pub fn slope(ys: &[f64]) -> f64 {
+    let n = ys.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let xs_mean = (n as f64 - 1.0) / 2.0;
+    let ys_mean = mean(ys);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, y) in ys.iter().enumerate() {
+        let dx = i as f64 - xs_mean;
+        num += dx * (y - ys_mean);
+        den += dx * dx;
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Fixed-width histogram: returns (bin_edges, counts).
+pub fn histogram(xs: &[f64], bins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(bins > 0);
+    if xs.is_empty() {
+        return (vec![0.0; bins + 1], vec![0; bins]);
+    }
+    let lo = min(xs);
+    let hi = max(xs);
+    let width = if hi > lo { (hi - lo) / bins as f64 } else { 1.0 };
+    let edges: Vec<f64> = (0..=bins).map(|i| lo + i as f64 * width).collect();
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let mut b = ((x - lo) / width) as usize;
+        if b >= bins {
+            b = bins - 1;
+        }
+        counts[b] += 1;
+    }
+    (edges, counts)
+}
+
+/// Welford online accumulator — used by the bench harness and metrics to
+/// stream statistics without storing samples.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Online { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / self.n as f64 }
+    }
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[]), 0.0);
+        assert_eq!(cov(&[]), 0.0);
+    }
+
+    #[test]
+    fn cov_scales_free() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [10.0, 20.0, 30.0];
+        assert!((cov(&a) - cov(&b)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [3.0, 1.0, 2.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 30.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_fraction_bounds() {
+        let w = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(rank_fraction(5.0, &w), 0.0);
+        assert_eq!(rank_fraction(45.0, &w), 1.0);
+        assert!((rank_fraction(25.0, &w) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slope_of_line() {
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        assert!((slope(&ys) - 2.0).abs() < 1e-12);
+        assert_eq!(slope(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn histogram_counts_all() {
+        let xs = [0.0, 0.5, 1.0, 1.5, 2.0];
+        let (_, counts) = histogram(&xs, 4);
+        assert_eq!(counts.iter().sum::<usize>(), xs.len());
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((o.variance() - variance(&xs)).abs() < 1e-9);
+        assert_eq!(o.min(), 2.0);
+        assert_eq!(o.max(), 9.0);
+    }
+
+    #[test]
+    fn daily_cov_flat_days() {
+        // Two days: first flat at 100 (CoV 0), second flat at 200 (CoV 0).
+        let mut xs = vec![100.0; 24];
+        xs.extend(vec![200.0; 24]);
+        assert!(daily_cov(&xs).abs() < 1e-12);
+        // Overall CoV would be ~0.33 — daily CoV must not see cross-day variance.
+        assert!(cov(&xs) > 0.3);
+    }
+}

@@ -1,0 +1,138 @@
+//! The job model (paper §3): elastic distributed batch jobs with an arrival
+//! time, a base-scale length, a queue-derived slack, and a scaling profile.
+
+use crate::workload::profile::ScalingProfile;
+
+/// Unique job identifier within a trace.
+pub type JobId = usize;
+
+/// An elastic batch job as submitted to the cluster.
+///
+/// `length_hours` is the job's execution time at its minimum scale `k_min`
+/// (progress accrues at `S(k) = Σ p(i)` "base-hours per hour" when running at
+/// scale k). `slack_hours` is the queue's maximum delay d_i: the job must
+/// finish by `arrival + length + slack` (after which every policy force-runs
+/// it to completion).
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    /// Catalog workload name (for power/network models and reporting).
+    pub workload: &'static str,
+    /// Index into the workload catalog.
+    pub workload_idx: usize,
+    /// Arrival slot (hours from trace start).
+    pub arrival: usize,
+    /// Base-scale execution length, hours.
+    pub length_hours: f64,
+    /// Queue index the job was submitted to.
+    pub queue: usize,
+    /// Maximum delay d_i from the queue config, hours.
+    pub slack_hours: f64,
+    /// Minimum servers (k_min ≥ 1).
+    pub k_min: usize,
+    /// Maximum servers (k_max ≥ k_min); k_min == k_max means non-elastic.
+    pub k_max: usize,
+    /// Normalized marginal-throughput profile over [1, k_max].
+    pub profile: ScalingProfile,
+    /// Active power per allocated server, watts.
+    pub watts_per_unit: f64,
+}
+
+impl Job {
+    /// Deadline slot: latest slot (inclusive) the job may still be running in
+    /// if it respects its slack: arrival + ceil(length) + slack − 1.
+    pub fn deadline_slot(&self) -> usize {
+        self.arrival + (self.length_hours + self.slack_hours).ceil() as usize
+    }
+
+    /// Total work to complete, in base-hours.
+    pub fn work(&self) -> f64 {
+        self.length_hours
+    }
+
+    /// Progress rate (base-hours per hour) at scale k; 0 when suspended.
+    pub fn rate(&self, k: usize) -> f64 {
+        if k == 0 {
+            return 0.0;
+        }
+        assert!(k >= self.k_min && k <= self.k_max, "job {} scale {k} outside [{}, {}]", self.id, self.k_min, self.k_max);
+        self.profile.throughput(k)
+    }
+
+    /// Marginal throughput of the k-th server.
+    pub fn marginal(&self, k: usize) -> f64 {
+        self.profile.marginal(k)
+    }
+
+    /// Is this job elastic at all?
+    pub fn is_elastic(&self) -> bool {
+        self.k_max > self.k_min
+    }
+
+    /// Mean elasticity (Table 2 state feature).
+    pub fn elasticity(&self) -> f64 {
+        self.profile.truncated(self.k_max).elasticity()
+    }
+
+    /// Minimum slots needed to finish if run at k_min continuously.
+    pub fn min_slots(&self) -> usize {
+        self.length_hours.ceil().max(1.0) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::profile::ScalingProfile;
+
+    pub fn test_job(id: usize, arrival: usize, length: f64, slack: f64, k_max: usize) -> Job {
+        Job {
+            id,
+            workload: "test",
+            workload_idx: 0,
+            arrival,
+            length_hours: length,
+            queue: 0,
+            slack_hours: slack,
+            k_min: 1,
+            k_max,
+            profile: ScalingProfile::from_comm_ratio(0.05, k_max),
+            watts_per_unit: 40.0,
+        }
+    }
+
+    #[test]
+    fn deadline_math() {
+        let j = test_job(0, 10, 4.0, 6.0, 4);
+        assert_eq!(j.deadline_slot(), 20);
+    }
+
+    #[test]
+    fn rate_zero_when_suspended() {
+        let j = test_job(0, 0, 2.0, 0.0, 4);
+        assert_eq!(j.rate(0), 0.0);
+        assert!((j.rate(1) - 1.0).abs() < 1e-9);
+        assert!(j.rate(4) > j.rate(1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rate_above_kmax_panics() {
+        test_job(0, 0, 2.0, 0.0, 4).rate(5);
+    }
+
+    #[test]
+    fn elastic_flag() {
+        let mut j = test_job(0, 0, 2.0, 0.0, 4);
+        assert!(j.is_elastic());
+        j.k_max = 1;
+        j.profile = ScalingProfile::inelastic();
+        assert!(!j.is_elastic());
+    }
+
+    #[test]
+    fn min_slots_rounds_up() {
+        assert_eq!(test_job(0, 0, 2.2, 0.0, 2).min_slots(), 3);
+        assert_eq!(test_job(0, 0, 0.4, 0.0, 2).min_slots(), 1);
+    }
+}

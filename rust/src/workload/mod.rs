@@ -1,0 +1,10 @@
+//! Workload substrate: the elastic-job model, the Table 3 scaling-profile
+//! catalog, and the Azure/Alibaba/SURF-like trace generators.
+
+pub mod io;
+pub mod job;
+pub mod profile;
+pub mod tracegen;
+
+pub use job::{Job, JobId};
+pub use profile::{ScalingProfile, Scalability, WorkloadSpec};

@@ -1,0 +1,289 @@
+//! Synthetic workload-trace generators.
+//!
+//! **Substitution note (DESIGN.md §3):** the paper samples the Azure 2017,
+//! Alibaba-PAI 2022, and SURF Lisa traces. We generate traces from the same
+//! statistical families those traces exhibit — nonhomogeneous Poisson
+//! arrivals with diurnal/weekday shape, lognormal job lengths (clipped to
+//! hour+ jobs like the paper), and per-family parameters chosen so the
+//! cross-trace deltas of Fig. 11 (Azure = longest jobs, Alibaba = short
+//! bursty jobs, SURF = weekday HPC) are reproduced. The arrival rate is
+//! calibrated so the carbon-agnostic baseline yields the target mean
+//! utilization (paper: ~50%).
+
+use crate::config::{ElasticityScenario, ExperimentConfig, Hardware, TraceFamily};
+use crate::util::rng::Rng;
+use crate::workload::job::Job;
+use crate::workload::profile::{self, ScalingProfile, Scalability, WorkloadSpec};
+
+/// Per-family arrival/length parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct FamilyParams {
+    /// Lognormal ln-mean of job length (hours).
+    pub len_mu: f64,
+    /// Lognormal ln-std of job length.
+    pub len_sigma: f64,
+    /// Diurnal arrival amplitude (0 = flat).
+    pub diurnal_amp: f64,
+    /// Weekday/weekend arrival modulation.
+    pub weekday_amp: f64,
+    /// Hour-of-day of the arrival peak.
+    pub peak_hour: f64,
+}
+
+impl FamilyParams {
+    pub fn for_family(family: TraceFamily) -> FamilyParams {
+        match family {
+            // Cloud VM/batch: long jobs (mean ≈ 8 h), mild diurnality.
+            TraceFamily::AzureLike => FamilyParams {
+                len_mu: 1.6,
+                len_sigma: 1.0,
+                diurnal_amp: 0.30,
+                weekday_amp: 0.15,
+                peak_hour: 14.0,
+            },
+            // MLaaS GPU jobs: short (mean ≈ 3 h), bursty office-hours.
+            TraceFamily::AlibabaLike => FamilyParams {
+                len_mu: 0.70,
+                len_sigma: 0.90,
+                diurnal_amp: 0.50,
+                weekday_amp: 0.20,
+                peak_hour: 15.0,
+            },
+            // HPC: medium-long (mean ≈ 7 h), strong weekday submission.
+            TraceFamily::SurfLike => FamilyParams {
+                len_mu: 1.2,
+                len_sigma: 1.2,
+                diurnal_amp: 0.25,
+                weekday_amp: 0.40,
+                peak_hour: 11.0,
+            },
+        }
+    }
+
+    /// Relative arrival intensity at slot `t`.
+    pub fn intensity(&self, t: usize) -> f64 {
+        let hod = (t % 24) as f64;
+        let day = (t / 24) % 7;
+        let diurnal =
+            1.0 + self.diurnal_amp * (std::f64::consts::TAU * (hod - self.peak_hour) / 24.0).cos();
+        let weekly = if day < 5 { 1.0 + self.weekday_amp } else { 1.0 - self.weekday_amp };
+        (diurnal * weekly).max(0.01)
+    }
+
+    /// Draw one job length in hours, clipped to the paper's hour+ focus.
+    pub fn draw_length(&self, rng: &mut Rng, scale: f64) -> f64 {
+        (rng.lognormal(self.len_mu, self.len_sigma) * scale).clamp(1.0, 96.0)
+    }
+
+    /// Empirical mean of [`draw_length`] (clipping makes the analytic
+    /// lognormal mean wrong; estimate by simulation, deterministic seed).
+    pub fn mean_length(&self, scale: f64) -> f64 {
+        let mut rng = Rng::new(0x11AD);
+        let n = 4000;
+        (0..n).map(|_| self.draw_length(&mut rng, scale)).sum::<f64>() / n as f64
+    }
+}
+
+/// Pick the workload spec for a job under an elasticity scenario.
+fn pick_workload(
+    scenario: ElasticityScenario,
+    hardware: Hardware,
+    catalog: &[WorkloadSpec],
+    rng: &mut Rng,
+) -> usize {
+    match scenario {
+        ElasticityScenario::Mix | ElasticityScenario::NoScaling => rng.below(catalog.len()),
+        ElasticityScenario::High | ElasticityScenario::Moderate | ElasticityScenario::Low => {
+            let class = match scenario {
+                ElasticityScenario::High => Scalability::High,
+                ElasticityScenario::Moderate => Scalability::Moderate,
+                _ => Scalability::Low,
+            };
+            let idx: Vec<usize> = catalog
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| w.scalability == class)
+                .map(|(i, _)| i)
+                .collect();
+            debug_assert!(!idx.is_empty(), "no {class:?} workloads for {hardware:?}");
+            *rng.choose(&idx)
+        }
+    }
+}
+
+/// Generate a job trace of `horizon` hours under `cfg`, deterministically
+/// from `seed`.
+///
+/// The number of jobs is calibrated so base-scale demand
+/// (`Σ length · k_min`) ≈ `capacity · horizon · target_utilization`,
+/// then scaled by `cfg.arrival_scale`; lengths scale by `cfg.length_scale`
+/// (the Fig. 13 distribution-shift knobs).
+pub fn generate(cfg: &ExperimentConfig, horizon: usize, seed: u64) -> Vec<Job> {
+    let params = FamilyParams::for_family(cfg.trace);
+    let catalog = profile::catalog_for(cfg.hardware);
+    let k_max_hw = profile::default_k_max(cfg.hardware);
+    let mut rng = Rng::new(seed);
+
+    let mean_len = params.mean_length(cfg.length_scale);
+    let target_jobs = (cfg.capacity as f64 * cfg.target_utilization * horizon as f64 / mean_len
+        * cfg.arrival_scale)
+        .round()
+        .max(1.0) as usize;
+
+    // Sample arrival slots from the normalized intensity.
+    let weights: Vec<f64> = (0..horizon).map(|t| params.intensity(t)).collect();
+    let mut arrivals: Vec<usize> = (0..target_jobs).map(|_| rng.weighted(&weights)).collect();
+    arrivals.sort_unstable();
+
+    let mut jobs = Vec::with_capacity(target_jobs);
+    for (id, arrival) in arrivals.into_iter().enumerate() {
+        let widx = pick_workload(cfg.elasticity, cfg.hardware, &catalog, &mut rng);
+        let spec = &catalog[widx];
+        let length = params.draw_length(&mut rng, cfg.length_scale);
+        let (k_min, k_max, prof) = if cfg.elasticity == ElasticityScenario::NoScaling {
+            (1, 1, ScalingProfile::inelastic())
+        } else {
+            (1, k_max_hw, spec.profile(k_max_hw))
+        };
+        jobs.push(Job {
+            id,
+            workload: spec.name,
+            workload_idx: widx,
+            arrival,
+            length_hours: length,
+            queue: cfg.queue_for_length(length),
+            slack_hours: cfg.slack_for_length(length),
+            k_min,
+            k_max,
+            profile: prof,
+            watts_per_unit: spec.watts_per_unit,
+        });
+    }
+    jobs
+}
+
+/// Base-scale demand of a trace in server-hours.
+pub fn total_demand(jobs: &[Job]) -> f64 {
+    jobs.iter().map(|j| j.length_hours * j.k_min as f64).sum()
+}
+
+/// Implied mean utilization of a trace against a capacity/horizon.
+pub fn implied_utilization(jobs: &[Job], capacity: usize, horizon: usize) -> f64 {
+    total_demand(jobs) / (capacity as f64 * horizon as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig::default()
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&cfg(), 168, 1);
+        let b = generate(&cfg(), 168, 1);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.length_hours, y.length_hours);
+            assert_eq!(x.workload, y.workload);
+        }
+    }
+
+    #[test]
+    fn utilization_calibrated() {
+        let c = cfg();
+        let jobs = generate(&c, 336, 2);
+        let u = implied_utilization(&jobs, c.capacity, 336);
+        assert!((u - 0.5).abs() < 0.08, "utilization {u}");
+    }
+
+    #[test]
+    fn arrival_scale_shifts_load() {
+        let mut c = cfg();
+        let base = generate(&c, 168, 3).len();
+        c.arrival_scale = 1.2;
+        let more = generate(&c, 168, 3).len();
+        assert!((more as f64 / base as f64 - 1.2).abs() < 0.05);
+    }
+
+    #[test]
+    fn length_scale_shifts_lengths() {
+        let mut c = cfg();
+        let jobs_base = generate(&c, 168, 4);
+        c.length_scale = 1.2;
+        let jobs_long = generate(&c, 168, 4);
+        let mean = |js: &[Job]| js.iter().map(|j| j.length_hours).sum::<f64>() / js.len() as f64;
+        assert!(mean(&jobs_long) > mean(&jobs_base) * 1.05);
+    }
+
+    #[test]
+    fn arrivals_sorted_within_horizon() {
+        let jobs = generate(&cfg(), 168, 5);
+        for w in jobs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        assert!(jobs.iter().all(|j| j.arrival < 168));
+        assert!(jobs.iter().all(|j| j.length_hours >= 1.0));
+    }
+
+    #[test]
+    fn queue_assignment_consistent() {
+        let c = cfg();
+        for j in generate(&c, 168, 6) {
+            assert_eq!(j.queue, c.queue_for_length(j.length_hours));
+            assert_eq!(j.slack_hours, c.slack_for_length(j.length_hours));
+        }
+    }
+
+    #[test]
+    fn azure_jobs_longer_than_alibaba() {
+        let mut c = cfg();
+        c.trace = TraceFamily::AzureLike;
+        let az = generate(&c, 336, 7);
+        c.trace = TraceFamily::AlibabaLike;
+        let al = generate(&c, 336, 7);
+        let mean = |js: &[Job]| js.iter().map(|j| j.length_hours).sum::<f64>() / js.len() as f64;
+        assert!(mean(&az) > mean(&al) * 1.5, "azure {} alibaba {}", mean(&az), mean(&al));
+    }
+
+    #[test]
+    fn noscaling_jobs_inelastic() {
+        let mut c = cfg();
+        c.elasticity = ElasticityScenario::NoScaling;
+        for j in generate(&c, 168, 8) {
+            assert_eq!(j.k_max, 1);
+            assert!(!j.is_elastic());
+        }
+    }
+
+    #[test]
+    fn scenario_filters_catalog() {
+        let mut c = cfg();
+        c.elasticity = ElasticityScenario::High;
+        for j in generate(&c, 168, 9) {
+            assert!(j.workload.contains("N-body"), "unexpected workload {}", j.workload);
+        }
+    }
+
+    #[test]
+    fn gpu_uses_gpu_catalog() {
+        let mut c = cfg();
+        c.hardware = Hardware::Gpu;
+        c.capacity = 15;
+        for j in generate(&c, 168, 10) {
+            assert!(j.k_max <= 8);
+            assert!(j.watts_per_unit >= 100.0);
+        }
+    }
+
+    #[test]
+    fn weekday_intensity_higher() {
+        let p = FamilyParams::for_family(TraceFamily::SurfLike);
+        // Tuesday noon vs Sunday noon.
+        assert!(p.intensity(24 + 12) > p.intensity(6 * 24 + 12));
+    }
+}

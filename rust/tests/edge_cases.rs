@@ -1,0 +1,222 @@
+//! Edge-case and failure-injection tests: degenerate workloads, hostile
+//! configs, and coordinator misuse must degrade cleanly, never panic or
+//! wedge the engine.
+
+use carbonflex::carbon::forecast::Forecaster;
+use carbonflex::carbon::trace::CarbonTrace;
+use carbonflex::cluster::energy::EnergyModel;
+use carbonflex::cluster::sim::Simulator;
+use carbonflex::config::{ExperimentConfig, Hardware};
+use carbonflex::coordinator::{Coordinator, CoordinatorConfig, Request, Response};
+use carbonflex::experiments::runner::PreparedExperiment;
+use carbonflex::sched::carbon_agnostic::CarbonAgnostic;
+use carbonflex::sched::carbonflex::{CarbonFlex, CarbonFlexParams};
+use carbonflex::sched::{Decision, Policy, PolicyKind, SlotCtx};
+use carbonflex::workload::job::Job;
+use carbonflex::workload::profile::ScalingProfile;
+
+fn job(id: usize, arrival: usize, length: f64, slack: f64) -> Job {
+    Job {
+        id,
+        workload: "t",
+        workload_idx: 0,
+        arrival,
+        length_hours: length,
+        queue: 0,
+        slack_hours: slack,
+        k_min: 1,
+        k_max: 4,
+        profile: ScalingProfile::from_comm_ratio(0.05, 4),
+        watts_per_unit: 40.0,
+    }
+}
+
+fn sim(cap: usize) -> Simulator {
+    Simulator::new(cap, EnergyModel::for_hardware(Hardware::Cpu), 3, 96)
+}
+
+fn flat(hours: usize) -> Forecaster {
+    Forecaster::perfect(CarbonTrace::new("flat", vec![100.0; hours]))
+}
+
+/// A policy that emits garbage decisions: unknown job ids, absurd scales,
+/// capacity over M. The engine must sanitize all of it.
+struct HostilePolicy;
+impl Policy for HostilePolicy {
+    fn name(&self) -> &'static str {
+        "hostile"
+    }
+    fn decide(&mut self, ctx: &SlotCtx) -> Decision {
+        let mut alloc: Vec<(usize, usize)> = vec![(usize::MAX, 3), (9999, 1)];
+        for v in ctx.jobs {
+            alloc.push((v.job.id, 1000)); // far beyond k_max
+        }
+        Decision { capacity: usize::MAX, alloc }
+    }
+}
+
+#[test]
+fn hostile_policy_is_sanitized() {
+    let jobs: Vec<Job> = (0..4).map(|i| job(i, i, 3.0, 12.0)).collect();
+    let r = sim(6).run(&jobs, &flat(200), &mut HostilePolicy);
+    assert_eq!(r.metrics.completed, 4);
+    assert!(r.slots.iter().all(|s| s.used <= 6));
+    assert!(r.slots.iter().all(|s| s.provisioned <= 6));
+}
+
+/// A policy that flip-flops between all and nothing every slot.
+struct Thrash(bool);
+impl Policy for Thrash {
+    fn name(&self) -> &'static str {
+        "thrash"
+    }
+    fn decide(&mut self, ctx: &SlotCtx) -> Decision {
+        self.0 = !self.0;
+        if self.0 {
+            Decision { capacity: ctx.max_capacity, alloc: vec![] }
+        } else {
+            Decision {
+                capacity: ctx.max_capacity,
+                alloc: ctx.jobs.iter().map(|v| (v.job.id, v.job.k_max)).collect(),
+            }
+        }
+    }
+}
+
+#[test]
+fn thrashing_policy_still_completes_with_bounded_rescales() {
+    let jobs: Vec<Job> = (0..3).map(|i| job(i, 0, 4.0, 12.0)).collect();
+    let r = sim(16).run(&jobs, &flat(300), &mut Thrash(false));
+    assert_eq!(r.metrics.completed, 3);
+    // Each run/suspend transition is a checkpoint event; bounded by slots.
+    assert!(r.metrics.total_rescales > 0);
+    assert!(r.metrics.total_rescales < 200);
+}
+
+#[test]
+fn zero_length_trace_and_empty_jobs() {
+    let r = sim(4).run(&[], &flat(10), &mut CarbonAgnostic);
+    assert_eq!(r.metrics.completed, 0);
+    assert_eq!(r.metrics.carbon_g, 0.0);
+    assert!(r.slots.is_empty());
+}
+
+#[test]
+fn single_slot_jobs_at_every_arrival() {
+    let jobs: Vec<Job> = (0..24).map(|i| job(i, i, 1.0, 0.0)).collect();
+    let r = sim(2).run(&jobs, &flat(200), &mut CarbonAgnostic);
+    assert_eq!(r.metrics.completed, 24);
+    assert_eq!(r.metrics.violations, 0);
+}
+
+#[test]
+fn carbonflex_with_empty_kb_behaves_like_agnostic_capacity() {
+    let kb = carbonflex::learning::kb::KnowledgeBase::new();
+    let mut cf = CarbonFlex::new(kb, CarbonFlexParams::default());
+    let jobs: Vec<Job> = (0..5).map(|i| job(i, 0, 2.0, 6.0)).collect();
+    let r = sim(8).run(&jobs, &flat(100), &mut cf);
+    assert_eq!(r.metrics.completed, 5);
+    // Empty KB → full capacity provisioning, everything runs promptly.
+    assert!(r.metrics.mean_delay_hours < 4.0, "delay {}", r.metrics.mean_delay_hours);
+}
+
+#[test]
+fn coordinator_rejects_bad_wire_input_without_dying() {
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            max_capacity: 4,
+            hardware: Hardware::Cpu,
+            num_queues: 3,
+            queue_slack_hours: vec![6.0, 24.0, 48.0],
+            horizon: 50,
+        },
+        flat(200),
+        Box::new(CarbonAgnostic),
+    );
+    let h = coord.handle();
+    // Bad requests at the protocol layer.
+    assert!(Request::from_json_line("{\"op\": 5}").is_err());
+    assert!(Request::from_json_line("").is_err());
+    // Bad requests at the semantic layer.
+    assert!(h.submit("NoSuchWorkload", 1.0, 0).is_err());
+    assert!(h.submit("Heat(N=1k)", 0.0, 0).is_err());
+    assert!(h.submit("Heat(N=1k)", -3.0, 99).is_err());
+    // Queue index is clamped, not rejected.
+    assert!(h.submit("Heat(N=1k)", 1.0, 99).is_ok());
+    // The coordinator still works.
+    assert!(h.tick().is_ok());
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 1);
+}
+
+#[test]
+fn coordinator_handle_survives_shutdown() {
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            max_capacity: 4,
+            hardware: Hardware::Cpu,
+            num_queues: 3,
+            queue_slack_hours: vec![6.0],
+            horizon: 50,
+        },
+        flat(100),
+        Box::new(CarbonAgnostic),
+    );
+    let h = coord.handle();
+    coord.shutdown();
+    // Requests after shutdown fail cleanly instead of hanging.
+    match h.request(Request::Status) {
+        Response::Error { .. } => {}
+        other => panic!("expected error after shutdown, got {other:?}"),
+    }
+}
+
+#[test]
+fn config_fuzz_never_panics() {
+    // Random byte soup through the TOML parser + schema: errors only.
+    use carbonflex::util::rng::Rng;
+    let mut rng = Rng::new(0xF422);
+    let fragments = [
+        "[experiment]", "[cluster]", "capacity = ", "= 5", "\"", "[[queue]]",
+        "name", "delay_hours = 6.0", "#", "[", "]", "=", "1e999", "-",
+        "true", "nested = [[1,", "max_len_hours = 2.0",
+    ];
+    for _ in 0..500 {
+        let n = 1 + rng.below(8);
+        let src: Vec<&str> = (0..n).map(|_| *rng.choose(&fragments)).collect();
+        let doc = src.join("\n");
+        let _ = ExperimentConfig::from_toml_str(&doc); // must not panic
+    }
+}
+
+#[test]
+fn extreme_utilization_configs_still_drain() {
+    for util in [0.05, 0.9] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 16;
+        cfg.horizon_hours = 48;
+        cfg.history_hours = 72;
+        cfg.replay_offsets = 1;
+        cfg.target_utilization = util;
+        let mut prep = PreparedExperiment::prepare(&cfg);
+        for kind in [PolicyKind::CarbonFlex, PolicyKind::Oracle] {
+            let r = prep.run(kind);
+            assert_eq!(r.metrics.unfinished, 0, "util {util} {kind:?}");
+        }
+    }
+}
+
+#[test]
+fn inelastic_only_cluster_suspends_but_never_scales() {
+    // k_min == k_max jobs: scaling requests must clamp to 1.
+    let jobs: Vec<Job> = (0..3)
+        .map(|i| Job {
+            k_max: 1,
+            profile: ScalingProfile::inelastic(),
+            ..job(i, 0, 3.0, 12.0)
+        })
+        .collect();
+    let r = sim(8).run(&jobs, &flat(100), &mut Thrash(false));
+    assert_eq!(r.metrics.completed, 3);
+    assert!(r.slots.iter().all(|s| s.rho >= 1.0));
+}

@@ -1,0 +1,184 @@
+//! End-to-end integration: the paper's headline claims must hold in shape
+//! on the default configuration, the coordinator service must round-trip
+//! jobs, and the config/CLI surface must load the shipped files.
+
+use carbonflex::carbon::forecast::Forecaster;
+use carbonflex::carbon::synth::{synthesize_year, Region};
+use carbonflex::config::{ExperimentConfig, Hardware};
+use carbonflex::coordinator::{Coordinator, CoordinatorConfig, Request, Response, SubmitRequest};
+use carbonflex::experiments::runner::{run_policies, PreparedExperiment};
+use carbonflex::sched::PolicyKind;
+
+/// Reduced-size default: same structure as the paper's primary setting.
+fn small_paper_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.capacity = 40;
+    cfg.horizon_hours = 120;
+    cfg.history_hours = 240;
+    cfg.replay_offsets = 3;
+    cfg
+}
+
+#[test]
+fn headline_ordering_holds() {
+    // Fig. 6's qualitative result: Oracle > CarbonFlex > {suspend-resume
+    // and non-preemptive baselines} > Agnostic. Run at the paper's full
+    // scale (M=150, week horizon): the ordering is a scale-dependent
+    // claim — tiny clusters flatter the non-elastic baselines.
+    let rows = run_policies(&ExperimentConfig::default(), &PolicyKind::HEADLINE);
+    let savings = |kind: PolicyKind| {
+        rows.iter().find(|r| r.kind == kind).map(|r| r.savings_pct).unwrap()
+    };
+    let oracle = savings(PolicyKind::Oracle);
+    let flex = savings(PolicyKind::CarbonFlex);
+    let gaia = savings(PolicyKind::Gaia);
+    assert!(oracle >= flex, "oracle {oracle} < flex {flex}");
+    assert!(flex > gaia, "flex {flex} <= gaia {gaia}");
+    assert!(flex > 20.0, "CarbonFlex saved only {flex}%");
+    assert!(oracle > 35.0, "oracle saved only {oracle}%");
+    assert!(savings(PolicyKind::CarbonAgnostic).abs() < 1e-9);
+}
+
+#[test]
+fn savings_scale_with_trace_variability() {
+    // Fig. 12's monotonicity: high-CoV regions admit more savings.
+    let mut high = small_paper_cfg();
+    high.region = "south-australia".into();
+    let mut low = small_paper_cfg();
+    low.region = "virginia".into();
+    let sa = run_policies(&high, &[PolicyKind::Oracle]).pop().unwrap().savings_pct;
+    let va = run_policies(&low, &[PolicyKind::Oracle]).pop().unwrap().savings_pct;
+    assert!(sa > va + 10.0, "SA {sa}% vs VA {va}%");
+    assert!(va < 12.0, "Virginia should admit little saving, got {va}%");
+    // And the CoV ordering itself (Fig. 5):
+    assert!(
+        synthesize_year(Region::SouthAustralia, 1).daily_cov()
+            > synthesize_year(Region::Virginia, 1).daily_cov() * 5.0
+    );
+}
+
+#[test]
+fn slack_increases_savings() {
+    // Fig. 9a: more slack, more savings (diminishing but monotone-ish).
+    let mut d0 = small_paper_cfg();
+    d0.uniform_delay_hours = Some(0.0);
+    let mut d24 = small_paper_cfg();
+    d24.uniform_delay_hours = Some(24.0);
+    let s0 = run_policies(&d0, &[PolicyKind::Oracle]).pop().unwrap().savings_pct;
+    let s24 = run_policies(&d24, &[PolicyKind::Oracle]).pop().unwrap().savings_pct;
+    assert!(s24 > s0 + 5.0, "d=0 {s0}% vs d=24 {s24}%");
+}
+
+#[test]
+fn elasticity_increases_savings() {
+    // Fig. 10: High-elasticity workloads save more than NoScaling ones.
+    use carbonflex::config::ElasticityScenario;
+    let mut hi = small_paper_cfg();
+    hi.elasticity = ElasticityScenario::High;
+    let mut none = small_paper_cfg();
+    none.elasticity = ElasticityScenario::NoScaling;
+    let s_hi = run_policies(&hi, &[PolicyKind::Oracle]).pop().unwrap().savings_pct;
+    let s_none = run_policies(&none, &[PolicyKind::Oracle]).pop().unwrap().savings_pct;
+    assert!(s_hi > s_none, "high {s_hi}% vs noscaling {s_none}%");
+}
+
+#[test]
+fn learning_phase_is_transferable() {
+    // The KB learned on one window must still beat agnostic on a shifted
+    // workload (Fig. 13's premise).
+    let mut cfg = small_paper_cfg();
+    cfg.arrival_scale = 1.15;
+    cfg.length_scale = 1.15;
+    let rows = run_policies(&cfg, &[PolicyKind::CarbonFlex]);
+    assert!(rows[0].savings_pct > 10.0, "shifted savings {}", rows[0].savings_pct);
+    assert_eq!(rows[0].result.metrics.unfinished, 0);
+}
+
+#[test]
+fn coordinator_json_protocol_round_trip() {
+    let trace = synthesize_year(Region::Ontario, 3).slice(0, 400);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            max_capacity: 8,
+            hardware: Hardware::Cpu,
+            num_queues: 3,
+            queue_slack_hours: vec![6.0, 24.0, 48.0],
+            horizon: 120,
+        },
+        Forecaster::perfect(trace),
+        Box::new(carbonflex::sched::carbon_agnostic::CarbonAgnostic),
+    );
+    let h = coord.handle();
+
+    // Drive it purely through the wire format.
+    let submit = Request::Submit(SubmitRequest {
+        workload: "Jacobi(N=2k)".into(),
+        length_hours: 3.0,
+        queue: 1,
+    });
+    let line = submit.to_json_line();
+    let parsed = Request::from_json_line(&line).unwrap();
+    let resp = h.request(parsed);
+    assert!(matches!(resp, Response::Submitted { job_id: 0 }), "{resp:?}");
+    // Response survives its own wire format.
+    let resp2 = Response::from_json_line(&resp.to_json_line()).unwrap();
+    assert_eq!(resp, resp2);
+
+    h.request(Request::Tick);
+    match h.request(Request::Status) {
+        Response::Status(s) => {
+            assert_eq!(s.active_jobs, 1);
+            assert_eq!(s.used, 1);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.completed, 1);
+}
+
+#[test]
+fn shipped_configs_load_and_run() {
+    // Every file in configs/ must parse, validate, and drive a short run.
+    let dir = std::path::Path::new("configs");
+    let mut found = 0;
+    for entry in std::fs::read_dir(dir).expect("configs/ exists") {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e == "toml").unwrap_or(false) {
+            found += 1;
+            let mut cfg = ExperimentConfig::load(&path)
+                .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+            // Shrink for test speed, keeping the config's structure.
+            cfg.capacity = cfg.capacity.min(20);
+            cfg.horizon_hours = cfg.horizon_hours.min(48);
+            cfg.history_hours = cfg.history_hours.min(96).max(cfg.horizon_hours);
+            cfg.replay_offsets = 1;
+            let mut prep = PreparedExperiment::prepare(&cfg);
+            let r = prep.run(PolicyKind::CarbonAgnostic);
+            assert_eq!(r.metrics.unfinished, 0, "{path:?}");
+        }
+    }
+    assert!(found >= 3, "expected shipped configs, found {found}");
+}
+
+#[test]
+fn knowledge_base_round_trips_through_disk() {
+    let mut prep = PreparedExperiment::prepare(&{
+        let mut cfg = small_paper_cfg();
+        cfg.capacity = 12;
+        cfg.horizon_hours = 48;
+        cfg.history_hours = 72;
+        cfg.replay_offsets = 1;
+        cfg
+    });
+    let kb = prep.knowledge_base();
+    let dir = std::env::temp_dir().join("carbonflex_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("kb.csv");
+    kb.save_csv(&path).unwrap();
+    let loaded = carbonflex::learning::kb::KnowledgeBase::load_csv(&path).unwrap();
+    assert_eq!(loaded.cases().len(), kb.cases().len());
+    // Matching through the loaded KB works.
+    use carbonflex::learning::kb::Matcher;
+    let q = carbonflex::learning::state::StateVector::from_raw(200.0, 0.0, 0.4, &[3, 2, 1], 0.6);
+    assert_eq!(loaded.top_k(&q, 5).len(), 5);
+}

@@ -1,0 +1,158 @@
+//! Integration: the AOT-compiled Pallas kernels executed via PJRT must agree
+//! with the native Rust implementations. Skipped (with a notice) when
+//! `artifacts/` has not been built — run `make artifacts` first.
+
+use carbonflex::learning::kb::{Case, KnowledgeBase, Matcher};
+use carbonflex::learning::state::StateVector;
+use carbonflex::runtime::engine::Engine;
+use carbonflex::runtime::matcher::PjrtMatcher;
+use carbonflex::runtime::score::{score_native, ScoreKernel};
+use carbonflex::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    match Engine::cpu("artifacts") {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP pjrt tests: {err}");
+            None
+        }
+    }
+}
+
+fn random_kb(n: usize, seed: u64) -> KnowledgeBase {
+    let mut rng = Rng::new(seed);
+    let mut kb = KnowledgeBase::new();
+    for i in 0..n {
+        kb.push(Case {
+            recorded_at: i,
+            state: StateVector::from_raw(
+                rng.range(10.0, 700.0),
+                rng.range(-80.0, 80.0),
+                rng.f64(),
+                &[rng.below(40), rng.below(40), rng.below(40)],
+                rng.f64(),
+            ),
+            capacity: rng.below(151),
+            rho: rng.range(0.2, 1.01),
+        });
+    }
+    kb.rebuild();
+    kb
+}
+
+#[test]
+fn pjrt_matcher_agrees_with_native_kdtree() {
+    let Some(engine) = engine() else { return };
+    let kb = random_kb(1000, 42);
+    let matcher = PjrtMatcher::from_kb(&engine, &kb).expect("matcher builds");
+    assert_eq!(matcher.len(), 1000);
+
+    let mut rng = Rng::new(7);
+    for case in 0..50 {
+        let query = StateVector::from_raw(
+            rng.range(10.0, 700.0),
+            rng.range(-80.0, 80.0),
+            rng.f64(),
+            &[rng.below(40), rng.below(40), rng.below(40)],
+            rng.f64(),
+        );
+        let native = kb.top_k(&query, 5);
+        let pjrt = matcher.top_k(&query, 5);
+        assert_eq!(native.len(), pjrt.len(), "case {case}");
+        for (i, (n, p)) in native.iter().zip(&pjrt).enumerate() {
+            assert!(
+                (n.dist - p.dist).abs() < 1e-3,
+                "case {case} rank {i}: native dist {} pjrt {}",
+                n.dist,
+                p.dist
+            );
+            // Ties may reorder equal-distance neighbours; compare decisions
+            // only when distances are clearly distinct.
+            let distinct = i + 1 == native.len()
+                || (native[i + 1].dist - n.dist).abs() > 1e-6;
+            if distinct {
+                assert_eq!(n.capacity, p.capacity, "case {case} rank {i}");
+                assert!((n.rho - p.rho).abs() < 1e-4, "case {case} rank {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_matcher_handles_small_kb() {
+    let Some(engine) = engine() else { return };
+    let kb = random_kb(3, 9);
+    let matcher = PjrtMatcher::from_kb(&engine, &kb).unwrap();
+    let query = StateVector::from_raw(200.0, 0.0, 0.5, &[1, 2, 3], 0.5);
+    // Only 3 valid cases → at most 3 neighbours even when asking for 5.
+    let hits = matcher.top_k(&query, 5);
+    assert_eq!(hits.len(), 3);
+    // Padding rows must never appear (their distance would be enormous).
+    assert!(hits.iter().all(|h| h.dist < 1e3), "{hits:?}");
+}
+
+#[test]
+fn pjrt_matcher_truncates_oversized_kb() {
+    let Some(engine) = engine() else { return };
+    let kb = random_kb(5000, 11); // > 4096 compiled cases
+    let matcher = PjrtMatcher::from_kb(&engine, &kb).unwrap();
+    assert_eq!(matcher.len(), 4096);
+    let query = StateVector::from_raw(300.0, 10.0, 0.4, &[5, 5, 5], 0.6);
+    assert_eq!(matcher.top_k(&query, 5).len(), 5);
+}
+
+#[test]
+fn pjrt_score_kernel_matches_native() {
+    let Some(engine) = engine() else { return };
+    let kernel = ScoreKernel::load(&engine).expect("score kernel loads");
+    let (jk, t) = kernel.shape();
+    let mut rng = Rng::new(13);
+    let marginals: Vec<f32> = (0..jk).map(|_| rng.f64() as f32).collect();
+    let ci: Vec<f32> = (0..t).map(|_| rng.range(10.0, 700.0) as f32).collect();
+    let window: Vec<f32> = (0..jk * t).map(|_| if rng.chance(0.4) { 1.0 } else { 0.0 }).collect();
+
+    let got = kernel.run(&marginals, &ci, &window).expect("score runs");
+    let want = score_native(&marginals, &ci, &window);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() <= 1e-6 + 1e-4 * w.abs(), "idx {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn pjrt_end_to_end_carbonflex_policy() {
+    // The full hot path: CarbonFlex scheduling with the PJRT matcher backend.
+    let Some(engine) = engine() else { return };
+    use carbonflex::carbon::forecast::Forecaster;
+    use carbonflex::cluster::energy::EnergyModel;
+    use carbonflex::cluster::sim::Simulator;
+    use carbonflex::config::{ExperimentConfig, Hardware};
+    use carbonflex::experiments::runner::PreparedExperiment;
+    use carbonflex::sched::carbonflex::{CarbonFlex, CarbonFlexParams};
+    use carbonflex::sched::PolicyKind;
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.capacity = 30;
+    cfg.horizon_hours = 72;
+    cfg.history_hours = 120;
+    cfg.replay_offsets = 2;
+    let mut prep = PreparedExperiment::prepare(&cfg);
+    let native = prep.run(PolicyKind::CarbonFlex);
+
+    let matcher = PjrtMatcher::from_kb(&engine, prep.knowledge_base()).unwrap();
+    let mut policy = CarbonFlex::new(matcher, CarbonFlexParams::default());
+    let sim = Simulator::new(
+        cfg.capacity,
+        EnergyModel::for_hardware(Hardware::Cpu),
+        cfg.queues.len(),
+        cfg.horizon_hours,
+    );
+    let forecaster = Forecaster::perfect(prep.eval_trace.clone());
+    let pjrt = sim.run(&prep.eval_jobs, &forecaster, &mut policy);
+
+    assert_eq!(pjrt.metrics.completed, native.metrics.completed);
+    // Decisions should be near-identical (f32 rounding can flip rare ties).
+    let rel = (pjrt.metrics.carbon_g - native.metrics.carbon_g).abs()
+        / native.metrics.carbon_g.max(1.0);
+    assert!(rel < 0.02, "pjrt {} vs native {}", pjrt.metrics.carbon_g, native.metrics.carbon_g);
+}

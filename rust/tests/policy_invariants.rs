@@ -1,0 +1,245 @@
+//! Property tests over randomized instances: every policy must uphold the
+//! cluster invariants the paper's prototype (Slurm) would physically
+//! enforce, on any workload/carbon trace the generators can produce.
+
+use carbonflex::carbon::synth::{self, Region};
+use carbonflex::cluster::sim::SimResult;
+use carbonflex::config::{ElasticityScenario, ExperimentConfig, TraceFamily};
+use carbonflex::experiments::runner::PreparedExperiment;
+use carbonflex::sched::PolicyKind;
+use carbonflex::util::proptest_lite::{check, Config};
+use carbonflex::util::rng::Rng;
+use carbonflex::workload::tracegen;
+
+/// A randomized experimental setting.
+#[derive(Debug)]
+struct Instance {
+    cfg: ExperimentConfig,
+}
+
+fn random_instance(rng: &mut Rng) -> Instance {
+    let mut cfg = ExperimentConfig::default();
+    cfg.seed = rng.next_u64();
+    cfg.capacity = 4 + rng.below(28);
+    cfg.horizon_hours = 48 + 24 * rng.below(3);
+    cfg.history_hours = cfg.horizon_hours + 24 + 24 * rng.below(3);
+    cfg.replay_offsets = 1 + rng.below(2);
+    cfg.target_utilization = rng.range(0.25, 0.7);
+    cfg.region = rng
+        .choose(&[Region::SouthAustralia, Region::California, Region::Ontario, Region::Virginia])
+        .key()
+        .to_string();
+    cfg.trace = *rng.choose(&[
+        TraceFamily::AzureLike,
+        TraceFamily::AlibabaLike,
+        TraceFamily::SurfLike,
+    ]);
+    cfg.elasticity = *rng.choose(&[
+        ElasticityScenario::Mix,
+        ElasticityScenario::High,
+        ElasticityScenario::Low,
+        ElasticityScenario::NoScaling,
+    ]);
+    Instance { cfg }
+}
+
+fn run(instance: &Instance, kind: PolicyKind) -> SimResult {
+    let mut prep = PreparedExperiment::prepare(&instance.cfg);
+    prep.run(kind)
+}
+
+fn assert_invariants(instance: &Instance, kind: PolicyKind, r: &SimResult) -> Result<(), String> {
+    let m = &r.metrics;
+    // 1. Work conservation: every job completes.
+    if m.unfinished != 0 {
+        return Err(format!("{kind:?}: {} unfinished jobs", m.unfinished));
+    }
+    // 2. Physical capacity is never exceeded.
+    if let Some(bad) = r.slots.iter().find(|s| s.used > instance.cfg.capacity) {
+        return Err(format!(
+            "{kind:?}: capacity exceeded at t={} ({} > {})",
+            bad.t, bad.used, instance.cfg.capacity
+        ));
+    }
+    // 3. Energy and carbon are positive and consistent between the slot
+    //    ledger and the per-job ledger (boot overheads are tracked apart).
+    if m.energy_kwh <= 0.0 || m.carbon_g <= 0.0 {
+        return Err(format!("{kind:?}: non-positive energy/carbon"));
+    }
+    let slot_carbon: f64 = r.slots.iter().map(|s| s.carbon_g).sum();
+    let outcome_carbon: f64 = r.outcomes.iter().map(|o| o.carbon_g).sum();
+    if (slot_carbon - outcome_carbon).abs() > 1e-6 * outcome_carbon.max(1.0) {
+        return Err(format!(
+            "{kind:?}: slot carbon {slot_carbon} != outcome carbon {outcome_carbon}"
+        ));
+    }
+    // 4. No job finishes before it arrives.
+    for o in &r.outcomes {
+        if o.completion < o.arrival {
+            return Err(format!("{kind:?}: job {} finished before arriving", o.id));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn invariants_hold_for_all_policies_on_random_instances() {
+    // Full policy grid over random instances (each instance runs all 8
+    // policies; kept modest so the suite stays fast).
+    check(
+        "policy invariants",
+        Config { cases: 6, seed: 0x1234_5678 },
+        random_instance,
+        |instance| {
+            for kind in PolicyKind::ALL {
+                let r = run(instance, kind);
+                assert_invariants(instance, kind, &r)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn oracle_never_loses_to_agnostic() {
+    check(
+        "oracle dominates agnostic",
+        Config { cases: 8, seed: 0xBEEF },
+        random_instance,
+        |instance| {
+            let agnostic = run(instance, PolicyKind::CarbonAgnostic);
+            let oracle = run(instance, PolicyKind::Oracle);
+            // Small tolerance: checkpoint/boot overheads can cost a sliver
+            // on near-flat traces.
+            if oracle.metrics.carbon_g > agnostic.metrics.carbon_g * 1.02 {
+                return Err(format!(
+                    "oracle {} > agnostic {}",
+                    oracle.metrics.carbon_g, agnostic.metrics.carbon_g
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn deterministic_given_config() {
+    let mut rng = Rng::new(77);
+    let instance = random_instance(&mut rng);
+    let a = run(&instance, PolicyKind::CarbonFlex);
+    let b = run(&instance, PolicyKind::CarbonFlex);
+    assert_eq!(a.metrics.carbon_g, b.metrics.carbon_g);
+    assert_eq!(a.metrics.completed, b.metrics.completed);
+    assert_eq!(a.metrics.mean_delay_hours, b.metrics.mean_delay_hours);
+}
+
+#[test]
+fn forced_runs_bound_worst_case_delay() {
+    // Sanity-bound on tail latency: delay ≤ slack + length + horizon + 24.
+    let mut rng = Rng::new(99);
+    for _ in 0..4 {
+        let instance = random_instance(&mut rng);
+        for kind in [PolicyKind::WaitAwhile, PolicyKind::CarbonFlex, PolicyKind::Gaia] {
+            let r = run(&instance, kind);
+            for o in &r.outcomes {
+                let bound =
+                    o.slack_hours + o.length_hours + instance.cfg.horizon_hours as f64 + 24.0;
+                assert!(
+                    o.delay_hours() <= bound,
+                    "{kind:?}: job {} delay {} exceeds bound {}",
+                    o.id,
+                    o.delay_hours(),
+                    bound
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn carbon_trace_generators_are_well_formed() {
+    check(
+        "trace well-formedness",
+        Config { cases: 24, seed: 0xD00D },
+        |rng| (*rng.choose(&Region::ALL), 200 + rng.below(800), rng.next_u64()),
+        |(region, hours, seed)| {
+            let t = synth::synthesize(*region, *hours, *seed);
+            if t.len() != *hours {
+                return Err("wrong length".into());
+            }
+            if !t.hourly.iter().all(|&c| c.is_finite() && c > 0.0) {
+                return Err("non-positive or non-finite CI".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn workload_generator_respects_config() {
+    check(
+        "tracegen well-formedness",
+        Config { cases: 16, seed: 0xFEED },
+        |rng| {
+            let mut cfg = ExperimentConfig::default();
+            cfg.seed = rng.next_u64();
+            cfg.capacity = 8 + rng.below(80);
+            cfg.target_utilization = rng.range(0.2, 0.8);
+            (cfg, 72 + rng.below(200))
+        },
+        |(cfg, horizon)| {
+            let jobs = tracegen::generate(cfg, *horizon, cfg.seed);
+            for j in &jobs {
+                if j.arrival >= *horizon {
+                    return Err(format!("job {} arrives past horizon", j.id));
+                }
+                if j.length_hours < 1.0 || j.length_hours > 96.0 {
+                    return Err(format!("job {} length {} out of range", j.id, j.length_hours));
+                }
+                if j.k_min > j.k_max || j.k_max > 16 {
+                    return Err(format!("job {} bad scale range", j.id));
+                }
+            }
+            let u = tracegen::implied_utilization(&jobs, cfg.capacity, *horizon);
+            if (u - cfg.target_utilization).abs() > 0.2 {
+                return Err(format!("utilization {u} far from target {}", cfg.target_utilization));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn noscaling_scenario_never_scales() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.capacity = 16;
+    cfg.horizon_hours = 48;
+    cfg.history_hours = 96;
+    cfg.replay_offsets = 1;
+    cfg.elasticity = ElasticityScenario::NoScaling;
+    let mut prep = PreparedExperiment::prepare(&cfg);
+    for kind in [PolicyKind::CarbonFlex, PolicyKind::Oracle, PolicyKind::CarbonScaler] {
+        let r = prep.run(kind);
+        assert!(
+            r.slots.iter().all(|s| s.rho >= 1.0),
+            "{kind:?} scaled a NoScaling workload"
+        );
+        assert_eq!(r.metrics.unfinished, 0);
+    }
+}
+
+#[test]
+fn energy_model_consistency_under_load() {
+    // Energy scales with utilization: doubling the arrival rate should
+    // roughly double the agnostic baseline's energy.
+    let mut cfg = ExperimentConfig::default();
+    cfg.capacity = 40;
+    cfg.horizon_hours = 72;
+    cfg.history_hours = 96;
+    cfg.target_utilization = 0.25;
+    let low = run(&Instance { cfg: cfg.clone() }, PolicyKind::CarbonAgnostic);
+    cfg.target_utilization = 0.5;
+    let high = run(&Instance { cfg }, PolicyKind::CarbonAgnostic);
+    let ratio = high.metrics.energy_kwh / low.metrics.energy_kwh;
+    assert!((1.5..2.6).contains(&ratio), "energy ratio {ratio}");
+}
