@@ -24,7 +24,8 @@ fn main() {
         &cfg,
         &[PolicyKind::Vcc, PolicyKind::VccScaling, PolicyKind::CarbonFlex, PolicyKind::Oracle],
     );
-    let mut t = Table::new(&["policy", "carbon (kg)", "savings %", "mean wait (h)", "peak servers"]);
+    let mut t =
+        Table::new(&["policy", "carbon (kg)", "savings %", "mean wait (h)", "peak servers"]);
     for row in &rows {
         let m = &row.result.metrics;
         t.row(&[

@@ -33,7 +33,7 @@ fn main() {
 
     // --- Phase 0: traces + workload ---
     let t0 = Instant::now();
-    let mut prep = PreparedExperiment::prepare(&cfg);
+    let prep = PreparedExperiment::prepare(&cfg);
     println!(
         "traces ready in {:.2?}: {} eval jobs ({:.0} server-hours), trace mean {:.0} g/kWh",
         t0.elapsed(),

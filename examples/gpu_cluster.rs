@@ -19,7 +19,12 @@ fn main() {
     cfg.capacity = 15;
     cfg.trace = TraceFamily::AlibabaLike;
 
-    println!("== GPU cluster: {} GPUs, {} trace, {} ==\n", cfg.capacity, cfg.trace.as_str(), cfg.region);
+    println!(
+        "== GPU cluster: {} GPUs, {} trace, {} ==\n",
+        cfg.capacity,
+        cfg.trace.as_str(),
+        cfg.region
+    );
     println!("GPU workload catalog (heterogeneous power):");
     let mut cat = Table::new(&["workload", "comm (MB)", "scalability", "W/GPU"]);
     for w in profile::catalog_for(Hardware::Gpu) {
@@ -34,7 +39,8 @@ fn main() {
 
     let rows = run_policies(&cfg, &PolicyKind::HEADLINE);
     println!();
-    let mut t = Table::new(&["policy", "carbon (kg)", "savings %", "energy (kWh)", "mean delay (h)"]);
+    let mut t =
+        Table::new(&["policy", "carbon (kg)", "savings %", "energy (kWh)", "mean delay (h)"]);
     for row in &rows {
         let m = &row.result.metrics;
         t.row(&[

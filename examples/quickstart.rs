@@ -16,7 +16,7 @@ fn main() {
     cfg.replay_offsets = 4;
 
     // Peek at what the learning phase produces.
-    let mut prep = PreparedExperiment::prepare(&cfg);
+    let prep = PreparedExperiment::prepare(&cfg);
     println!(
         "workload: {} jobs over {} h (mean length {:.1} h); history: {} jobs",
         prep.eval_jobs.len(),
@@ -27,7 +27,10 @@ fn main() {
     println!("knowledge base: {} oracle cases\n", prep.knowledge_base().cases().len());
 
     // Run the comparison.
-    let rows = run_policies(&cfg, &[PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex, PolicyKind::Oracle]);
+    let rows = run_policies(
+        &cfg,
+        &[PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex, PolicyKind::Oracle],
+    );
     for row in &rows {
         let m = &row.result.metrics;
         println!(

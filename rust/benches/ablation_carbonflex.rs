@@ -45,7 +45,11 @@ fn main() {
         let mut c = cfg.clone();
         c.knn_k = k;
         let rows = run_policies(&c, &[PolicyKind::CarbonFlex]);
-        t2.row(&[format!("{k}"), format!("{}", c.replay_offsets), format!("{:.1}", rows[0].savings_pct)]);
+        t2.row(&[
+            format!("{k}"),
+            format!("{}", c.replay_offsets),
+            format!("{:.1}", rows[0].savings_pct),
+        ]);
     }
     for offsets in [1usize, 3, 6] {
         let mut c = cfg.clone();

@@ -22,7 +22,7 @@ use carbonflex::util::rng::Rng;
 
 fn main() {
     let cfg = ExperimentConfig::default();
-    let mut prep = PreparedExperiment::prepare(&cfg);
+    let prep = PreparedExperiment::prepare(&cfg);
     println!("== perf: L3 oracle (Alg. 1), {} jobs, week trace ==", prep.eval_jobs.len());
     let jobs = prep.eval_jobs.clone();
     let trace = prep.eval_trace.clone();

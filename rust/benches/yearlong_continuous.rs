@@ -13,7 +13,8 @@ fn main() {
     let cfg = ExperimentConfig::default();
     let r = run_yearlong(&cfg, 8, 24 * 28);
     println!("\n== Continuous learning over {} weeks (aging window 4 weeks) ==", r.weeks.len());
-    let mut t = Table::new(&["week", "mean CI", "CarbonFlex %", "Oracle %", "KB cases", "violations"]);
+    let mut t =
+        Table::new(&["week", "mean CI", "CarbonFlex %", "Oracle %", "KB cases", "violations"]);
     for w in &r.weeks {
         t.row(&[
             format!("{}", w.week),

@@ -8,12 +8,34 @@ use std::path::Path;
 use crate::carbon::trace::CarbonTrace;
 
 /// IO error for trace files.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TraceIoError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("csv line {0}: {1}")]
+    Io(std::io::Error),
     Malformed(usize, String),
+}
+
+impl std::fmt::Display for TraceIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceIoError::Io(e) => write!(f, "io: {e}"),
+            TraceIoError::Malformed(line, msg) => write!(f, "csv line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TraceIoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TraceIoError::Io(e) => Some(e),
+            TraceIoError::Malformed(..) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TraceIoError {
+    fn from(e: std::io::Error) -> Self {
+        TraceIoError::Io(e)
+    }
 }
 
 /// Save a trace as `hour,carbon_intensity` CSV.

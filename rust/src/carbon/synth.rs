@@ -73,6 +73,7 @@ impl Region {
     }
 
     /// Generative parameters for this region.
+    #[rustfmt::skip] // keep each region's quantile table on one line
     pub fn params(&self) -> RegionParams {
         match self {
             // Renewable-heavy, very spiky: deep solar duck + strong wind noise.

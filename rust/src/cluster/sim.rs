@@ -51,7 +51,7 @@ pub struct SlotRecord {
 pub const RHO_IDLE: f64 = 1.01;
 
 /// Result of one simulation run.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct SimResult {
     pub metrics: RunMetrics,
     pub outcomes: Vec<JobOutcome>,
@@ -154,7 +154,12 @@ impl ClusterEngine {
     }
 
     /// Advance one slot. Returns the slot record.
-    pub fn step(&mut self, t: usize, forecaster: &Forecaster, policy: &mut dyn Policy) -> &SlotRecord {
+    pub fn step(
+        &mut self,
+        t: usize,
+        forecaster: &Forecaster,
+        policy: &mut dyn Policy,
+    ) -> &SlotRecord {
         let n = self.jobs.len();
         let active: Vec<usize> =
             (0..n).filter(|&i| !self.st[i].done && self.jobs[i].arrival <= t).collect();
@@ -439,7 +444,12 @@ fn sanitize(max_capacity: usize, decision: &Decision, views: &[JobView]) -> (usi
 }
 
 impl Simulator {
-    pub fn new(max_capacity: usize, energy: EnergyModel, num_queues: usize, horizon: usize) -> Self {
+    pub fn new(
+        max_capacity: usize,
+        energy: EnergyModel,
+        num_queues: usize,
+        horizon: usize,
+    ) -> Self {
         Simulator { max_capacity, energy, num_queues, horizon, max_drain_slots: 4096 }
     }
 

@@ -10,14 +10,43 @@ use std::path::Path;
 use crate::config::toml::{self, Value};
 
 /// Configuration error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("io error reading config: {0}")]
-    Io(#[from] std::io::Error),
-    #[error(transparent)]
-    Parse(#[from] toml::TomlError),
-    #[error("config field '{0}': {1}")]
+    Io(std::io::Error),
+    Parse(toml::TomlError),
     Field(String, String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io(e) => write!(f, "io error reading config: {e}"),
+            ConfigError::Parse(e) => write!(f, "{e}"),
+            ConfigError::Field(field, msg) => write!(f, "config field '{field}': {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(e) => Some(e),
+            ConfigError::Parse(e) => Some(e),
+            ConfigError::Field(..) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
+}
+
+impl From<toml::TomlError> for ConfigError {
+    fn from(e: toml::TomlError) -> Self {
+        ConfigError::Parse(e)
+    }
 }
 
 fn field_err(field: &str, msg: impl Into<String>) -> ConfigError {

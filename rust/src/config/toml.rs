@@ -76,12 +76,19 @@ impl Value {
 }
 
 /// Parse error with line number.
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, TomlError> {
     Err(TomlError { line, msg: msg.into() })

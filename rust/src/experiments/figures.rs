@@ -2,10 +2,15 @@
 //! paper's evaluation (§6). Each prints the same rows/series the paper
 //! reports; `benches/` wraps these with timing, the CLI exposes them via
 //! `carbonflex experiment <id>`.
+//!
+//! Every gridded figure is expressed as a [`SweepSpec`] and executed on the
+//! parallel [`SweepRunner`] (one worker per core), so regenerating a figure
+//! costs one prepared experiment per grid point instead of one per cell.
 
 use crate::carbon::synth::{self, Region};
 use crate::config::{ElasticityScenario, ExperimentConfig, Hardware, TraceFamily};
-use crate::experiments::runner::{run_policies, ExperimentRow, PreparedExperiment};
+use crate::experiments::runner::{ExperimentRow, PreparedExperiment};
+use crate::experiments::sweep::{SweepRow, SweepRunner, SweepSpec, SweepVariant};
 use crate::sched::PolicyKind;
 use crate::util::bench::Table;
 
@@ -87,6 +92,13 @@ fn print_rows(title: &str, rows: &[ExperimentRow]) {
     t.print();
 }
 
+/// Reshape sweep rows into the paper-table row type.
+fn as_experiment_rows(rows: Vec<SweepRow>) -> Vec<ExperimentRow> {
+    rows.into_iter()
+        .map(|r| ExperimentRow { kind: r.kind, result: r.result, savings_pct: r.savings_pct })
+        .collect()
+}
+
 /// Fig. 2 / Table 3: the elastic scaling profile catalog.
 pub fn fig2_profiles() {
     println!("\n== Fig. 2 / Table 3: elastic scaling profiles (normalized throughput S(k)) ==");
@@ -123,42 +135,45 @@ pub fn fig5_traces(seed: u64) {
 
 /// Fig. 6: CPU-cluster emissions + delay across the six headline policies.
 pub fn fig6_cpu(base: &ExperimentConfig) {
-    let rows = run_policies(base, &PolicyKind::HEADLINE);
-    print_rows("Fig. 6: CPU cluster (M=150, South Australia)", &rows);
+    let mut spec = SweepSpec::new(base.clone());
+    spec.policies = PolicyKind::HEADLINE.to_vec();
+    let rows = SweepRunner::auto().run(&spec);
+    print_rows("Fig. 6: CPU cluster (M=150, South Australia)", &as_experiment_rows(rows));
 }
 
 /// Fig. 7: GPU-cluster emissions (heterogeneous per-workload power).
 pub fn fig7_gpu() {
-    let cfg = paper_gpu();
-    let rows = run_policies(&cfg, &PolicyKind::HEADLINE);
-    print_rows("Fig. 7: GPU cluster (M=15, heterogeneous power)", &rows);
+    let mut spec = SweepSpec::new(paper_gpu());
+    spec.policies = PolicyKind::HEADLINE.to_vec();
+    let rows = SweepRunner::auto().run(&spec);
+    print_rows("Fig. 7: GPU cluster (M=15, heterogeneous power)", &as_experiment_rows(rows));
 }
 
 /// Fig. 8: capacity sweep M ∈ {100, 150, 200} (≈75%/50%/37% utilization).
 pub fn fig8_capacity(base: &ExperimentConfig) {
     println!("\n== Fig. 8: effect of maximum cluster capacity ==");
-    let kinds = [
+    let mut spec = SweepSpec::new(base.clone());
+    spec.capacities = vec![100, 150, 200];
+    // Same workload (calibrated against the default M=150) — utilization
+    // varies with M exactly as in the paper.
+    spec.variants = vec![SweepVariant::new("calibrated-load", |cfg| {
+        cfg.target_utilization = 0.5 * 150.0 / cfg.capacity as f64;
+    })];
+    spec.policies = vec![
         PolicyKind::Oracle,
         PolicyKind::CarbonFlex,
         PolicyKind::CarbonScaler,
         PolicyKind::WaitAwhile,
     ];
+    let rows = SweepRunner::auto().run(&spec);
     let mut t = Table::new(&["M", "policy", "savings %", "mean delay (h)"]);
-    for m in [100usize, 150, 200] {
-        let mut cfg = base.clone();
-        cfg.capacity = m;
-        // Same workload (calibrated against the default M=150) — utilization
-        // varies with M exactly as in the paper.
-        cfg.target_utilization = 0.5 * 150.0 / m as f64;
-        let rows = run_policies(&cfg, &kinds);
-        for row in rows {
-            t.row(&[
-                format!("{m}"),
-                row.result.metrics.policy.clone(),
-                format!("{:.1}", row.savings_pct),
-                format!("{:.2}", row.result.metrics.mean_delay_hours),
-            ]);
-        }
+    for row in &rows {
+        t.row(&[
+            format!("{}", row.point.capacity),
+            row.result.metrics.policy.clone(),
+            format!("{:.1}", row.savings_pct),
+            format!("{:.2}", row.result.metrics.mean_delay_hours),
+        ]);
     }
     t.print();
 }
@@ -166,26 +181,29 @@ pub fn fig8_capacity(base: &ExperimentConfig) {
 /// Fig. 9: delay sweep d ∈ {0, 6, 12, 24, 36} hours (uniform across queues).
 pub fn fig9_delay(base: &ExperimentConfig) {
     println!("\n== Fig. 9: effect of allowed delay (slack) ==");
-    let kinds = [
+    let mut spec = SweepSpec::new(base.clone());
+    spec.variants = [0.0f64, 6.0, 12.0, 24.0, 36.0]
+        .iter()
+        .map(|&d| {
+            SweepVariant::new(format!("{d:.0}"), move |cfg| cfg.uniform_delay_hours = Some(d))
+        })
+        .collect();
+    spec.policies = vec![
         PolicyKind::Oracle,
         PolicyKind::CarbonFlex,
         PolicyKind::CarbonScaler,
         PolicyKind::WaitAwhile,
         PolicyKind::Gaia,
     ];
+    let rows = SweepRunner::auto().run(&spec);
     let mut t = Table::new(&["delay (h)", "policy", "savings %", "mean wait (h)"]);
-    for d in [0.0f64, 6.0, 12.0, 24.0, 36.0] {
-        let mut cfg = base.clone();
-        cfg.uniform_delay_hours = Some(d);
-        let rows = run_policies(&cfg, &kinds);
-        for row in rows {
-            t.row(&[
-                format!("{d:.0}"),
-                row.result.metrics.policy.clone(),
-                format!("{:.1}", row.savings_pct),
-                format!("{:.2}", row.result.metrics.mean_delay_hours),
-            ]);
-        }
+    for row in &rows {
+        t.row(&[
+            row.point.variant.clone(),
+            row.result.metrics.policy.clone(),
+            format!("{:.1}", row.savings_pct),
+            format!("{:.2}", row.result.metrics.mean_delay_hours),
+        ]);
     }
     t.print();
 }
@@ -193,30 +211,31 @@ pub fn fig9_delay(base: &ExperimentConfig) {
 /// Fig. 10: elasticity scenarios High/Moderate/Low/Mix/NoScaling.
 pub fn fig10_elasticity(base: &ExperimentConfig) {
     println!("\n== Fig. 10: workload elasticity impact ==");
-    let kinds = [
-        PolicyKind::Oracle,
-        PolicyKind::CarbonFlex,
-        PolicyKind::CarbonScaler,
-        PolicyKind::WaitAwhile,
-    ];
-    let mut t = Table::new(&["elasticity", "policy", "savings %"]);
-    for scen in [
+    let mut spec = SweepSpec::new(base.clone());
+    spec.variants = [
         ElasticityScenario::High,
         ElasticityScenario::Moderate,
         ElasticityScenario::Low,
         ElasticityScenario::Mix,
         ElasticityScenario::NoScaling,
-    ] {
-        let mut cfg = base.clone();
-        cfg.elasticity = scen;
-        let rows = run_policies(&cfg, &kinds);
-        for row in rows {
-            t.row(&[
-                scen.as_str().to_string(),
-                row.result.metrics.policy.clone(),
-                format!("{:.1}", row.savings_pct),
-            ]);
-        }
+    ]
+    .iter()
+    .map(|&scen| SweepVariant::new(scen.as_str(), move |cfg| cfg.elasticity = scen))
+    .collect();
+    spec.policies = vec![
+        PolicyKind::Oracle,
+        PolicyKind::CarbonFlex,
+        PolicyKind::CarbonScaler,
+        PolicyKind::WaitAwhile,
+    ];
+    let rows = SweepRunner::auto().run(&spec);
+    let mut t = Table::new(&["elasticity", "policy", "savings %"]);
+    for row in &rows {
+        t.row(&[
+            row.point.variant.clone(),
+            row.result.metrics.policy.clone(),
+            format!("{:.1}", row.savings_pct),
+        ]);
     }
     t.print();
 }
@@ -224,26 +243,27 @@ pub fn fig10_elasticity(base: &ExperimentConfig) {
 /// Fig. 11: workload trace families (Azure/Alibaba/SURF-like).
 pub fn fig11_traces(base: &ExperimentConfig) {
     println!("\n== Fig. 11: carbon savings across workload traces ==");
-    let kinds = [
+    let mut spec = SweepSpec::new(base.clone());
+    spec.variants = [TraceFamily::AzureLike, TraceFamily::AlibabaLike, TraceFamily::SurfLike]
+        .iter()
+        .map(|&family| SweepVariant::new(family.as_str(), move |cfg| cfg.trace = family))
+        .collect();
+    spec.policies = vec![
         PolicyKind::Oracle,
         PolicyKind::CarbonFlex,
         PolicyKind::CarbonScaler,
         PolicyKind::WaitAwhile,
         PolicyKind::Gaia,
     ];
+    let rows = SweepRunner::auto().run(&spec);
     let mut t = Table::new(&["trace", "policy", "savings %", "mean delay (h)"]);
-    for family in [TraceFamily::AzureLike, TraceFamily::AlibabaLike, TraceFamily::SurfLike] {
-        let mut cfg = base.clone();
-        cfg.trace = family;
-        let rows = run_policies(&cfg, &kinds);
-        for row in rows {
-            t.row(&[
-                family.as_str().to_string(),
-                row.result.metrics.policy.clone(),
-                format!("{:.1}", row.savings_pct),
-                format!("{:.2}", row.result.metrics.mean_delay_hours),
-            ]);
-        }
+    for row in &rows {
+        t.row(&[
+            row.point.variant.clone(),
+            row.result.metrics.policy.clone(),
+            format!("{:.1}", row.savings_pct),
+            format!("{:.2}", row.result.metrics.mean_delay_hours),
+        ]);
     }
     t.print();
 }
@@ -251,21 +271,28 @@ pub fn fig11_traces(base: &ExperimentConfig) {
 /// Fig. 12: savings across the ten regions.
 pub fn fig12_locations(base: &ExperimentConfig) {
     println!("\n== Fig. 12: carbon savings across locations ==");
-    let kinds = [PolicyKind::Oracle, PolicyKind::CarbonFlex, PolicyKind::CarbonScaler];
+    let mut spec = SweepSpec::new(base.clone());
+    spec.regions = Region::ALL.iter().map(|r| r.key().to_string()).collect();
+    spec.policies = vec![PolicyKind::Oracle, PolicyKind::CarbonFlex, PolicyKind::CarbonScaler];
+    let rows = SweepRunner::auto().run(&spec);
+    // CoV of the same synthesized year each region was simulated on,
+    // computed once per region (not once per policy row).
+    let covs: std::collections::BTreeMap<String, f64> = spec
+        .points()
+        .iter()
+        .map(|p| {
+            let region = Region::parse(&p.region).expect("sweep region");
+            (p.region.clone(), synth::synthesize_year(region, p.seed).daily_cov())
+        })
+        .collect();
     let mut t = Table::new(&["region", "daily CoV", "policy", "savings %"]);
-    for region in Region::ALL {
-        let mut cfg = base.clone();
-        cfg.region = region.key().to_string();
-        let cov = synth::synthesize_year(region, cfg.seed).daily_cov();
-        let rows = run_policies(&cfg, &kinds);
-        for row in rows {
-            t.row(&[
-                region.key().to_string(),
-                format!("{cov:.3}"),
-                row.result.metrics.policy.clone(),
-                format!("{:.1}", row.savings_pct),
-            ]);
-        }
+    for row in &rows {
+        t.row(&[
+            row.point.region.clone(),
+            format!("{:.3}", covs[&row.point.region]),
+            row.result.metrics.policy.clone(),
+            format!("{:.1}", row.savings_pct),
+        ]);
     }
     t.print();
 }
@@ -273,18 +300,26 @@ pub fn fig12_locations(base: &ExperimentConfig) {
 /// Fig. 13: distribution shift — arrival-rate/length scaling ±20%.
 pub fn fig13_shift(base: &ExperimentConfig) {
     println!("\n== Fig. 13: impact of distribution shifts (CarbonFlex) ==");
+    let mut spec = SweepSpec::new(base.clone());
+    spec.variants = [-0.2f64, -0.1, 0.0, 0.1, 0.2]
+        .iter()
+        .map(|&shift| {
+            // Note: `prepare` applies the scales to the historical window
+            // too, so the KB re-learns at the shifted scale — this measures
+            // robustness of the whole pipeline under load scaling, not the
+            // paper's pure learn/eval mismatch (ROADMAP open item).
+            SweepVariant::new(format!("{:+.0}", shift * 100.0), move |cfg| {
+                cfg.arrival_scale = 1.0 + shift;
+                cfg.length_scale = 1.0 + shift;
+            })
+        })
+        .collect();
+    spec.policies = vec![PolicyKind::CarbonFlex];
+    let rows = SweepRunner::auto().run(&spec);
     let mut t = Table::new(&["shift %", "utilization %", "savings %"]);
-    for shift in [-0.2f64, -0.1, 0.0, 0.1, 0.2] {
-        let mut cfg = base.clone();
-        // Shift the *evaluation* distribution relative to the learned one:
-        // the historical KB stays at scale 1.0 (learning ran on the base
-        // config) while arrivals/lengths shift, as in the paper.
-        cfg.arrival_scale = 1.0 + shift;
-        cfg.length_scale = 1.0 + shift;
-        let rows = run_policies(&cfg, &[PolicyKind::CarbonFlex]);
-        let row = &rows[0];
+    for row in &rows {
         t.row(&[
-            format!("{:+.0}", shift * 100.0),
+            row.point.variant.clone(),
             format!("{:.0}", row.result.metrics.mean_utilization * 100.0),
             format!("{:.1}", row.savings_pct),
         ]);
@@ -297,11 +332,14 @@ pub fn fig13_shift(base: &ExperimentConfig) {
 pub fn fig14_vcc(base: &ExperimentConfig) {
     let mut cfg = base.clone();
     cfg.uniform_delay_hours = Some(24.0);
-    let rows = run_policies(
-        &cfg,
-        &[PolicyKind::Vcc, PolicyKind::VccScaling, PolicyKind::CarbonFlex, PolicyKind::Oracle],
+    let mut spec = SweepSpec::new(cfg);
+    spec.policies =
+        vec![PolicyKind::Vcc, PolicyKind::VccScaling, PolicyKind::CarbonFlex, PolicyKind::Oracle];
+    let rows = SweepRunner::auto().run(&spec);
+    print_rows(
+        "Fig. 14: carbon-aware capacity provisioning (d = 24 h)",
+        &as_experiment_rows(rows),
     );
-    print_rows("Fig. 14: carbon-aware capacity provisioning (d = 24 h)", &rows);
 }
 
 /// Extension: continuous learning over consecutive weeks (paper §5's
@@ -327,7 +365,7 @@ pub fn yearlong_summary(base: &ExperimentConfig) {
 pub fn overheads(base: &ExperimentConfig) {
     use std::time::Instant;
     println!("\n== §6.8: system overheads ==");
-    let mut prep = PreparedExperiment::prepare(base);
+    let prep = PreparedExperiment::prepare(base);
 
     // Oracle runtime over a week-long trace (paper: 2–10 min in Python).
     let t0 = Instant::now();
@@ -342,10 +380,7 @@ pub fn overheads(base: &ExperimentConfig) {
 
     // Learning phase (oracle replay over the two-week history, all offsets).
     let t1 = Instant::now();
-    let kb_len = {
-        let kb = prep.knowledge_base();
-        kb.cases().len()
-    };
+    let kb_len = prep.knowledge_base().cases().len();
     let learn_time = t1.elapsed();
 
     // State-match latency (paper: 1–2 ms with scikit-learn).

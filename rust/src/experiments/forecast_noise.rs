@@ -6,12 +6,14 @@
 //! carbon *charged* remains ground truth, quantifying how much of
 //! CarbonFlex's advantage survives realistic forecast quality. The oracle
 //! keeps perfect knowledge by definition, bounding the achievable savings.
+//!
+//! The (σ × policy) cells are independent given the shared prepared
+//! experiment, so they run in parallel on the sweep engine's thread pool.
 
 use crate::carbon::forecast::Forecaster;
-use crate::cluster::energy::EnergyModel;
-use crate::cluster::sim::Simulator;
 use crate::config::ExperimentConfig;
 use crate::experiments::runner::PreparedExperiment;
+use crate::experiments::sweep::{auto_threads, par_map};
 use crate::sched::PolicyKind;
 
 /// Savings of `kind` under forecast noise `sigma`.
@@ -23,40 +25,40 @@ pub struct NoiseResult {
     pub violations: usize,
 }
 
-/// Sweep forecast noise for a set of policies.
+/// Sweep forecast noise for a set of policies. Cells run in parallel and
+/// come back in (σ-major, policy-minor) order; every cell derives its noise
+/// stream from the config seed and its σ, never from scheduling order.
 pub fn run_noise_sweep(
     cfg: &ExperimentConfig,
     sigmas: &[f64],
     kinds: &[PolicyKind],
 ) -> Vec<NoiseResult> {
-    let mut prep = PreparedExperiment::prepare(cfg);
+    let prep = PreparedExperiment::prepare(cfg);
+    if kinds.contains(&PolicyKind::CarbonFlex) {
+        // Learn once up front so parallel cells share the knowledge base.
+        let _ = prep.knowledge_base();
+    }
     let baseline = prep.run(PolicyKind::CarbonAgnostic);
     let base_carbon = baseline.metrics.carbon_g;
-    let sim = Simulator::new(
-        cfg.capacity,
-        EnergyModel::for_hardware(cfg.hardware),
-        cfg.queues.len(),
-        cfg.horizon_hours,
-    );
-    let mut out = Vec::new();
-    for &sigma in sigmas {
+
+    let cells: Vec<(f64, PolicyKind)> = sigmas
+        .iter()
+        .flat_map(|&sigma| kinds.iter().map(move |&kind| (sigma, kind)))
+        .collect();
+    par_map(auto_threads(), &cells, |&(sigma, kind), _| {
         let forecaster = if sigma == 0.0 {
             Forecaster::perfect(prep.eval_trace.clone())
         } else {
             Forecaster::noisy(prep.eval_trace.clone(), sigma, cfg.seed ^ 0x4F0C)
         };
-        for &kind in kinds {
-            let mut policy = prep.build_policy(kind);
-            let r = sim.run(&prep.eval_jobs, &forecaster, policy.as_mut());
-            out.push(NoiseResult {
-                sigma,
-                kind,
-                savings_pct: (1.0 - r.metrics.carbon_g / base_carbon) * 100.0,
-                violations: r.metrics.violations,
-            });
+        let r = prep.run_with(kind, &forecaster);
+        NoiseResult {
+            sigma,
+            kind,
+            savings_pct: (1.0 - r.metrics.carbon_g / base_carbon) * 100.0,
+            violations: r.metrics.violations,
         }
-    }
-    out
+    })
 }
 
 /// Print the sweep as a paper-style table.
@@ -88,8 +90,7 @@ mod tests {
         cfg.horizon_hours = 96;
         cfg.history_hours = 168;
         cfg.replay_offsets = 2;
-        let rows =
-            run_noise_sweep(&cfg, &[0.0, 0.05], &[PolicyKind::CarbonFlex]);
+        let rows = run_noise_sweep(&cfg, &[0.0, 0.05], &[PolicyKind::CarbonFlex]);
         let perfect = rows[0].savings_pct;
         let noisy = rows[1].savings_pct;
         // CarbonCast-level error (~5%) must not destroy the savings (the

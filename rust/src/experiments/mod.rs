@@ -8,6 +8,8 @@ pub mod figures;
 pub mod forecast_noise;
 pub mod runner;
 pub mod spatial;
+pub mod sweep;
 pub mod yearlong;
 
 pub use runner::{run_policies, run_policy, ExperimentRow, PreparedExperiment};
+pub use sweep::{SweepRunner, SweepSpec, SweepVariant};

@@ -64,6 +64,26 @@ struct RegionalCluster {
     next_id: usize,
 }
 
+/// Prepare one regional experiment per region (`cfg.capacity` split evenly;
+/// each region gets its own trace and, for CarbonFlex, its own locally
+/// learned knowledge base). Preparation does not depend on the dispatch
+/// strategy or local policy, so callers comparing several combos share one
+/// set of preps across all of them; regions prepare in parallel.
+pub fn prepare_regions(cfg: &ExperimentConfig, regions: &[Region]) -> Vec<PreparedExperiment> {
+    assert!(!regions.is_empty());
+    let per_region_capacity = (cfg.capacity / regions.len()).max(1);
+    crate::experiments::sweep::par_map(
+        crate::experiments::sweep::auto_threads(),
+        regions,
+        |&region, _| {
+            let mut rcfg = cfg.clone();
+            rcfg.region = region.key().to_string();
+            rcfg.capacity = per_region_capacity;
+            PreparedExperiment::prepare(&rcfg)
+        },
+    )
+}
+
 /// Run a multi-region deployment: `regions.len()` clusters of
 /// `cfg.capacity / regions.len()` servers each, one shared arrival stream.
 pub fn run_spatial(
@@ -72,28 +92,27 @@ pub fn run_spatial(
     strategy: DispatchStrategy,
     local_policy: PolicyKind,
 ) -> SpatialResult {
-    assert!(!regions.is_empty());
-    let per_region_capacity = (cfg.capacity / regions.len()).max(1);
+    run_spatial_prepared(cfg, &prepare_regions(cfg, regions), strategy, local_policy)
+}
+
+/// [`run_spatial`] over already-prepared regions (see [`prepare_regions`]).
+pub fn run_spatial_prepared(
+    cfg: &ExperimentConfig,
+    preps: &[PreparedExperiment],
+    strategy: DispatchStrategy,
+    local_policy: PolicyKind,
+) -> SpatialResult {
+    assert!(!preps.is_empty());
     let horizon = cfg.horizon_hours;
     let energy = EnergyModel::for_hardware(cfg.hardware);
 
-    // Build the regional clusters (each with its own trace and, for
-    // CarbonFlex, its own locally learned knowledge base).
-    let mut clusters: Vec<RegionalCluster> = regions
+    // Build the regional clusters over the shared prepared state.
+    let mut clusters: Vec<RegionalCluster> = preps
         .iter()
-        .map(|&region| {
-            let mut rcfg = cfg.clone();
-            rcfg.region = region.key().to_string();
-            rcfg.capacity = per_region_capacity;
-            let mut prep = PreparedExperiment::prepare(&rcfg);
-            let policy: Box<dyn Policy> = match local_policy {
-                PolicyKind::CarbonFlex => prep.build_policy(PolicyKind::CarbonFlex),
-                other => {
-                    // Non-learning policies don't need the prep history.
-                    prep.build_policy(other)
-                }
-            };
-            let sim = Simulator::new(per_region_capacity, energy.clone(), cfg.queues.len(), horizon);
+        .map(|prep| {
+            let policy: Box<dyn Policy> = prep.build_policy(local_policy);
+            let sim =
+                Simulator::new(prep.cfg.capacity, energy.clone(), cfg.queues.len(), horizon);
             RegionalCluster {
                 engine: ClusterEngine::new(sim),
                 forecaster: Forecaster::perfect(prep.eval_trace.clone()),
@@ -105,7 +124,7 @@ pub fn run_spatial(
 
     // One global arrival stream sized for the aggregate capacity.
     let jobs = tracegen::generate(cfg, horizon, cfg.seed ^ 0x5EA7);
-    let mut jobs_per_region = vec![0usize; regions.len()];
+    let mut jobs_per_region = vec![0usize; preps.len()];
     let mut rr = 0usize;
 
     // Dispatch + step in lockstep.
@@ -194,8 +213,12 @@ fn mean_of(xs: &[f64]) -> f64 {
     }
 }
 
-/// Print the spatial comparison table (used by the bench and CLI).
+/// Print the spatial comparison table (used by the bench and CLI). The
+/// dispatch × local-policy combos are independent deployments, so they run
+/// in parallel on the sweep engine's thread pool; the first combo
+/// (round-robin + carbon-agnostic) is the savings baseline.
 pub fn print_spatial(cfg: &ExperimentConfig) {
+    use crate::experiments::sweep::{auto_threads, par_map};
     use crate::util::bench::Table;
     let regions = [Region::SouthAustralia, Region::California, Region::GreatBritain];
     println!(
@@ -218,13 +241,16 @@ pub fn print_spatial(cfg: &ExperimentConfig) {
         (DispatchStrategy::RoundRobin, PolicyKind::CarbonFlex),
         (DispatchStrategy::LowestWindowCi, PolicyKind::CarbonFlex),
     ];
-    let mut baseline = None;
-    for (strategy, local) in combos {
-        let r = run_spatial(cfg, &regions, strategy, local);
-        let base = *baseline.get_or_insert(r.carbon_g);
+    // Each region's synthesis/learning runs once, shared by all 5 combos.
+    let preps = prepare_regions(cfg, &regions);
+    let results = par_map(auto_threads(), &combos, |&(strategy, local), _| {
+        run_spatial_prepared(cfg, &preps, strategy, local)
+    });
+    let base = results[0].carbon_g;
+    for r in &results {
         t.row(&[
-            strategy.as_str().to_string(),
-            local.as_str().to_string(),
+            r.strategy.as_str().to_string(),
+            r.local_policy.as_str().to_string(),
             format!("{:.2}", r.carbon_g / 1000.0),
             format!("{:.1}", (1.0 - r.carbon_g / base) * 100.0),
             format!("{:.2}", r.mean_delay_hours),
@@ -265,8 +291,14 @@ mod tests {
 
     #[test]
     fn carbon_aware_dispatch_beats_round_robin() {
-        let rr = run_spatial(&cfg(), &REGIONS, DispatchStrategy::RoundRobin, PolicyKind::CarbonAgnostic);
-        let geo = run_spatial(&cfg(), &REGIONS, DispatchStrategy::LowestWindowCi, PolicyKind::CarbonAgnostic);
+        let rr =
+            run_spatial(&cfg(), &REGIONS, DispatchStrategy::RoundRobin, PolicyKind::CarbonAgnostic);
+        let geo = run_spatial(
+            &cfg(),
+            &REGIONS,
+            DispatchStrategy::LowestWindowCi,
+            PolicyKind::CarbonAgnostic,
+        );
         assert!(
             geo.carbon_g < rr.carbon_g * 0.95,
             "geo {} vs rr {}",

@@ -1,0 +1,491 @@
+//! Parallel sweep engine for paper-scale experiment grids.
+//!
+//! Every headline figure of the paper (Figs. 5–14) is a cartesian grid of
+//! (region × policy × capacity × …) simulations. [`SweepSpec`] describes
+//! such a grid declaratively; [`SweepRunner`] executes it on a scoped
+//! `std::thread` pool (the crate is dependency-free, so no rayon):
+//!
+//! - **Phase 1** prepares each grid *point* — trace synthesis, workload
+//!   generation, and the learning phase — exactly once, in parallel, and
+//!   wraps the immutable [`PreparedExperiment`] in an `Arc`. The
+//!   carbon-agnostic baseline also runs here, once per point.
+//! - **Phase 2** runs every *cell* (point × policy) in parallel, sharing
+//!   the prepared state via `Arc` instead of re-synthesizing or re-learning
+//!   per policy.
+//!
+//! Results are bitwise deterministic regardless of thread count: each cell
+//! simulates with the seed from its spec entry (nothing derived from thread
+//! or completion order ever enters), so a single-cell sweep reproduces
+//! `compare` on the same config exactly, and rows are emitted in grid
+//! order. The grid order is region → capacity → horizon → variant → seed,
+//! with policy innermost.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::sim::SimResult;
+use crate::config::ExperimentConfig;
+use crate::experiments::runner::PreparedExperiment;
+use crate::sched::PolicyKind;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+/// A named config mutation — the generic sweep axis for knobs that are not
+/// first-class (delay, elasticity, trace family, utilization, …). The label
+/// is the variant's identity: rows report it and [`SweepSpec::config_for`]
+/// resolves the mutation by it, so labels must be distinct within a spec
+/// ([`SweepSpec::points`] panics on duplicates).
+pub struct SweepVariant {
+    pub label: String,
+    f: Box<dyn Fn(&mut ExperimentConfig) + Send + Sync>,
+}
+
+impl SweepVariant {
+    pub fn new(
+        label: impl Into<String>,
+        f: impl Fn(&mut ExperimentConfig) + Send + Sync + 'static,
+    ) -> SweepVariant {
+        SweepVariant { label: label.into(), f: Box::new(f) }
+    }
+
+    pub fn apply(&self, cfg: &mut ExperimentConfig) {
+        (self.f)(cfg)
+    }
+}
+
+impl std::fmt::Debug for SweepVariant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SweepVariant({:?})", self.label)
+    }
+}
+
+/// Declarative cartesian grid over experiment settings. Empty axes default
+/// to the corresponding value from `base` (and `policies` to the paper's
+/// headline set), so a fresh spec describes a single-cell grid.
+pub struct SweepSpec {
+    pub base: ExperimentConfig,
+    /// Carbon-region keys (see `carbon::synth::Region`).
+    pub regions: Vec<String>,
+    /// Maximum cluster capacities M.
+    pub capacities: Vec<usize>,
+    /// Evaluation horizons, hours (history is clamped to ≥ horizon).
+    pub horizons: Vec<usize>,
+    /// Named config mutations (applied after the first-class axes).
+    pub variants: Vec<SweepVariant>,
+    /// Workload/trace seeds; each is mixed into a per-cell seed.
+    pub seeds: Vec<u64>,
+    /// Policies to run at every point.
+    pub policies: Vec<PolicyKind>,
+}
+
+/// One grid point: a fully pinned experimental setting (everything except
+/// the policy, which all shares this point's prepared state).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    pub region: String,
+    pub capacity: usize,
+    pub horizon_hours: usize,
+    /// Label of the variant applied ("" when the axis is unused).
+    pub variant: String,
+    /// The spec-level seed entry this point simulates with (the config's
+    /// seed, verbatim — so a single-cell sweep reproduces `compare`
+    /// bitwise). Region/capacity/variant rows deliberately share their seed
+    /// entry's draw: rows that differ in one knob then compare the same
+    /// workload stream (common random numbers) instead of confounding the
+    /// trend with resampling noise.
+    pub seed: u64,
+}
+
+/// One result cell, in grid order.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub point: SweepPoint,
+    pub kind: PolicyKind,
+    pub result: SimResult,
+    /// Carbon savings (%) vs. this point's carbon-agnostic baseline.
+    pub savings_pct: f64,
+}
+
+fn axis_or<T: Clone>(axis: &[T], default: T) -> Vec<T> {
+    if axis.is_empty() {
+        vec![default]
+    } else {
+        axis.to_vec()
+    }
+}
+
+impl SweepSpec {
+    /// A single-cell spec over `base`; push onto the axis vectors to grow
+    /// the grid.
+    pub fn new(base: ExperimentConfig) -> SweepSpec {
+        SweepSpec {
+            base,
+            regions: Vec::new(),
+            capacities: Vec::new(),
+            horizons: Vec::new(),
+            variants: Vec::new(),
+            seeds: Vec::new(),
+            policies: Vec::new(),
+        }
+    }
+
+    /// The policy axis (defaults to the paper's headline six).
+    pub fn policies(&self) -> Vec<PolicyKind> {
+        if self.policies.is_empty() {
+            PolicyKind::HEADLINE.to_vec()
+        } else {
+            self.policies.clone()
+        }
+    }
+
+    /// All grid points, in grid order (region → capacity → horizon →
+    /// variant → seed).
+    pub fn points(&self) -> Vec<SweepPoint> {
+        let regions = axis_or(&self.regions, self.base.region.clone());
+        let capacities = axis_or(&self.capacities, self.base.capacity);
+        let horizons = axis_or(&self.horizons, self.base.horizon_hours);
+        let variant_labels: Vec<String> = if self.variants.is_empty() {
+            vec![String::new()]
+        } else {
+            self.variants.iter().map(|v| v.label.clone()).collect()
+        };
+        // Labels are identities ([`config_for`] resolves by label); a
+        // duplicate would silently simulate the first variant twice.
+        for (i, label) in variant_labels.iter().enumerate() {
+            assert!(
+                !variant_labels[..i].contains(label),
+                "duplicate sweep variant label '{label}'"
+            );
+        }
+        let seeds = axis_or(&self.seeds, self.base.seed);
+
+        let mut points = Vec::new();
+        for region in &regions {
+            for &capacity in &capacities {
+                for &horizon_hours in &horizons {
+                    for variant in &variant_labels {
+                        for &seed in &seeds {
+                            points.push(SweepPoint {
+                                region: region.clone(),
+                                capacity,
+                                horizon_hours,
+                                variant: variant.clone(),
+                                seed,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        points
+    }
+
+    /// Total cells (points × policies).
+    pub fn num_cells(&self) -> usize {
+        self.points().len() * self.policies().len()
+    }
+
+    /// Materialize the config for one point.
+    pub fn config_for(&self, point: &SweepPoint) -> ExperimentConfig {
+        let mut cfg = self.base.clone();
+        cfg.region = point.region.clone();
+        cfg.capacity = point.capacity;
+        cfg.horizon_hours = point.horizon_hours;
+        if let Some(v) = self.variants.iter().find(|v| v.label == point.variant) {
+            v.apply(&mut cfg);
+        }
+        // The learning window must cover at least the evaluation horizon.
+        cfg.history_hours = cfg.history_hours.max(cfg.horizon_hours);
+        cfg.seed = point.seed;
+        cfg
+    }
+}
+
+/// Executes a [`SweepSpec`] on a scoped thread pool.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRunner {
+    pub threads: usize,
+}
+
+impl SweepRunner {
+    pub fn new(threads: usize) -> SweepRunner {
+        SweepRunner { threads: threads.max(1) }
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> SweepRunner {
+        SweepRunner::new(auto_threads())
+    }
+
+    /// Run the grid; rows come back in grid order (policy innermost)
+    /// regardless of which worker finished which cell first.
+    pub fn run(&self, spec: &SweepSpec) -> Vec<SweepRow> {
+        let points = spec.points();
+        let policies = spec.policies();
+        let needs_kb = policies.contains(&PolicyKind::CarbonFlex);
+
+        struct PreparedPoint {
+            prep: Arc<PreparedExperiment>,
+            baseline: Arc<SimResult>,
+        }
+
+        // Phase 1: prepare each point once (synthesis + learning + the
+        // shared carbon-agnostic baseline), in parallel across points.
+        let prepared: Vec<PreparedPoint> = par_map(self.threads, &points, |point, _| {
+            let cfg = spec.config_for(point);
+            let prep = PreparedExperiment::prepare(&cfg);
+            if needs_kb {
+                // Force the learning phase here so phase 2 cells only pay
+                // for their own simulation.
+                let _ = prep.knowledge_base();
+            }
+            let baseline = prep.run(PolicyKind::CarbonAgnostic);
+            PreparedPoint { prep: Arc::new(prep), baseline: Arc::new(baseline) }
+        });
+
+        // Phase 2: every cell (point × policy) in parallel, sharing the
+        // point's prepared state via Arc.
+        let cells: Vec<(usize, PolicyKind)> = (0..points.len())
+            .flat_map(|pi| policies.iter().map(move |&kind| (pi, kind)))
+            .collect();
+        par_map(self.threads, &cells, |&(pi, kind), _| {
+            let pp = &prepared[pi];
+            let result = if kind == PolicyKind::CarbonAgnostic {
+                // Reuse the baseline run instead of simulating it again.
+                (*pp.baseline).clone()
+            } else {
+                pp.prep.run(kind)
+            };
+            let savings_pct = result.metrics.savings_vs(&pp.baseline.metrics);
+            SweepRow { point: points[pi].clone(), kind, result, savings_pct }
+        })
+    }
+}
+
+/// Number of workers to use when the caller does not say: one per core.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Order-preserving parallel map on a scoped thread pool. Workers pull
+/// indices from a shared counter, so slow items never stall unrelated ones;
+/// output slot `i` always holds `f(&items[i], i)`. With `threads <= 1` the
+/// map runs inline on the caller's thread.
+pub fn par_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T, usize) -> R + Sync,
+{
+    let threads = usize::min(threads, items.len());
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, item)| f(item, i)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..items.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i], i);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    slots.into_inner().unwrap().into_iter().map(|r| r.expect("every cell completed")).collect()
+}
+
+/// Print rows as a fixed-width table (the CLI's default output). The
+/// variant column only appears when the spec used that axis.
+pub fn print_table(rows: &[SweepRow]) {
+    let with_variant = rows.iter().any(|r| !r.point.variant.is_empty());
+    let mut headers = vec!["region", "M", "h", "seed"];
+    if with_variant {
+        headers.insert(3, "variant");
+    }
+    headers.extend_from_slice(&[
+        "policy",
+        "carbon (kg)",
+        "savings %",
+        "delay (h)",
+        "viol",
+        "unfin",
+    ]);
+    let mut t = Table::new(&headers);
+    for r in rows {
+        let m = &r.result.metrics;
+        let mut cells = vec![
+            r.point.region.clone(),
+            format!("{}", r.point.capacity),
+            format!("{}", r.point.horizon_hours),
+            format!("{}", r.point.seed),
+        ];
+        if with_variant {
+            cells.insert(3, r.point.variant.clone());
+        }
+        cells.extend([
+            m.policy.clone(),
+            format!("{:.2}", m.carbon_kg()),
+            format!("{:.1}", r.savings_pct),
+            format!("{:.2}", m.mean_delay_hours),
+            format!("{}", m.violations),
+            format!("{}", m.unfinished),
+        ]);
+        t.row(&cells);
+    }
+    t.print();
+}
+
+/// Rows as a JSON array (the CLI's `--json` output). Seeds are emitted as
+/// strings: the JSON substrate stores numbers as f64, which cannot hold all
+/// 64 bits.
+pub fn to_json(rows: &[SweepRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let m = &r.result.metrics;
+                Json::obj(vec![
+                    ("region", Json::Str(r.point.region.clone())),
+                    ("capacity", Json::Num(r.point.capacity as f64)),
+                    ("horizon_hours", Json::Num(r.point.horizon_hours as f64)),
+                    ("variant", Json::Str(r.point.variant.clone())),
+                    ("seed", Json::Str(format!("{}", r.point.seed))),
+                    ("policy", Json::Str(m.policy.clone())),
+                    ("carbon_g", Json::Num(m.carbon_g)),
+                    ("energy_kwh", Json::Num(m.energy_kwh)),
+                    ("savings_pct", Json::Num(r.savings_pct)),
+                    ("completed", Json::Num(m.completed as f64)),
+                    ("unfinished", Json::Num(m.unfinished as f64)),
+                    ("violations", Json::Num(m.violations as f64)),
+                    ("mean_delay_hours", Json::Num(m.mean_delay_hours)),
+                    ("p95_delay_hours", Json::Num(m.p95_delay_hours)),
+                    ("mean_utilization", Json::Num(m.mean_utilization)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_base() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 10;
+        cfg.horizon_hours = 48;
+        cfg.history_hours = 72;
+        cfg.replay_offsets = 1;
+        cfg
+    }
+
+    #[test]
+    fn empty_axes_default_to_base() {
+        let spec = SweepSpec::new(tiny_base());
+        let points = spec.points();
+        assert_eq!(points.len(), 1);
+        assert_eq!(points[0].region, "south-australia");
+        assert_eq!(points[0].capacity, 10);
+        assert_eq!(points[0].seed, 42);
+        assert_eq!(spec.policies(), PolicyKind::HEADLINE.to_vec());
+    }
+
+    #[test]
+    fn grid_order_is_region_major_policy_minor() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.regions = vec!["south-australia".into(), "ontario".into()];
+        spec.seeds = vec![1, 2];
+        spec.policies = vec![PolicyKind::CarbonAgnostic, PolicyKind::WaitAwhile];
+        let points = spec.points();
+        assert_eq!(points.len(), 4);
+        assert_eq!(points[0].region, "south-australia");
+        assert_eq!(points[0].seed, 1);
+        assert_eq!(points[1].seed, 2);
+        assert_eq!(points[2].region, "ontario");
+        assert_eq!(spec.num_cells(), 8);
+    }
+
+    #[test]
+    fn seeds_are_verbatim_and_reorder_stable() {
+        let mut a = SweepSpec::new(tiny_base());
+        a.regions = vec!["south-australia".into(), "ontario".into()];
+        a.seeds = vec![1, 2];
+        let mut b = SweepSpec::new(tiny_base());
+        b.regions = vec!["ontario".into(), "south-australia".into()];
+        b.seeds = vec![2, 1];
+        // A setting's config does not depend on where it sits in the grid,
+        // and the simulated seed is the spec entry itself.
+        for p in b.points() {
+            let cfg = b.config_for(&p);
+            assert_eq!(cfg.seed, p.seed);
+            assert_eq!(cfg.region, p.region);
+        }
+        let a_pts: std::collections::BTreeSet<_> =
+            a.points().iter().map(|p| (p.region.clone(), p.seed)).collect();
+        let b_pts: std::collections::BTreeSet<_> =
+            b.points().iter().map(|p| (p.region.clone(), p.seed)).collect();
+        assert_eq!(a_pts, b_pts);
+    }
+
+    #[test]
+    fn variants_share_the_draw_but_not_the_config() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.variants = vec![
+            SweepVariant::new("d6", |cfg| cfg.uniform_delay_hours = Some(6.0)),
+            SweepVariant::new("d24", |cfg| cfg.uniform_delay_hours = Some(24.0)),
+        ];
+        let points = spec.points();
+        assert_eq!(points.len(), 2);
+        // Common random numbers: single-knob rows compare the same draw.
+        assert_eq!(points[0].seed, points[1].seed);
+        let cfg = spec.config_for(&points[1]);
+        assert_eq!(cfg.uniform_delay_hours, Some(24.0));
+        assert_eq!(cfg.seed, points[1].seed);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate sweep variant label")]
+    fn duplicate_variant_labels_panic() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.variants =
+            vec![SweepVariant::new("x", |_| {}), SweepVariant::new("x", |_| {})];
+        let _ = spec.points();
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let doubled = par_map(8, &items, |&x, i| {
+            assert_eq!(x, i);
+            x * 2
+        });
+        assert_eq!(doubled, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+        // Serial path agrees.
+        assert_eq!(par_map(1, &items, |&x, _| x * 2), doubled);
+        // Empty input is fine.
+        assert_eq!(par_map(4, &[] as &[usize], |&x, _| x), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn runner_emits_grid_order_with_shared_baseline() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.regions = vec!["south-australia".into(), "ontario".into()];
+        spec.policies = vec![PolicyKind::CarbonAgnostic, PolicyKind::WaitAwhile];
+        let rows = SweepRunner::new(4).run(&spec);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].point.region, "south-australia");
+        assert_eq!(rows[0].kind, PolicyKind::CarbonAgnostic);
+        assert_eq!(rows[1].kind, PolicyKind::WaitAwhile);
+        assert_eq!(rows[2].point.region, "ontario");
+        for r in &rows {
+            assert_eq!(r.result.metrics.unfinished, 0, "{:?}", r.point);
+            assert!(r.result.metrics.carbon_g > 0.0);
+        }
+        // The agnostic rows are their own baselines.
+        assert_eq!(rows[0].savings_pct, 0.0);
+        assert_eq!(rows[2].savings_pct, 0.0);
+    }
+}

@@ -9,17 +9,23 @@
 //! knowledge base, and evaluates CarbonFlex against the carbon-agnostic
 //! baseline and the per-week oracle. This exercises the paper's continuous
 //! learning loop end to end, including seasonal drift in the carbon traces.
+//!
+//! Weeks are inherently sequential (each week's knowledge base feeds the
+//! next), but within a week the three evaluation runs are independent and
+//! execute in parallel on the sweep engine's thread pool.
 
 use crate::carbon::forecast::Forecaster;
 use crate::carbon::synth::{self, Region};
 use crate::cluster::energy::EnergyModel;
 use crate::cluster::sim::Simulator;
 use crate::config::ExperimentConfig;
+use crate::experiments::sweep::par_map;
 use crate::learning::kb::{Case, KnowledgeBase};
 use crate::learning::replay::{learn, LearnConfig};
 use crate::sched::carbon_agnostic::CarbonAgnostic;
 use crate::sched::carbonflex::{CarbonFlex, CarbonFlexParams};
 use crate::sched::oracle::Oracle;
+use crate::sched::{Policy, PolicyKind};
 use crate::util::stats;
 use crate::workload::tracegen;
 
@@ -93,25 +99,33 @@ pub fn run_yearlong(cfg: &ExperimentConfig, weeks: usize, aging_window_hours: us
         kb.age_out(eval_start, aging_window_hours);
         kb.rebuild();
 
-        // --- Evaluation week ---
+        // --- Evaluation week: the three runs are independent given the
+        // frozen knowledge base, so run them in parallel. ---
         let eval_trace = year.slice(eval_start, 168 + 168); // + drain week
         let eval_jobs = tracegen::generate(cfg, 168, cfg.seed ^ (week as u64) << 8 ^ 0xE7A1);
         let forecaster = Forecaster::perfect(eval_trace.clone());
         let sim = Simulator::new(cfg.capacity, energy.clone(), cfg.queues.len(), 168);
 
-        let baseline = sim.run(&eval_jobs, &forecaster, &mut CarbonAgnostic);
-        let mut flex = CarbonFlex::new(
-            KnowledgeBase::from_cases(kb.cases().to_vec()),
-            CarbonFlexParams {
-                knn_k: cfg.knn_k,
-                violation_tolerance: cfg.violation_tolerance,
-                distance_bound: cfg.distance_bound,
-                ..Default::default()
-            },
-        );
-        let flex_result = sim.run(&eval_jobs, &forecaster, &mut flex);
-        let mut oracle = Oracle::new(&eval_jobs, &eval_trace, cfg.capacity);
-        let oracle_result = sim.run(&eval_jobs, &forecaster, &mut oracle);
+        let kinds = [PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex, PolicyKind::Oracle];
+        let runs = par_map(kinds.len(), &kinds, |&kind, _| {
+            let mut policy: Box<dyn Policy> = match kind {
+                PolicyKind::CarbonFlex => Box::new(CarbonFlex::new(
+                    KnowledgeBase::from_cases(kb.cases().to_vec()),
+                    CarbonFlexParams {
+                        knn_k: cfg.knn_k,
+                        violation_tolerance: cfg.violation_tolerance,
+                        distance_bound: cfg.distance_bound,
+                        ..Default::default()
+                    },
+                )),
+                PolicyKind::Oracle => {
+                    Box::new(Oracle::new(&eval_jobs, &eval_trace, cfg.capacity))
+                }
+                _ => Box::new(CarbonAgnostic),
+            };
+            sim.run(&eval_jobs, &forecaster, policy.as_mut())
+        });
+        let (baseline, flex_result, oracle_result) = (&runs[0], &runs[1], &runs[2]);
 
         let base = baseline.metrics.carbon_g;
         results.push(WeekResult {

@@ -183,7 +183,8 @@ impl KnowledgeBase {
                 continue;
             }
             let parts: Vec<&str> = line.split(',').collect();
-            let bad = || std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {}", i + 1));
+            let bad =
+                || std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {}", i + 1));
             if parts.len() != 4 {
                 return Err(bad());
             }

@@ -3,6 +3,7 @@
 //! Subcommands:
 //! - `simulate --config <file> [--policy <name>]` — run one policy
 //! - `compare  --config <file>` — run the headline policy comparison
+//! - `sweep    [--regions a,b] [--policies x,y] [--threads N]` — parallel grid
 //! - `learn    --config <file> --out kb.csv` — run the learning phase
 //! - `gen-traces --region <key> --hours <n> --out <csv>` — export CI traces
 //! - `catalog` — print the Table 3 workload catalog
@@ -12,9 +13,11 @@
 use carbonflex::carbon::synth::{self, Region};
 use carbonflex::config::ExperimentConfig;
 use carbonflex::experiments::runner;
+use carbonflex::experiments::sweep::{self, SweepRunner, SweepSpec};
 use carbonflex::sched::PolicyKind;
 use carbonflex::util::bench::Table;
 use carbonflex::util::cli::Args;
+use carbonflex::util::json::Json;
 use carbonflex::workload::profile;
 
 fn main() {
@@ -22,6 +25,7 @@ fn main() {
     let code = match args.command.as_deref() {
         Some("simulate") => cmd_simulate(&args),
         Some("compare") => cmd_compare(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("learn") => cmd_learn(&args),
         Some("gen-traces") => cmd_gen_traces(&args),
         Some("catalog") => cmd_catalog(),
@@ -49,6 +53,10 @@ fn print_usage() {
          COMMANDS:\n\
          \x20 simulate    --config <file> [--policy carbonflex] run one policy\n\
          \x20 compare     --config <file>                       headline comparison (Fig. 6)\n\
+         \x20 sweep       [--config <file>] [--regions a,b] [--policies x,y|all|headline]\n\
+         \x20             [--capacities 100,150] [--horizons 168] [--seeds 1,2]\n\
+         \x20             [--history <h>] [--offsets <n>] [--threads N] [--json] [--check]\n\
+         \x20             parallel cartesian grid; rows in grid order\n\
          \x20 learn       --config <file> [--out kb.csv]        learning phase → knowledge base\n\
          \x20 gen-traces  [--region south-australia] [--hours 8760] [--out trace.csv]\n\
          \x20 catalog                                           Table 3 workload catalog\n\
@@ -107,12 +115,125 @@ fn cmd_compare(args: &Args) -> i32 {
     0
 }
 
+/// Parse a comma-separated `--name a,b,c` option with a per-item parser;
+/// `None`/empty means "axis not given".
+fn parse_list<T>(
+    args: &Args,
+    name: &str,
+    parse: impl Fn(&str) -> Result<T, String>,
+) -> Result<Vec<T>, String> {
+    match args.get(name) {
+        None => Ok(Vec::new()),
+        Some(raw) => raw
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(&parse)
+            .collect(),
+    }
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let t0 = std::time::Instant::now();
+    let mut base = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => return fail(&e),
+    };
+    // Base-config overrides useful for quick grids and CI smoke runs.
+    match args.num_or::<usize>("history", base.history_hours) {
+        Ok(h) => base.history_hours = h,
+        Err(e) => return fail(&e),
+    }
+    match args.num_or::<usize>("offsets", base.replay_offsets) {
+        Ok(o) => base.replay_offsets = o,
+        Err(e) => return fail(&e),
+    }
+
+    let mut spec = SweepSpec::new(base);
+    spec.regions = match parse_list(args, "regions", |s| {
+        Region::parse(s)
+            .map(|r| r.key().to_string())
+            .ok_or_else(|| format!("unknown region '{s}'"))
+    }) {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    spec.policies = match args.get("policies") {
+        Some("all") => PolicyKind::ALL.to_vec(),
+        Some("headline") | None => PolicyKind::HEADLINE.to_vec(),
+        Some(_) => match parse_list(args, "policies", |s| {
+            PolicyKind::parse(s).ok_or_else(|| format!("unknown policy '{s}'"))
+        }) {
+            Ok(v) => v,
+            Err(e) => return fail(&e),
+        },
+    };
+    let num = |name: &str| -> Result<Vec<usize>, String> {
+        parse_list(args, name, |s| {
+            s.parse::<usize>().map_err(|_| format!("invalid --{name} entry '{s}'"))
+        })
+    };
+    spec.capacities = match num("capacities") {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    spec.horizons = match num("horizons") {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    spec.seeds = match parse_list(args, "seeds", |s| {
+        s.parse::<u64>().map_err(|_| format!("invalid --seeds entry '{s}'"))
+    }) {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+
+    let threads = match args.num_or::<usize>("threads", 0) {
+        Ok(0) => sweep::auto_threads(),
+        Ok(n) => n,
+        Err(e) => return fail(&e),
+    };
+    let rows = SweepRunner::new(threads).run(&spec);
+
+    if args.flag("json") {
+        let doc = Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("cells", Json::Num(rows.len() as f64)),
+            ("wall_seconds", Json::Num(t0.elapsed().as_secs_f64())),
+            ("rows", sweep::to_json(&rows)),
+        ]);
+        println!("{doc}");
+    } else {
+        sweep::print_table(&rows);
+        println!("{} cells on {} threads in {:.2?}", rows.len(), threads, t0.elapsed());
+    }
+
+    if args.flag("check") {
+        let mut bad = 0;
+        for r in &rows {
+            let m = &r.result.metrics;
+            if m.unfinished > 0 || m.carbon_g <= 0.0 {
+                eprintln!(
+                    "check failed: {:?} {} — unfinished {}, carbon {:.1} g",
+                    r.point, m.policy, m.unfinished, m.carbon_g
+                );
+                bad += 1;
+            }
+        }
+        if bad > 0 {
+            return fail(&format!("{bad} cell(s) failed the sanity check"));
+        }
+        println!("check passed: all {} cells drained with positive carbon", rows.len());
+    }
+    0
+}
+
 fn cmd_learn(args: &Args) -> i32 {
     let cfg = match load_config(args) {
         Ok(c) => c,
         Err(e) => return fail(&e),
     };
-    let mut prep = runner::PreparedExperiment::prepare(&cfg);
+    let prep = runner::PreparedExperiment::prepare(&cfg);
     let n_hist = prep.hist_jobs.len();
     let kb = prep.knowledge_base();
     println!("learned {} cases from {} historical jobs", kb.cases().len(), n_hist);
@@ -175,7 +296,9 @@ fn cmd_catalog() -> i32 {
 
 fn cmd_experiment(args: &Args) -> i32 {
     let Some(which) = args.positional.first() else {
-        return fail("experiment requires an id (fig2, fig5..fig14, overheads, yearlong, noise, spatial)");
+        return fail(
+            "experiment requires an id (fig2, fig5..fig14, overheads, yearlong, noise, spatial)",
+        );
     };
     carbonflex::experiments::figures::run_by_name(which, args.get("config"))
 }
@@ -189,7 +312,7 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     let kind =
         PolicyKind::parse(args.get_or("policy", "agnostic")).unwrap_or(PolicyKind::CarbonAgnostic);
-    let mut prep = runner::PreparedExperiment::prepare(&cfg);
+    let prep = runner::PreparedExperiment::prepare(&cfg);
     let policy = prep.build_policy(kind);
     let coord = Coordinator::start(
         CoordinatorConfig {

@@ -7,24 +7,55 @@
 //!
 //! Python never runs at runtime: after `make artifacts` the Rust binary is
 //! self-contained.
+//!
+//! The real backend needs the external `xla` crate, which the offline build
+//! cannot fetch, so it is gated behind the `pjrt` cargo feature. Without the
+//! feature a stub backend with the same API compiles instead: `Engine::cpu`
+//! fails cleanly and every caller falls back to the native KD-tree path
+//! (exactly as they already do when the AOT artifacts are absent).
 
 use std::path::{Path, PathBuf};
 
 use crate::util::json::{self, Json};
 
 /// Runtime errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla: {0}")]
     Xla(String),
-    #[error("artifact missing: {0} (run `make artifacts`)")]
     MissingArtifact(PathBuf),
-    #[error("artifact metadata: {0}")]
     Metadata(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(msg) => write!(f, "xla: {msg}"),
+            RuntimeError::MissingArtifact(p) => {
+                write!(f, "artifact missing: {} (run `make artifacts`)", p.display())
+            }
+            RuntimeError::Metadata(msg) => write!(f, "artifact metadata: {msg}"),
+            RuntimeError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for RuntimeError {
     fn from(e: xla::Error) -> Self {
         RuntimeError::Xla(e.to_string())
@@ -73,83 +104,153 @@ impl ArtifactMeta {
     }
 }
 
-/// A PJRT CPU client plus compiled executables.
-pub struct Engine {
-    client: xla::PjRtClient,
-    artifacts_dir: PathBuf,
-    meta: ArtifactMeta,
+/// Default artifacts directory: `$CARBONFLEX_ARTIFACTS` or `artifacts/`.
+fn artifacts_dir_from_env() -> PathBuf {
+    std::env::var("CARBONFLEX_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-/// One compiled HLO computation.
-pub struct Computation {
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::{ArtifactMeta, RuntimeError};
+    use std::path::PathBuf;
 
-impl Engine {
-    /// Default artifacts directory: `$CARBONFLEX_ARTIFACTS` or `artifacts/`.
-    pub fn default_artifacts_dir() -> PathBuf {
-        std::env::var("CARBONFLEX_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    /// A PJRT CPU client plus compiled executables.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        artifacts_dir: PathBuf,
+        meta: ArtifactMeta,
     }
 
-    /// Create a CPU PJRT client over an artifacts directory.
-    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Engine, RuntimeError> {
-        let artifacts_dir = artifacts_dir.into();
-        let meta = ArtifactMeta::load(&artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Engine { client, artifacts_dir, meta })
+    /// One compiled HLO computation.
+    pub struct Computation {
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    pub fn meta(&self) -> ArtifactMeta {
-        self.meta
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text artifact by file name (e.g. "match.hlo.txt").
-    pub fn load(&self, name: &str) -> Result<Computation, RuntimeError> {
-        let path = self.artifacts_dir.join(name);
-        if !path.exists() {
-            return Err(RuntimeError::MissingArtifact(path));
+    impl Engine {
+        /// Default artifacts directory: `$CARBONFLEX_ARTIFACTS` or `artifacts/`.
+        pub fn default_artifacts_dir() -> PathBuf {
+            super::artifacts_dir_from_env()
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().expect("artifact path must be valid utf-8"),
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(Computation { exe })
+
+        /// Create a CPU PJRT client over an artifacts directory.
+        pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Engine, RuntimeError> {
+            let artifacts_dir = artifacts_dir.into();
+            let meta = ArtifactMeta::load(&artifacts_dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Engine { client, artifacts_dir, meta })
+        }
+
+        pub fn meta(&self) -> ArtifactMeta {
+            self.meta
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact by file name (e.g. "match.hlo.txt").
+        pub fn load(&self, name: &str) -> Result<Computation, RuntimeError> {
+            let path = self.artifacts_dir.join(name);
+            if !path.exists() {
+                return Err(RuntimeError::MissingArtifact(path));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("artifact path must be valid utf-8"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            Ok(Computation { exe })
+        }
+    }
+
+    impl Computation {
+        /// Execute with f32 inputs, returning the tuple elements as flat f32
+        /// vectors. Each input is (data, dims).
+        pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>, RuntimeError> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    let expected: i64 = dims.iter().product();
+                    assert_eq!(expected as usize, data.len(), "input size/shape mismatch");
+                    xla::Literal::vec1(data).reshape(dims)
+                })
+                .collect::<Result<_, _>>()?;
+            let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True → always a tuple.
+            let elems = result.to_tuple()?;
+            elems
+                .into_iter()
+                .map(|l| {
+                    // Outputs may be f32 already; convert defensively (top_k
+                    // indices come back as s32).
+                    let l = l.convert(xla::PrimitiveType::F32)?;
+                    Ok(l.to_vec::<f32>()?)
+                })
+                .collect()
+        }
     }
 }
 
-impl Computation {
-    /// Execute with f32 inputs, returning the tuple elements as flat f32
-    /// vectors. Each input is (data, dims).
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>, RuntimeError> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let expected: i64 = dims.iter().product();
-                assert_eq!(expected as usize, data.len(), "input size/shape mismatch");
-                xla::Literal::vec1(data).reshape(dims)
-            })
-            .collect::<Result<_, _>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → always a tuple.
-        let elems = result.to_tuple()?;
-        elems
-            .into_iter()
-            .map(|l| {
-                // Outputs may be f32 already; convert defensively (top_k
-                // indices come back as s32).
-                let l = l.convert(xla::PrimitiveType::F32)?;
-                Ok(l.to_vec::<f32>()?)
-            })
-            .collect()
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::{ArtifactMeta, RuntimeError};
+    use std::path::PathBuf;
+
+    /// Stub engine compiled when the `pjrt` feature is off. Constructing one
+    /// always fails, so downstream code (PJRT matcher, score kernel, perf
+    /// benches, the e2e example) takes its existing "artifacts unavailable"
+    /// fallback path.
+    pub struct Engine {
+        meta: ArtifactMeta,
+    }
+
+    /// Uninhabited: without a real backend no computation can exist.
+    pub struct Computation {
+        never: std::convert::Infallible,
+    }
+
+    impl Engine {
+        /// Default artifacts directory: `$CARBONFLEX_ARTIFACTS` or `artifacts/`.
+        pub fn default_artifacts_dir() -> PathBuf {
+            super::artifacts_dir_from_env()
+        }
+
+        /// Always fails: the crate was built without the `pjrt` feature.
+        /// Metadata is still validated first so error messages distinguish
+        /// "no artifacts" from "no backend".
+        pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Engine, RuntimeError> {
+            let dir: PathBuf = artifacts_dir.into();
+            let _meta = ArtifactMeta::load(&dir)?;
+            Err(RuntimeError::Xla(
+                "carbonflex was built without the `pjrt` feature; \
+                 rebuild with `--features pjrt` and an `xla` dependency"
+                    .into(),
+            ))
+        }
+
+        pub fn meta(&self) -> ArtifactMeta {
+            self.meta
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".to_string()
+        }
+
+        pub fn load(&self, _name: &str) -> Result<Computation, RuntimeError> {
+            Err(RuntimeError::Xla("pjrt feature disabled".into()))
+        }
+    }
+
+    impl Computation {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>, RuntimeError> {
+            match self.never {}
+        }
     }
 }
+
+pub use backend::{Computation, Engine};
 
 #[cfg(test)]
 mod tests {
@@ -189,5 +290,21 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("meta.json"), r#"{"match": {}}"#).unwrap();
         assert!(matches!(ArtifactMeta::load(&dir), Err(RuntimeError::Metadata(_))));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_fails_cleanly_with_valid_artifacts() {
+        let dir = std::env::temp_dir().join("carbonflex_engine_stub");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"match": {"cases": 16, "features": 8, "k": 5}, "score": {"jk": 64, "t": 24}}"#,
+        )
+        .unwrap();
+        match Engine::cpu(&dir) {
+            Err(RuntimeError::Xla(msg)) => assert!(msg.contains("pjrt"), "{msg}"),
+            other => panic!("expected Xla error, got {:?}", other.err()),
+        }
     }
 }

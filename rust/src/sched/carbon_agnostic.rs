@@ -58,7 +58,9 @@ mod tests {
         let jobs: Vec<Job> = (0..5).map(|i| job(i, 0)).collect();
         let views: Vec<crate::sched::JobView> = jobs
             .iter()
-            .map(|j| crate::sched::JobView { job: j, remaining: 2.0, prev_alloc: 0, overdue: false })
+            .map(|j| {
+                crate::sched::JobView { job: j, remaining: 2.0, prev_alloc: 0, overdue: false }
+            })
             .collect();
         let f = Forecaster::perfect(CarbonTrace::new("x", vec![100.0; 10]));
         let ctx = SlotCtx {

@@ -319,7 +319,12 @@ mod tests {
         kb.rebuild();
         let mut cf = CarbonFlex::new(
             kb,
-            CarbonFlexParams { knn_k: 5, violation_tolerance: 0.1, distance_bound: 0.5, ..Default::default() },
+            CarbonFlexParams {
+                knn_k: 5,
+                violation_tolerance: 0.1,
+                distance_bound: 0.5,
+                ..Default::default()
+            },
         );
         // Violations high + far matches → full M.
         let d = cf.decide(&ctx_at(0, &views, &f, 0.5));

@@ -333,7 +333,8 @@ mod tests {
     fn all_jobs_get_base_before_scaling() {
         // Two identical jobs, capacity 2, valley 2 slots wide: greedy must
         // give each a base server (p=1) before scaling either (p<1).
-        let hourly: Vec<f64> = (0..16).map(|t| if (2..4).contains(&t) { 50.0 } else { 400.0 }).collect();
+        let hourly: Vec<f64> =
+            (0..16).map(|t| if (2..4).contains(&t) { 50.0 } else { 400.0 }).collect();
         let trace = CarbonTrace::new("v", hourly);
         let jobs: Vec<Job> = (0..2).map(|i| job(i, 0, 2.0, 8.0, 4, 0.1)).collect();
         let s = compute_schedule(&jobs, &trace, 2, 24.0, 4);

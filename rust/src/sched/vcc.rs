@@ -81,7 +81,11 @@ impl Policy for Vcc {
                 }
             }
             entries.sort_by(|a, b| {
-                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)).then(a.3.cmp(&b.3))
+                a.0.partial_cmp(&b.0)
+                    .unwrap()
+                    .then(a.1.cmp(&b.1))
+                    .then(a.2.cmp(&b.2))
+                    .then(a.3.cmp(&b.3))
             });
             let mut granted = vec![0usize; ctx.jobs.len()];
             for (_, _, i, k) in entries {

@@ -62,7 +62,9 @@ impl Args {
 
     /// Typed option access with a parse-or-default contract.
     pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Option<Result<T, String>> {
-        self.get(name).map(|s| s.parse::<T>().map_err(|_| format!("invalid value for --{name}: '{s}'")))
+        self.get(name).map(|s| {
+            s.parse::<T>().map_err(|_| format!("invalid value for --{name}: '{s}'"))
+        })
     }
 
     /// Typed option with default; returns Err on malformed input.

@@ -15,14 +15,38 @@ use crate::workload::job::Job;
 use crate::workload::profile::{self, ScalingProfile};
 
 /// IO error for workload trace files.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WorkloadIoError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("csv line {0}: {1}")]
+    Io(std::io::Error),
     Malformed(usize, String),
-    #[error("csv line {0}: unknown workload '{1}' for {2:?} catalog")]
     UnknownWorkload(usize, String, Hardware),
+}
+
+impl std::fmt::Display for WorkloadIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkloadIoError::Io(e) => write!(f, "io: {e}"),
+            WorkloadIoError::Malformed(line, msg) => write!(f, "csv line {line}: {msg}"),
+            WorkloadIoError::UnknownWorkload(line, name, hw) => {
+                write!(f, "csv line {line}: unknown workload '{name}' for {hw:?} catalog")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WorkloadIoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WorkloadIoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WorkloadIoError {
+    fn from(e: std::io::Error) -> Self {
+        WorkloadIoError::Io(e)
+    }
 }
 
 /// Save a job trace as CSV.
@@ -65,7 +89,10 @@ pub fn load_csv(path: impl AsRef<Path>, hardware: Hardware) -> Result<Vec<Job>, 
         let k_min: usize = field(6).parse().map_err(|_| parse_err("k_min"))?;
         let k_max: usize = field(7).parse().map_err(|_| parse_err("k_max"))?;
         if k_min == 0 || k_min > k_max {
-            return Err(WorkloadIoError::Malformed(lineno, format!("bad scale range {k_min}..{k_max}")));
+            return Err(WorkloadIoError::Malformed(
+                lineno,
+                format!("bad scale range {k_min}..{k_max}"),
+            ));
         }
         let spec = &catalog[widx];
         let profile = if k_max == k_min {

@@ -55,7 +55,13 @@ impl Job {
         if k == 0 {
             return 0.0;
         }
-        assert!(k >= self.k_min && k <= self.k_max, "job {} scale {k} outside [{}, {}]", self.id, self.k_min, self.k_max);
+        assert!(
+            k >= self.k_min && k <= self.k_max,
+            "job {} scale {k} outside [{}, {}]",
+            self.id,
+            self.k_min,
+            self.k_max
+        );
         self.profile.throughput(k)
     }
 

@@ -164,6 +164,7 @@ impl WorkloadSpec {
 /// The 13 workloads of Table 3. MPI workloads run on the CPU cluster
 /// (profiled to k_max = 16), PyTorch workloads on the GPU cluster
 /// (k_max = 8), matching §6.1.
+#[rustfmt::skip] // keep the catalog one row per workload
 pub fn catalog() -> Vec<WorkloadSpec> {
     use Hardware::*;
     use Scalability::*;

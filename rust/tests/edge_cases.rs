@@ -198,7 +198,7 @@ fn extreme_utilization_configs_still_drain() {
         cfg.history_hours = 72;
         cfg.replay_offsets = 1;
         cfg.target_utilization = util;
-        let mut prep = PreparedExperiment::prepare(&cfg);
+        let prep = PreparedExperiment::prepare(&cfg);
         for kind in [PolicyKind::CarbonFlex, PolicyKind::Oracle] {
             let r = prep.run(kind);
             assert_eq!(r.metrics.unfinished, 0, "util {util} {kind:?}");

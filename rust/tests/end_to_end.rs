@@ -152,7 +152,7 @@ fn shipped_configs_load_and_run() {
             cfg.horizon_hours = cfg.horizon_hours.min(48);
             cfg.history_hours = cfg.history_hours.min(96).max(cfg.horizon_hours);
             cfg.replay_offsets = 1;
-            let mut prep = PreparedExperiment::prepare(&cfg);
+            let prep = PreparedExperiment::prepare(&cfg);
             let r = prep.run(PolicyKind::CarbonAgnostic);
             assert_eq!(r.metrics.unfinished, 0, "{path:?}");
         }
@@ -162,7 +162,7 @@ fn shipped_configs_load_and_run() {
 
 #[test]
 fn knowledge_base_round_trips_through_disk() {
-    let mut prep = PreparedExperiment::prepare(&{
+    let prep = PreparedExperiment::prepare(&{
         let mut cfg = small_paper_cfg();
         cfg.capacity = 12;
         cfg.horizon_hours = 48;

@@ -136,7 +136,7 @@ fn pjrt_end_to_end_carbonflex_policy() {
     cfg.horizon_hours = 72;
     cfg.history_hours = 120;
     cfg.replay_offsets = 2;
-    let mut prep = PreparedExperiment::prepare(&cfg);
+    let prep = PreparedExperiment::prepare(&cfg);
     let native = prep.run(PolicyKind::CarbonFlex);
 
     let matcher = PjrtMatcher::from_kb(&engine, prep.knowledge_base()).unwrap();

@@ -44,7 +44,7 @@ fn random_instance(rng: &mut Rng) -> Instance {
 }
 
 fn run(instance: &Instance, kind: PolicyKind) -> SimResult {
-    let mut prep = PreparedExperiment::prepare(&instance.cfg);
+    let prep = PreparedExperiment::prepare(&instance.cfg);
     prep.run(kind)
 }
 
@@ -217,7 +217,7 @@ fn noscaling_scenario_never_scales() {
     cfg.history_hours = 96;
     cfg.replay_offsets = 1;
     cfg.elasticity = ElasticityScenario::NoScaling;
-    let mut prep = PreparedExperiment::prepare(&cfg);
+    let prep = PreparedExperiment::prepare(&cfg);
     for kind in [PolicyKind::CarbonFlex, PolicyKind::Oracle, PolicyKind::CarbonScaler] {
         let r = prep.run(kind);
         assert!(

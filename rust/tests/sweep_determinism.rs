@@ -1,0 +1,118 @@
+//! Integration: the parallel sweep engine must be bitwise deterministic —
+//! thread count and grid ordering may change the schedule of work, never
+//! the results. Per-cell seeds derive from cell content, and rows come back
+//! in grid order regardless of completion order.
+
+use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::runner::run_policies;
+use carbonflex::experiments::sweep::{SweepRunner, SweepSpec};
+use carbonflex::sched::PolicyKind;
+
+fn tiny_base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.capacity = 12;
+    cfg.horizon_hours = 48;
+    cfg.history_hours = 72;
+    cfg.replay_offsets = 1;
+    cfg
+}
+
+fn grid_spec() -> SweepSpec {
+    let mut spec = SweepSpec::new(tiny_base());
+    spec.regions = vec!["south-australia".into(), "ontario".into()];
+    spec.seeds = vec![1, 2];
+    spec.policies = vec![
+        PolicyKind::CarbonAgnostic,
+        PolicyKind::WaitAwhile,
+        PolicyKind::Gaia,
+        PolicyKind::CarbonFlex,
+    ];
+    spec
+}
+
+#[test]
+fn thread_count_does_not_change_results() {
+    let serial = SweepRunner::new(1).run(&grid_spec());
+    let parallel = SweepRunner::new(8).run(&grid_spec());
+    assert_eq!(serial.len(), 16);
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.point, b.point);
+        assert_eq!(a.kind, b.kind);
+        let (ma, mb) = (&a.result.metrics, &b.result.metrics);
+        let cell = format!("{}/{}/{:?}", a.point.region, a.point.seed, a.kind);
+        assert_eq!(ma.carbon_g.to_bits(), mb.carbon_g.to_bits(), "carbon differs: {cell}");
+        assert_eq!(ma.energy_kwh.to_bits(), mb.energy_kwh.to_bits(), "energy differs: {cell}");
+        assert_eq!(ma.completed, mb.completed, "completed differs: {cell}");
+        assert_eq!(ma.unfinished, mb.unfinished, "unfinished differs: {cell}");
+        assert_eq!(ma.violations, mb.violations, "violations differs: {cell}");
+        assert_eq!(
+            ma.mean_delay_hours.to_bits(),
+            mb.mean_delay_hours.to_bits(),
+            "delay differs: {cell}"
+        );
+        assert_eq!(a.savings_pct.to_bits(), b.savings_pct.to_bits(), "savings differs: {cell}");
+        // Every cell must also be sane.
+        assert_eq!(ma.unfinished, 0, "{cell} left jobs unfinished");
+        assert!(ma.carbon_g > 0.0, "{cell} reported non-positive carbon");
+    }
+}
+
+#[test]
+fn rows_come_back_in_grid_order() {
+    let spec = grid_spec();
+    let rows = SweepRunner::new(8).run(&spec);
+    let points = spec.points();
+    let policies = spec.policies();
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.point, points[i / policies.len()], "row {i} out of grid order");
+        assert_eq!(row.kind, policies[i % policies.len()], "row {i} policy out of order");
+    }
+}
+
+#[test]
+fn cell_configs_are_stable_across_grid_reorderings() {
+    // A setting's materialized config depends only on its content, never on
+    // its grid coordinates: reversing every axis must yield the same
+    // (region, seed) → config mapping.
+    let original = grid_spec();
+    let mut reordered = grid_spec();
+    reordered.regions.reverse();
+    reordered.seeds.reverse();
+    let by_key: std::collections::BTreeMap<_, _> = original
+        .points()
+        .into_iter()
+        .map(|p| ((p.region.clone(), p.seed), original.config_for(&p)))
+        .collect();
+    for p in reordered.points() {
+        let cfg = reordered.config_for(&p);
+        let orig = &by_key[&(p.region.clone(), p.seed)];
+        assert_eq!(cfg.seed, orig.seed, "seed moved with grid position: {p:?}");
+        assert_eq!(cfg.region, orig.region);
+        assert_eq!(cfg.capacity, orig.capacity);
+        assert_eq!(cfg.horizon_hours, orig.horizon_hours);
+    }
+}
+
+#[test]
+fn single_cell_sweep_matches_run_policies() {
+    // The sweep engine must not change what a cell *means*: a one-point
+    // grid reproduces the serial `run_policies` path bitwise (same seed,
+    // same prepared experiment, same baseline).
+    let kinds = [PolicyKind::CarbonAgnostic, PolicyKind::WaitAwhile, PolicyKind::Gaia];
+    let direct = run_policies(&tiny_base(), &kinds);
+    let mut spec = SweepSpec::new(tiny_base());
+    spec.policies = kinds.to_vec();
+    let rows = SweepRunner::new(2).run(&spec);
+    assert_eq!(direct.len(), rows.len());
+    for (d, r) in direct.iter().zip(&rows) {
+        assert_eq!(d.kind, r.kind);
+        assert_eq!(
+            d.result.metrics.carbon_g.to_bits(),
+            r.result.metrics.carbon_g.to_bits(),
+            "{:?} diverged between compare and sweep",
+            d.kind
+        );
+        assert_eq!(d.savings_pct.to_bits(), r.savings_pct.to_bits());
+    }
+}
