@@ -2,37 +2,49 @@
 //!
 //! - L3 oracle (Alg. 1) over a week-long trace — the learning-phase loop
 //!   (paper §6.8: 2–10 **minutes** in the Python prototype).
-//! - State match: native KD-tree vs brute force vs PJRT/Pallas round trip
+//! - State match: native KD-tree vs PJRT/Pallas round trip
 //!   (paper §6.8: 1–2 ms with scikit-learn).
-//! - Cluster-engine stepping throughput.
+//! - Cluster-engine stepping throughput per policy.
+//!
+//! The shared cells live in `experiments::perf` (also behind the
+//! `carbonflex bench` CLI subcommand); this binary additionally measures
+//! the PJRT backends and records everything to `BENCH_hotpaths.json`.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::perf::bench_hotpaths;
 use carbonflex::experiments::runner::PreparedExperiment;
 use carbonflex::learning::kb::{KnowledgeBase, Matcher};
 use carbonflex::learning::state::StateVector;
 use carbonflex::runtime::engine::Engine;
 use carbonflex::runtime::matcher::PjrtMatcher;
 use carbonflex::runtime::score::{score_native, ScoreKernel};
-use carbonflex::sched::oracle::compute_schedule;
-use carbonflex::sched::PolicyKind;
-use carbonflex::util::bench::{bench, bench_for, fmt_duration};
+use carbonflex::util::bench::bench;
 use carbonflex::util::rng::Rng;
 
 fn main() {
+    let t0 = std::time::Instant::now();
     let cfg = ExperimentConfig::default();
-    let prep = PreparedExperiment::prepare(&cfg);
-    println!("== perf: L3 oracle (Alg. 1), {} jobs, week trace ==", prep.eval_jobs.len());
-    let jobs = prep.eval_jobs.clone();
-    let trace = prep.eval_trace.clone();
-    let r = bench_for("oracle/week-trace", Duration::from_secs(5), || {
-        std::hint::black_box(compute_schedule(&jobs, &trace, cfg.capacity, 24.0, 8));
-    });
-    println!("{r}");
-    println!("(paper prototype: 2–10 min)");
 
-    println!("\n== perf: state match (k = 5) ==");
+    println!("== perf: hot paths (oracle / state match / engine stepping) ==");
+    let report = bench_hotpaths(&cfg, Duration::from_secs(5));
+    for cell in &report.cells {
+        match cell.slots_per_second {
+            Some(sps) => println!("{}  ({sps:.0} slots/s)", cell.result),
+            None => println!("{}", cell.result),
+        }
+    }
+    println!("(paper prototype: oracle 2–10 min, state match 1–2 ms)");
+
+    let doc = report.to_json(t0.elapsed().as_secs_f64());
+    match std::fs::write("BENCH_hotpaths.json", format!("{doc}\n")) {
+        Ok(()) => println!("timings recorded to BENCH_hotpaths.json"),
+        Err(e) => eprintln!("could not write BENCH_hotpaths.json: {e}"),
+    }
+
+    println!("\n== perf: PJRT/Pallas backends ==");
+    let prep = PreparedExperiment::prepare(&cfg);
     let kb = KnowledgeBase::from_cases(prep.knowledge_base().cases().to_vec());
     let mut rng = Rng::new(1);
     let mut queries = Vec::new();
@@ -46,12 +58,6 @@ fn main() {
         ));
     }
     let mut qi = 0usize;
-    let r = bench("match/native-kdtree", 100, 2000, || {
-        qi = (qi + 1) % queries.len();
-        std::hint::black_box(kb.top_k(&queries[qi], 5));
-    });
-    println!("{r}");
-
     match Engine::cpu(Engine::default_artifacts_dir()) {
         Ok(engine) => {
             let matcher = PjrtMatcher::from_kb(&engine, &kb).expect("matcher");
@@ -60,7 +66,6 @@ fn main() {
                 std::hint::black_box(matcher.top_k(&queries[qi], 5));
             });
             println!("{r}");
-            println!("(paper prototype: 1–2 ms)");
 
             println!("\n== perf: score kernel (Alg. 1 inner loop) ==");
             let kernel = ScoreKernel::load(&engine).expect("score kernel");
@@ -78,19 +83,5 @@ fn main() {
             println!("{r}");
         }
         Err(e) => println!("SKIP pjrt benches: {e}"),
-    }
-
-    println!("\n== perf: end-to-end policy runs (week, M=150) ==");
-    for kind in [PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex, PolicyKind::Oracle] {
-        let t0 = Instant::now();
-        let res = prep.run(kind);
-        let dt = t0.elapsed();
-        println!(
-            "{:<22} {:>10}  ({} slots, {:.0} slots/s)",
-            kind.as_str(),
-            fmt_duration(dt),
-            res.slots.len(),
-            res.slots.len() as f64 / dt.as_secs_f64()
-        );
     }
 }

@@ -10,13 +10,21 @@
 //! Two drivers share the engine: [`Simulator::run`] (batch: replay a whole
 //! trace until drain) and the live [`crate::coordinator`] service (jobs are
 //! submitted over a channel and slots tick in real or virtual time).
+//!
+//! §Perf: `step` is the system's innermost loop (every sweep cell, oracle
+//! replay, and coordinator tick funnels through it), so its steady state is
+//! allocation-free: the active-job list, policy views, decision, and all
+//! sanitizer scratch live in reusable engine fields, and slot records store
+//! queue lengths inline. `tests/zero_alloc.rs` enforces the invariant with
+//! a counting global allocator.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::carbon::forecast::Forecaster;
 use crate::cluster::energy::EnergyModel;
 use crate::cluster::metrics::{JobOutcome, RunMetrics};
-use crate::sched::{Decision, JobView, Policy, SlotCtx};
+use crate::sched::{Decision, JobView, Policy, SlotCtx, MAX_QUEUES};
 use crate::workload::job::Job;
 
 /// Per-slot record of what the policy did — the raw material for the
@@ -35,8 +43,9 @@ pub struct SlotRecord {
     /// among granted servers; 1.0 when only base allocations ran;
     /// [`RHO_IDLE`] when jobs were queued but nothing ran.
     pub rho: f64,
-    /// Active jobs per queue at decision time.
-    pub queue_lengths: Vec<usize>,
+    /// Active jobs per queue at decision time (entries past the simulator's
+    /// `num_queues` are zero; inline so slot records stay off the heap).
+    pub queue_lengths: [usize; MAX_QUEUES],
     /// Mean elasticity of active jobs.
     pub mean_elasticity: f64,
     /// Energy consumed this slot, kWh (jobs only).
@@ -59,6 +68,48 @@ pub struct SimResult {
     /// Cluster-level overheads (boot energy) folded into `metrics` totals.
     pub overhead_energy_kwh: f64,
     pub overhead_carbon_g: f64,
+}
+
+impl SimResult {
+    /// Bit-exact fingerprint of the run: headline metrics as raw f64 bits
+    /// plus an FNV-1a digest over every slot record. Two runs produce the
+    /// same fingerprint iff the engine produced bitwise-identical output —
+    /// the golden-determinism tests pin these across refactors.
+    pub fn fingerprint(&self) -> String {
+        use crate::util::hash::{fold, FNV_OFFSET};
+        let mut h = FNV_OFFSET;
+        for s in &self.slots {
+            h = fold(h, &(s.t as u64).to_le_bytes());
+            h = fold(h, &(s.provisioned as u64).to_le_bytes());
+            h = fold(h, &(s.used as u64).to_le_bytes());
+            h = fold(h, &s.rho.to_bits().to_le_bytes());
+            h = fold(h, &s.ci.to_bits().to_le_bytes());
+            h = fold(h, &s.energy_kwh.to_bits().to_le_bytes());
+            h = fold(h, &s.carbon_g.to_bits().to_le_bytes());
+            h = fold(h, &s.mean_elasticity.to_bits().to_le_bytes());
+            for &q in &s.queue_lengths {
+                h = fold(h, &(q as u64).to_le_bytes());
+            }
+        }
+        for o in &self.outcomes {
+            h = fold(h, &(o.id as u64).to_le_bytes());
+            h = fold(h, &(o.completion as u64).to_le_bytes());
+            h = fold(h, &o.energy_kwh.to_bits().to_le_bytes());
+            h = fold(h, &o.carbon_g.to_bits().to_le_bytes());
+            h = fold(h, &(o.rescales as u64).to_le_bytes());
+        }
+        let m = &self.metrics;
+        format!(
+            "{:016x}-{:016x}-{}-{}-{}-{:016x}-{:016x}",
+            m.carbon_g.to_bits(),
+            m.energy_kwh.to_bits(),
+            m.completed,
+            m.unfinished,
+            m.violations,
+            m.mean_delay_hours.to_bits(),
+            h
+        )
+    }
 }
 
 /// Engine configuration shared by the batch simulator and the coordinator.
@@ -88,6 +139,23 @@ struct JobState {
     rescales: usize,
 }
 
+/// Reusable scratch for [`sanitize`] (§Perf: one allocation-free sanitize
+/// pass per slot instead of a fresh `HashMap` + vectors).
+#[derive(Debug, Default)]
+struct SanitizeScratch {
+    /// Per-view allocation — the sanitize output, aligned with the views.
+    alloc: Vec<usize>,
+    /// Dense job-id → view-index map. Entries go stale across slots and are
+    /// validated against the live views on lookup (ids are dense submission
+    /// indices, so the table is bounded by the job count).
+    idx_of: Vec<usize>,
+    /// Trim-loop victim heap: `Reverse((key, view index, alloc at push))`.
+    /// Entries are lazily invalidated: a popped entry whose recorded
+    /// allocation no longer matches is skipped (its job was re-pushed with
+    /// the updated key when it changed).
+    heap: BinaryHeap<Reverse<(u128, usize, usize)>>,
+}
+
 /// The stepping core: job state + accounting, advanced one slot at a time.
 pub struct ClusterEngine {
     cfg: Simulator,
@@ -103,10 +171,28 @@ pub struct ClusterEngine {
     /// Completions in the trailing 24 slots: (slot, violated).
     recent: VecDeque<(usize, bool)>,
     active_jobs: usize,
+    /// Not-yet-arrived job indices, sorted by (arrival, id) descending so
+    /// the next due arrival pops from the back.
+    waiting: Vec<usize>,
+    /// Arrived, uncompleted job indices in ascending id order — the view
+    /// order every policy sees. Completions compact it in place (order
+    /// preserved, so results stay bitwise identical to the full scan).
+    active: Vec<usize>,
+    /// Recycled policy-view buffer; always empty between steps, only its
+    /// allocation is reused (see the lifetime note in `step`).
+    views_buf: Vec<JobView<'static>>,
+    /// Recycled policy decision (capacity + alloc buffer).
+    decision: Decision,
+    scratch: SanitizeScratch,
 }
 
 impl ClusterEngine {
     pub fn new(cfg: Simulator) -> Self {
+        assert!(
+            cfg.num_queues <= MAX_QUEUES,
+            "num_queues {} exceeds MAX_QUEUES {MAX_QUEUES}",
+            cfg.num_queues
+        );
         let prev_capacity = cfg.max_capacity;
         ClusterEngine {
             cfg,
@@ -121,12 +207,19 @@ impl ClusterEngine {
             overhead_carbon: 0.0,
             recent: VecDeque::new(),
             active_jobs: 0,
+            waiting: vec![],
+            active: vec![],
+            views_buf: vec![],
+            decision: Decision::default(),
+            scratch: SanitizeScratch::default(),
         }
     }
 
     /// Register a job. `job.id` must equal its submission index.
     pub fn add_job(&mut self, job: Job) {
         assert_eq!(job.id, self.jobs.len(), "job ids must be dense submission indices");
+        let idx = self.jobs.len();
+        let arrival = job.arrival;
         self.jobs.push(job);
         self.st.push(JobState {
             remaining: self.jobs.last().unwrap().work(),
@@ -138,6 +231,28 @@ impl ClusterEngine {
             rescales: 0,
         });
         self.active_jobs += 1;
+        // Keep `waiting` sorted by (arrival, id) descending; the next due
+        // arrival is at the back. Submission outside the step loop, so the
+        // O(n) insert is off the hot path.
+        let jobs = &self.jobs;
+        let pos = self.waiting.partition_point(|&j| (jobs[j].arrival, j) > (arrival, idx));
+        self.waiting.insert(pos, idx);
+    }
+
+    /// Pre-size the record and scratch buffers so a run of `slots` steps
+    /// over the registered jobs allocates nothing in steady state.
+    pub fn reserve(&mut self, slots: usize) {
+        let n = self.jobs.len();
+        self.slots.reserve(slots);
+        self.usage_per_slot.reserve(slots);
+        self.outcomes.reserve(n);
+        self.recent.reserve(n + 1);
+        self.active.reserve(n);
+        self.views_buf.reserve(n);
+        self.decision.alloc.reserve(n);
+        self.scratch.alloc.reserve(n);
+        self.scratch.idx_of.reserve(n);
+        self.scratch.heap.reserve(n + 1);
     }
 
     /// Jobs not yet completed (arrived or not).
@@ -160,11 +275,22 @@ impl ClusterEngine {
         forecaster: &Forecaster,
         policy: &mut dyn Policy,
     ) -> &SlotRecord {
-        let n = self.jobs.len();
-        let active: Vec<usize> =
-            (0..n).filter(|&i| !self.st[i].done && self.jobs[i].arrival <= t).collect();
+        // Admit due arrivals from the back of the waiting list, then restore
+        // ascending-id view order (identical to the historical full scan).
+        let mut admitted = false;
+        while let Some(&j) = self.waiting.last() {
+            if self.jobs[j].arrival > t {
+                break;
+            }
+            self.waiting.pop();
+            self.active.push(j);
+            admitted = true;
+        }
+        if admitted {
+            self.active.sort_unstable();
+        }
 
-        if active.is_empty() {
+        if self.active.is_empty() {
             self.prev_used = 0;
             self.usage_per_slot.push(0);
             self.slots.push(SlotRecord {
@@ -173,7 +299,7 @@ impl ClusterEngine {
                 provisioned: 0,
                 used: 0,
                 rho: 1.0,
-                queue_lengths: vec![0; self.cfg.num_queues],
+                queue_lengths: [0; MAX_QUEUES],
                 mean_elasticity: 0.0,
                 energy_kwh: 0.0,
                 carbon_g: 0.0,
@@ -194,19 +320,22 @@ impl ClusterEngine {
             self.recent.iter().filter(|(_, v)| *v).count() as f64 / self.recent.len() as f64
         };
 
-        let views: Vec<JobView> = active
-            .iter()
-            .map(|&i| {
-                let jv = JobView {
-                    job: &self.jobs[i],
-                    remaining: self.st[i].remaining,
-                    prev_alloc: self.st[i].prev_alloc,
-                    overdue: false,
-                };
-                let overdue = jv.slack_left(t) <= 0.0;
-                JobView { overdue, ..jv }
-            })
-            .collect();
+        // Recycle the view buffer's allocation. `views_buf` is stored with a
+        // `'static` placeholder lifetime and is always empty between steps;
+        // `Vec` is covariant, so taking it at the local (shorter) lifetime
+        // is a plain coercion.
+        let mut views: Vec<JobView<'_>> = std::mem::take(&mut self.views_buf);
+        debug_assert!(views.is_empty());
+        for &i in &self.active {
+            let jv = JobView {
+                job: &self.jobs[i],
+                remaining: self.st[i].remaining,
+                prev_alloc: self.st[i].prev_alloc,
+                overdue: false,
+            };
+            let overdue = jv.slack_left(t) <= 0.0;
+            views.push(JobView { overdue, ..jv });
+        }
 
         let ctx = SlotCtx {
             t,
@@ -220,9 +349,10 @@ impl ClusterEngine {
         };
         let queue_lengths = ctx.queue_lengths();
         let mean_elasticity = ctx.mean_elasticity();
-        let decision = policy.decide(&ctx);
+        policy.decide_into(&ctx, &mut self.decision);
 
-        let (provisioned, alloc) = sanitize(self.cfg.max_capacity, &decision, &views);
+        let provisioned =
+            sanitize(self.cfg.max_capacity, &self.decision, &views, &mut self.scratch);
 
         // --- Advance jobs ---
         let ci = forecaster.truth().at(t);
@@ -231,9 +361,10 @@ impl ClusterEngine {
         let mut used = 0usize;
         let mut rho: f64 = f64::INFINITY;
         let mut any_ran = false;
+        let mut completed_any = false;
 
-        for (idx, &i) in active.iter().enumerate() {
-            let k = alloc[idx];
+        for (idx, &i) in self.active.iter().enumerate() {
+            let k = self.scratch.alloc[idx];
             let s = &mut self.st[i];
             let job = &self.jobs[i];
             if k == 0 {
@@ -285,10 +416,15 @@ impl ClusterEngine {
                 self.recent.push_back((t, outcome.violated_slo()));
                 policy.on_complete(job.id, t);
                 self.outcomes.push(outcome);
+                completed_any = true;
             } else {
                 s.remaining -= progress;
                 s.prev_alloc = k;
             }
+        }
+        if completed_any {
+            let st = &self.st;
+            self.active.retain(|&i| !st[i].done);
         }
 
         // Boot energy for newly provisioned servers (3–5 min lag, §6.8).
@@ -307,6 +443,18 @@ impl ClusterEngine {
         } else {
             RHO_IDLE
         };
+
+        // Store the emptied view buffer back for the next step. SAFETY: the
+        // buffer is cleared first, so no reference tied to this step's
+        // borrow of `self.jobs` survives; only the raw allocation is
+        // recycled, and `Vec<JobView<'a>>` and `Vec<JobView<'static>>` are
+        // layout-identical (they differ only in the lifetime parameter).
+        views.clear();
+        #[allow(clippy::useless_transmute, clippy::missing_transmute_annotations)]
+        {
+            self.views_buf =
+                unsafe { std::mem::transmute::<Vec<JobView<'_>>, Vec<JobView<'static>>>(views) };
+        }
 
         self.usage_per_slot.push(used);
         self.slots.push(SlotRecord {
@@ -346,6 +494,18 @@ impl ClusterEngine {
     }
 }
 
+/// Total-order key for a trim victim: `is_base` above a monotone f64→bits
+/// map of the marginal throughput, so the heap's minimum is exactly the
+/// victim the historical linear scan picked (non-base before base, lowest
+/// marginal first; callers add the view index for the first-found tie-break).
+fn victim_key(is_base: bool, marginal: f64) -> u128 {
+    // Standard total-order trick: positive floats get the sign bit set,
+    // negatives are bit-flipped, making the u64 order match the f64 order.
+    let b = marginal.to_bits();
+    let fbits = if b >> 63 == 0 { b | (1 << 63) } else { !b };
+    ((is_base as u128) << 64) | fbits as u128
+}
+
 /// Enforce engine invariants on a raw decision:
 /// 1. `m_t ≤ M`;
 /// 2. every allocation within the job's `[k_min, k_max]`;
@@ -354,41 +514,58 @@ impl ClusterEngine {
 /// 4. total allocation fits within `max(m_t, forced)`, trimming the
 ///    lowest-marginal servers first (scaled servers before suspensions).
 ///
-/// Returns (provisioned, per-active-job allocation aligned with `views`).
-fn sanitize(max_capacity: usize, decision: &Decision, views: &[JobView]) -> (usize, Vec<usize>) {
+/// Returns the provisioned capacity; the per-active-job allocation (aligned
+/// with `views`) is left in `s.alloc`. §Perf: all working state lives in
+/// the reusable scratch, and the trim loop pops victims from a lazily
+/// invalidated binary heap instead of rescanning every view per trimmed
+/// server (O(n·excess) → O((n + excess)·log n)), bitwise-identical to the
+/// scan (see `sanitize_matches_reference_on_random_decisions`).
+fn sanitize(
+    max_capacity: usize,
+    decision: &Decision,
+    views: &[JobView],
+    s: &mut SanitizeScratch,
+) -> usize {
     let provisioned = decision.capacity.min(max_capacity);
-    let mut alloc = vec![0usize; views.len()];
-    // id → view index map (§Perf: a linear scan per allocation made this
-    // O(n²) per slot and dominated oracle replays).
-    let index_of: std::collections::HashMap<usize, usize> =
-        views.iter().enumerate().map(|(i, v)| (v.job.id, i)).collect();
+    s.alloc.clear();
+    s.alloc.resize(views.len(), 0);
+    // Dense job-id → view-index map. Stale entries from previous slots are
+    // fine: every lookup is validated against the live view's id.
+    let max_id = views.iter().map(|v| v.job.id).max().unwrap_or(0);
+    if s.idx_of.len() <= max_id {
+        s.idx_of.resize(max_id + 1, usize::MAX);
+    }
+    for (i, v) in views.iter().enumerate() {
+        s.idx_of[v.job.id] = i;
+    }
     for &(id, k) in &decision.alloc {
-        if let Some(&idx) = index_of.get(&id) {
-            if k > 0 {
-                alloc[idx] = k.clamp(views[idx].job.k_min, views[idx].job.k_max);
-            }
+        let Some(&idx) = s.idx_of.get(id) else { continue };
+        if idx >= views.len() || views[idx].job.id != id {
+            continue; // unknown or stale id
+        }
+        if k > 0 {
+            s.alloc[idx] = k.clamp(views[idx].job.k_min, views[idx].job.k_max);
         }
     }
     // Force-run overdue jobs.
     for (idx, v) in views.iter().enumerate() {
-        if v.overdue && alloc[idx] == 0 {
-            alloc[idx] = v.job.k_min;
+        if v.overdue && s.alloc[idx] == 0 {
+            s.alloc[idx] = v.job.k_min;
         }
     }
     let forced: usize =
-        views.iter().enumerate().filter(|(_, v)| v.overdue).map(|(i, _)| alloc[i]).sum();
+        views.iter().enumerate().filter(|(_, v)| v.overdue).map(|(i, _)| s.alloc[i]).sum();
     let budget = provisioned.max(forced).min(max_capacity);
 
-    // Trim until the allocation fits the budget.
-    let mut total: usize = alloc.iter().sum();
-    while total > budget {
-        // Victim: the allocated top server with the lowest marginal
-        // throughput. Prefer shrinking scaled jobs; suspend non-overdue base
-        // allocations only if nothing is scaled; never shrink an overdue job
-        // below k_min.
-        let mut best: Option<(usize, f64, bool)> = None; // (idx, marginal, is_base)
+    // Trim until the allocation fits the budget. Victim: the allocated top
+    // server with the lowest marginal throughput. Prefer shrinking scaled
+    // jobs; suspend non-overdue base allocations only if nothing is scaled;
+    // never shrink an overdue job below k_min.
+    let mut total: usize = s.alloc.iter().sum();
+    if total > budget {
+        s.heap.clear();
         for (idx, v) in views.iter().enumerate() {
-            let k = alloc[idx];
+            let k = s.alloc[idx];
             if k == 0 {
                 continue;
             }
@@ -396,31 +573,28 @@ fn sanitize(max_capacity: usize, decision: &Decision, views: &[JobView]) -> (usi
             if is_base && v.overdue {
                 continue; // untouchable
             }
-            let m = v.job.marginal(k);
-            let candidate = (idx, m, is_base);
-            best = match best {
-                None => Some(candidate),
-                Some((_, bm, bbase)) => {
-                    // Prefer non-base victims; among same class, lowest marginal.
-                    if (is_base, m) < (bbase, bm) {
-                        Some(candidate)
-                    } else {
-                        best
-                    }
-                }
-            };
+            s.heap.push(Reverse((victim_key(is_base, v.job.marginal(k)), idx, k)));
         }
-        match best {
-            Some((idx, _, is_base)) => {
-                if is_base {
-                    total -= alloc[idx];
-                    alloc[idx] = 0;
-                } else {
-                    alloc[idx] -= 1;
-                    total -= 1;
+        while total > budget {
+            let Some(Reverse((_, idx, k))) = s.heap.pop() else {
+                break; // only overdue base allocations remain
+            };
+            if s.alloc[idx] != k {
+                continue; // stale: this job changed since the entry was pushed
+            }
+            let v = &views[idx];
+            if k == v.job.k_min {
+                total -= k;
+                s.alloc[idx] = 0;
+            } else {
+                let nk = k - 1;
+                s.alloc[idx] = nk;
+                total -= 1;
+                let now_base = nk == v.job.k_min;
+                if nk > 0 && !(now_base && v.overdue) {
+                    s.heap.push(Reverse((victim_key(now_base, v.job.marginal(nk)), idx, nk)));
                 }
             }
-            None => break, // only overdue base allocations remain
         }
     }
     // M is a hard physical limit: if overdue base allocations alone exceed
@@ -430,17 +604,17 @@ fn sanitize(max_capacity: usize, decision: &Decision, views: &[JobView]) -> (usi
         let victim = views
             .iter()
             .enumerate()
-            .filter(|(i, _)| alloc[*i] > 0)
+            .filter(|(i, _)| s.alloc[*i] > 0)
             .max_by_key(|(_, v)| v.job.deadline_slot());
         match victim {
             Some((idx, _)) => {
-                total -= alloc[idx];
-                alloc[idx] = 0;
+                total -= s.alloc[idx];
+                s.alloc[idx] = 0;
             }
             None => break,
         }
     }
-    (provisioned, alloc)
+    provisioned
 }
 
 impl Simulator {
@@ -461,6 +635,9 @@ impl Simulator {
         }
         let last_arrival = jobs.iter().map(|j| j.arrival).max().unwrap_or(0);
         let t_end = last_arrival + self.horizon + self.max_drain_slots;
+        // Runs normally drain shortly after the horizon; the record vectors
+        // grow geometrically past this if a policy stalls into drain slots.
+        engine.reserve(last_arrival + self.horizon + 1);
         let mut t = 0usize;
         while engine.pending_jobs() > 0 && t < t_end {
             engine.step(t, forecaster, policy);
@@ -653,7 +830,8 @@ mod tests {
         j1.queue = 2;
         let f = flat_forecaster(100, 100.0);
         let r = sim(10, 24).run(&[j0, j1], &f, &mut RunAll);
-        assert_eq!(r.slots[0].queue_lengths, vec![1, 0, 1]);
+        assert_eq!(r.slots[0].queue_lengths[..3], [1, 0, 1]);
+        assert!(r.slots[0].queue_lengths[3..].iter().all(|&l| l == 0));
     }
 
     #[test]
@@ -673,6 +851,130 @@ mod tests {
         let f = flat_forecaster(100, 100.0);
         let r = s.run(&jobs, &f, &mut NeverRun);
         assert_eq!(r.metrics.unfinished, 1);
+    }
+
+    /// The pre-optimization sanitize pass, kept verbatim as the semantic
+    /// reference: the heap-based rewrite must match it bitwise on any input.
+    fn reference_sanitize(
+        max_capacity: usize,
+        decision: &Decision,
+        views: &[JobView],
+    ) -> (usize, Vec<usize>) {
+        let provisioned = decision.capacity.min(max_capacity);
+        let mut alloc = vec![0usize; views.len()];
+        let index_of: std::collections::HashMap<usize, usize> =
+            views.iter().enumerate().map(|(i, v)| (v.job.id, i)).collect();
+        for &(id, k) in &decision.alloc {
+            if let Some(&idx) = index_of.get(&id) {
+                if k > 0 {
+                    alloc[idx] = k.clamp(views[idx].job.k_min, views[idx].job.k_max);
+                }
+            }
+        }
+        for (idx, v) in views.iter().enumerate() {
+            if v.overdue && alloc[idx] == 0 {
+                alloc[idx] = v.job.k_min;
+            }
+        }
+        let forced: usize =
+            views.iter().enumerate().filter(|(_, v)| v.overdue).map(|(i, _)| alloc[i]).sum();
+        let budget = provisioned.max(forced).min(max_capacity);
+        let mut total: usize = alloc.iter().sum();
+        while total > budget {
+            let mut best: Option<(usize, f64, bool)> = None;
+            for (idx, v) in views.iter().enumerate() {
+                let k = alloc[idx];
+                if k == 0 {
+                    continue;
+                }
+                let is_base = k == v.job.k_min;
+                if is_base && v.overdue {
+                    continue;
+                }
+                let m = v.job.marginal(k);
+                let candidate = (idx, m, is_base);
+                best = match best {
+                    None => Some(candidate),
+                    Some((_, bm, bbase)) => {
+                        if (is_base, m) < (bbase, bm) {
+                            Some(candidate)
+                        } else {
+                            best
+                        }
+                    }
+                };
+            }
+            match best {
+                Some((idx, _, is_base)) => {
+                    if is_base {
+                        total -= alloc[idx];
+                        alloc[idx] = 0;
+                    } else {
+                        alloc[idx] -= 1;
+                        total -= 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        while total > max_capacity {
+            let victim = views
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| alloc[*i] > 0)
+                .max_by_key(|(_, v)| v.job.deadline_slot());
+            match victim {
+                Some((idx, _)) => {
+                    total -= alloc[idx];
+                    alloc[idx] = 0;
+                }
+                None => break,
+            }
+        }
+        (provisioned, alloc)
+    }
+
+    #[test]
+    fn sanitize_matches_reference_on_random_decisions() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xC0FF_EE42);
+        // One scratch across every case, so stale id-map entries and heap
+        // reuse are exercised the way the engine exercises them.
+        let mut scratch = SanitizeScratch::default();
+        for case in 0..400 {
+            let n = 1 + rng.below(9);
+            let jobs: Vec<Job> = (0..n)
+                .map(|i| {
+                    let k_max = 1 + rng.below(5);
+                    let mut j = job(i, 0, 1.0 + rng.range(0.0, 5.0), rng.range(0.0, 6.0), k_max);
+                    j.profile = ScalingProfile::from_comm_ratio(rng.range(0.0, 0.3), k_max);
+                    j
+                })
+                .collect();
+            let views: Vec<JobView> = jobs
+                .iter()
+                .map(|j| JobView {
+                    job: j,
+                    remaining: rng.range(0.1, j.work().max(0.2)),
+                    prev_alloc: rng.below(j.k_max + 1),
+                    overdue: rng.chance(0.3),
+                })
+                .collect();
+            // Random decision, including duplicate, unknown, and huge ids.
+            let n_alloc = rng.below(2 * n + 3);
+            let alloc: Vec<(usize, usize)> = (0..n_alloc)
+                .map(|_| {
+                    let id = if rng.chance(0.1) { usize::MAX } else { rng.below(n + 3) };
+                    (id, rng.below(8))
+                })
+                .collect();
+            let decision = Decision { capacity: rng.below(14), alloc };
+            let max_capacity = 1 + rng.below(10);
+            let provisioned = sanitize(max_capacity, &decision, &views, &mut scratch);
+            let (ref_provisioned, ref_alloc) = reference_sanitize(max_capacity, &decision, &views);
+            assert_eq!(provisioned, ref_provisioned, "case {case}: provisioned diverged");
+            assert_eq!(scratch.alloc, ref_alloc, "case {case}: allocation diverged");
+        }
     }
 
     #[test]

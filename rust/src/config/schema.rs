@@ -326,6 +326,12 @@ impl ExperimentConfig {
                 "history window must be >= evaluation horizon",
             ));
         }
+        if self.queues.len() > crate::sched::MAX_QUEUES {
+            return Err(field_err(
+                "queue",
+                "at most 8 queues are supported (engine queue features are inline arrays)",
+            ));
+        }
         let mut prev = 0.0;
         for q in &self.queues {
             if q.max_len_hours <= prev {

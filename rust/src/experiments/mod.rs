@@ -6,6 +6,7 @@
 
 pub mod figures;
 pub mod forecast_noise;
+pub mod perf;
 pub mod runner;
 pub mod spatial;
 pub mod sweep;

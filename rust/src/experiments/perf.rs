@@ -1,0 +1,261 @@
+//! Machine-readable hot-path benchmarks (§Perf).
+//!
+//! The three paths that gate end-to-end throughput — the offline oracle
+//! (Alg. 1) over a full trace, the per-slot state match, and cluster-engine
+//! stepping — measured on one prepared experiment and emitted as the
+//! `BENCH_hotpaths.json` document that tracks the repo's perf trajectory.
+//! Shared by the `carbonflex bench` CLI subcommand and the
+//! `benches/perf_hotpaths` binary; CI runs the smoke config and uploads the
+//! JSON as an artifact, failing if any cell regresses more than the allowed
+//! ratio against a committed baseline.
+
+use std::time::Duration;
+
+use crate::config::ExperimentConfig;
+use crate::experiments::runner::PreparedExperiment;
+use crate::learning::kb::{KnowledgeBase, Matcher};
+use crate::learning::state::StateVector;
+use crate::sched::oracle::compute_schedule;
+use crate::sched::PolicyKind;
+use crate::util::bench::{bench_for, BenchResult};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One measured hot-path cell.
+pub struct BenchCell {
+    pub name: String,
+    pub result: BenchResult,
+    /// Engine cells also report stepping throughput.
+    pub slots_per_second: Option<f64>,
+}
+
+/// All hot-path cells for one config.
+pub struct HotpathReport {
+    pub cells: Vec<BenchCell>,
+    pub config: ExperimentConfig,
+}
+
+/// Engine cells measured per policy (agnostic = pure stepping floor,
+/// CarbonFlex = stepping + state match, Oracle = stepping + Alg. 1 plan).
+pub const ENGINE_POLICIES: [PolicyKind; 3] =
+    [PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex, PolicyKind::Oracle];
+
+/// Slug used in cell names (`engine/carbon-agnostic`, ...).
+fn policy_slug(kind: PolicyKind) -> String {
+    kind.as_str()
+        .to_ascii_lowercase()
+        .replace([' ', '(', ')'], "-")
+        .replace("--", "-")
+        .trim_matches('-')
+        .to_string()
+}
+
+/// Measure the three hot paths on `cfg`, spending roughly `budget` wall
+/// time per cell.
+pub fn bench_hotpaths(cfg: &ExperimentConfig, budget: Duration) -> HotpathReport {
+    let prep = PreparedExperiment::prepare(cfg);
+    let mut cells: Vec<BenchCell> = Vec::new();
+
+    // L3 oracle (Alg. 1) over the evaluation trace — the learning-phase
+    // inner loop (paper §6.8: 2–10 minutes in the Python prototype).
+    let jobs = prep.eval_jobs.clone();
+    let trace = prep.eval_trace.clone();
+    let capacity = cfg.capacity;
+    let r = bench_for("oracle/week-trace", budget, || {
+        std::hint::black_box(compute_schedule(&jobs, &trace, capacity, 24.0, 8));
+    });
+    cells.push(BenchCell { name: r.name.clone(), result: r, slots_per_second: None });
+
+    // State match (k = 5) on the learned knowledge base (paper §6.8:
+    // 1–2 ms with scikit-learn).
+    let mut kb = KnowledgeBase::from_cases(prep.knowledge_base().cases().to_vec());
+    let mut rng = Rng::new(1);
+    let queries: Vec<StateVector> = (0..256)
+        .map(|_| {
+            StateVector::from_raw(
+                rng.range(10.0, 700.0),
+                rng.range(-80.0, 80.0),
+                rng.f64(),
+                &[rng.below(40), rng.below(40), rng.below(40)],
+                rng.f64(),
+            )
+        })
+        .collect();
+    let mut qi = 0usize;
+    let mut hits = Vec::new();
+    let r = bench_for("match/native-kdtree", budget.min(Duration::from_secs(2)), || {
+        qi = (qi + 1) % queries.len();
+        kb.top_k_into(&queries[qi], 5, &mut hits);
+        std::hint::black_box(hits.len());
+    });
+    cells.push(BenchCell { name: r.name.clone(), result: r, slots_per_second: None });
+
+    // Cluster-engine stepping throughput, end to end per policy.
+    for kind in ENGINE_POLICIES {
+        let slots = prep.run(kind).slots.len();
+        let name = format!("engine/{}", policy_slug(kind));
+        let r = bench_for(&name, budget, || {
+            std::hint::black_box(prep.run(kind));
+        });
+        let sps = slots as f64 / r.mean.as_secs_f64().max(1e-12);
+        cells.push(BenchCell { name, result: r, slots_per_second: Some(sps) });
+    }
+
+    HotpathReport { cells, config: cfg.clone() }
+}
+
+impl HotpathReport {
+    /// The `BENCH_hotpaths.json` document.
+    pub fn to_json(&self, wall_seconds: f64) -> Json {
+        let cells = Json::Obj(
+            self.cells
+                .iter()
+                .map(|c| {
+                    let mut obj = match c.result.to_json() {
+                        Json::Obj(m) => m,
+                        _ => unreachable!("BenchResult::to_json returns an object"),
+                    };
+                    if let Some(sps) = c.slots_per_second {
+                        obj.insert("slots_per_second".to_string(), Json::Num(sps));
+                    }
+                    (c.name.clone(), Json::Obj(obj))
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("region", Json::Str(self.config.region.clone())),
+            ("capacity", Json::Num(self.config.capacity as f64)),
+            ("horizon_hours", Json::Num(self.config.horizon_hours as f64)),
+            ("history_hours", Json::Num(self.config.history_hours as f64)),
+            ("seed", Json::Num(self.config.seed as f64)),
+            ("wall_seconds", Json::Num(wall_seconds)),
+            ("cells", cells),
+        ])
+    }
+}
+
+/// Config fields that identify what a bench document measured. A baseline
+/// recorded on a different config (e.g. the full default config vs CI's
+/// smoke config) makes the ratio guard silently inert or falsely red, so a
+/// mismatch on any of these is itself a violation.
+const CONFIG_KEYS: [&str; 5] = ["region", "capacity", "horizon_hours", "history_hours", "seed"];
+
+/// Compare a current bench document against a committed baseline: any cell
+/// whose `mean_seconds` exceeds `max_ratio ×` the baseline's is a violation
+/// (a coarse guard against order-of-magnitude regressions, deliberately not
+/// a flaky micro-gate). The two documents must describe the same config
+/// ([`CONFIG_KEYS`]). Cells present on only one side are reported but
+/// tolerated when new (baseline without them predates the cell).
+pub fn regression_check(current: &Json, baseline: &Json, max_ratio: f64) -> Vec<String> {
+    let mut violations = Vec::new();
+    let fmt = |j: Option<&Json>| j.map_or("<absent>".to_string(), |v| v.to_string());
+    for key in CONFIG_KEYS {
+        let (b, c) = (baseline.get(key), current.get(key));
+        if b != c {
+            violations.push(format!(
+                "config mismatch on '{key}': baseline {} vs current {} — record the baseline \
+                 with the same config the check runs on",
+                fmt(b),
+                fmt(c)
+            ));
+        }
+    }
+    if !violations.is_empty() {
+        return violations;
+    }
+    let (Some(cur), Some(base)) = (
+        current.get("cells").and_then(Json::as_obj),
+        baseline.get("cells").and_then(Json::as_obj),
+    ) else {
+        return vec!["baseline or current document is missing the 'cells' object".to_string()];
+    };
+    for (name, bcell) in base {
+        let Some(ccell) = cur.get(name) else {
+            violations.push(format!("cell '{name}' present in baseline but not measured"));
+            continue;
+        };
+        let (Some(b), Some(c)) = (
+            bcell.get("mean_seconds").and_then(Json::as_f64),
+            ccell.get("mean_seconds").and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        if b > 0.0 && c > b * max_ratio {
+            violations.push(format!(
+                "{name}: {c:.6}s vs baseline {b:.6}s (> {max_ratio:.1}x allowed)"
+            ));
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn doc(cells: &[(&str, f64)]) -> Json {
+        let body: Vec<String> = cells
+            .iter()
+            .map(|(n, m)| format!("\"{n}\": {{\"mean_seconds\": {m}, \"iters\": 3}}"))
+            .collect();
+        parse(&format!("{{\"schema\": 1, \"cells\": {{{}}}}}", body.join(","))).unwrap()
+    }
+
+    #[test]
+    fn regression_check_flags_slowdowns_only() {
+        let base = doc(&[("oracle/week-trace", 0.010), ("match/native-kdtree", 0.000_02)]);
+        let same = doc(&[("oracle/week-trace", 0.011), ("match/native-kdtree", 0.000_02)]);
+        assert!(regression_check(&same, &base, 3.0).is_empty());
+        let slow = doc(&[("oracle/week-trace", 0.050), ("match/native-kdtree", 0.000_02)]);
+        let v = regression_check(&slow, &base, 3.0);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("oracle/week-trace"));
+    }
+
+    #[test]
+    fn regression_check_rejects_config_mismatch() {
+        // Identical cells, different measured config: the guard must refuse
+        // to compare rather than silently gate nothing.
+        let base = parse(
+            "{\"schema\": 1, \"region\": \"ontario\", \"capacity\": 150, \
+             \"cells\": {\"oracle/week-trace\": {\"mean_seconds\": 0.01}}}",
+        )
+        .unwrap();
+        let cur = parse(
+            "{\"schema\": 1, \"region\": \"ontario\", \"capacity\": 12, \
+             \"cells\": {\"oracle/week-trace\": {\"mean_seconds\": 0.01}}}",
+        )
+        .unwrap();
+        let v = regression_check(&cur, &base, 3.0);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("config mismatch on 'capacity'"), "{}", v[0]);
+        // Same config (even if fields are absent on both sides) → clean.
+        assert!(regression_check(&base, &base, 3.0).is_empty());
+    }
+
+    #[test]
+    fn regression_check_reports_missing_cells() {
+        let base = doc(&[("oracle/week-trace", 0.010)]);
+        let cur = doc(&[("match/native-kdtree", 0.000_02)]);
+        let v = regression_check(&cur, &base, 3.0);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("not measured"));
+    }
+
+    #[test]
+    fn regression_check_rejects_malformed_docs() {
+        let ok = doc(&[("a", 1.0)]);
+        let bad = parse("{\"schema\": 1}").unwrap();
+        assert_eq!(regression_check(&ok, &bad, 3.0).len(), 1);
+    }
+
+    #[test]
+    fn policy_slugs_are_filesystem_safe() {
+        for kind in ENGINE_POLICIES {
+            let slug = policy_slug(kind);
+            assert!(slug.chars().all(|c| c.is_ascii_alphanumeric() || c == '-'), "{slug}");
+        }
+    }
+}

@@ -45,6 +45,13 @@ pub struct Neighbor {
 pub trait Matcher {
     /// Top-k nearest recorded cases, ascending by distance.
     fn top_k(&self, query: &StateVector, k: usize) -> Vec<Neighbor>;
+    /// Buffer-reusing variant for per-slot matching (§Perf): results
+    /// replace the contents of `out`. Takes `&mut self` so backends can
+    /// reuse internal scratch; the default delegates to [`top_k`](Matcher::top_k).
+    fn top_k_into(&mut self, query: &StateVector, k: usize, out: &mut Vec<Neighbor>) {
+        out.clear();
+        out.extend(self.top_k(query, k));
+    }
     /// Number of cases available.
     fn len(&self) -> usize;
     fn is_empty(&self) -> bool {
@@ -112,6 +119,8 @@ pub struct KnowledgeBase {
     cases: Vec<Case>,
     scaler: Scaler,
     tree: Option<KdTree>,
+    /// Reusable KD-tree hit buffer for [`Matcher::top_k_into`].
+    hits: Vec<crate::learning::kdtree::Hit>,
 }
 
 impl std::fmt::Debug for KnowledgeBase {
@@ -122,11 +131,11 @@ impl std::fmt::Debug for KnowledgeBase {
 
 impl KnowledgeBase {
     pub fn new() -> Self {
-        KnowledgeBase { cases: vec![], scaler: Scaler::identity(), tree: None }
+        KnowledgeBase { cases: vec![], scaler: Scaler::identity(), tree: None, hits: vec![] }
     }
 
     pub fn from_cases(cases: Vec<Case>) -> Self {
-        let mut kb = KnowledgeBase { cases, scaler: Scaler::identity(), tree: None };
+        let mut kb = KnowledgeBase { cases, scaler: Scaler::identity(), tree: None, hits: vec![] };
         kb.rebuild();
         kb
     }
@@ -236,6 +245,30 @@ impl Matcher for KnowledgeBase {
             .collect()
     }
 
+    fn top_k_into(&mut self, query: &StateVector, k: usize, out: &mut Vec<Neighbor>) {
+        let Some(tree) = &self.tree else {
+            // Unindexed fallback (small KBs, tests): delegate to the
+            // allocating brute-force path.
+            out.clear();
+            out.extend(self.top_k(query, k));
+            return;
+        };
+        // §Perf: the hot path of the CarbonFlex decide loop — one KD-tree
+        // query into the reusable hit buffer, mapped straight into `out`.
+        let q = self.scaler.apply(query);
+        tree.knn_into(&q, k, &mut self.hits);
+        out.clear();
+        out.reserve(self.hits.len());
+        for h in &self.hits {
+            out.push(Neighbor {
+                dist: h.dist,
+                capacity: self.cases[h.index].capacity,
+                rho: self.cases[h.index].rho,
+                pressure: self.cases[h.index].state.0[7],
+            });
+        }
+    }
+
     fn len(&self) -> usize {
         self.cases.len()
     }
@@ -283,6 +316,30 @@ mod tests {
         brute.sort_by(|a, b| a.partial_cmp(b).unwrap());
         for (a, b) in indexed.iter().zip(&brute) {
             assert!((a.dist - b).abs() < 1e-9, "{} vs {}", a.dist, b);
+        }
+    }
+
+    #[test]
+    fn top_k_into_matches_top_k() {
+        let mut kb = KnowledgeBase::new();
+        for i in 0..60 {
+            kb.push(case(i, (37 * i) as f64 % 700.0, i, 0.4 + (i % 7) as f64 / 10.0));
+        }
+        // Unindexed fallback path first, then the KD-tree path.
+        let q = StateVector::from_raw(250.0, 10.0, 0.4, &[3, 1, 0], 0.5);
+        let mut buf = Vec::new();
+        for rebuilt in [false, true] {
+            if rebuilt {
+                kb.rebuild();
+            }
+            let direct = kb.top_k(&q, 5);
+            kb.top_k_into(&q, 5, &mut buf);
+            assert_eq!(buf.len(), direct.len(), "rebuilt={rebuilt}");
+            for (a, b) in buf.iter().zip(&direct) {
+                assert_eq!(a.dist.to_bits(), b.dist.to_bits(), "rebuilt={rebuilt}");
+                assert_eq!(a.capacity, b.capacity);
+                assert_eq!(a.rho.to_bits(), b.rho.to_bits());
+            }
         }
     }
 

@@ -68,41 +68,76 @@ impl KdTree {
 
     /// k nearest neighbours of `query`, sorted by ascending distance.
     pub fn knn(&self, query: &StateVector, k: usize) -> Vec<Hit> {
-        if k == 0 || self.points.is_empty() {
-            return vec![];
-        }
-        // Small bounded max-heap as a sorted vec (k ≤ ~16 in practice).
-        let mut best: Vec<Hit> = Vec::with_capacity(k + 1);
-        self.search(self.root.as_deref(), query, k, &mut best);
-        for h in best.iter_mut() {
-            h.dist = h.dist.sqrt();
-        }
+        let mut best = Vec::new();
+        self.knn_into(query, k, &mut best);
         best
     }
 
-    fn search(&self, node: Option<&Node>, query: &StateVector, k: usize, best: &mut Vec<Hit>) {
-        let Some(n) = node else { return };
-        let d2 = self.points[n.point].dist2(query);
-        // Insert into the sorted result list (dist field holds d² here).
-        let pos = best.partition_point(|h| h.dist <= d2);
-        if pos < k {
-            best.insert(pos, Hit { index: n.point, dist: d2 });
-            if best.len() > k {
-                best.pop();
+    /// Buffer-reusing k-NN: results replace the contents of `out` (sorted
+    /// ascending by distance). §Perf: the traversal is an explicit-stack
+    /// iteration — no per-node call overhead, no heap allocation beyond
+    /// `out` itself — and visits nodes in exactly the recursive order, so
+    /// results (including distance ties) are bitwise identical to the
+    /// historical recursive search (`iterative_search_matches_recursive`).
+    pub fn knn_into(&self, query: &StateVector, k: usize, out: &mut Vec<Hit>) {
+        out.clear();
+        if k == 0 || self.points.is_empty() {
+            return;
+        }
+        out.reserve(k + 1);
+        // Deferred far subtrees: (node, split-plane distance²). The median
+        // build halves subtree sizes per level, so depth ≤ log2(n) + 1 and
+        // a fixed 64-slot stack covers any in-memory tree.
+        const MAX_DEPTH: usize = 64;
+        let mut stack: [Option<(&Node, f64)>; MAX_DEPTH] = [None; MAX_DEPTH];
+        let mut sp = 0usize;
+        let mut cur = self.root.as_deref();
+        loop {
+            // Descend the near side, recording each node and deferring its
+            // far child (recursion's pre-order visit + post-near far check).
+            while let Some(n) = cur {
+                let d2 = self.points[n.point].dist2(query);
+                // Insert into the sorted result list (dist holds d² here).
+                let pos = out.partition_point(|h| h.dist <= d2);
+                if pos < k {
+                    out.insert(pos, Hit { index: n.point, dist: d2 });
+                    if out.len() > k {
+                        out.pop();
+                    }
+                }
+                let diff = query.0[n.axis] - self.points[n.point].0[n.axis];
+                let (near, far) = if diff <= 0.0 {
+                    (n.left.as_deref(), n.right.as_deref())
+                } else {
+                    (n.right.as_deref(), n.left.as_deref())
+                };
+                if let Some(f) = far {
+                    debug_assert!(sp < MAX_DEPTH, "kd-tree deeper than {MAX_DEPTH}");
+                    stack[sp] = Some((f, diff * diff));
+                    sp += 1;
+                }
+                cur = near;
+            }
+            // Pop the most recent deferred far subtree; prune unless the
+            // splitting plane is closer than the current k-th best. The
+            // check runs exactly when the recursion would have run it —
+            // after the sibling near subtree finished.
+            cur = None;
+            while sp > 0 {
+                sp -= 1;
+                let (node, plane_d2) = stack[sp].take().expect("pushed entry");
+                let worst = out.last().map(|h| h.dist).unwrap_or(f64::INFINITY);
+                if out.len() < k || plane_d2 < worst {
+                    cur = Some(node);
+                    break;
+                }
+            }
+            if cur.is_none() {
+                break;
             }
         }
-        let diff = query.0[n.axis] - self.points[n.point].0[n.axis];
-        let (near, far) = if diff <= 0.0 {
-            (n.left.as_deref(), n.right.as_deref())
-        } else {
-            (n.right.as_deref(), n.left.as_deref())
-        };
-        self.search(near, query, k, best);
-        // Prune the far side unless the splitting plane is closer than the
-        // current k-th best.
-        let worst = best.last().map(|h| h.dist).unwrap_or(f64::INFINITY);
-        if best.len() < k || diff * diff < worst {
-            self.search(far, query, k, best);
+        for h in out.iter_mut() {
+            h.dist = h.dist.sqrt();
         }
     }
 }
@@ -172,6 +207,93 @@ mod tests {
         let tree = KdTree::build(vec![]);
         assert!(tree.knn(&StateVector([0.0; STATE_DIM]), 5).is_empty());
         assert!(tree.is_empty());
+    }
+
+    /// The pre-optimization recursive search, kept as the traversal-order
+    /// reference: the explicit-stack iteration must match it bitwise,
+    /// including tie resolution.
+    fn recursive_search(
+        tree: &KdTree,
+        node: Option<&Node>,
+        query: &StateVector,
+        k: usize,
+        best: &mut Vec<Hit>,
+    ) {
+        let Some(n) = node else { return };
+        let d2 = tree.points[n.point].dist2(query);
+        let pos = best.partition_point(|h| h.dist <= d2);
+        if pos < k {
+            best.insert(pos, Hit { index: n.point, dist: d2 });
+            if best.len() > k {
+                best.pop();
+            }
+        }
+        let diff = query.0[n.axis] - tree.points[n.point].0[n.axis];
+        let (near, far) = if diff <= 0.0 {
+            (n.left.as_deref(), n.right.as_deref())
+        } else {
+            (n.right.as_deref(), n.left.as_deref())
+        };
+        recursive_search(tree, near, query, k, best);
+        let worst = best.last().map(|h| h.dist).unwrap_or(f64::INFINITY);
+        if best.len() < k || diff * diff < worst {
+            recursive_search(tree, far, query, k, best);
+        }
+    }
+
+    fn recursive_knn(tree: &KdTree, query: &StateVector, k: usize) -> Vec<Hit> {
+        if k == 0 || tree.points.is_empty() {
+            return vec![];
+        }
+        let mut best: Vec<Hit> = Vec::with_capacity(k + 1);
+        recursive_search(tree, tree.root.as_deref(), query, k, &mut best);
+        for h in best.iter_mut() {
+            h.dist = h.dist.sqrt();
+        }
+        best
+    }
+
+    #[test]
+    fn iterative_search_matches_recursive() {
+        let mut rng = Rng::new(0x5EED);
+        for n in [1usize, 2, 3, 17, 200, 1000] {
+            let points: Vec<StateVector> = (0..n).map(|_| random_state(&mut rng)).collect();
+            let tree = KdTree::build(points);
+            for _ in 0..25 {
+                let q = random_state(&mut rng);
+                for k in [1usize, 5, 16] {
+                    let got = tree.knn(&q, k);
+                    let want = recursive_knn(&tree, &q, k);
+                    assert_eq!(got.len(), want.len(), "n={n} k={k}");
+                    for (g, w) in got.iter().zip(&want) {
+                        assert_eq!(g.index, w.index, "n={n} k={k}");
+                        assert_eq!(g.dist.to_bits(), w.dist.to_bits(), "n={n} k={k}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn knn_into_reuses_buffer_and_clears_stale_results() {
+        let mut rng = Rng::new(21);
+        let points: Vec<StateVector> = (0..300).map(|_| random_state(&mut rng)).collect();
+        let tree = KdTree::build(points);
+        let mut buf = Vec::new();
+        let mut last_cap = 0usize;
+        for i in 0..50 {
+            let q = random_state(&mut rng);
+            tree.knn_into(&q, 5, &mut buf);
+            assert_eq!(buf.len(), 5);
+            assert_eq!(buf, tree.knn(&q, 5), "iteration {i}");
+            if i > 0 {
+                assert_eq!(buf.capacity(), last_cap, "buffer reallocated at iteration {i}");
+            }
+            last_cap = buf.capacity();
+        }
+        // k = 0 and empty trees clear the buffer instead of keeping stale hits.
+        tree.knn_into(&random_state(&mut rng), 0, &mut buf);
+        assert!(buf.is_empty());
     }
 
     #[test]

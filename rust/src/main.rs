@@ -12,6 +12,7 @@
 
 use carbonflex::carbon::synth::{self, Region};
 use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::perf;
 use carbonflex::experiments::runner;
 use carbonflex::experiments::sweep::{self, SweepRunner, SweepSpec};
 use carbonflex::sched::PolicyKind;
@@ -26,6 +27,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("compare") => cmd_compare(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("bench") => cmd_bench(&args),
         Some("learn") => cmd_learn(&args),
         Some("gen-traces") => cmd_gen_traces(&args),
         Some("catalog") => cmd_catalog(),
@@ -57,6 +59,9 @@ fn print_usage() {
          \x20             [--capacities 100,150] [--horizons 168] [--seeds 1,2]\n\
          \x20             [--history <h>] [--offsets <n>] [--threads N] [--json] [--check]\n\
          \x20             parallel cartesian grid; rows in grid order\n\
+         \x20 bench       [--config <file>] [--json] [--out BENCH_hotpaths.json]\n\
+         \x20             [--budget-ms 2000] [--baseline <file>] [--max-regression 3.0]\n\
+         \x20             hot-path timings → JSON; non-zero exit on baseline regression\n\
          \x20 learn       --config <file> [--out kb.csv]        learning phase → knowledge base\n\
          \x20 gen-traces  [--region south-australia] [--hours 8760] [--out trace.csv]\n\
          \x20 catalog                                           Table 3 workload catalog\n\
@@ -224,6 +229,74 @@ fn cmd_sweep(args: &Args) -> i32 {
             return fail(&format!("{bad} cell(s) failed the sanity check"));
         }
         println!("check passed: all {} cells drained with positive carbon", rows.len());
+    }
+    0
+}
+
+/// Hot-path benchmarks in machine-readable form: measure, write
+/// `BENCH_hotpaths.json`, and (when a committed baseline exists) fail on
+/// coarse regressions. See `benches/perf_hotpaths.rs` for the long-form
+/// human bench including the PJRT backends.
+fn cmd_bench(args: &Args) -> i32 {
+    let t0 = std::time::Instant::now();
+    let cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => return fail(&e),
+    };
+    let budget_ms = match args.num_or::<u64>("budget-ms", 2000) {
+        Ok(b) => b.max(1),
+        Err(e) => return fail(&e),
+    };
+    let report = perf::bench_hotpaths(&cfg, std::time::Duration::from_millis(budget_ms));
+    let doc = report.to_json(t0.elapsed().as_secs_f64());
+
+    if args.flag("json") {
+        println!("{doc}");
+    } else {
+        for cell in &report.cells {
+            match cell.slots_per_second {
+                Some(sps) => println!("{}  ({sps:.0} slots/s)", cell.result),
+                None => println!("{}", cell.result),
+            }
+        }
+    }
+    let out = args.get_or("out", "BENCH_hotpaths.json");
+    if let Err(e) = std::fs::write(out, format!("{doc}\n")) {
+        return fail(&format!("writing {out}: {e}"));
+    }
+    eprintln!("bench timings written to {out}");
+
+    // Coarse regression guard against the committed baseline, if present.
+    let baseline_path = args.get_or("baseline", "benches/baseline/BENCH_hotpaths.json");
+    let max_ratio = match args.num_or::<f64>("max-regression", 3.0) {
+        Ok(r) => r,
+        Err(e) => return fail(&e),
+    };
+    match std::fs::read_to_string(baseline_path) {
+        Err(_) => {
+            eprintln!(
+                "no committed baseline at {baseline_path}; skipping regression check \
+                 (copy {out} there to start gating)"
+            );
+        }
+        Ok(src) => match carbonflex::util::json::parse(&src) {
+            Err(e) => return fail(&format!("parsing baseline {baseline_path}: {e}")),
+            Ok(baseline) => {
+                let violations = perf::regression_check(&doc, &baseline, max_ratio);
+                if !violations.is_empty() {
+                    for v in &violations {
+                        eprintln!("perf regression: {v}");
+                    }
+                    return fail(&format!(
+                        "{} cell(s) regressed more than {max_ratio:.1}x vs {baseline_path}",
+                        violations.len()
+                    ));
+                }
+                eprintln!(
+                    "regression check passed: all cells within {max_ratio:.1}x of {baseline_path}"
+                );
+            }
+        },
     }
     0
 }

@@ -13,8 +13,9 @@ impl Policy for CarbonAgnostic {
         "Carbon-Agnostic"
     }
 
-    fn decide(&mut self, ctx: &SlotCtx) -> Decision {
-        let mut alloc = Vec::with_capacity(ctx.jobs.len());
+    fn decide_into(&mut self, ctx: &SlotCtx, out: &mut Decision) {
+        out.capacity = ctx.max_capacity;
+        out.alloc.clear();
         let mut used = 0usize;
         // Jobs arrive sorted by arrival time; FCFS = take them in order.
         for v in ctx.jobs {
@@ -23,9 +24,8 @@ impl Policy for CarbonAgnostic {
                 continue; // queue (FCFS head-of-line within capacity)
             }
             used += k;
-            alloc.push((v.job.id, k));
+            out.alloc.push((v.job.id, k));
         }
-        Decision { capacity: ctx.max_capacity, alloc }
     }
 }
 

@@ -23,6 +23,67 @@ use crate::learning::kb::{Matcher, Neighbor};
 use crate::learning::state::StateVector;
 use crate::sched::{Decision, Policy, SlotCtx};
 
+/// Aggregator over the matched capacities (Alg. 2 line "mimic"). Selectable
+/// for the ablation bench via the `CARBONFLEX_AGG` environment variable,
+/// which is resolved **once at policy construction** (§Perf: the per-slot
+/// `std::env::var` lookup used to sit on the decide hot path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CapacityAgg {
+    /// Inverse-distance-weighted mean (the default).
+    WeightedMean,
+    Min,
+    Max,
+    Median,
+}
+
+impl CapacityAgg {
+    /// Resolve from a `CARBONFLEX_AGG` value (`None`/unknown → default).
+    pub fn from_key(key: Option<&str>) -> CapacityAgg {
+        match key {
+            Some("min") => CapacityAgg::Min,
+            Some("max") => CapacityAgg::Max,
+            Some("median") => CapacityAgg::Median,
+            _ => CapacityAgg::WeightedMean,
+        }
+    }
+
+    /// Read `CARBONFLEX_AGG` (done once, at params construction).
+    pub fn from_env() -> CapacityAgg {
+        Self::from_key(std::env::var("CARBONFLEX_AGG").ok().as_deref())
+    }
+}
+
+/// Aggregator over the matched thresholds ρ, resolved from `CARBONFLEX_RHO`
+/// once at policy construction (see [`CapacityAgg`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RhoAgg {
+    /// The most permissive matched threshold (the default): the oracle's
+    /// recorded ρ is the marginal of the LAST server it granted; taking the
+    /// neighbourhood minimum lets leftover clean capacity be used for
+    /// scaling instead of idling (fewer forced dirty runs, see the fig6
+    /// ablation bench).
+    Min,
+    /// Robust to the RHO_IDLE sentinel mixing with real marginals.
+    Median,
+    Max,
+}
+
+impl RhoAgg {
+    /// Resolve from a `CARBONFLEX_RHO` value (`None`/unknown → default).
+    pub fn from_key(key: Option<&str>) -> RhoAgg {
+        match key {
+            Some("median") => RhoAgg::Median,
+            Some("max") => RhoAgg::Max,
+            _ => RhoAgg::Min,
+        }
+    }
+
+    /// Read `CARBONFLEX_RHO` (done once, at params construction).
+    pub fn from_env() -> RhoAgg {
+        Self::from_key(std::env::var("CARBONFLEX_RHO").ok().as_deref())
+    }
+}
+
 /// Tunables for Algorithm 2.
 #[derive(Debug, Clone, Copy)]
 pub struct CarbonFlexParams {
@@ -39,6 +100,10 @@ pub struct CarbonFlexParams {
     /// low-capacity decision can push a cohort over its deadline cliff and
     /// force dirty-slot runs.
     pub urgency_window: f64,
+    /// Capacity aggregation over the matches (env-resolved at construction).
+    pub capacity_agg: CapacityAgg,
+    /// Threshold aggregation over the matches (env-resolved at construction).
+    pub rho_agg: RhoAgg,
 }
 
 impl Default for CarbonFlexParams {
@@ -48,20 +113,41 @@ impl Default for CarbonFlexParams {
             violation_tolerance: 0.2,
             distance_bound: 1.5,
             urgency_window: 2.0,
+            capacity_agg: CapacityAgg::from_env(),
+            rho_agg: RhoAgg::from_env(),
         }
     }
 }
 
 /// The CarbonFlex online policy, generic over the matcher backend (native
 /// KD-tree knowledge base, or the PJRT-executed Pallas kernel).
+///
+/// §Perf: the per-slot working sets (matched neighbours, the Alg. 3
+/// candidate list, the granted-server table, the ρ sample) live in reusable
+/// buffers, so a steady-state `decide_into` call allocates nothing.
 pub struct CarbonFlex<M: Matcher> {
     matcher: M,
     params: CarbonFlexParams,
+    /// Matched neighbours for the current slot.
+    neighbors: Vec<Neighbor>,
+    /// Alg. 3 candidate entries: (marginal, slack, view index, k).
+    entries: Vec<(f64, f64, usize, usize)>,
+    /// Per-view granted servers.
+    granted: Vec<usize>,
+    /// Matched thresholds, sorted for aggregation.
+    rhos: Vec<f64>,
 }
 
 impl<M: Matcher> CarbonFlex<M> {
     pub fn new(matcher: M, params: CarbonFlexParams) -> Self {
-        CarbonFlex { matcher, params }
+        CarbonFlex {
+            matcher,
+            params,
+            neighbors: Vec::new(),
+            entries: Vec::new(),
+            granted: Vec::new(),
+            rhos: Vec::new(),
+        }
     }
 
     /// Build the Table 2 state for the current slot.
@@ -86,8 +172,9 @@ impl<M: Matcher> CarbonFlex<M> {
             .sum()
     }
 
-    /// Algorithm 2: the provisioning decision m_t.
-    fn provision(&self, ctx: &SlotCtx, matches: &[Neighbor]) -> usize {
+    /// Algorithm 2: the provisioning decision m_t over `self.neighbors`.
+    fn provision(&self, ctx: &SlotCtx) -> usize {
+        let matches = &self.neighbors;
         let floor = self.urgent_floor(ctx).min(ctx.max_capacity);
         if matches.is_empty() {
             return ctx.max_capacity; // no knowledge → carbon-agnostic
@@ -111,17 +198,19 @@ impl<M: Matcher> CarbonFlex<M> {
                 .max(floor)
                 .min(ctx.max_capacity);
         }
-        // Nominal aggregation over the matched capacities, selectable for
-        // the ablation bench (default: inverse-distance-weighted mean).
-        let agg = match std::env::var("CARBONFLEX_AGG").as_deref() {
-            Ok("min") => matches.iter().map(|m| m.capacity).min().unwrap_or(0) as f64,
-            Ok("max") => matches.iter().map(|m| m.capacity).max().unwrap_or(0) as f64,
-            Ok("median") => {
+        // Nominal aggregation over the matched capacities (default:
+        // inverse-distance-weighted mean; variants for the ablation bench).
+        let agg = match self.params.capacity_agg {
+            CapacityAgg::Min => matches.iter().map(|m| m.capacity).min().unwrap_or(0) as f64,
+            CapacityAgg::Max => matches.iter().map(|m| m.capacity).max().unwrap_or(0) as f64,
+            CapacityAgg::Median => {
+                // Ablation-only path; the small sort buffer is off the
+                // default hot path.
                 let mut caps: Vec<usize> = matches.iter().map(|m| m.capacity).collect();
                 caps.sort_unstable();
                 caps[caps.len() / 2] as f64
             }
-            _ => {
+            CapacityAgg::WeightedMean => {
                 let mut num = 0.0;
                 let mut den = 0.0;
                 for m in matches {
@@ -135,33 +224,29 @@ impl<M: Matcher> CarbonFlex<M> {
         (agg.round() as usize).max(floor).min(ctx.max_capacity)
     }
 
-    /// Aggregate the matched thresholds (selectable for the ablation bench;
-    /// default: median, robust to the RHO_IDLE sentinel mixing with real
-    /// marginals).
-    fn threshold(matches: &[Neighbor]) -> f64 {
-        if matches.is_empty() {
+    /// Aggregate the matched thresholds per `params.rho_agg`.
+    fn threshold(&mut self) -> f64 {
+        if self.neighbors.is_empty() {
             return 0.0; // schedule anything
         }
-        let mut rhos: Vec<f64> = matches.iter().map(|m| m.rho).collect();
+        let rhos = &mut self.rhos;
+        rhos.clear();
+        rhos.extend(self.neighbors.iter().map(|m| m.rho));
         rhos.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        match std::env::var("CARBONFLEX_RHO").as_deref() {
-            Ok("median") => rhos[rhos.len() / 2],
-            Ok("max") => rhos[rhos.len() - 1],
-            // Default: min — the most permissive matched threshold. The
-            // oracle's recorded ρ is the marginal of the LAST server it
-            // granted; taking the neighbourhood minimum lets leftover clean
-            // capacity be used for scaling instead of idling (fewer forced
-            // dirty runs, see the fig6 ablation bench).
-            _ => rhos[0],
+        match self.params.rho_agg {
+            RhoAgg::Median => rhos[rhos.len() / 2],
+            RhoAgg::Max => rhos[rhos.len() - 1],
+            RhoAgg::Min => rhos[0],
         }
     }
 
     /// Algorithm 3: fill m_t with the highest-marginal server increments at
-    /// or above the threshold ρ.
-    fn schedule(ctx: &SlotCtx, m_t: usize, rho: f64) -> Vec<(usize, usize)> {
+    /// or above the threshold ρ, written into `out`.
+    fn schedule(&mut self, ctx: &SlotCtx, m_t: usize, rho: f64, out: &mut Decision) {
         // Candidate server increments (j, k) with p_j(k) ≥ ρ.
         // Sort key: marginal desc, remaining slack asc (EDF), id.
-        let mut entries: Vec<(f64, f64, usize, usize)> = Vec::new();
+        let entries = &mut self.entries;
+        entries.clear();
         for (i, v) in ctx.jobs.iter().enumerate() {
             for k in v.job.k_min..=v.job.k_max {
                 let p = v.job.marginal(k);
@@ -179,9 +264,11 @@ impl<M: Matcher> CarbonFlex<M> {
                 .then(a.2.cmp(&b.2))
                 .then(a.3.cmp(&b.3))
         });
-        let mut granted = vec![0usize; ctx.jobs.len()];
+        let granted = &mut self.granted;
+        granted.clear();
+        granted.resize(ctx.jobs.len(), 0);
         let mut used = 0usize;
-        for (_, _, i, k) in entries {
+        for &(_, _, i, k) in entries.iter() {
             if used >= m_t {
                 break;
             }
@@ -190,12 +277,13 @@ impl<M: Matcher> CarbonFlex<M> {
                 used += 1;
             }
         }
-        granted
-            .iter()
-            .enumerate()
-            .filter(|(_, &k)| k > 0)
-            .map(|(i, &k)| (ctx.jobs[i].job.id, k))
-            .collect()
+        out.capacity = m_t;
+        out.alloc.clear();
+        for (i, &k) in granted.iter().enumerate() {
+            if k > 0 {
+                out.alloc.push((ctx.jobs[i].job.id, k));
+            }
+        }
     }
 }
 
@@ -204,13 +292,13 @@ impl<M: Matcher> Policy for CarbonFlex<M> {
         "CarbonFlex"
     }
 
-    fn decide(&mut self, ctx: &SlotCtx) -> Decision {
+    fn decide_into(&mut self, ctx: &SlotCtx, out: &mut Decision) {
         let state = Self::state_of(ctx);
-        let matches = self.matcher.top_k(&state, self.params.knn_k);
-        let m_t = self.provision(ctx, &matches);
-        let rho = Self::threshold(&matches);
-        let alloc = Self::schedule(ctx, m_t, rho);
-        Decision { capacity: m_t, alloc }
+        let k = self.params.knn_k;
+        self.matcher.top_k_into(&state, k, &mut self.neighbors);
+        let m_t = self.provision(ctx);
+        let rho = self.threshold();
+        self.schedule(ctx, m_t, rho, out);
     }
 }
 
@@ -369,8 +457,10 @@ mod tests {
             .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false })
             .collect();
         let ctx = ctx_at(0, &views, &f, 0.0);
-        let alloc = CarbonFlex::<KnowledgeBase>::schedule(&ctx, 3, 0.0);
-        let ks: std::collections::HashMap<usize, usize> = alloc.into_iter().collect();
+        let mut cf = CarbonFlex::new(KnowledgeBase::new(), CarbonFlexParams::default());
+        let mut d = Decision::default();
+        cf.schedule(&ctx, 3, 0.0, &mut d);
+        let ks: std::collections::HashMap<usize, usize> = d.alloc.into_iter().collect();
         assert!(ks[&0] >= 1 && ks[&1] >= 1);
         assert_eq!(ks[&0] + ks[&1], 3);
     }
@@ -385,7 +475,48 @@ mod tests {
             .collect();
         let ctx = ctx_at(0, &views, &f, 0.0);
         // Threshold above 1 normally blocks everything; overdue must pass.
-        let alloc = CarbonFlex::<KnowledgeBase>::schedule(&ctx, 5, 1.01);
-        assert!(!alloc.is_empty());
+        let mut cf = CarbonFlex::new(KnowledgeBase::new(), CarbonFlexParams::default());
+        let mut d = Decision::default();
+        cf.schedule(&ctx, 5, 1.01, &mut d);
+        assert!(!d.alloc.is_empty());
+    }
+
+    #[test]
+    fn aggregators_resolve_from_keys() {
+        // Pure key resolution (no process-global env mutation in tests).
+        assert_eq!(CapacityAgg::from_key(None), CapacityAgg::WeightedMean);
+        assert_eq!(CapacityAgg::from_key(Some("wmean")), CapacityAgg::WeightedMean);
+        assert_eq!(CapacityAgg::from_key(Some("min")), CapacityAgg::Min);
+        assert_eq!(CapacityAgg::from_key(Some("max")), CapacityAgg::Max);
+        assert_eq!(CapacityAgg::from_key(Some("median")), CapacityAgg::Median);
+        assert_eq!(RhoAgg::from_key(None), RhoAgg::Min);
+        assert_eq!(RhoAgg::from_key(Some("median")), RhoAgg::Median);
+        assert_eq!(RhoAgg::from_key(Some("max")), RhoAgg::Max);
+        assert_eq!(RhoAgg::from_key(Some("nonsense")), RhoAgg::Min);
+    }
+
+    #[test]
+    fn decide_into_reuses_buffers_and_matches_decide() {
+        // The buffer-reusing entry point must return the same decision as
+        // the allocating convenience wrapper, slot after slot.
+        let mut hourly = vec![500.0; 24];
+        hourly[0] = 60.0;
+        let f = Forecaster::perfect(CarbonTrace::new("x", hourly));
+        let jobs: Vec<Job> = (0..3).map(|i| job(i, 0, 4.0, 24.0)).collect();
+        let views: Vec<JobView> = jobs
+            .iter()
+            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false })
+            .collect();
+        let mut a = CarbonFlex::new(kb_with(0, 8), CarbonFlexParams::default());
+        let mut b = CarbonFlex::new(kb_with(0, 8), CarbonFlexParams::default());
+        let mut out = Decision::default();
+        for t in [0usize, 5, 12, 0, 12] {
+            let ctx = ctx_at(t, &views, &f, 0.0);
+            out.capacity = usize::MAX; // stale garbage the impl must overwrite
+            a.decide_into(&ctx, &mut out);
+            let fresh = b.decide(&ctx);
+            assert_eq!(out.capacity, fresh.capacity, "t={t}");
+            assert_eq!(out.alloc, fresh.alloc, "t={t}");
+        }
     }
 }

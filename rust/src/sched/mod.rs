@@ -18,6 +18,13 @@ pub mod wait_awhile;
 use crate::carbon::forecast::Forecaster;
 use crate::workload::job::{Job, JobId};
 
+/// Upper bound on submission queues, so per-slot queue-length features live
+/// in fixed-size inline arrays instead of one heap `Vec` per slot (§Perf:
+/// the engine records one [`crate::cluster::sim::SlotRecord`] per slot; the
+/// paper's setup uses 3 length-based queues). [`crate::cluster::sim::Simulator`]
+/// asserts `num_queues ≤ MAX_QUEUES`.
+pub const MAX_QUEUES: usize = 8;
+
 /// Per-job view the policy sees at slot `t`.
 #[derive(Debug, Clone)]
 pub struct JobView<'a> {
@@ -73,10 +80,12 @@ pub struct SlotCtx<'a> {
 
 impl SlotCtx<'_> {
     /// Number of active jobs per queue — the Table 2 "queue length" feature.
-    pub fn queue_lengths(&self) -> Vec<usize> {
-        let mut lens = vec![0usize; self.num_queues.max(1)];
+    /// Entries past `num_queues` are zero (inline array, no heap).
+    pub fn queue_lengths(&self) -> [usize; MAX_QUEUES] {
+        let mut lens = [0usize; MAX_QUEUES];
+        let top = self.num_queues.max(1).min(MAX_QUEUES) - 1;
         for jv in self.jobs {
-            let q = jv.job.queue.min(lens.len() - 1);
+            let q = jv.job.queue.min(top);
             lens[q] += 1;
         }
         lens
@@ -92,12 +101,30 @@ impl SlotCtx<'_> {
 }
 
 /// A provisioning + scheduling policy.
+///
+/// Implementations must provide at least one of [`decide`](Policy::decide)
+/// and [`decide_into`](Policy::decide_into) (each has a default in terms of
+/// the other; implementing neither recurses). Simple policies implement
+/// `decide`; hot-path policies implement `decide_into` and reuse the output
+/// buffer so steady-state slots allocate nothing.
 pub trait Policy {
     /// Human-readable policy name used in reports.
     fn name(&self) -> &'static str;
 
     /// Decide capacity and allocations for slot `ctx.t`.
-    fn decide(&mut self, ctx: &SlotCtx) -> Decision;
+    fn decide(&mut self, ctx: &SlotCtx) -> Decision {
+        let mut out = Decision::default();
+        self.decide_into(ctx, &mut out);
+        out
+    }
+
+    /// Buffer-reusing variant of [`decide`](Policy::decide): the engine
+    /// hands back the same `Decision` every slot. `out` still holds the
+    /// previous slot's entries — implementations must overwrite `capacity`
+    /// and clear/refill `alloc` (keeping its capacity).
+    fn decide_into(&mut self, ctx: &SlotCtx, out: &mut Decision) {
+        *out = self.decide(ctx);
+    }
 
     /// Hook: called once when a job completes (policies with internal
     /// schedules can garbage-collect).

@@ -17,7 +17,7 @@ use crate::sched::{Decision, Policy, SlotCtx};
 use crate::workload::job::Job;
 
 /// One planned slot allocation for a job.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct JobPlan {
     /// (slot, servers) pairs, sorted by slot.
     pub slots: Vec<(usize, usize)>,
@@ -36,7 +36,7 @@ impl JobPlan {
 }
 
 /// A complete offline schedule.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct OracleSchedule {
     pub plans: Vec<JobPlan>,
     /// Slots that needed deadline extension to become feasible.
@@ -47,10 +47,83 @@ pub struct OracleSchedule {
     pub capacity_curve: Vec<usize>,
 }
 
+/// Candidate-entry packing (Alg. 1 lines 2–5).
+///
+/// §Perf: each entry is a single u128 sort key —
+///   [ !score_f32_bits : 32 | deadline : 24 | job : 32 | t : 24 | k : 16 ]
+/// so the million-entry sort (line 6) runs on primitive keys instead of
+/// a five-way comparator chain (≈3× faster end to end). Scores are
+/// positive finite f32s, whose bit patterns are order-preserving;
+/// complementing them turns the descending score order into an
+/// ascending integer sort. The trailing fields encode the paper's
+/// tie-breaks (earliest deadline, then stable (j, t, k) order).
+#[inline]
+fn pack(score: f32, deadline: usize, job: usize, t: usize, k: usize) -> u128 {
+    let inv = !(score.to_bits()) as u128;
+    (inv << 96)
+        | ((deadline as u128 & 0xFF_FFFF) << 72)
+        | ((job as u128 & 0xFFFF_FFFF) << 40)
+        | ((t as u128 & 0xFF_FFFF) << 16)
+        | (k as u128 & 0xFFFF)
+}
+
+#[inline]
+fn entry_job(e: u128) -> usize {
+    ((e >> 40) & 0xFFFF_FFFF) as usize
+}
+
+/// Entries one job contributes for its current (possibly extended) window.
+fn job_entry_count(job: &Job, extra_slack: f64) -> usize {
+    (job.length_hours + job.slack_hours + extra_slack).ceil() as usize * job.k_max
+}
+
+/// Append job `j`'s candidate entries (every (t, k) in its window).
+fn push_job_entries(entries: &mut Vec<u128>, jobs: &[Job], ci: &CarbonTrace, j: usize, extra: f64) {
+    let job = &jobs[j];
+    assert_eq!(job.k_min, 1, "oracle assumes unit base allocations");
+    // The job must COMPLETE by the end of slot deadline−1 (finishing at
+    // `arrival + ceil(l+d)` hours after arrival), so the last usable
+    // slot is deadline−1.
+    let deadline = job.arrival + (job.length_hours + job.slack_hours + extra).ceil() as usize;
+    for t in job.arrival..deadline {
+        let c = ci.at(t).max(1e-9);
+        for k in 1..=job.k_max {
+            entries.push(pack((job.marginal(k) / c) as f32, deadline, j, t, k));
+        }
+    }
+}
+
+/// Merge two ascending-sorted entry lists into `out` (cleared first).
+fn merge_sorted(a: &[u128], b: &[u128], out: &mut Vec<u128>) {
+    out.clear();
+    out.reserve(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        if a[i] <= b[j] {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+}
+
 /// Compute Algorithm 1 over a full job trace and carbon trace.
 ///
 /// `extension_step` hours are added to unfinished jobs' windows per repair
 /// round (at most `max_rounds` rounds).
+///
+/// §Perf: the sorted candidate list is built and sorted once; each repair
+/// round drops only the extended jobs' entries, regenerates them for the
+/// widened windows, and merges the (much smaller) sorted batch back in —
+/// O(N + M log M) per round instead of re-sorting all N entries. Membership
+/// in the extended set is a dense bool mask, not a `Vec::contains` scan.
+/// Output is bitwise-identical to a full rebuild: entry keys are unique, so
+/// the merged list equals the re-sorted list
+/// (`incremental_repair_matches_full_rebuild`).
 pub fn compute_schedule(
     jobs: &[Job],
     ci: &CarbonTrace,
@@ -60,8 +133,24 @@ pub fn compute_schedule(
 ) -> OracleSchedule {
     let mut extra_slack = vec![0.0f64; jobs.len()];
     let mut extended: Vec<usize> = Vec::new();
+    let mut extended_mask = vec![false; jobs.len()];
+
+    // Lines 2–6: the full candidate list, pre-sized exactly, sorted once
+    // (a primitive ascending sort realizes score-desc + tie-breaks).
+    let total: usize =
+        jobs.iter().enumerate().map(|(j, job)| job_entry_count(job, extra_slack[j])).sum();
+    let mut entries: Vec<u128> = Vec::with_capacity(total);
+    for j in 0..jobs.len() {
+        push_job_entries(&mut entries, jobs, ci, j, extra_slack[j]);
+    }
+    entries.sort_unstable();
+
+    let mut fresh: Vec<u128> = Vec::new();
+    let mut merged: Vec<u128> = Vec::new();
+    let mut touched = vec![false; jobs.len()];
+
     for round in 0..max_rounds.max(1) {
-        let result = schedule_round(jobs, ci, max_capacity, &extra_slack);
+        let result = greedy_pass(jobs, &entries, max_capacity, &extra_slack);
         let unfinished: Vec<usize> = result
             .iter()
             .enumerate()
@@ -89,63 +178,45 @@ pub fn compute_schedule(
                 capacity_curve,
             };
         }
-        for j in unfinished {
+        // Repair: extend the unfinished jobs' windows and splice only their
+        // regenerated entries back into the sorted list.
+        for &j in &unfinished {
+            touched[j] = true;
             extra_slack[j] += extension_step;
-            if !extended.contains(&j) {
+            if !extended_mask[j] {
+                extended_mask[j] = true;
                 extended.push(j);
             }
+        }
+        entries.retain(|&e| !touched[entry_job(e)]);
+        fresh.clear();
+        let regen: usize =
+            unfinished.iter().map(|&j| job_entry_count(&jobs[j], extra_slack[j])).sum();
+        fresh.reserve(regen);
+        for &j in &unfinished {
+            push_job_entries(&mut fresh, jobs, ci, j, extra_slack[j]);
+        }
+        fresh.sort_unstable();
+        merge_sorted(&entries, &fresh, &mut merged);
+        std::mem::swap(&mut entries, &mut merged);
+        for &j in &unfinished {
+            touched[j] = false;
         }
     }
     unreachable!("loop always returns on the final round");
 }
 
-/// One greedy round of Algorithm 1. Returns per-job (plan, planned work).
-fn schedule_round(
+/// One greedy pass of Algorithm 1 (lines 7–12) over a pre-sorted candidate
+/// list. Returns per-job (plan, planned work).
+fn greedy_pass(
     jobs: &[Job],
-    ci: &CarbonTrace,
+    entries: &[u128],
     max_capacity: usize,
     extra_slack: &[f64],
 ) -> Vec<(JobPlan, f64)> {
-    // Lines 2–5: build the (j, t, k) candidate list with scores p_j(k)/CI_t.
-    //
-    // §Perf: each entry is a single u128 sort key —
-    //   [ !score_f32_bits : 32 | deadline : 24 | job : 32 | t : 24 | k : 16 ]
-    // so the million-entry sort (line 6) runs on primitive keys instead of
-    // a five-way comparator chain (≈3× faster end to end). Scores are
-    // positive finite f32s, whose bit patterns are order-preserving;
-    // complementing them turns the descending score order into an
-    // ascending integer sort. The trailing fields encode the paper's
-    // tie-breaks (earliest deadline, then stable (j, t, k) order).
-    #[inline]
-    fn pack(score: f32, deadline: usize, job: usize, t: usize, k: usize) -> u128 {
-        let inv = !(score.to_bits()) as u128;
-        (inv << 96)
-            | ((deadline as u128 & 0xFF_FFFF) << 72)
-            | ((job as u128 & 0xFFFF_FFFF) << 40)
-            | ((t as u128 & 0xFF_FFFF) << 16)
-            | (k as u128 & 0xFFFF)
-    }
-    let mut entries: Vec<u128> = Vec::new();
-    for (j, job) in jobs.iter().enumerate() {
-        assert_eq!(job.k_min, 1, "oracle assumes unit base allocations");
-        // The job must COMPLETE by the end of slot deadline−1 (finishing at
-        // `arrival + ceil(l+d)` hours after arrival), so the last usable
-        // slot is deadline−1.
-        let deadline =
-            job.arrival + (job.length_hours + job.slack_hours + extra_slack[j]).ceil() as usize;
-        for t in job.arrival..deadline {
-            let c = ci.at(t).max(1e-9);
-            for k in 1..=job.k_max {
-                entries.push(pack((job.marginal(k) / c) as f32, deadline, j, t, k));
-            }
-        }
-    }
-    // Line 6: a primitive ascending sort realizes score-desc + tie-breaks.
-    entries.sort_unstable();
-
-    // Lines 7–12: greedy allocation. Per-job allocations live in flat
-    // window-indexed vectors (alloc[j][t − arrival]) — the dense layout is
-    // ~2× faster than hash maps on the million-entry pop loop (§Perf).
+    // Per-job allocations live in flat window-indexed vectors
+    // (alloc[j][t − arrival]) — the dense layout is ~2× faster than hash
+    // maps on the million-entry pop loop (§Perf).
     let t_max = entries
         .iter()
         .map(|e| ((e >> 16) & 0xFF_FFFF) as usize)
@@ -164,8 +235,8 @@ fn schedule_round(
     let mut work = vec![0.0f64; jobs.len()];
     let cap = max_capacity as u32;
 
-    for &e in &entries {
-        let j = ((e >> 40) & 0xFFFF_FFFF) as usize;
+    for &e in entries {
+        let j = entry_job(e);
         let t = ((e >> 16) & 0xFF_FFFF) as usize;
         let k = (e & 0xFFFF) as u16;
         if work[j] >= jobs[j].length_hours {
@@ -224,8 +295,8 @@ impl Policy for Oracle {
         "CarbonFlex(Oracle)"
     }
 
-    fn decide(&mut self, ctx: &SlotCtx) -> Decision {
-        let mut alloc = Vec::new();
+    fn decide_into(&mut self, ctx: &SlotCtx, out: &mut Decision) {
+        out.alloc.clear();
         let mut used = 0usize;
         for v in ctx.jobs {
             let planned = self.schedule.plans[v.job.id].allocation_at(ctx.t);
@@ -239,11 +310,11 @@ impl Policy for Oracle {
                 0
             };
             if k > 0 {
-                alloc.push((v.job.id, k));
+                out.alloc.push((v.job.id, k));
                 used += k;
             }
         }
-        Decision { capacity: used, alloc }
+        out.capacity = used;
     }
 }
 
@@ -389,6 +460,100 @@ mod tests {
             greedy_carbon <= best + 50.0 + 1e-9,
             "greedy {greedy_carbon} vs brute-force {best}"
         );
+    }
+
+    /// The pre-optimization repair loop: rebuild and re-sort the FULL
+    /// candidate list every round. The incremental merge must reproduce it
+    /// bitwise (entry keys are unique, so sorted-merge == full re-sort).
+    fn compute_schedule_reference(
+        jobs: &[Job],
+        ci: &CarbonTrace,
+        max_capacity: usize,
+        extension_step: f64,
+        max_rounds: usize,
+    ) -> OracleSchedule {
+        let mut extra_slack = vec![0.0f64; jobs.len()];
+        let mut extended: Vec<usize> = Vec::new();
+        for round in 0..max_rounds.max(1) {
+            let mut entries: Vec<u128> = Vec::new();
+            for j in 0..jobs.len() {
+                push_job_entries(&mut entries, jobs, ci, j, extra_slack[j]);
+            }
+            entries.sort_unstable();
+            let result = greedy_pass(jobs, &entries, max_capacity, &extra_slack);
+            let unfinished: Vec<usize> = result
+                .iter()
+                .enumerate()
+                .filter(|(j, (_, work))| *work < jobs[*j].length_hours - 1e-9)
+                .map(|(j, _)| j)
+                .collect();
+            if unfinished.is_empty() || round + 1 == max_rounds {
+                let horizon = result
+                    .iter()
+                    .flat_map(|(p, _)| p.last_slot())
+                    .max()
+                    .map(|m| m + 1)
+                    .unwrap_or(0);
+                let mut capacity_curve = vec![0usize; horizon];
+                for (plan, _) in &result {
+                    for &(t, k) in &plan.slots {
+                        capacity_curve[t] += k;
+                    }
+                }
+                return OracleSchedule {
+                    planned_work: result.iter().map(|(_, w)| *w).collect(),
+                    plans: result.into_iter().map(|(p, _)| p).collect(),
+                    extended_jobs: extended,
+                    capacity_curve,
+                };
+            }
+            for j in unfinished {
+                extra_slack[j] += extension_step;
+                if !extended.contains(&j) {
+                    extended.push(j);
+                }
+            }
+        }
+        unreachable!("loop always returns on the final round");
+    }
+
+    #[test]
+    fn incremental_repair_matches_full_rebuild() {
+        // Instances chosen to force one, several, and max-capped repair
+        // rounds, on both flat and valley traces.
+        let flat = CarbonTrace::new("flat", vec![100.0; 96]);
+        let scarce: Vec<Job> = (0..3).map(|i| job(i, 0, 4.0, 0.0, 1, 0.0)).collect();
+        let valley = valley_trace(48);
+        let contended: Vec<Job> = (0..6).map(|i| job(i, i % 3, 3.0, 1.0, 4, 0.05)).collect();
+        let cases: Vec<(&[Job], &CarbonTrace, usize, usize)> = vec![
+            (&scarce[..], &flat, 1, 8),      // repeated extensions, capacity 1
+            (&scarce[..], &flat, 1, 2),      // hits the round cap while infeasible
+            (&contended[..], &valley, 2, 6), // elastic jobs under contention
+            (&contended[..], &valley, 10, 4), // feasible round 0 (no repair)
+        ];
+        for (i, (jobs, trace, cap, rounds)) in cases.into_iter().enumerate() {
+            let fast = compute_schedule(jobs, trace, cap, 24.0, rounds);
+            let slow = compute_schedule_reference(jobs, trace, cap, 24.0, rounds);
+            assert_eq!(fast.extended_jobs, slow.extended_jobs, "case {i}: extended diverged");
+            assert_eq!(fast.capacity_curve, slow.capacity_curve, "case {i}: curve diverged");
+            assert_eq!(fast.plans, slow.plans, "case {i}: plans diverged");
+            for (j, (a, b)) in fast.planned_work.iter().zip(&slow.planned_work).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "case {i}: work[{j}] diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_sorted_equals_resort() {
+        let a: Vec<u128> = vec![1, 5, 9, 12];
+        let b: Vec<u128> = vec![0, 2, 5, 30];
+        let mut out = Vec::new();
+        merge_sorted(&a, &b, &mut out);
+        let mut expect = [a, b].concat();
+        expect.sort_unstable();
+        assert_eq!(out, expect);
+        merge_sorted(&[], &out, &mut expect);
+        assert_eq!(out, expect);
     }
 
     #[test]

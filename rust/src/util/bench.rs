@@ -7,6 +7,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::Online;
 
 /// Result of a timed benchmark.
@@ -23,6 +24,17 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn mean_secs(&self) -> f64 {
         self.mean.as_secs_f64()
+    }
+
+    /// Machine-readable form for `BENCH_hotpaths.json` and CI artifacts.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_seconds", Json::Num(self.mean.as_secs_f64())),
+            ("std_dev_seconds", Json::Num(self.std_dev.as_secs_f64())),
+            ("min_seconds", Json::Num(self.min.as_secs_f64())),
+            ("max_seconds", Json::Num(self.max.as_secs_f64())),
+        ])
     }
 }
 
@@ -152,6 +164,15 @@ mod tests {
         assert_eq!(r.iters, 10);
         assert_eq!(n, 12);
         assert!(r.min <= r.mean && r.mean <= r.max);
+    }
+
+    #[test]
+    fn bench_result_json_shape() {
+        let r = bench("noop", 0, 5, || {});
+        let j = r.to_json();
+        assert_eq!(j.get("iters").and_then(Json::as_usize), Some(5));
+        assert!(j.get("mean_seconds").and_then(Json::as_f64).is_some());
+        assert!(j.get("min_seconds").and_then(Json::as_f64).is_some());
     }
 
     #[test]

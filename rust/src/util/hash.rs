@@ -1,0 +1,46 @@
+//! Tiny non-cryptographic hashing (FNV-1a), used for the golden
+//! determinism fingerprints: a stable 64-bit digest of per-slot records
+//! that must survive engine refactors bit for bit.
+
+/// 64-bit FNV-1a over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fold(0xcbf2_9ce4_8422_2325, bytes)
+}
+
+/// Fold more bytes into an existing FNV-1a state (seed with
+/// [`FNV_OFFSET`], or chain from a previous digest).
+pub fn fold(mut state: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        state ^= b as u64;
+        state = state.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    state
+}
+
+/// The FNV-1a offset basis (initial state for [`fold`]).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn folding_is_concatenation() {
+        let whole = fnv1a64(b"hello world");
+        let halves = fold(fold(FNV_OFFSET, b"hello "), b"world");
+        assert_eq!(whole, halves);
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_digests() {
+        assert_ne!(fnv1a64(b"slot:1"), fnv1a64(b"slot:2"));
+    }
+}

@@ -1,0 +1,54 @@
+//! Golden determinism: the optimized engine must reproduce the recorded
+//! metric fingerprints for every policy on the smoke-sized config, bit for
+//! bit. Fingerprints cover headline metrics (raw f64 bits) plus an FNV-1a
+//! digest of every slot record and job outcome (`SimResult::fingerprint`).
+//!
+//! Blessing: when `tests/golden/metric_fingerprints.txt` does not exist the
+//! test writes it and passes — run once and commit the file to pin the
+//! current engine output. Any later divergence (an optimization that is not
+//! output-preserving) fails with a per-policy diff. Re-bless deliberately
+//! by deleting the file.
+
+use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::runner::run_policies;
+use carbonflex::sched::PolicyKind;
+
+mod common;
+
+/// Same shape as the sweep-determinism tiny config: small but exercises
+/// learning, matching, oracle planning, and drain.
+fn tiny_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.capacity = 12;
+    cfg.horizon_hours = 48;
+    cfg.history_hours = 72;
+    cfg.replay_offsets = 1;
+    cfg
+}
+
+/// The four policies of the golden set: the FCFS baseline, a planning
+/// baseline, the CarbonFlex runtime (engine + KD-tree match), and the
+/// oracle (engine + Alg. 1 + repair).
+const GOLDEN_POLICIES: [PolicyKind; 4] =
+    [PolicyKind::CarbonAgnostic, PolicyKind::Gaia, PolicyKind::CarbonFlex, PolicyKind::Oracle];
+
+fn compute_fingerprints() -> Vec<String> {
+    run_policies(&tiny_cfg(), &GOLDEN_POLICIES)
+        .iter()
+        .map(|row| format!("{}\t{}", row.kind.as_str(), row.result.fingerprint()))
+        .collect()
+}
+
+#[test]
+fn engine_reproduces_checked_in_fingerprints() {
+    common::check_or_bless("metric_fingerprints.txt", &compute_fingerprints());
+}
+
+#[test]
+fn repeated_runs_are_bitwise_identical() {
+    // Independent of the golden file: two full pipeline runs (synthesis,
+    // learning, matching, simulation) must agree on every bit.
+    let a = compute_fingerprints();
+    let b = compute_fingerprints();
+    assert_eq!(a, b, "re-running the same config changed the output bits");
+}

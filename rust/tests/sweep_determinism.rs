@@ -8,6 +8,8 @@ use carbonflex::experiments::runner::run_policies;
 use carbonflex::experiments::sweep::{SweepRunner, SweepSpec};
 use carbonflex::sched::PolicyKind;
 
+mod common;
+
 fn tiny_base() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
     cfg.capacity = 12;
@@ -92,6 +94,29 @@ fn cell_configs_are_stable_across_grid_reorderings() {
         assert_eq!(cfg.capacity, orig.capacity);
         assert_eq!(cfg.horizon_hours, orig.horizon_hours);
     }
+}
+
+/// The optimized engine must reproduce the pre-change per-cell output bit
+/// for bit. Fingerprints are blessed into `tests/golden/sweep_fingerprints.txt`
+/// on first run (commit the file to pin them); afterwards any divergence —
+/// e.g. an engine optimization that is not output-preserving — fails here
+/// with the offending cell named.
+#[test]
+fn optimized_engine_reproduces_sweep_fingerprints() {
+    let rows = SweepRunner::new(4).run(&grid_spec());
+    let lines: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{}/{}/{}\t{}",
+                r.point.region,
+                r.point.seed,
+                r.kind.as_str(),
+                r.result.fingerprint()
+            )
+        })
+        .collect();
+    common::check_or_bless("sweep_fingerprints.txt", &lines);
 }
 
 #[test]

@@ -1,0 +1,119 @@
+//! The §Perf invariant: steady-state `ClusterEngine::step` performs no heap
+//! allocation. A counting global allocator (this test binary only) snapshots
+//! the allocation count after a warmup phase and asserts it does not move
+//! while the engine keeps stepping a live cluster.
+//!
+//! Kept as a single `#[test]` so no concurrent test thread can allocate
+//! inside the measured window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use carbonflex::carbon::forecast::Forecaster;
+use carbonflex::carbon::trace::CarbonTrace;
+use carbonflex::cluster::energy::EnergyModel;
+use carbonflex::cluster::sim::{ClusterEngine, Simulator};
+use carbonflex::config::Hardware;
+use carbonflex::sched::{Decision, Policy, SlotCtx};
+use carbonflex::workload::job::Job;
+use carbonflex::workload::profile::ScalingProfile;
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Base-scale scheduler that writes into the engine's reusable decision
+/// buffer — the allocation-free path every hot policy follows.
+struct BaseRunner;
+
+impl Policy for BaseRunner {
+    fn name(&self) -> &'static str {
+        "base-runner"
+    }
+    fn decide_into(&mut self, ctx: &SlotCtx, out: &mut Decision) {
+        out.capacity = ctx.max_capacity;
+        out.alloc.clear();
+        for v in ctx.jobs {
+            out.alloc.push((v.job.id, v.job.k_min));
+        }
+    }
+}
+
+fn long_job(id: usize, arrival: usize) -> Job {
+    Job {
+        id,
+        workload: "t",
+        workload_idx: 0,
+        arrival,
+        // Far longer than the measured window, so the active set is stable
+        // and no completion bookkeeping runs mid-measurement.
+        length_hours: 10_000.0,
+        queue: id % 3,
+        slack_hours: 1e6,
+        k_min: 1,
+        k_max: 4,
+        profile: ScalingProfile::from_comm_ratio(0.05, 4),
+        watts_per_unit: 40.0,
+    }
+}
+
+#[test]
+fn steady_state_step_does_not_allocate() {
+    const WARMUP: usize = 64;
+    const MEASURED: usize = 256;
+    const JOBS: usize = 24;
+
+    let trace = CarbonTrace::new("flat", vec![120.0; WARMUP + MEASURED + 8]);
+    let forecaster = Forecaster::perfect(trace);
+    let sim = Simulator::new(64, EnergyModel::for_hardware(Hardware::Cpu), 3, WARMUP + MEASURED);
+    let mut engine = ClusterEngine::new(sim);
+    for i in 0..JOBS {
+        engine.add_job(long_job(i, i)); // staggered arrivals, all inside warmup
+    }
+    engine.reserve(WARMUP + MEASURED + 8);
+    let mut policy = BaseRunner;
+
+    // Warmup: arrivals admitted, every reusable buffer grown to steady size.
+    for t in 0..WARMUP {
+        engine.step(t, &forecaster, &mut policy);
+    }
+
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for t in WARMUP..WARMUP + MEASURED {
+        engine.step(t, &forecaster, &mut policy);
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state step() allocated {} time(s) over {MEASURED} slots",
+        after - before
+    );
+
+    // The measured window did real work: every slot ran all jobs at base scale.
+    let slots = engine.slots();
+    assert_eq!(slots.len(), WARMUP + MEASURED);
+    assert!(slots[WARMUP..].iter().all(|s| s.used == JOBS), "cluster idled during measurement");
+}
