@@ -1,9 +1,10 @@
-//! Perf bench: the three hot paths of EXPERIMENTS.md §Perf.
+//! Perf bench: the hot paths of EXPERIMENTS.md §Perf.
 //!
 //! - L3 oracle (Alg. 1) over a week-long trace — the learning-phase loop
 //!   (paper §6.8: 2–10 **minutes** in the Python prototype).
-//! - State match: native KD-tree vs PJRT/Pallas round trip
-//!   (paper §6.8: 1–2 ms with scikit-learn).
+//! - State match: native flat KD-tree (single + batched) vs PJRT/Pallas
+//!   round trip (paper §6.8: 1–2 ms with scikit-learn).
+//! - Knowledge-base index build + amortized sliding-window maintenance.
 //! - Cluster-engine stepping throughput per policy.
 //!
 //! The shared cells live in `experiments::perf` (also behind the
@@ -58,6 +59,27 @@ fn main() {
         ));
     }
     let mut qi = 0usize;
+
+    // Native single-query vs batched matching on the same query stream —
+    // the batch path amortizes scratch and output reservations.
+    {
+        let mut kb = KnowledgeBase::from_cases(prep.knowledge_base().cases().to_vec());
+        let mut single_out = Vec::new();
+        let r = bench("match/native-kdtree (into)", 200, 2000, || {
+            qi = (qi + 1) % queries.len();
+            kb.top_k_into(&queries[qi], 5, &mut single_out);
+            std::hint::black_box(single_out.len());
+        });
+        println!("{r}");
+        let mut batch_out = Vec::new();
+        let mut batch_offsets = Vec::new();
+        let r = bench("match/native-kdtree (batch x256)", 5, 50, || {
+            kb.top_k_batch_into(&queries, 5, &mut batch_out, &mut batch_offsets);
+            std::hint::black_box(batch_out.len());
+        });
+        println!("{r}  ({} queries per iteration)", queries.len());
+    }
+
     match Engine::cpu(Engine::default_artifacts_dir()) {
         Ok(engine) => {
             let matcher = PjrtMatcher::from_kb(&engine, &kb).expect("matcher");

@@ -53,9 +53,14 @@ impl Forecaster {
 
     /// Rank of slot `t` within its day-ahead window (Table 2's CI^R): 0 means
     /// the current slot is forecast to be the cleanest of the next 24 h.
+    /// §Perf: counts directly instead of materializing the forecast window —
+    /// this sits on CarbonFlex's per-slot state path, which must stay
+    /// allocation-free (`rust/tests/zero_alloc.rs`). Same arithmetic as
+    /// `stats::rank_fraction` over `predict_window(t, 24)`, bit for bit.
     pub fn day_ahead_rank(&self, t: usize) -> f64 {
-        let w = self.predict_window(t, 24);
-        stats::rank_fraction(self.predict(t), &w)
+        let x = self.predict(t);
+        let below = (t..t + 24).filter(|&i| self.predict(i) < x).count();
+        below as f64 / 24.0
     }
 
     /// p-th percentile of the next-24h forecast — Wait Awhile's threshold.

@@ -384,7 +384,7 @@ pub fn overheads(base: &ExperimentConfig) {
     let learn_time = t1.elapsed();
 
     // State-match latency (paper: 1–2 ms with scikit-learn).
-    let kb = crate::learning::kb::KnowledgeBase::from_cases(prep.knowledge_base().cases().to_vec());
+    let kb = prep.knowledge_base().clone();
     let query = crate::learning::state::StateVector::from_raw(250.0, -10.0, 0.3, &[5, 3, 1], 0.7);
     let t2 = Instant::now();
     let iters = 1000;

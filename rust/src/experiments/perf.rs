@@ -1,9 +1,11 @@
 //! Machine-readable hot-path benchmarks (§Perf).
 //!
-//! The three paths that gate end-to-end throughput — the offline oracle
-//! (Alg. 1) over a full trace, the per-slot state match, and cluster-engine
-//! stepping — measured on one prepared experiment and emitted as the
-//! `BENCH_hotpaths.json` document that tracks the repo's perf trajectory.
+//! The paths that gate end-to-end throughput — the offline oracle (Alg. 1)
+//! over a full trace, the per-slot state match (single and batched), the
+//! knowledge-base index build and amortized sliding-window maintenance, and
+//! cluster-engine stepping — measured on one prepared experiment and
+//! emitted as the `BENCH_hotpaths.json` document that tracks the repo's
+//! perf trajectory.
 //! Shared by the `carbonflex bench` CLI subcommand and the
 //! `benches/perf_hotpaths` binary; CI runs the smoke config and uploads the
 //! JSON as an artifact, failing if any cell regresses more than the allowed
@@ -13,11 +15,11 @@ use std::time::Duration;
 
 use crate::config::ExperimentConfig;
 use crate::experiments::runner::PreparedExperiment;
-use crate::learning::kb::{KnowledgeBase, Matcher};
+use crate::learning::kb::{Case, KnowledgeBase, Matcher};
 use crate::learning::state::StateVector;
 use crate::sched::oracle::compute_schedule;
 use crate::sched::PolicyKind;
-use crate::util::bench::{bench_for, BenchResult};
+use crate::util::bench::{bench_chunked, bench_for, BenchResult};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -50,8 +52,8 @@ fn policy_slug(kind: PolicyKind) -> String {
         .to_string()
 }
 
-/// Measure the three hot paths on `cfg`, spending roughly `budget` wall
-/// time per cell.
+/// Measure the hot paths on `cfg`, spending roughly `budget` wall time
+/// per cell.
 pub fn bench_hotpaths(cfg: &ExperimentConfig, budget: Duration) -> HotpathReport {
     let prep = PreparedExperiment::prepare(cfg);
     let mut cells: Vec<BenchCell> = Vec::new();
@@ -87,6 +89,57 @@ pub fn bench_hotpaths(cfg: &ExperimentConfig, budget: Duration) -> HotpathReport
         qi = (qi + 1) % queries.len();
         kb.top_k_into(&queries[qi], 5, &mut hits);
         std::hint::black_box(hits.len());
+    });
+    cells.push(BenchCell { name: r.name.clone(), result: r, slots_per_second: None });
+
+    // Batched state match: the same 256 queries in a single
+    // `top_k_batch_into` call — one scratch set and one output reservation
+    // amortized across the batch.
+    let mut batch_out = Vec::new();
+    let mut batch_offsets = Vec::new();
+    let r = bench_for("state_match_batch", budget.min(Duration::from_secs(2)), || {
+        kb.top_k_batch_into(&queries, 5, &mut batch_out, &mut batch_offsets);
+        std::hint::black_box(batch_out.len());
+    });
+    cells.push(BenchCell { name: r.name.clone(), result: r, slots_per_second: None });
+
+    // KB index construction: scaler fit + O(n log n) flat KD-tree layout.
+    // (Includes one O(n) case-vector copy per iteration — negligible next
+    // to the median-selection build it feeds.)
+    let base_cases = prep.knowledge_base().cases().to_vec();
+    let r = bench_for("kb_build", budget.min(Duration::from_secs(2)), || {
+        let built = KnowledgeBase::from_cases(base_cases.clone());
+        std::hint::black_box(built.len());
+    });
+    cells.push(BenchCell { name: r.name.clone(), result: r, slots_per_second: None });
+
+    // Amortized sliding-window maintenance: each tick pushes a few fresh
+    // cases and advances the rolling window by an hour; `advance_window`
+    // tombstones aged cases and defers the reclaim + rebuild until churn
+    // crosses CARBONFLEX_KB_CHURN, so the chunked mean is what a
+    // yearlong-style continuous run actually pays per slot.
+    let window = cfg.history_hours.max(48);
+    let mut now = window;
+    let mut slide_kb = KnowledgeBase::from_cases(base_cases.clone());
+    let mut slide_rng = Rng::new(7);
+    let r = bench_chunked("kb_rebuild_amortized", budget.min(Duration::from_secs(2)), 64, || {
+        now += 1;
+        for _ in 0..4 {
+            slide_kb.push(Case {
+                recorded_at: now,
+                state: StateVector::from_raw(
+                    slide_rng.range(10.0, 700.0),
+                    slide_rng.range(-80.0, 80.0),
+                    slide_rng.f64(),
+                    &[slide_rng.below(40), slide_rng.below(40), slide_rng.below(40)],
+                    slide_rng.f64(),
+                ),
+                capacity: slide_rng.below(cfg.capacity.max(1)),
+                rho: slide_rng.f64(),
+            });
+        }
+        slide_kb.advance_window(now, window);
+        std::hint::black_box(slide_kb.live());
     });
     cells.push(BenchCell { name: r.name.clone(), result: r, slots_per_second: None });
 
@@ -242,6 +295,62 @@ mod tests {
         let v = regression_check(&cur, &base, 3.0);
         assert_eq!(v.len(), 1);
         assert!(v[0].contains("not measured"));
+    }
+
+    #[test]
+    fn regression_check_tolerates_baseline_missing_new_sections() {
+        // A baseline recorded before kb_build / kb_rebuild_amortized /
+        // state_match_batch existed must keep gating the old cells without
+        // flagging the new ones.
+        let base = doc(&[("oracle/week-trace", 0.010), ("match/native-kdtree", 0.000_02)]);
+        let cur = doc(&[
+            ("oracle/week-trace", 0.011),
+            ("match/native-kdtree", 0.000_02),
+            ("state_match_batch", 0.002),
+            ("kb_build", 0.004),
+            ("kb_rebuild_amortized", 0.000_5),
+        ]);
+        assert!(regression_check(&cur, &base, 3.0).is_empty());
+        // ... and still catches a regression in an old cell.
+        let slow = doc(&[
+            ("oracle/week-trace", 0.050),
+            ("match/native-kdtree", 0.000_02),
+            ("kb_build", 0.004),
+        ]);
+        let v = regression_check(&slow, &base, 3.0);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("oracle/week-trace"));
+    }
+
+    #[test]
+    fn hotpath_report_includes_new_cells() {
+        // Tiny config + tiny budget: verifies the report shape end to end
+        // (the CI bench-smoke job additionally asserts these names in the
+        // uploaded JSON artifact).
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 10;
+        cfg.horizon_hours = 48;
+        cfg.history_hours = 72;
+        cfg.replay_offsets = 1;
+        let report = bench_hotpaths(&cfg, Duration::from_millis(1));
+        let names: Vec<&str> = report.cells.iter().map(|c| c.name.as_str()).collect();
+        for want in [
+            "oracle/week-trace",
+            "match/native-kdtree",
+            "state_match_batch",
+            "kb_build",
+            "kb_rebuild_amortized",
+            "engine/carbonflex",
+        ] {
+            assert!(names.contains(&want), "missing cell '{want}' in {names:?}");
+        }
+        let json = report.to_json(0.0);
+        for want in ["state_match_batch", "kb_build", "kb_rebuild_amortized"] {
+            assert!(
+                json.get("cells").and_then(|c| c.get(want)).is_some(),
+                "cell '{want}' missing from the JSON document"
+            );
+        }
     }
 
     #[test]

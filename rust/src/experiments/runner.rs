@@ -117,6 +117,7 @@ impl PreparedExperiment {
                 num_queues: self.cfg.queues.len(),
                 offsets: self.cfg.replay_offsets,
                 energy: EnergyModel::for_hardware(self.cfg.hardware),
+                threads: 0, // one per core; merged offset-major, so bitwise stable
             };
             learn(&self.hist_jobs, &self.hist_trace, &lc)
         })
@@ -151,7 +152,10 @@ impl PreparedExperiment {
                 };
                 // Native KD-tree matcher; the PJRT backend is wired in the
                 // e2e example / serve path via `runtime::PjrtMatcher`.
-                let kb = KnowledgeBase::from_cases(self.knowledge_base().cases().to_vec());
+                // Memcpy snapshot of the shared prepared KB — the flat
+                // index clones in O(n), so per-cell policy construction no
+                // longer pays a scaler refit + O(n log n) tree rebuild.
+                let kb = self.knowledge_base().clone();
                 Box::new(CarbonFlex::new(kb, params))
             }
         }

@@ -90,14 +90,17 @@ pub fn run_yearlong(cfg: &ExperimentConfig, weeks: usize, aging_window_hours: us
                 num_queues: cfg.queues.len(),
                 offsets: cfg.replay_offsets,
                 energy: energy.clone(),
+                threads: 0, // parallel per-offset replays, offset-major merge
             },
         );
         for c in fresh.cases() {
             // Stamp cases with absolute time so aging works across weeks.
             kb.push(Case { recorded_at: hist_start + c.recorded_at, ..c.clone() });
         }
-        kb.age_out(eval_start, aging_window_hours);
-        kb.rebuild();
+        // Amortized sliding-window maintenance: tombstone aged cases and
+        // keep the fresh tail brute-force-matched, rebuilding the index
+        // only once churn crosses the CARBONFLEX_KB_CHURN fraction.
+        kb.advance_window(eval_start, aging_window_hours);
 
         // --- Evaluation week: the three runs are independent given the
         // frozen knowledge base, so run them in parallel. ---
@@ -110,7 +113,10 @@ pub fn run_yearlong(cfg: &ExperimentConfig, weeks: usize, aging_window_hours: us
         let runs = par_map(kinds.len(), &kinds, |&kind, _| {
             let mut policy: Box<dyn Policy> = match kind {
                 PolicyKind::CarbonFlex => Box::new(CarbonFlex::new(
-                    KnowledgeBase::from_cases(kb.cases().to_vec()),
+                    // Memcpy snapshot of the lazily-maintained index — no
+                    // per-run rebuild; tombstones stay filtered at match
+                    // time.
+                    kb.clone(),
                     CarbonFlexParams {
                         knn_k: cfg.knn_k,
                         violation_tolerance: cfg.violation_tolerance,
@@ -133,7 +139,7 @@ pub fn run_yearlong(cfg: &ExperimentConfig, weeks: usize, aging_window_hours: us
             mean_ci: year.slice(eval_start, 168).mean(),
             savings_pct: (1.0 - flex_result.metrics.carbon_g / base) * 100.0,
             oracle_savings_pct: (1.0 - oracle_result.metrics.carbon_g / base) * 100.0,
-            kb_cases: kb.cases().len(),
+            kb_cases: kb.live(),
             violations: flex_result.metrics.violations,
         });
     }

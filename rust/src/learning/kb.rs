@@ -6,11 +6,22 @@
 //! decisions. Two interchangeable matcher backends exist: this module's
 //! native KD-tree and the PJRT-executed Pallas distance kernel
 //! (`runtime::matcher`) — tests assert they agree.
+//!
+//! §Perf: sliding-window maintenance is **amortized**. Cases pushed after
+//! the last [`rebuild`](KnowledgeBase::rebuild) are matched brute-force in
+//! the same z-space and merged with the tree hits; cases that fall out of
+//! the rolling window are tombstoned (skipped at match time via the tree's
+//! filtered search) instead of being removed. A full reclaim + rebuild runs
+//! only when accumulated churn — tombstones plus unindexed tail — exceeds a
+//! configurable fraction of the indexed set (`CARBONFLEX_KB_CHURN`, default
+//! 0.25), so continuous-learning loops (yearlong, week-window sweeps) stop
+//! paying an O(n log n) rebuild every window slide. Hit sets are always
+//! exact over the live cases; ties resolve by ascending case index.
 
 use std::io::Write;
 use std::path::Path;
 
-use crate::learning::kdtree::KdTree;
+use crate::learning::kdtree::{Hit, KdTree};
 use crate::learning::state::{StateVector, STATE_DIM};
 
 /// One recorded oracle decision.
@@ -51,6 +62,29 @@ pub trait Matcher {
     fn top_k_into(&mut self, query: &StateVector, k: usize, out: &mut Vec<Neighbor>) {
         out.clear();
         out.extend(self.top_k(query, k));
+    }
+    /// Batched multi-query variant: neighbours for query `i` land in
+    /// `out[offsets[i]..offsets[i + 1]]`, one scratch set amortized across
+    /// the whole batch. The default loops [`top_k_into`](Matcher::top_k_into)
+    /// through a reused staging buffer; backends with batch-native paths
+    /// (the KD-tree) override it.
+    fn top_k_batch_into(
+        &mut self,
+        queries: &[StateVector],
+        k: usize,
+        out: &mut Vec<Neighbor>,
+        offsets: &mut Vec<usize>,
+    ) {
+        out.clear();
+        offsets.clear();
+        offsets.reserve(queries.len() + 1);
+        offsets.push(0);
+        let mut staging = Vec::new();
+        for q in queries {
+            self.top_k_into(q, k, &mut staging);
+            out.extend_from_slice(&staging);
+            offsets.push(out.len());
+        }
     }
     /// Number of cases available.
     fn len(&self) -> usize;
@@ -114,33 +148,72 @@ impl Scaler {
     }
 }
 
-/// The knowledge base.
+/// Default churn fraction before a lazy window slide triggers a full
+/// reclaim + rebuild (see [`KnowledgeBase::advance_window`]).
+pub const DEFAULT_CHURN_FRACTION: f64 = 0.25;
+
+/// Resolve the lazy-rebuild churn threshold from `CARBONFLEX_KB_CHURN`
+/// (read once at knowledge-base construction, never on the match path).
+/// Unset, malformed, or negative values fall back to
+/// [`DEFAULT_CHURN_FRACTION`]; `0` rebuilds on every slide (the historical
+/// eager behaviour).
+pub fn churn_fraction_from_env() -> f64 {
+    std::env::var("CARBONFLEX_KB_CHURN")
+        .ok()
+        .and_then(|s| s.trim().parse::<f64>().ok())
+        .filter(|f| f.is_finite() && *f >= 0.0)
+        .unwrap_or(DEFAULT_CHURN_FRACTION)
+}
+
+/// The knowledge base. `Clone` duplicates the flat index by memcpy (no
+/// rebuild), so per-run snapshots in continuous-learning loops stay cheap.
+#[derive(Clone)]
 pub struct KnowledgeBase {
     cases: Vec<Case>,
     scaler: Scaler,
     tree: Option<KdTree>,
+    /// `cases[..indexed]` are covered by `tree` (in the scaler's z-space);
+    /// the tail `cases[indexed..]` is matched brute-force and merged.
+    indexed: usize,
+    /// Cases with `recorded_at` below this are tombstoned (dead): skipped
+    /// at match time, physically reclaimed at the next rebuild.
+    age_floor: usize,
+    /// Tombstone count as of the last [`advance_window`](KnowledgeBase::advance_window).
+    dead: usize,
+    /// Lazy-rebuild threshold: rebuild once (dead + unindexed) exceeds this
+    /// fraction of the indexed set.
+    churn_fraction: f64,
     /// Reusable KD-tree hit buffer for [`Matcher::top_k_into`].
-    hits: Vec<crate::learning::kdtree::Hit>,
+    hits: Vec<Hit>,
 }
 
 impl std::fmt::Debug for KnowledgeBase {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "KnowledgeBase({} cases)", self.cases.len())
+        write!(f, "KnowledgeBase({} cases, {} live)", self.cases.len(), self.live())
     }
 }
 
 impl KnowledgeBase {
     pub fn new() -> Self {
-        KnowledgeBase { cases: vec![], scaler: Scaler::identity(), tree: None, hits: vec![] }
+        KnowledgeBase {
+            cases: vec![],
+            scaler: Scaler::identity(),
+            tree: None,
+            indexed: 0,
+            age_floor: 0,
+            dead: 0,
+            churn_fraction: churn_fraction_from_env(),
+            hits: vec![],
+        }
     }
 
     pub fn from_cases(cases: Vec<Case>) -> Self {
-        let mut kb = KnowledgeBase { cases, scaler: Scaler::identity(), tree: None, hits: vec![] };
+        let mut kb = KnowledgeBase { cases, ..KnowledgeBase::new() };
         kb.rebuild();
         kb
     }
 
-    /// The scaler fitted at the last [`rebuild`].
+    /// The scaler fitted at the last [`rebuild`](KnowledgeBase::rebuild).
     pub fn scaler(&self) -> Scaler {
         self.scaler
     }
@@ -149,62 +222,177 @@ impl KnowledgeBase {
         &self.cases
     }
 
-    /// Add a case (invalidates the index; call [`rebuild`] before matching).
-    pub fn push(&mut self, case: Case) {
-        self.cases.push(case);
-        self.tree = None;
+    /// Cases not yet tombstoned by the rolling window.
+    pub fn live(&self) -> usize {
+        self.cases.len() - self.dead
     }
 
-    /// Drop cases older than `window` relative to `now` (the paper ages out
-    /// old mappings over a rolling window to track seasonal drift).
+    /// Cases pushed since the last rebuild (matched brute-force until then).
+    pub fn pending(&self) -> usize {
+        self.cases.len() - self.indexed
+    }
+
+    /// Override the lazy-rebuild churn threshold (tests, tuning); the
+    /// constructor default comes from [`churn_fraction_from_env`].
+    pub fn set_churn_fraction(&mut self, fraction: f64) {
+        self.churn_fraction = fraction.max(0.0);
+    }
+
+    /// Add a case. The index stays valid: until the next rebuild the case
+    /// is matched brute-force in the current z-space and merged with the
+    /// tree hits, so matching after `push` is exact (if slower per query).
+    pub fn push(&mut self, case: Case) {
+        self.cases.push(case);
+    }
+
+    /// Eagerly drop cases older than `window` relative to `now` (the paper
+    /// ages out old mappings over a rolling window to track seasonal
+    /// drift). Discards the index when anything is removed; prefer
+    /// [`advance_window`](KnowledgeBase::advance_window) on hot sliding
+    /// loops, which amortizes the rebuild instead.
     pub fn age_out(&mut self, now: usize, window: usize) {
+        self.age_floor = self.age_floor.max(now.saturating_sub(window));
+        let floor = self.age_floor;
         let before = self.cases.len();
-        self.cases.retain(|c| c.recorded_at + window >= now);
+        self.cases.retain(|c| c.recorded_at >= floor);
+        self.dead = 0;
         if self.cases.len() != before {
             self.tree = None;
+            self.indexed = 0;
         }
     }
 
-    /// (Re)build the KD-tree index (and refit the feature scaler).
+    /// Slide the rolling window with amortized maintenance (§Perf):
+    /// out-of-window cases are tombstoned, freshly pushed cases stay in the
+    /// brute-force tail, and the full reclaim + scaler refit + tree rebuild
+    /// runs only once accumulated churn exceeds the configured fraction of
+    /// the indexed set (`CARBONFLEX_KB_CHURN`, default 0.25; 0 restores the
+    /// eager rebuild-every-slide behaviour). Matching stays exact over the
+    /// live cases throughout; between rebuilds it uses the scaler fitted at
+    /// the last rebuild.
+    pub fn advance_window(&mut self, now: usize, window: usize) {
+        self.age_floor = self.age_floor.max(now.saturating_sub(window));
+        let floor = self.age_floor;
+        // `dead` (for live()) counts every tombstone; the churn numerator
+        // counts each case once — tombstoned *indexed* cases plus the whole
+        // unindexed tail (a dead tail case is already tail churn).
+        let dead_indexed =
+            self.cases[..self.indexed].iter().filter(|c| c.recorded_at < floor).count();
+        let dead_tail =
+            self.cases[self.indexed..].iter().filter(|c| c.recorded_at < floor).count();
+        self.dead = dead_indexed + dead_tail;
+        let churn = (dead_indexed + self.pending()) as f64 / self.indexed.max(1) as f64;
+        if self.tree.is_none() || churn > self.churn_fraction {
+            self.rebuild();
+        }
+    }
+
+    /// Reclaim tombstones and (re)build the KD-tree index (and refit the
+    /// feature scaler) over all remaining cases.
     pub fn rebuild(&mut self) {
+        if self.dead > 0 {
+            let floor = self.age_floor;
+            self.cases.retain(|c| c.recorded_at >= floor);
+            self.dead = 0;
+        }
         self.scaler = Scaler::fit(&self.cases);
         let scaler = self.scaler;
         self.tree =
             Some(KdTree::build(self.cases.iter().map(|c| scaler.apply(&c.state)).collect()));
+        self.indexed = self.cases.len();
     }
 
     /// Persist as CSV: `recorded_at,state(;-separated),capacity,rho`.
+    /// Tombstoned cases are persisted too (they are still in `cases`);
+    /// call [`rebuild`](KnowledgeBase::rebuild) first for a compacted dump.
     pub fn save_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        // §Perf: one large buffer so trace-catalog-sized KBs flush in a
+        // handful of syscalls instead of one per line.
+        let mut f = std::io::BufWriter::with_capacity(1 << 16, std::fs::File::create(path)?);
         writeln!(f, "recorded_at,state,capacity,rho")?;
         for c in &self.cases {
             writeln!(f, "{},{},{},{:.6}", c.recorded_at, c.state.to_csv_cell(), c.capacity, c.rho)?;
         }
-        Ok(())
+        f.flush()
     }
 
-    /// Load the [`save_csv`] format.
+    /// Load the [`save_csv`](KnowledgeBase::save_csv) format. Single-pass
+    /// field parsing (no per-line vector allocation) with the case vector
+    /// pre-sized from the line count.
     pub fn load_csv(path: impl AsRef<Path>) -> std::io::Result<KnowledgeBase> {
         let src = std::fs::read_to_string(path)?;
-        let mut cases = Vec::new();
+        let mut cases = Vec::with_capacity(src.lines().count().saturating_sub(1));
         for (i, line) in src.lines().enumerate() {
             if i == 0 || line.trim().is_empty() {
                 continue;
             }
-            let parts: Vec<&str> = line.split(',').collect();
             let bad =
                 || std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {}", i + 1));
-            if parts.len() != 4 {
-                return Err(bad());
-            }
+            let mut fields = line.splitn(4, ',');
+            let mut next = || fields.next().ok_or_else(bad);
             cases.push(Case {
-                recorded_at: parts[0].trim().parse().map_err(|_| bad())?,
-                state: StateVector::from_csv_cell(parts[1]).ok_or_else(bad)?,
-                capacity: parts[2].trim().parse().map_err(|_| bad())?,
-                rho: parts[3].trim().parse().map_err(|_| bad())?,
+                recorded_at: next()?.trim().parse().map_err(|_| bad())?,
+                state: StateVector::from_csv_cell(next()?).ok_or_else(bad)?,
+                capacity: next()?.trim().parse().map_err(|_| bad())?,
+                // `splitn` leaves any extra commas in the last field, so a
+                // 5-field line fails this parse exactly like before.
+                rho: next()?.trim().parse().map_err(|_| bad())?,
             });
         }
         Ok(KnowledgeBase::from_cases(cases))
+    }
+
+    /// Match one query: exact top-k over the live cases, ascending by
+    /// `(distance, case index)` — filtered tree hits over the indexed
+    /// prefix merged with a brute-force pass over the unindexed tail, all
+    /// in the z-space of the last-fitted scaler. An associated fn (not a
+    /// method) so callers can borrow `hits` disjointly from the rest.
+    #[allow(clippy::too_many_arguments)]
+    fn hits_for(
+        cases: &[Case],
+        scaler: &Scaler,
+        tree: Option<&KdTree>,
+        indexed: usize,
+        age_floor: usize,
+        query: &StateVector,
+        k: usize,
+        hits: &mut Vec<Hit>,
+    ) {
+        hits.clear();
+        if k == 0 {
+            return;
+        }
+        let q = scaler.apply(query);
+        if let Some(tree) = tree {
+            tree.knn_filtered_into(&q, k, |i| cases[i].recorded_at >= age_floor, hits);
+        }
+        // Brute-force the unindexed tail in the same z-space and merge.
+        // The distances are the same `dist2().sqrt()` the tree computes, so
+        // the merged order (and any exact tie) is bitwise consistent.
+        for (offset, case) in cases[indexed..].iter().enumerate() {
+            if case.recorded_at < age_floor {
+                continue;
+            }
+            let i = indexed + offset;
+            let d = scaler.apply(&case.state).dist(&q);
+            let pos = hits.partition_point(|h| h.dist < d || (h.dist == d && h.index < i));
+            if pos < k {
+                hits.insert(pos, Hit { index: i, dist: d });
+                if hits.len() > k {
+                    hits.pop();
+                }
+            }
+        }
+    }
+
+    fn neighbor_of(&self, h: &Hit) -> Neighbor {
+        let case = &self.cases[h.index];
+        Neighbor {
+            dist: h.dist,
+            capacity: case.capacity,
+            rho: case.rho,
+            pressure: case.state.0[7],
+        }
     }
 }
 
@@ -216,56 +404,51 @@ impl Default for KnowledgeBase {
 
 impl Matcher for KnowledgeBase {
     fn top_k(&self, query: &StateVector, k: usize) -> Vec<Neighbor> {
-        let q = self.scaler.apply(query);
-        let Some(tree) = &self.tree else {
-            // Unindexed fallback: brute force in z-space (small KBs, tests;
-            // note the identity scaler applies until the first rebuild).
-            let mut hits: Vec<Neighbor> = self
-                .cases
-                .iter()
-                .map(|c| Neighbor {
-                    dist: self.scaler.apply(&c.state).dist(&q),
-                    capacity: c.capacity,
-                    rho: c.rho,
-                    pressure: c.state.0[7],
-                })
-                .collect();
-            hits.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap());
-            hits.truncate(k);
-            return hits;
-        };
-        tree.knn(&q, k)
-            .into_iter()
-            .map(|h| Neighbor {
-                dist: h.dist,
-                capacity: self.cases[h.index].capacity,
-                rho: self.cases[h.index].rho,
-                pressure: self.cases[h.index].state.0[7],
-            })
-            .collect()
+        let mut hits = Vec::new();
+        Self::hits_for(
+            &self.cases,
+            &self.scaler,
+            self.tree.as_ref(),
+            self.indexed,
+            self.age_floor,
+            query,
+            k,
+            &mut hits,
+        );
+        hits.iter().map(|h| self.neighbor_of(h)).collect()
     }
 
     fn top_k_into(&mut self, query: &StateVector, k: usize, out: &mut Vec<Neighbor>) {
-        let Some(tree) = &self.tree else {
-            // Unindexed fallback (small KBs, tests): delegate to the
-            // allocating brute-force path.
-            out.clear();
-            out.extend(self.top_k(query, k));
-            return;
-        };
-        // §Perf: the hot path of the CarbonFlex decide loop — one KD-tree
-        // query into the reusable hit buffer, mapped straight into `out`.
-        let q = self.scaler.apply(query);
-        tree.knn_into(&q, k, &mut self.hits);
+        // §Perf: the hot path of the CarbonFlex decide loop — one filtered
+        // flat-tree query into the reusable hit buffer, mapped into `out`.
+        let KnowledgeBase { cases, scaler, tree, indexed, age_floor, hits, .. } = self;
+        Self::hits_for(cases, scaler, tree.as_ref(), *indexed, *age_floor, query, k, hits);
         out.clear();
         out.reserve(self.hits.len());
         for h in &self.hits {
-            out.push(Neighbor {
-                dist: h.dist,
-                capacity: self.cases[h.index].capacity,
-                rho: self.cases[h.index].rho,
-                pressure: self.cases[h.index].state.0[7],
-            });
+            out.push(self.neighbor_of(h));
+        }
+    }
+
+    fn top_k_batch_into(
+        &mut self,
+        queries: &[StateVector],
+        k: usize,
+        out: &mut Vec<Neighbor>,
+        offsets: &mut Vec<usize>,
+    ) {
+        out.clear();
+        offsets.clear();
+        offsets.reserve(queries.len() + 1);
+        offsets.push(0);
+        out.reserve(queries.len().saturating_mul(k.min(self.cases.len())));
+        for query in queries {
+            let KnowledgeBase { cases, scaler, tree, indexed, age_floor, hits, .. } = self;
+            Self::hits_for(cases, scaler, tree.as_ref(), *indexed, *age_floor, query, k, hits);
+            for h in &self.hits {
+                out.push(self.neighbor_of(h));
+            }
+            offsets.push(out.len());
         }
     }
 
@@ -277,6 +460,8 @@ impl Matcher for KnowledgeBase {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest_lite::{check, Config};
+    use crate::util::rng::Rng;
 
     fn case(at: usize, ci: f64, cap: usize, rho: f64) -> Case {
         Case {
@@ -325,7 +510,7 @@ mod tests {
         for i in 0..60 {
             kb.push(case(i, (37 * i) as f64 % 700.0, i, 0.4 + (i % 7) as f64 / 10.0));
         }
-        // Unindexed fallback path first, then the KD-tree path.
+        // Unindexed (brute-force tail) path first, then the KD-tree path.
         let q = StateVector::from_raw(250.0, 10.0, 0.4, &[3, 1, 0], 0.5);
         let mut buf = Vec::new();
         for rebuilt in [false, true] {
@@ -344,6 +529,23 @@ mod tests {
     }
 
     #[test]
+    fn pushed_tail_is_matched_without_rebuild() {
+        // A case pushed after rebuild must be findable (brute-force merge)
+        // even though the tree has not been rebuilt.
+        let mut kb = KnowledgeBase::new();
+        for i in 0..20 {
+            kb.push(case(i, 30.0 * i as f64, 5, 0.5));
+        }
+        kb.rebuild();
+        assert_eq!(kb.pending(), 0);
+        kb.push(case(100, 120.0, 77, 0.9));
+        assert_eq!(kb.pending(), 1);
+        let q = StateVector::from_raw(120.0, 0.0, 0.5, &[2, 1, 0], 0.6);
+        let hits = kb.top_k(&q, 1);
+        assert_eq!(hits[0].capacity, 77, "tail case not merged: {hits:?}");
+    }
+
+    #[test]
     fn aging_drops_old_cases() {
         let mut kb = KnowledgeBase::new();
         for i in 0..10 {
@@ -352,6 +554,171 @@ mod tests {
         kb.age_out(1000, 350);
         assert_eq!(kb.len(), 3); // recorded_at ≥ 650 → 700, 800, 900
         assert!(kb.cases().iter().all(|c| c.recorded_at + 350 >= 1000));
+    }
+
+    #[test]
+    fn advance_window_defers_rebuild_until_churn_threshold() {
+        let mut kb = KnowledgeBase::new();
+        for i in 0..100 {
+            kb.push(case(i, (13 * i) as f64 % 700.0, i % 20, 0.5));
+        }
+        kb.rebuild();
+        kb.set_churn_fraction(0.25);
+        let scaler_before = kb.scaler();
+        // 10 dead + 0 pending over 100 indexed = 0.10 churn: lazy.
+        kb.advance_window(110, 100);
+        assert_eq!(kb.len(), 100, "lazy slide must not reclaim yet");
+        assert_eq!(kb.live(), 90);
+        assert_eq!(kb.scaler(), scaler_before, "lazy slide must not refit the scaler");
+        // Tombstoned cases never match, even at distance zero.
+        let dead_q = kb.cases()[0].state;
+        let hits = kb.top_k(&dead_q, 100);
+        assert_eq!(hits.len(), 90);
+        // 30 dead crosses 0.25: reclaim + rebuild.
+        kb.advance_window(130, 100);
+        assert_eq!(kb.len(), 70, "churn over threshold must reclaim");
+        assert_eq!(kb.live(), 70);
+        assert_eq!(kb.pending(), 0);
+        assert!(kb.cases().iter().all(|c| c.recorded_at >= 30));
+    }
+
+    #[test]
+    fn advance_window_with_zero_churn_is_eager() {
+        let mut kb = KnowledgeBase::new();
+        for i in 0..40 {
+            kb.push(case(i, (31 * i) as f64 % 700.0, i, 0.5));
+        }
+        kb.rebuild();
+        kb.set_churn_fraction(0.0);
+        kb.push(case(50, 200.0, 9, 0.5));
+        kb.advance_window(45, 40);
+        // Any churn (1 dead would do; here 1 pending) rebuilds immediately.
+        assert_eq!(kb.pending(), 0);
+        assert_eq!(kb.live(), kb.len());
+        assert!(kb.cases().iter().all(|c| c.recorded_at >= 5));
+    }
+
+    #[test]
+    fn churn_fraction_env_parsing() {
+        // No process-global env mutation in tests: only assert the default
+        // when CARBONFLEX_KB_CHURN is genuinely unset in this environment.
+        if std::env::var_os("CARBONFLEX_KB_CHURN").is_none() {
+            assert_eq!(churn_fraction_from_env(), DEFAULT_CHURN_FRACTION);
+        }
+        let mut kb = KnowledgeBase::new();
+        kb.set_churn_fraction(-3.0);
+        for i in 0..4 {
+            kb.push(case(i, 100.0 * i as f64, i, 0.5));
+        }
+        kb.rebuild();
+        kb.push(case(9, 50.0, 1, 0.5));
+        // Clamped to 0 → eager.
+        kb.advance_window(9, 100);
+        assert_eq!(kb.pending(), 0);
+    }
+
+    /// Property: after an arbitrary push / rebuild / advance_window
+    /// history, batched == single-query == brute force over the live cases
+    /// in the last-fitted z-space, ties by case index, k > len included.
+    #[test]
+    fn property_matching_stays_exact_under_lazy_maintenance() {
+        fn rand_case(rng: &mut Rng, at: usize) -> Case {
+            Case {
+                recorded_at: at,
+                // Coarse grid so exact-distance ties occur.
+                state: StateVector::from_raw(
+                    rng.below(5) as f64 * 150.0,
+                    0.0,
+                    rng.below(3) as f64 * 0.5,
+                    &[rng.below(3), rng.below(3), 0],
+                    0.5,
+                ),
+                capacity: rng.below(30),
+                rho: rng.below(4) as f64 * 0.25,
+            }
+        }
+        check(
+            "kb batch == single == brute under lazy maintenance",
+            Config { cases: 64, seed: 0x5EED_CAFE },
+            |rng| {
+                let initial = 2 + rng.below(30);
+                let pushed = rng.below(10);
+                let window = 5 + rng.below(30);
+                let now = rng.below(60);
+                let k = 1 + rng.below(initial + pushed + 4);
+                let queries: Vec<StateVector> = (0..1 + rng.below(3))
+                    .map(|_| {
+                        StateVector::from_raw(
+                            rng.below(5) as f64 * 150.0,
+                            0.0,
+                            rng.below(3) as f64 * 0.5,
+                            &[rng.below(3), rng.below(3), 0],
+                            0.5,
+                        )
+                    })
+                    .collect();
+                let seed = rng.next_u64();
+                (initial, pushed, window, now, k, queries, seed)
+            },
+            |&(initial, pushed, window, now, k, ref queries, seed)| {
+                let mut rng = Rng::new(seed);
+                let mut kb = KnowledgeBase::new();
+                kb.set_churn_fraction(0.3);
+                for i in 0..initial {
+                    kb.push(rand_case(&mut rng, i));
+                }
+                kb.rebuild();
+                for i in 0..pushed {
+                    kb.push(rand_case(&mut rng, initial + i));
+                }
+                kb.advance_window(now, window);
+                let floor = now.saturating_sub(window);
+                let scaler = kb.scaler();
+                let mut batch_out = Vec::new();
+                let mut batch_offsets = Vec::new();
+                kb.top_k_batch_into(queries, k, &mut batch_out, &mut batch_offsets);
+                let mut single = Vec::new();
+                for (qi, q) in queries.iter().enumerate() {
+                    // Brute force over live cases with the fitted scaler.
+                    let zq = scaler.apply(q);
+                    let mut want: Vec<(f64, usize)> = kb
+                        .cases()
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, c)| c.recorded_at >= floor)
+                        .map(|(i, c)| (scaler.apply(&c.state).dist(&zq), i))
+                        .collect();
+                    want.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+                    want.truncate(k);
+
+                    kb.top_k_into(q, k, &mut single);
+                    let seg = &batch_out[batch_offsets[qi]..batch_offsets[qi + 1]];
+                    if single.len() != want.len() || seg.len() != want.len() {
+                        return Err(format!(
+                            "query {qi}: lens single={} batch={} brute={}",
+                            single.len(),
+                            seg.len(),
+                            want.len()
+                        ));
+                    }
+                    for (j, &(d, i)) in want.iter().enumerate() {
+                        let c = &kb.cases()[i];
+                        for (label, got) in [("single", &single[j]), ("batch", &seg[j])] {
+                            if got.dist.to_bits() != d.to_bits()
+                                || got.capacity != c.capacity
+                                || got.rho.to_bits() != c.rho.to_bits()
+                            {
+                                return Err(format!(
+                                    "query {qi} hit {j} ({label}): got {got:?} want case {i} \
+                                     dist {d}"
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]
@@ -378,7 +745,13 @@ mod tests {
         let dir = std::env::temp_dir().join("carbonflex_kb_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("bad.csv");
-        std::fs::write(&path, "recorded_at,state,capacity,rho\n1,notastate,5,0.5\n").unwrap();
-        assert!(KnowledgeBase::load_csv(&path).is_err());
+        for bad in [
+            "recorded_at,state,capacity,rho\n1,notastate,5,0.5\n",
+            "recorded_at,state,capacity,rho\n1,0;0;0;0;0;0;0;0,5\n",
+            "recorded_at,state,capacity,rho\n1,0;0;0;0;0;0;0;0,5,0.5,extra\n",
+        ] {
+            std::fs::write(&path, bad).unwrap();
+            assert!(KnowledgeBase::load_csv(&path).is_err(), "accepted: {bad:?}");
+        }
     }
 }

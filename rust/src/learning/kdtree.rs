@@ -4,23 +4,46 @@
 //! historical cases in a KD-Tree for fast access"); this is the equivalent
 //! Rust substrate. Points are [`STATE_DIM`]-dimensional; payloads are case
 //! indices into the knowledge base.
+//!
+//! §Perf: the tree is a **flat, contiguous node array** instead of a
+//! `Box`-per-node pointer graph. Nodes are laid out in pre-order (a node's
+//! near/left subtree starts at `slot + 1`), so the descent that dominates
+//! every query walks the arrays forward instead of chasing heap pointers.
+//! Per-slot data is stored as parallel slices (point coordinates in slot
+//! order, original case index, splitting axis, child slots), built in
+//! O(n log n) via `select_nth_unstable_by` median selection with an explicit
+//! index tie-break (the previous build was an O(n log² n) stable full sort
+//! per level), so the build is input-order deterministic.
+//!
+//! Results are deterministic and traversal-order independent: hits are
+//! ordered by `(distance, case index)`, so exact-distance ties always
+//! resolve to the lower case index (the in-test brute-force and recursive
+//! references pin this bit for bit).
 
 use crate::learning::state::{StateVector, STATE_DIM};
 
-#[derive(Debug)]
-struct Node {
-    /// Index into `points`.
-    point: usize,
-    axis: usize,
-    left: Option<Box<Node>>,
-    right: Option<Box<Node>>,
-}
+/// Child-slot sentinel ("no subtree").
+const NONE: u32 = u32::MAX;
 
-/// Immutable KD-tree built over a set of state vectors.
-#[derive(Debug)]
+/// Immutable KD-tree built over a set of state vectors, stored as a flat
+/// node array (see the module docs for the layout). `Clone` is a plain
+/// memcpy of the arrays — snapshotting a built index costs O(n), not the
+/// O(n log n) rebuild a boxed-node tree would force.
+#[derive(Debug, Clone)]
 pub struct KdTree {
+    /// Point coordinates in slot (pre-order) order: the descent reads this
+    /// array mostly front-to-back.
     points: Vec<StateVector>,
-    root: Option<Box<Node>>,
+    /// slot → original point index (the case index reported in hits).
+    case: Vec<u32>,
+    /// slot → splitting axis (depth % [`STATE_DIM`]).
+    axis: Vec<u8>,
+    /// slot → left child slot ([`NONE`] when the left subtree is empty).
+    /// Always `slot + 1` in the pre-order layout; kept explicit so the
+    /// traversal needs no subtree-size bookkeeping.
+    left: Vec<u32>,
+    /// slot → right child slot ([`NONE`] when the right subtree is empty).
+    right: Vec<u32>,
 }
 
 /// One k-NN result.
@@ -33,29 +56,59 @@ pub struct Hit {
 }
 
 impl KdTree {
-    /// Build from points (O(n log² n) median splits).
+    /// Build from points in O(n log n) median splits.
     pub fn build(points: Vec<StateVector>) -> KdTree {
-        let mut idx: Vec<usize> = (0..points.len()).collect();
-        let root = Self::build_node(&points, &mut idx, 0);
-        KdTree { points, root }
+        let n = points.len();
+        assert!(n < NONE as usize, "kd-tree capped at u32 point indices");
+        let mut tree = KdTree {
+            points: Vec::with_capacity(n),
+            case: Vec::with_capacity(n),
+            axis: Vec::with_capacity(n),
+            left: Vec::with_capacity(n),
+            right: Vec::with_capacity(n),
+        };
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        if n > 0 {
+            tree.build_slot(&points, &mut idx, 0);
+        }
+        tree
     }
 
-    fn build_node(points: &[StateVector], idx: &mut [usize], depth: usize) -> Option<Box<Node>> {
-        if idx.is_empty() {
-            return None;
-        }
+    /// Lay out `idx`'s subtree starting at the next free slot; returns the
+    /// subtree root's slot. `select_nth_unstable_by` partitions around the
+    /// median in O(len) per level (O(n log n) total). The comparator breaks
+    /// axis-value ties by original index, so the build is deterministic;
+    /// the *hit sets* are tree-shape independent anyway, because the search
+    /// ranks by the total order `(distance, case index)`.
+    fn build_slot(&mut self, points: &[StateVector], idx: &mut [u32], depth: usize) -> u32 {
         let axis = depth % STATE_DIM;
-        idx.sort_by(|&a, &b| points[a].0[axis].partial_cmp(&points[b].0[axis]).unwrap());
         let mid = idx.len() / 2;
+        if idx.len() > 1 {
+            idx.select_nth_unstable_by(mid, |&a, &b| {
+                points[a as usize].0[axis]
+                    .partial_cmp(&points[b as usize].0[axis])
+                    .expect("state coordinates are never NaN")
+                    .then(a.cmp(&b))
+            });
+        }
         let point = idx[mid];
+        let slot = self.case.len() as u32;
+        self.points.push(points[point as usize]);
+        self.case.push(point);
+        self.axis.push(axis as u8);
+        self.left.push(NONE);
+        self.right.push(NONE);
         let (left, rest) = idx.split_at_mut(mid);
         let right = &mut rest[1..];
-        Some(Box::new(Node {
-            point,
-            axis,
-            left: Self::build_node(points, left, depth + 1),
-            right: Self::build_node(points, right, depth + 1),
-        }))
+        if !left.is_empty() {
+            let child = self.build_slot(points, left, depth + 1);
+            self.left[slot as usize] = child;
+        }
+        if !right.is_empty() {
+            let child = self.build_slot(points, right, depth + 1);
+            self.right[slot as usize] = child;
+        }
+        slot
     }
 
     pub fn len(&self) -> usize {
@@ -66,7 +119,8 @@ impl KdTree {
         self.points.is_empty()
     }
 
-    /// k nearest neighbours of `query`, sorted by ascending distance.
+    /// k nearest neighbours of `query`, sorted ascending by
+    /// `(distance, case index)`.
     pub fn knn(&self, query: &StateVector, k: usize) -> Vec<Hit> {
         let mut best = Vec::new();
         self.knn_into(query, k, &mut best);
@@ -74,70 +128,139 @@ impl KdTree {
     }
 
     /// Buffer-reusing k-NN: results replace the contents of `out` (sorted
-    /// ascending by distance). §Perf: the traversal is an explicit-stack
-    /// iteration — no per-node call overhead, no heap allocation beyond
-    /// `out` itself — and visits nodes in exactly the recursive order, so
-    /// results (including distance ties) are bitwise identical to the
-    /// historical recursive search (`iterative_search_matches_recursive`).
+    /// ascending by `(distance, case index)`). Explicit-stack traversal over
+    /// slot indices — no recursion, no heap allocation beyond `out` itself.
     pub fn knn_into(&self, query: &StateVector, k: usize, out: &mut Vec<Hit>) {
+        self.knn_filtered_into(query, k, |_| true, out);
+    }
+
+    /// [`knn_into`](KdTree::knn_into) restricted to points whose case index
+    /// satisfies `keep` — the knowledge base's lazy aging skips tombstoned
+    /// cases this way without rebuilding the tree. Pruning geometry is
+    /// unaffected by the filter (only result admission is), so the hits are
+    /// exactly the top-k over the kept subset.
+    pub fn knn_filtered_into<F: Fn(usize) -> bool>(
+        &self,
+        query: &StateVector,
+        k: usize,
+        keep: F,
+        out: &mut Vec<Hit>,
+    ) {
         out.clear();
         if k == 0 || self.points.is_empty() {
             return;
         }
         out.reserve(k + 1);
-        // Deferred far subtrees: (node, split-plane distance²). The median
+        self.search(query, k, &keep, out, 0);
+    }
+
+    /// Batched multi-query k-NN: hits for query `i` land in
+    /// `out[offsets[i]..offsets[i + 1]]`, each group sorted ascending by
+    /// `(distance, case index)` — identical to `queries.len()` independent
+    /// [`knn_into`](KdTree::knn_into) calls, but with one output reservation
+    /// and one scratch set amortized across the whole batch.
+    pub fn knn_batch_into(
+        &self,
+        queries: &[StateVector],
+        k: usize,
+        out: &mut Vec<Hit>,
+        offsets: &mut Vec<usize>,
+    ) {
+        out.clear();
+        offsets.clear();
+        offsets.reserve(queries.len() + 1);
+        offsets.push(0);
+        if k == 0 || self.points.is_empty() {
+            offsets.resize(queries.len() + 1, 0);
+            return;
+        }
+        // +1: a segment transiently holds k+1 hits before the worst pops.
+        out.reserve(queries.len().saturating_mul(k.min(self.points.len())) + 1);
+        for q in queries {
+            let start = out.len();
+            self.search(q, k, &|_| true, out, start);
+            offsets.push(out.len());
+        }
+    }
+
+    /// Core search: append the top-k hits for `query` into `out[start..]`,
+    /// sorted ascending by `(distance, case index)`. Distances are taken to
+    /// Euclidean (sqrt) space **at insertion**, so the ranking space is
+    /// exactly the one callers see and merge against (the knowledge base's
+    /// brute-force tail, the in-test references) — ordering by d² and
+    /// sqrt-ing afterwards could disagree with a post-sqrt merge when two
+    /// distinct d² values round to the same square root. The far subtree is
+    /// revisited when its splitting-plane distance is at most the current
+    /// worst (`<=`, not `<`): a far point at exactly the worst distance but
+    /// with a smaller case index must still displace the worst hit for the
+    /// `(distance, index)` order to be exact.
+    fn search<F: Fn(usize) -> bool>(
+        &self,
+        query: &StateVector,
+        k: usize,
+        keep: &F,
+        out: &mut Vec<Hit>,
+        start: usize,
+    ) {
+        // Deferred far subtrees: (slot, |split-plane distance|). The median
         // build halves subtree sizes per level, so depth ≤ log2(n) + 1 and
         // a fixed 64-slot stack covers any in-memory tree.
         const MAX_DEPTH: usize = 64;
-        let mut stack: [Option<(&Node, f64)>; MAX_DEPTH] = [None; MAX_DEPTH];
+        let mut stack = [(NONE, 0.0f64); MAX_DEPTH];
         let mut sp = 0usize;
-        let mut cur = self.root.as_deref();
+        let mut cur = 0u32; // root slot (the array is non-empty here)
         loop {
-            // Descend the near side, recording each node and deferring its
-            // far child (recursion's pre-order visit + post-near far check).
-            while let Some(n) = cur {
-                let d2 = self.points[n.point].dist2(query);
-                // Insert into the sorted result list (dist holds d² here).
-                let pos = out.partition_point(|h| h.dist <= d2);
-                if pos < k {
-                    out.insert(pos, Hit { index: n.point, dist: d2 });
-                    if out.len() > k {
-                        out.pop();
+            // Descend the near side, deferring each far child.
+            while cur != NONE {
+                let s = cur as usize;
+                let case = self.case[s] as usize;
+                if keep(case) {
+                    let d = self.points[s].dist2(query).sqrt();
+                    let pos = out[start..]
+                        .partition_point(|h| h.dist < d || (h.dist == d && h.index < case));
+                    if pos < k {
+                        out.insert(start + pos, Hit { index: case, dist: d });
+                        if out.len() - start > k {
+                            out.pop();
+                        }
                     }
                 }
-                let diff = query.0[n.axis] - self.points[n.point].0[n.axis];
+                let axis = self.axis[s] as usize;
+                let diff = query.0[axis] - self.points[s].0[axis];
                 let (near, far) = if diff <= 0.0 {
-                    (n.left.as_deref(), n.right.as_deref())
+                    (self.left[s], self.right[s])
                 } else {
-                    (n.right.as_deref(), n.left.as_deref())
+                    (self.right[s], self.left[s])
                 };
-                if let Some(f) = far {
+                if far != NONE {
                     debug_assert!(sp < MAX_DEPTH, "kd-tree deeper than {MAX_DEPTH}");
-                    stack[sp] = Some((f, diff * diff));
+                    stack[sp] = (far, diff.abs());
                     sp += 1;
                 }
                 cur = near;
             }
-            // Pop the most recent deferred far subtree; prune unless the
-            // splitting plane is closer than the current k-th best. The
-            // check runs exactly when the recursion would have run it —
-            // after the sibling near subtree finished.
-            cur = None;
+            // Pop the most recent deferred far subtree; prune it unless the
+            // splitting plane could still admit a hit under the
+            // (distance, index) order. `plane` (= |diff|) lower-bounds every
+            // far point's true distance, and IEEE sqrt is monotone, so
+            // `plane > worst` proves no far point can enter the results.
+            cur = NONE;
             while sp > 0 {
                 sp -= 1;
-                let (node, plane_d2) = stack[sp].take().expect("pushed entry");
-                let worst = out.last().map(|h| h.dist).unwrap_or(f64::INFINITY);
-                if out.len() < k || plane_d2 < worst {
-                    cur = Some(node);
+                let (slot, plane) = stack[sp];
+                let worst = if out.len() > start {
+                    out[out.len() - 1].dist
+                } else {
+                    f64::INFINITY
+                };
+                if out.len() - start < k || plane <= worst {
+                    cur = slot;
                     break;
                 }
             }
-            if cur.is_none() {
+            if cur == NONE {
                 break;
             }
-        }
-        for h in out.iter_mut() {
-            h.dist = h.dist.sqrt();
         }
     }
 }
@@ -145,6 +268,7 @@ impl KdTree {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest_lite::{check, Config};
     use crate::util::rng::Rng;
 
     fn random_state(rng: &mut Rng) -> StateVector {
@@ -155,16 +279,35 @@ mod tests {
         StateVector(f)
     }
 
-    /// Brute-force k-NN for cross-checking.
+    /// States drawn from a coarse grid, so exact coordinate and distance
+    /// ties occur constantly (the property tests lean on this).
+    fn grid_state(rng: &mut Rng) -> StateVector {
+        let mut f = [0.0; STATE_DIM];
+        for v in f.iter_mut() {
+            *v = rng.below(3) as f64 * 0.5 - 0.5; // {-0.5, 0, 0.5}
+        }
+        StateVector(f)
+    }
+
+    /// Brute-force k-NN with the (distance, case index) order — the ground
+    /// truth the tree must reproduce bitwise, including exact ties.
     fn brute(points: &[StateVector], q: &StateVector, k: usize) -> Vec<Hit> {
         let mut hits: Vec<Hit> = points
             .iter()
             .enumerate()
             .map(|(i, p)| Hit { index: i, dist: p.dist(q) })
             .collect();
-        hits.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap());
+        hits.sort_by(|a, b| a.dist.partial_cmp(&b.dist).unwrap().then(a.index.cmp(&b.index)));
         hits.truncate(k);
         hits
+    }
+
+    fn assert_bitwise_eq(got: &[Hit], want: &[Hit], ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}: lengths differ");
+        for (g, w) in got.iter().zip(want) {
+            assert_eq!(g.index, w.index, "{ctx}: got {got:?} want {want:?}");
+            assert_eq!(g.dist.to_bits(), w.dist.to_bits(), "{ctx}: got {got:?} want {want:?}");
+        }
     }
 
     #[test]
@@ -172,15 +315,9 @@ mod tests {
         let mut rng = Rng::new(42);
         let points: Vec<StateVector> = (0..500).map(|_| random_state(&mut rng)).collect();
         let tree = KdTree::build(points.clone());
-        for _ in 0..50 {
+        for i in 0..50 {
             let q = random_state(&mut rng);
-            let got = tree.knn(&q, 5);
-            let want = brute(&points, &q, 5);
-            assert_eq!(got.len(), 5);
-            for (g, w) in got.iter().zip(&want) {
-                // Distances must agree (indices may tie-swap).
-                assert!((g.dist - w.dist).abs() < 1e-9, "got {g:?} want {w:?}");
-            }
+            assert_bitwise_eq(&tree.knn(&q, 5), &brute(&points, &q, 5), &format!("query {i}"));
         }
     }
 
@@ -207,70 +344,131 @@ mod tests {
         let tree = KdTree::build(vec![]);
         assert!(tree.knn(&StateVector([0.0; STATE_DIM]), 5).is_empty());
         assert!(tree.is_empty());
+        let mut out = Vec::new();
+        let mut offsets = Vec::new();
+        tree.knn_batch_into(&[StateVector([0.0; STATE_DIM])], 5, &mut out, &mut offsets);
+        assert!(out.is_empty());
+        assert_eq!(offsets, vec![0, 0]);
     }
 
-    /// The pre-optimization recursive search, kept as the traversal-order
-    /// reference: the explicit-stack iteration must match it bitwise,
-    /// including tie resolution.
-    fn recursive_search(
-        tree: &KdTree,
-        node: Option<&Node>,
+    /// The pre-flat-tree boxed-node build (stable axis sort) and recursive
+    /// search, kept as the reference: the flat-array build + explicit-stack
+    /// iteration must reproduce it bitwise. The search carries the same
+    /// (distance, case index) tie order as the production path.
+    struct RefNode {
+        point: usize,
+        axis: usize,
+        left: Option<Box<RefNode>>,
+        right: Option<Box<RefNode>>,
+    }
+
+    fn ref_build(points: &[StateVector], idx: &mut [usize], depth: usize) -> Option<Box<RefNode>> {
+        if idx.is_empty() {
+            return None;
+        }
+        let axis = depth % STATE_DIM;
+        // Stable sort on the axis value: ties keep index order, the same
+        // total order as the production build's explicit tie-break.
+        idx.sort_by(|&a, &b| points[a].0[axis].partial_cmp(&points[b].0[axis]).unwrap());
+        let mid = idx.len() / 2;
+        let point = idx[mid];
+        let (left, rest) = idx.split_at_mut(mid);
+        let right = &mut rest[1..];
+        Some(Box::new(RefNode {
+            point,
+            axis,
+            left: ref_build(points, left, depth + 1),
+            right: ref_build(points, right, depth + 1),
+        }))
+    }
+
+    fn ref_search(
+        points: &[StateVector],
+        node: Option<&RefNode>,
         query: &StateVector,
         k: usize,
         best: &mut Vec<Hit>,
     ) {
         let Some(n) = node else { return };
-        let d2 = tree.points[n.point].dist2(query);
-        let pos = best.partition_point(|h| h.dist <= d2);
+        let d = points[n.point].dist2(query).sqrt();
+        let pos = best.partition_point(|h| h.dist < d || (h.dist == d && h.index < n.point));
         if pos < k {
-            best.insert(pos, Hit { index: n.point, dist: d2 });
+            best.insert(pos, Hit { index: n.point, dist: d });
             if best.len() > k {
                 best.pop();
             }
         }
-        let diff = query.0[n.axis] - tree.points[n.point].0[n.axis];
+        let diff = query.0[n.axis] - points[n.point].0[n.axis];
         let (near, far) = if diff <= 0.0 {
             (n.left.as_deref(), n.right.as_deref())
         } else {
             (n.right.as_deref(), n.left.as_deref())
         };
-        recursive_search(tree, near, query, k, best);
+        ref_search(points, near, query, k, best);
         let worst = best.last().map(|h| h.dist).unwrap_or(f64::INFINITY);
-        if best.len() < k || diff * diff < worst {
-            recursive_search(tree, far, query, k, best);
+        if best.len() < k || diff.abs() <= worst {
+            ref_search(points, far, query, k, best);
         }
     }
 
-    fn recursive_knn(tree: &KdTree, query: &StateVector, k: usize) -> Vec<Hit> {
-        if k == 0 || tree.points.is_empty() {
+    fn recursive_knn(points: &[StateVector], query: &StateVector, k: usize) -> Vec<Hit> {
+        if k == 0 || points.is_empty() {
             return vec![];
         }
+        let mut idx: Vec<usize> = (0..points.len()).collect();
+        let root = ref_build(points, &mut idx, 0);
         let mut best: Vec<Hit> = Vec::with_capacity(k + 1);
-        recursive_search(tree, tree.root.as_deref(), query, k, &mut best);
-        for h in best.iter_mut() {
-            h.dist = h.dist.sqrt();
-        }
+        ref_search(points, root.as_deref(), query, k, &mut best);
         best
     }
 
     #[test]
-    fn iterative_search_matches_recursive() {
+    fn flat_tree_matches_recursive_reference() {
         let mut rng = Rng::new(0x5EED);
         for n in [1usize, 2, 3, 17, 200, 1000] {
             let points: Vec<StateVector> = (0..n).map(|_| random_state(&mut rng)).collect();
-            let tree = KdTree::build(points);
+            let tree = KdTree::build(points.clone());
             for _ in 0..25 {
                 let q = random_state(&mut rng);
                 for k in [1usize, 5, 16] {
                     let got = tree.knn(&q, k);
-                    let want = recursive_knn(&tree, &q, k);
-                    assert_eq!(got.len(), want.len(), "n={n} k={k}");
-                    for (g, w) in got.iter().zip(&want) {
-                        assert_eq!(g.index, w.index, "n={n} k={k}");
-                        assert_eq!(g.dist.to_bits(), w.dist.to_bits(), "n={n} k={k}");
-                    }
+                    let want = recursive_knn(&points, &q, k);
+                    assert_bitwise_eq(&got, &want, &format!("n={n} k={k}"));
                 }
             }
+        }
+    }
+
+    #[test]
+    fn duplicate_points_tie_break_by_index() {
+        // Every point identical: the k nearest are exactly indices 0..k.
+        let p = StateVector([0.25; STATE_DIM]);
+        let tree = KdTree::build(vec![p; 9]);
+        let hits = tree.knn(&p, 4);
+        assert_eq!(hits.iter().map(|h| h.index).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(hits.iter().all(|h| h.dist == 0.0));
+    }
+
+    #[test]
+    fn filtered_search_skips_tombstones_exactly() {
+        let mut rng = Rng::new(0xF1);
+        let points: Vec<StateVector> = (0..300).map(|_| grid_state(&mut rng)).collect();
+        let tree = KdTree::build(points.clone());
+        let mut out = Vec::new();
+        for trial in 0..20usize {
+            let q = grid_state(&mut rng);
+            // Drop every third point (offset by trial) from consideration.
+            let keep = |i: usize| i % 3 != trial % 3;
+            tree.knn_filtered_into(&q, 7, keep, &mut out);
+            let kept: Vec<StateVector> =
+                points.iter().enumerate().filter(|(i, _)| keep(*i)).map(|(_, p)| *p).collect();
+            let mut want = brute(&kept, &q, 7);
+            // Map compacted brute indices back to original indices.
+            let orig: Vec<usize> = (0..points.len()).filter(|&i| keep(i)).collect();
+            for h in want.iter_mut() {
+                h.index = orig[h.index];
+            }
+            assert_bitwise_eq(&out, &want, &format!("trial {trial}"));
         }
     }
 
@@ -305,5 +503,59 @@ mod tests {
         for w in hits.windows(2) {
             assert!(w[0].dist <= w[1].dist);
         }
+    }
+
+    /// Property: batched kNN == per-query kNN == brute force, across random
+    /// grid-valued point sets (dense exact-distance ties), k = 0, k > n, and
+    /// empty point sets included.
+    #[test]
+    fn property_batch_equals_single_equals_brute() {
+        check(
+            "knn_batch == knn == brute",
+            Config { cases: 96, seed: 0xD15C },
+            |rng| {
+                let n = rng.below(48);
+                let points: Vec<StateVector> = (0..n).map(|_| grid_state(rng)).collect();
+                let queries: Vec<StateVector> =
+                    (0..1 + rng.below(4)).map(|_| grid_state(rng)).collect();
+                let k = rng.below(n + 4); // covers 0, 1..n, and k > n
+                (points, queries, k)
+            },
+            |(points, queries, k)| {
+                let tree = KdTree::build(points.clone());
+                let mut out = Vec::new();
+                let mut offsets = Vec::new();
+                tree.knn_batch_into(queries, *k, &mut out, &mut offsets);
+                if offsets.len() != queries.len() + 1 {
+                    return Err(format!("offsets len {} != {}", offsets.len(), queries.len() + 1));
+                }
+                for (qi, q) in queries.iter().enumerate() {
+                    let seg = &out[offsets[qi]..offsets[qi + 1]];
+                    let single = tree.knn(q, *k);
+                    let want = brute(points, q, *k);
+                    if seg.len() != single.len() || single.len() != want.len() {
+                        return Err(format!(
+                            "query {qi}: lens batch={} single={} brute={}",
+                            seg.len(),
+                            single.len(),
+                            want.len()
+                        ));
+                    }
+                    for j in 0..want.len() {
+                        for (label, got) in [("batch", &seg[j]), ("single", &single[j])] {
+                            if got.index != want[j].index
+                                || got.dist.to_bits() != want[j].dist.to_bits()
+                            {
+                                return Err(format!(
+                                    "query {qi} hit {j} ({label}): got {got:?} want {:?}",
+                                    want[j]
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

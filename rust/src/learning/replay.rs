@@ -5,11 +5,20 @@
 //! the effects the prototype would see (forced SLO runs, checkpoint costs).
 //! As in the paper's deployment (§6.1), the historical trace is replayed
 //! with several start-time offsets to densify the knowledge base.
+//!
+//! §Perf: the per-offset replays are independent oracle simulations, so
+//! [`learn`] fans them out on the sweep engine's
+//! [`par_map`](crate::experiments::sweep::par_map) thread pool and merges
+//! the recorded cases **in offset order** — the learned knowledge base is
+//! bitwise identical for any thread count (the continuous-learning loops
+//! in `experiments/yearlong.rs` re-learn every window, so this sits on
+//! their critical path).
 
 use crate::carbon::forecast::Forecaster;
 use crate::carbon::trace::CarbonTrace;
 use crate::cluster::energy::EnergyModel;
 use crate::cluster::sim::Simulator;
+use crate::experiments::sweep::{auto_threads, par_map};
 use crate::learning::kb::{Case, KnowledgeBase};
 use crate::learning::state::StateVector;
 use crate::sched::oracle::Oracle;
@@ -24,31 +33,39 @@ pub struct LearnConfig {
     /// trace by 24 h, exposing the oracle to different job/carbon alignments.
     pub offsets: usize,
     pub energy: EnergyModel,
+    /// Worker threads for the per-offset replays (0 = one per core). The
+    /// result is identical for any value; this only trades wall time.
+    pub threads: usize,
 }
 
 /// Run the learning phase over one historical window.
 pub fn learn(jobs: &[Job], trace: &CarbonTrace, cfg: &LearnConfig) -> KnowledgeBase {
-    let mut kb = KnowledgeBase::new();
-    for o in 0..cfg.offsets.max(1) {
-        let shift = o * 24;
-        if shift + 48 >= trace.len() {
-            break; // not enough trace left for a meaningful replay
-        }
+    // Offsets that leave enough trace behind for a meaningful replay.
+    let shifts: Vec<usize> = (0..cfg.offsets.max(1))
+        .map(|o| o * 24)
+        .take_while(|&shift| shift + 48 < trace.len())
+        .collect();
+    let threads = if cfg.threads == 0 { auto_threads() } else { cfg.threads };
+    let recorded: Vec<Vec<Case>> = par_map(threads, &shifts, |&shift, _| {
         let shifted = trace.slice(shift, trace.len() - shift);
-        record_replay(jobs, &shifted, cfg, &mut kb);
+        record_replay(jobs, &shifted, cfg)
+    });
+    let mut cases = Vec::with_capacity(recorded.iter().map(Vec::len).sum());
+    for r in recorded {
+        cases.extend(r);
     }
-    kb.rebuild();
-    kb
+    KnowledgeBase::from_cases(cases)
 }
 
-/// Replay one oracle run and append its per-slot cases.
-fn record_replay(jobs: &[Job], trace: &CarbonTrace, cfg: &LearnConfig, kb: &mut KnowledgeBase) {
+/// Replay one oracle run and return its per-slot cases.
+fn record_replay(jobs: &[Job], trace: &CarbonTrace, cfg: &LearnConfig) -> Vec<Case> {
     let horizon = jobs.iter().map(|j| j.arrival).max().unwrap_or(0) + 24;
     let forecaster = Forecaster::perfect(trace.clone());
     let mut oracle = Oracle::new(jobs, trace, cfg.max_capacity);
     let sim = Simulator::new(cfg.max_capacity, cfg.energy.clone(), cfg.num_queues, horizon);
     let result = sim.run(jobs, &forecaster, &mut oracle);
 
+    let mut cases = Vec::with_capacity(result.slots.len());
     for rec in &result.slots {
         let state = StateVector::from_raw(
             rec.ci,
@@ -57,8 +74,9 @@ fn record_replay(jobs: &[Job], trace: &CarbonTrace, cfg: &LearnConfig, kb: &mut 
             &rec.queue_lengths,
             rec.mean_elasticity,
         );
-        kb.push(Case { recorded_at: rec.t, state, capacity: rec.used, rho: rec.rho });
+        cases.push(Case { recorded_at: rec.t, state, capacity: rec.used, rho: rec.rho });
     }
+    cases
 }
 
 #[cfg(test)]
@@ -75,6 +93,7 @@ mod tests {
             num_queues: 3,
             offsets: 2,
             energy: EnergyModel::for_hardware(Hardware::Cpu),
+            threads: 0,
         }
     }
 
@@ -105,6 +124,29 @@ mod tests {
         let kb1 = learn(&jobs, &trace, &one);
         let kb3 = learn(&jobs, &trace, &three);
         assert!(kb3.len() > kb1.len() * 2, "{} vs {}", kb3.len(), kb1.len());
+    }
+
+    #[test]
+    fn parallel_learning_is_thread_count_invariant() {
+        // Any worker count must produce the same knowledge base, case for
+        // case, in the same (offset-major) order.
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 16;
+        let jobs = tracegen::generate(&cfg, 96, 11);
+        let trace = synthesize(Region::Ontario, 500, 12);
+        let mut serial = learn_config();
+        serial.offsets = 4;
+        serial.threads = 1;
+        let mut parallel = serial.clone();
+        parallel.threads = 4;
+        let kb1 = learn(&jobs, &trace, &serial);
+        let kb4 = learn(&jobs, &trace, &parallel);
+        assert_eq!(kb1.len(), kb4.len());
+        for (a, b) in kb1.cases().iter().zip(kb4.cases()) {
+            assert_eq!(a, b);
+        }
+        // And the fitted scalers (hence every future match) agree bitwise.
+        assert_eq!(kb1.scaler(), kb4.scaler());
     }
 
     #[test]

@@ -81,14 +81,18 @@ impl StateVector {
         self.0.iter().map(|v| format!("{v:.6}")).collect::<Vec<_>>().join(";")
     }
 
-    /// Parse the [`to_csv_cell`] encoding.
+    /// Parse the [`to_csv_cell`] encoding. Single pass, no intermediate
+    /// vector — this runs once per line when loading trace-catalog-sized
+    /// knowledge bases from CSV.
     pub fn from_csv_cell(s: &str) -> Option<StateVector> {
-        let parts: Vec<f64> = s.split(';').map(|p| p.trim().parse().ok()).collect::<Option<_>>()?;
-        if parts.len() != STATE_DIM {
-            return None;
-        }
         let mut f = [0.0; STATE_DIM];
-        f.copy_from_slice(&parts);
+        let mut parts = s.split(';');
+        for v in f.iter_mut() {
+            *v = parts.next()?.trim().parse().ok()?;
+        }
+        if parts.next().is_some() {
+            return None; // more than STATE_DIM features
+        }
         Some(StateVector(f))
     }
 }

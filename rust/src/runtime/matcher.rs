@@ -33,7 +33,9 @@ pub struct PjrtMatcher {
 
 impl PjrtMatcher {
     /// Build from a knowledge base. If the KB exceeds the compiled case
-    /// count, the most recent cases win (consistent with aging).
+    /// count, the most recent cases win (consistent with aging). The KB
+    /// should be compacted (`rebuild`) first: a lazily-maintained KB may
+    /// still carry tombstoned cases, which this upload cannot filter.
     pub fn from_kb(engine: &Engine, kb: &KnowledgeBase) -> Result<PjrtMatcher, RuntimeError> {
         let meta = engine.meta();
         assert_eq!(
@@ -81,6 +83,10 @@ impl PjrtMatcher {
 }
 
 impl Matcher for PjrtMatcher {
+    // `top_k_into` / `top_k_batch_into` use the trait defaults: the match
+    // artifact is compiled for a single `[1, F]` query, so a batch is k
+    // sequential executions either way; the native KD-tree backend is the
+    // one with a batch-native path.
     fn top_k(&self, query: &StateVector, k: usize) -> Vec<Neighbor> {
         let z = self.scaler.apply(query);
         let q: Vec<f32> = z.as_array().iter().map(|&v| v as f32).collect();

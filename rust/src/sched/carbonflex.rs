@@ -150,6 +150,20 @@ impl<M: Matcher> CarbonFlex<M> {
         }
     }
 
+    /// Match a batch of states against the knowledge base in one call
+    /// (`knn_k` neighbours each): neighbours for state `i` land in
+    /// `out[offsets[i]..offsets[i + 1]]`. One scratch set serves the whole
+    /// batch (`Matcher::top_k_batch_into`); the per-slot decide path issues
+    /// the same queries one at a time through `Matcher::top_k_into`.
+    pub fn match_batch(
+        &mut self,
+        states: &[StateVector],
+        out: &mut Vec<Neighbor>,
+        offsets: &mut Vec<usize>,
+    ) {
+        self.matcher.top_k_batch_into(states, self.params.knn_k, out, offsets);
+    }
+
     /// Build the Table 2 state for the current slot.
     fn state_of(ctx: &SlotCtx) -> StateVector {
         let ci = ctx.forecaster.predict(ctx.t);
@@ -232,7 +246,9 @@ impl<M: Matcher> CarbonFlex<M> {
         let rhos = &mut self.rhos;
         rhos.clear();
         rhos.extend(self.neighbors.iter().map(|m| m.rho));
-        rhos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Unstable sort: equal thresholds are interchangeable, and
+        // `sort_by`'s merge buffer would allocate on the hot path.
+        rhos.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
         match self.params.rho_agg {
             RhoAgg::Median => rhos[rhos.len() / 2],
             RhoAgg::Max => rhos[rhos.len() - 1],
@@ -257,7 +273,10 @@ impl<M: Matcher> CarbonFlex<M> {
                 entries.push((p, v.slack_left(ctx.t), i, k));
             }
         }
-        entries.sort_by(|a, b| {
+        // Unstable sort is order-identical here — the (view index, k) tail
+        // of the key makes every entry distinct — and keeps the steady-state
+        // decide loop allocation-free (`sort_by` allocates a merge buffer).
+        entries.sort_unstable_by(|a, b| {
             b.0.partial_cmp(&a.0)
                 .unwrap()
                 .then(a.1.partial_cmp(&b.1).unwrap())
@@ -493,6 +512,30 @@ mod tests {
         assert_eq!(RhoAgg::from_key(Some("median")), RhoAgg::Median);
         assert_eq!(RhoAgg::from_key(Some("max")), RhoAgg::Max);
         assert_eq!(RhoAgg::from_key(Some("nonsense")), RhoAgg::Min);
+    }
+
+    #[test]
+    fn match_batch_segments_equal_per_slot_queries() {
+        let mut cf = CarbonFlex::new(kb_with(2, 9), CarbonFlexParams::default());
+        let states: Vec<StateVector> = [60.0, 500.0, 250.0, 60.0]
+            .iter()
+            .map(|&ci| StateVector::from_raw(ci, 0.0, 0.0, &[2, 0, 0], 0.7))
+            .collect();
+        let mut out = Vec::new();
+        let mut offsets = Vec::new();
+        cf.match_batch(&states, &mut out, &mut offsets);
+        assert_eq!(offsets.len(), states.len() + 1);
+        let mut single = Vec::new();
+        for (i, s) in states.iter().enumerate() {
+            cf.matcher.top_k_into(s, cf.params.knn_k, &mut single);
+            let seg = &out[offsets[i]..offsets[i + 1]];
+            assert_eq!(seg.len(), single.len(), "state {i}");
+            for (a, b) in seg.iter().zip(&single) {
+                assert_eq!(a.dist.to_bits(), b.dist.to_bits(), "state {i}");
+                assert_eq!(a.capacity, b.capacity);
+                assert_eq!(a.rho.to_bits(), b.rho.to_bits());
+            }
+        }
     }
 
     #[test]

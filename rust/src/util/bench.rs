@@ -98,6 +98,44 @@ pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchRes
     bench(name, (iters / 10).max(1), iters, f)
 }
 
+/// Chunked variant for spiky amortized workloads (e.g. sliding-window
+/// maintenance where most iterations are cheap tombstoning and an
+/// occasional one pays a full index rebuild): times blocks of `chunk`
+/// iterations and reports **per-iteration** statistics over the block
+/// means, so `mean` is the amortized cost and σ reflects block-to-block
+/// drift rather than the individual spikes.
+pub fn bench_chunked<F: FnMut()>(
+    name: &str,
+    budget: Duration,
+    chunk: u64,
+    mut f: F,
+) -> BenchResult {
+    let chunk = chunk.max(1);
+    // One calibration block to estimate per-chunk cost.
+    let t0 = Instant::now();
+    for _ in 0..chunk {
+        f();
+    }
+    let per_chunk = t0.elapsed().max(Duration::from_nanos(100));
+    let chunks = (budget.as_secs_f64() / per_chunk.as_secs_f64()).clamp(3.0, 1000.0) as u64;
+    let mut acc = Online::new();
+    for _ in 0..chunks {
+        let t = Instant::now();
+        for _ in 0..chunk {
+            f();
+        }
+        acc.push(t.elapsed().as_secs_f64() / chunk as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: acc.count() * chunk,
+        mean: Duration::from_secs_f64(acc.mean()),
+        std_dev: Duration::from_secs_f64(acc.std_dev()),
+        min: Duration::from_secs_f64(acc.min()),
+        max: Duration::from_secs_f64(acc.max()),
+    }
+}
+
 /// Fixed-width table printer for paper-style result rows.
 pub struct Table {
     headers: Vec<String>,
@@ -173,6 +211,17 @@ mod tests {
         assert_eq!(j.get("iters").and_then(Json::as_usize), Some(5));
         assert!(j.get("mean_seconds").and_then(Json::as_f64).is_some());
         assert!(j.get("min_seconds").and_then(Json::as_f64).is_some());
+    }
+
+    #[test]
+    fn bench_chunked_reports_per_iteration_cost() {
+        let mut n = 0u64;
+        let r = bench_chunked("chunked", Duration::from_millis(5), 8, || n += 1);
+        assert_eq!(r.iters % 8, 0, "iters {} not a whole number of chunks", r.iters);
+        assert!(r.iters >= 3 * 8);
+        // n counts the calibration chunk too.
+        assert_eq!(n, r.iters + 8);
+        assert!(r.min <= r.mean && r.mean <= r.max);
     }
 
     #[test]

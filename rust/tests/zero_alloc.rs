@@ -1,10 +1,14 @@
 //! The §Perf invariant: steady-state `ClusterEngine::step` performs no heap
-//! allocation. A counting global allocator (this test binary only) snapshots
-//! the allocation count after a warmup phase and asserts it does not move
-//! while the engine keeps stepping a live cluster.
+//! allocation — first with a minimal base-scale policy (the engine floor),
+//! then with the full CarbonFlex policy over a learned knowledge base, so
+//! the flat KD-tree match, the neighbour/entry/ρ buffers, and the Alg. 2/3
+//! loop are all inside the measured window. A counting global allocator
+//! (this test binary only) snapshots the allocation count after a warmup
+//! phase and asserts it does not move while the engine keeps stepping a
+//! live cluster.
 //!
 //! Kept as a single `#[test]` so no concurrent test thread can allocate
-//! inside the measured window.
+//! inside the measured windows.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -14,6 +18,9 @@ use carbonflex::carbon::trace::CarbonTrace;
 use carbonflex::cluster::energy::EnergyModel;
 use carbonflex::cluster::sim::{ClusterEngine, Simulator};
 use carbonflex::config::Hardware;
+use carbonflex::learning::kb::{Case, KnowledgeBase};
+use carbonflex::learning::state::StateVector;
+use carbonflex::sched::carbonflex::{CarbonFlex, CarbonFlexParams};
 use carbonflex::sched::{Decision, Policy, SlotCtx};
 use carbonflex::workload::job::Job;
 use carbonflex::workload::profile::ScalingProfile;
@@ -116,4 +123,66 @@ fn steady_state_step_does_not_allocate() {
     let slots = engine.slots();
     assert_eq!(slots.len(), WARMUP + MEASURED);
     assert!(slots[WARMUP..].iter().all(|s| s.used == JOBS), "cluster idled during measurement");
+
+    // --- Phase 2: the full CarbonFlex policy over a learned KB. Each slot
+    // builds the Table 2 state, runs a k-NN match on the flat KD-tree into
+    // the reusable hit/neighbour buffers, and executes Alg. 2/3 over the
+    // recycled entry/granted/ρ buffers — none of which may allocate once
+    // warm. ---
+    let mut kb = KnowledgeBase::new();
+    for i in 0..512usize {
+        kb.push(Case {
+            recorded_at: i,
+            state: StateVector::from_raw(
+                (i % 97) as f64 * 7.0,
+                ((i % 13) as f64 - 6.0) * 10.0,
+                (i % 11) as f64 / 10.0,
+                &[i % 9, (i / 3) % 7, (i / 7) % 5],
+                (i % 10) as f64 / 10.0,
+            ),
+            capacity: (i * 37) % 64,
+            // ρ = 0 keeps the Alg. 3 candidate set slot-invariant, so the
+            // entry buffer reaches its steady capacity during warmup.
+            rho: 0.0,
+        });
+    }
+    kb.rebuild();
+    assert_eq!(kb.pending(), 0, "tree must cover every case before measuring");
+
+    // A varying trace so the matched neighbours differ slot to slot.
+    let hourly: Vec<f64> =
+        (0..WARMUP + MEASURED + 32).map(|t| 250.0 + 200.0 * ((t % 24) as f64 / 24.0)).collect();
+    let forecaster = Forecaster::perfect(CarbonTrace::new("varying", hourly));
+    let sim = Simulator::new(64, EnergyModel::for_hardware(Hardware::Cpu), 3, WARMUP + MEASURED);
+    let mut engine = ClusterEngine::new(sim);
+    for i in 0..JOBS {
+        engine.add_job(long_job(i, i));
+    }
+    engine.reserve(WARMUP + MEASURED + 8);
+    let mut policy = CarbonFlex::new(kb, CarbonFlexParams::default());
+
+    for t in 0..WARMUP {
+        engine.step(t, &forecaster, &mut policy);
+    }
+
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for t in WARMUP..WARMUP + MEASURED {
+        engine.step(t, &forecaster, &mut policy);
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state CarbonFlex step() allocated {} time(s) over {MEASURED} slots",
+        after - before
+    );
+
+    // The measured window exercised the match + schedule path for real.
+    let slots = engine.slots();
+    assert_eq!(slots.len(), WARMUP + MEASURED);
+    assert!(
+        slots[WARMUP..].iter().any(|s| s.used > 0),
+        "CarbonFlex scheduled nothing during measurement"
+    );
 }
