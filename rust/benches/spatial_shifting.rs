@@ -1,13 +1,36 @@
 //! Bench: spatial-shifting extension — geo-dispatch across three regions,
 //! alone and composed with CarbonFlex's temporal/elastic scheduling.
+//!
+//! Since PR 5 multi-region deployments are first-class sweep cells: the
+//! comparison table is one `SweepSpec` grid over a `+`-joined region set ×
+//! the dispatch axis × local policies (`print_spatial`), and the second
+//! grid below sweeps the same set across seeds to show run-to-run spread —
+//! all on the parallel sweep engine.
 
 use std::time::Instant;
 
 use carbonflex::config::ExperimentConfig;
 use carbonflex::experiments::spatial::print_spatial;
+use carbonflex::experiments::sweep::{self, SweepRunner, SweepSpec};
+use carbonflex::experiments::DispatchStrategy;
+use carbonflex::sched::PolicyKind;
 
 fn main() {
     let t0 = Instant::now();
-    print_spatial(&ExperimentConfig::default());
+    let cfg = ExperimentConfig::default();
+    print_spatial(&cfg);
+
+    // The same deployment as a seeds × dispatch grid, straight on the
+    // sweep axes (every dispatch strategy shares one set of regional
+    // preparations per seed).
+    println!("\n== Spatial cells on the sweep grid (2 seeds x 2 dispatchers) ==");
+    let mut spec = SweepSpec::new(cfg);
+    spec.regions = vec!["south-australia+california+great-britain".into()];
+    spec.dispatchers = vec![DispatchStrategy::RoundRobin, DispatchStrategy::LowestWindowCi];
+    spec.seeds = vec![42, 43];
+    spec.policies = vec![PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex];
+    let rows = SweepRunner::auto().run(&spec);
+    sweep::print_table(&rows);
+
     println!("\n[bench spatial_shifting] wall time: {:.2?}", t0.elapsed());
 }

@@ -1,6 +1,11 @@
 //! Bench: year-long continuous-learning evaluation (paper §5's
 //! CarbonFlex-Simulator mode) — 8 consecutive weeks with weekly relearning
 //! and knowledge-base aging (4-week rolling window).
+//!
+//! Since PR 5 the weeks are first-class sweep cells on the sweep engine's
+//! `weeks` axis: the sequential learning chain runs once during sweep
+//! preparation and each week's three policy runs execute in parallel
+//! (`run_yearlong` is a thin adapter over that grid).
 
 use std::time::Instant;
 

@@ -362,6 +362,18 @@ impl ExperimentConfig {
         self.queues.last().map(|q| q.delay_hours).unwrap_or(0.0)
     }
 
+    /// This config with the Fig. 13 distribution-shift knobs reset. The
+    /// learning history is always generated at the unshifted scale (the
+    /// shift applies to the evaluation window only), so a shifted config
+    /// measures the paper's learn/eval mismatch rather than re-learning on
+    /// the shifted distribution.
+    pub fn unshifted_history(&self) -> ExperimentConfig {
+        let mut cfg = self.clone();
+        cfg.arrival_scale = 1.0;
+        cfg.length_scale = 1.0;
+        cfg
+    }
+
     /// Index of the queue a job of this length lands in.
     pub fn queue_for_length(&self, len_hours: f64) -> usize {
         for (i, q) in self.queues.iter().enumerate() {

@@ -1,0 +1,449 @@
+//! Composite sweep-cell executors: the machinery behind the sweep engine's
+//! spatial (multi-region) and week-window (continuous-learning) grid axes.
+//!
+//! The sweep engine treats every grid cell as "prepared state + one
+//! simulation". For plain cells that is [`PreparedExperiment`]; this module
+//! supplies the two composite flavors:
+//!
+//! - **Spatial cells** ([`SpatialPrep`] + [`run_spatial_cell`]): one cluster
+//!   per region of a `+`-joined region set, a geo-dispatcher routing each
+//!   arrival by [`DispatchStrategy`], per-region carbon traces and (for
+//!   CarbonFlex) per-region knowledge bases. The per-slot dispatch loop
+//!   that used to live in `experiments/spatial.rs::run_spatial_prepared`
+//!   now lives here, invoked once per sweep cell.
+//! - **Week-window cells** ([`WeekCell`] + [`prepare_week_chain`]): the
+//!   paper's year-long continuous-learning mode (§5). Weeks at the same
+//!   grid point form a sequential chain — each week learns on the trailing
+//!   history window, pushes into a carried knowledge base, and slides the
+//!   rolling window with [`KnowledgeBase::advance_window`] — and every
+//!   *requested* week gets an immutable [`PreparedExperiment`] snapshot, so
+//!   the policy runs of different weeks still execute in parallel.
+//!
+//! Both executors are bitwise-faithful ports of the bespoke loops they
+//! replace; `experiments/spatial.rs` and `experiments/yearlong.rs` keep the
+//! legacy implementations alive in-test as references.
+
+use std::sync::Arc;
+
+use crate::carbon::forecast::Forecaster;
+use crate::carbon::synth::{self, Region};
+use crate::cluster::energy::EnergyModel;
+use crate::cluster::sim::{ClusterEngine, SimResult, Simulator};
+use crate::config::ExperimentConfig;
+use crate::experiments::runner::PreparedExperiment;
+use crate::experiments::sweep::{auto_threads, par_map};
+use crate::learning::kb::{Case, KnowledgeBase};
+use crate::learning::replay::{learn, LearnConfig};
+use crate::sched::{Policy, PolicyKind};
+use crate::workload::job::Job;
+use crate::workload::tracegen;
+
+/// How the geo-dispatcher picks a region for an arriving job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchStrategy {
+    /// Round-robin — the carbon-agnostic baseline for spatial decisions.
+    RoundRobin,
+    /// Route to the region with the lowest *current* carbon intensity.
+    LowestCurrentCi,
+    /// Route to the region whose forecast is cleanest over the job's
+    /// expected window (arrival → deadline), weighted by base length.
+    LowestWindowCi,
+}
+
+impl DispatchStrategy {
+    /// Every strategy, in the axis' canonical order.
+    pub const ALL: [DispatchStrategy; 3] = [
+        DispatchStrategy::RoundRobin,
+        DispatchStrategy::LowestCurrentCi,
+        DispatchStrategy::LowestWindowCi,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DispatchStrategy::RoundRobin => "round-robin",
+            DispatchStrategy::LowestCurrentCi => "lowest-current-CI",
+            DispatchStrategy::LowestWindowCi => "lowest-window-CI",
+        }
+    }
+
+    /// Parse a strategy key (the `as_str` labels plus short CLI aliases).
+    pub fn parse(s: &str) -> Option<DispatchStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "roundrobin" | "rr" => Some(DispatchStrategy::RoundRobin),
+            "lowest-current-ci" | "current" => Some(DispatchStrategy::LowestCurrentCi),
+            "lowest-window-ci" | "window" => Some(DispatchStrategy::LowestWindowCi),
+            _ => None,
+        }
+    }
+}
+
+/// Split a `+`-joined region-set key ("south-australia+ontario") into
+/// regions; panics on unknown keys (axis entries are validated up front by
+/// the CLI, so a bad key here is a programming error).
+pub fn parse_region_set(set: &str) -> Vec<Region> {
+    set.split('+')
+        .map(|key| {
+            Region::parse(key.trim())
+                .unwrap_or_else(|| panic!("unknown region '{key}' in set '{set}'"))
+        })
+        .collect()
+}
+
+/// Prepared state shared by every cell of one spatial grid point (all
+/// dispatch strategies and local policies at that point): one
+/// [`PreparedExperiment`] per region, each with `cfg.capacity /
+/// regions.len()` servers, its own carbon trace and — for CarbonFlex — its
+/// own locally learned knowledge base.
+pub struct SpatialPrep {
+    pub regions: Vec<Region>,
+    pub preps: Vec<Arc<PreparedExperiment>>,
+}
+
+/// Prepare one regional experiment per region. Preparation does not depend
+/// on the dispatch strategy or local policy, so the sweep engine shares one
+/// `SpatialPrep` across every cell of the point; regions prepare in
+/// parallel.
+pub fn prepare_spatial(cfg: &ExperimentConfig, regions: &[Region]) -> SpatialPrep {
+    assert!(!regions.is_empty());
+    let per_region_capacity = (cfg.capacity / regions.len()).max(1);
+    let preps = par_map(auto_threads(), regions, |&region, _| {
+        let mut rcfg = cfg.clone();
+        rcfg.region = region.key().to_string();
+        rcfg.capacity = per_region_capacity;
+        Arc::new(PreparedExperiment::prepare(&rcfg))
+    });
+    SpatialPrep { regions: regions.to_vec(), preps }
+}
+
+/// One regional cluster: engine + forecaster + local policy.
+struct RegionalCluster {
+    engine: ClusterEngine,
+    forecaster: Forecaster,
+    policy: Box<dyn Policy>,
+    next_id: usize,
+}
+
+/// Execute one spatial sweep cell: dispatch one shared arrival stream
+/// across the prepared regional clusters, step them in lockstep, and
+/// aggregate. Returns the combined [`SimResult`] (region-major slot/outcome
+/// concatenation; metric sums in region order, matching the legacy
+/// `run_spatial_prepared` fold expressions bit for bit) plus the number of
+/// jobs routed to each region.
+pub fn run_spatial_cell(
+    cfg: &ExperimentConfig,
+    sp: &SpatialPrep,
+    strategy: DispatchStrategy,
+    local_policy: PolicyKind,
+) -> (SimResult, Vec<usize>) {
+    assert!(!sp.preps.is_empty());
+    let horizon = cfg.horizon_hours;
+    let energy = EnergyModel::for_hardware(cfg.hardware);
+
+    // Build the regional clusters over the shared prepared state.
+    let mut clusters: Vec<RegionalCluster> = sp
+        .preps
+        .iter()
+        .map(|prep| {
+            let policy: Box<dyn Policy> = prep.build_policy(local_policy);
+            let sim =
+                Simulator::new(prep.cfg.capacity, energy.clone(), cfg.queues.len(), horizon);
+            RegionalCluster {
+                engine: ClusterEngine::new(sim),
+                forecaster: Forecaster::perfect(prep.eval_trace.clone()),
+                policy,
+                next_id: 0,
+            }
+        })
+        .collect();
+
+    // One global arrival stream sized for the aggregate capacity.
+    let jobs = tracegen::generate(cfg, horizon, cfg.seed ^ 0x5EA7);
+    let mut jobs_per_region = vec![0usize; sp.preps.len()];
+    let mut rr = 0usize;
+
+    // Dispatch + step in lockstep.
+    let mut by_arrival: Vec<&Job> = jobs.iter().collect();
+    by_arrival.sort_by_key(|j| j.arrival);
+    let mut next_job = 0usize;
+    let last_arrival = by_arrival.last().map(|j| j.arrival).unwrap_or(0);
+    let t_end = last_arrival + horizon + 4096;
+
+    for t in 0..t_end {
+        // Route this slot's arrivals.
+        while next_job < by_arrival.len() && by_arrival[next_job].arrival == t {
+            let job = by_arrival[next_job];
+            let r = match strategy {
+                DispatchStrategy::RoundRobin => {
+                    rr = (rr + 1) % clusters.len();
+                    rr
+                }
+                DispatchStrategy::LowestCurrentCi => clusters
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| {
+                        a.forecaster.predict(t).partial_cmp(&b.forecaster.predict(t)).unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap(),
+                DispatchStrategy::LowestWindowCi => {
+                    let window = (job.length_hours + job.slack_hours).ceil() as usize;
+                    clusters
+                        .iter()
+                        .enumerate()
+                        .min_by(|(_, a), (_, b)| {
+                            let ma = mean_of(&a.forecaster.predict_window(t, window));
+                            let mb = mean_of(&b.forecaster.predict_window(t, window));
+                            ma.partial_cmp(&mb).unwrap()
+                        })
+                        .map(|(i, _)| i)
+                        .unwrap()
+                }
+            };
+            let c = &mut clusters[r];
+            // Re-id within the destination cluster (engines need dense ids).
+            let local = Job { id: c.next_id, arrival: t, ..job.clone() };
+            c.next_id += 1;
+            c.engine.add_job(local);
+            jobs_per_region[r] += 1;
+            next_job += 1;
+        }
+        // Advance every region one slot.
+        let mut any_pending = next_job < by_arrival.len();
+        for c in clusters.iter_mut() {
+            if c.engine.pending_jobs() > 0 {
+                c.engine.step(t, &c.forecaster, c.policy.as_mut());
+                any_pending = true;
+            }
+        }
+        if !any_pending {
+            break;
+        }
+    }
+
+    let per_region: Vec<SimResult> =
+        clusters.into_iter().map(|c| c.engine.finish("regional")).collect();
+    let result = aggregate_regional(per_region, sp, local_policy.as_str());
+    (result, jobs_per_region)
+}
+
+/// Fold per-region results into one cell result, in region order. The
+/// metric sums use the exact fold expressions of the legacy
+/// `run_spatial_prepared` aggregation (carbon/completed/unfinished sums,
+/// completed-weighted mean delay), so the values are bitwise identical;
+/// p95 delay takes the per-region maximum and `peak_allocated` the sum of
+/// per-region peaks (coarse cluster-of-clusters aggregates). Slot records
+/// and job outcomes concatenate region-major so the cell fingerprint pins
+/// every region's full trajectory.
+fn aggregate_regional(per_region: Vec<SimResult>, sp: &SpatialPrep, policy: &str) -> SimResult {
+    let metrics: Vec<&crate::cluster::metrics::RunMetrics> =
+        per_region.iter().map(|r| &r.metrics).collect();
+    let completed: usize = metrics.iter().map(|m| m.completed).sum();
+    let delay_weighted: f64 =
+        metrics.iter().map(|m| m.mean_delay_hours * m.completed as f64).sum();
+    let total_capacity: f64 = sp.preps.iter().map(|p| p.cfg.capacity as f64).sum();
+    let util_weighted: f64 = metrics
+        .iter()
+        .zip(&sp.preps)
+        .map(|(m, p)| m.mean_utilization * p.cfg.capacity as f64)
+        .sum();
+    let agg = crate::cluster::metrics::RunMetrics {
+        policy: policy.to_string(),
+        carbon_g: metrics.iter().map(|m| m.carbon_g).sum(),
+        energy_kwh: metrics.iter().map(|m| m.energy_kwh).sum(),
+        completed,
+        unfinished: metrics.iter().map(|m| m.unfinished).sum(),
+        mean_delay_hours: if completed == 0 { 0.0 } else { delay_weighted / completed as f64 },
+        p95_delay_hours: metrics.iter().map(|m| m.p95_delay_hours).fold(0.0, f64::max),
+        violations: metrics.iter().map(|m| m.violations).sum(),
+        mean_utilization: if total_capacity > 0.0 { util_weighted / total_capacity } else { 0.0 },
+        peak_allocated: metrics.iter().map(|m| m.peak_allocated).sum(),
+        total_rescales: metrics.iter().map(|m| m.total_rescales).sum(),
+        makespan: metrics.iter().map(|m| m.makespan).max().unwrap_or(0),
+    };
+    let mut outcomes = Vec::new();
+    let mut slots = Vec::new();
+    let mut overhead_energy_kwh = 0.0;
+    let mut overhead_carbon_g = 0.0;
+    for r in per_region {
+        outcomes.extend(r.outcomes);
+        slots.extend(r.slots);
+        overhead_energy_kwh += r.overhead_energy_kwh;
+        overhead_carbon_g += r.overhead_carbon_g;
+    }
+    SimResult { metrics: agg, outcomes, slots, overhead_energy_kwh, overhead_carbon_g }
+}
+
+fn mean_of(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// One prepared week-window cell: an immutable snapshot of the continuous
+/// learning chain at week `week`, ready for parallel policy runs.
+pub struct WeekCell {
+    pub week: usize,
+    /// Mean CI of the week's evaluation trace (seasonality indicator).
+    pub mean_ci: f64,
+    /// Live (non-tombstoned) knowledge-base cases after the window slide.
+    pub kb_live: usize,
+    /// The week's prepared experiment: 168 h evaluation window (+ drain
+    /// week), trailing learning history, and the carried knowledge base
+    /// pre-seeded (a memcpy snapshot — tombstones stay filtered at match
+    /// time, exactly like the legacy loop's per-week `kb.clone()`).
+    pub prep: PreparedExperiment,
+}
+
+/// Walk the continuous-learning chain and snapshot every requested week.
+///
+/// The chain is inherently sequential — each week's learning feeds the
+/// next — so it walks weeks `0..=max(weeks)` even when only a subset is
+/// requested: a cell's knowledge base always reflects the full history up
+/// to its week, which makes a single-week sweep bitwise identical to the
+/// corresponding week of a full run (the cross-scenario invariant the
+/// yearlong equivalence tests pin).
+///
+/// Faithful port of the legacy `run_yearlong` learning loop: same year
+/// synthesis, the same per-week job seeds (`seed ^ week<<8 ^ 0x1157` /
+/// `^ 0xE7A1`), absolute-time case stamping, and an
+/// [`advance_window`](KnowledgeBase::advance_window) slide before each
+/// evaluation week. The learning history is generated with the
+/// distribution-shift knobs reset (see
+/// [`ExperimentConfig::unshifted_history`]), matching the Fig. 13 fidelity
+/// fix in `PreparedExperiment::prepare`.
+///
+/// `learn_kb = false` skips the oracle-replay learning passes and window
+/// slides entirely (the chain's dominant cost) — the sweep runner passes it
+/// when no requested policy reads the knowledge base; such cells report
+/// `kb_live == 0`.
+pub fn prepare_week_chain(
+    cfg: &ExperimentConfig,
+    weeks: &[usize],
+    aging_window_hours: usize,
+    learn_kb: bool,
+) -> Vec<WeekCell> {
+    assert!(!weeks.is_empty());
+    let region = Region::parse(&cfg.region)
+        .unwrap_or_else(|| panic!("unknown region '{}'", cfg.region));
+    let max_week = *weeks.iter().max().unwrap();
+    let total_hours = cfg.history_hours + (max_week + 1) * 168 + 336;
+    let year = synth::synthesize(region, total_hours.max(8760), cfg.seed);
+    let energy = EnergyModel::for_hardware(cfg.hardware);
+    let hist_cfg = cfg.unshifted_history();
+
+    let mut kb = KnowledgeBase::new();
+    let mut cells = Vec::with_capacity(weeks.len());
+    for week in 0..=max_week {
+        let eval_start = cfg.history_hours + week * 168;
+        let hist_start = eval_start - cfg.history_hours;
+
+        // --- Learning phase on the trailing window, then age the KB ---
+        let hist_trace = year.slice(hist_start, cfg.history_hours);
+        let week_seed = cfg.seed ^ (week as u64) << 8;
+        let hist_jobs = tracegen::generate(&hist_cfg, cfg.history_hours, week_seed ^ 0x1157);
+        if learn_kb {
+            let fresh = learn(
+                &hist_jobs,
+                &hist_trace,
+                &LearnConfig {
+                    max_capacity: cfg.capacity,
+                    num_queues: cfg.queues.len(),
+                    offsets: cfg.replay_offsets,
+                    energy: energy.clone(),
+                    threads: 0, // parallel per-offset replays, offset-major merge
+                },
+            );
+            for c in fresh.cases() {
+                // Stamp cases with absolute time so aging works across weeks.
+                kb.push(Case { recorded_at: hist_start + c.recorded_at, ..c.clone() });
+            }
+            // Amortized sliding-window maintenance: tombstone aged cases and
+            // keep the fresh tail brute-force-matched, rebuilding the index
+            // only once churn crosses the CARBONFLEX_KB_CHURN fraction.
+            kb.advance_window(eval_start, aging_window_hours);
+        }
+
+        if !weeks.contains(&week) {
+            continue;
+        }
+
+        // --- Snapshot the week as an immutable prepared cell. ---
+        let eval_trace = year.slice(eval_start, 168 + 168); // + drain week
+        let eval_jobs = tracegen::generate(cfg, 168, cfg.seed ^ (week as u64) << 8 ^ 0xE7A1);
+        let mut week_cfg = cfg.clone();
+        week_cfg.horizon_hours = 168;
+        let prep = PreparedExperiment::from_parts(
+            week_cfg,
+            hist_trace,
+            eval_trace,
+            hist_jobs,
+            eval_jobs,
+            Some(kb.clone()),
+        );
+        cells.push(WeekCell {
+            week,
+            mean_ci: year.slice(eval_start, 168).mean(),
+            kb_live: kb.live(),
+            prep,
+        });
+    }
+    // Requested weeks come back in ascending order; the sweep engine zips
+    // them with its week-chain point indices, which it sorts the same way.
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_strategy_parse_roundtrip() {
+        for d in DispatchStrategy::ALL {
+            assert_eq!(DispatchStrategy::parse(d.as_str()), Some(d));
+        }
+        assert_eq!(DispatchStrategy::parse("rr"), Some(DispatchStrategy::RoundRobin));
+        assert_eq!(DispatchStrategy::parse("window"), Some(DispatchStrategy::LowestWindowCi));
+        assert_eq!(DispatchStrategy::parse("current"), Some(DispatchStrategy::LowestCurrentCi));
+        assert_eq!(DispatchStrategy::parse("teleport"), None);
+    }
+
+    #[test]
+    fn region_set_parses_in_order() {
+        let set = parse_region_set("south-australia+ontario+virginia");
+        assert_eq!(
+            set,
+            vec![Region::SouthAustralia, Region::Ontario, Region::Virginia]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown region")]
+    fn region_set_rejects_unknown_keys() {
+        parse_region_set("south-australia+atlantis");
+    }
+
+    #[test]
+    fn week_chain_subset_matches_full_chain() {
+        // The chain walks every week up to the max request, so a
+        // subset-sweep's cell carries the same knowledge base as the same
+        // week inside a full sweep — the invariant that makes week cells
+        // safely grid-parallel.
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 12;
+        cfg.history_hours = 168;
+        cfg.horizon_hours = 48;
+        cfg.replay_offsets = 1;
+        let full = prepare_week_chain(&cfg, &[0, 1, 2], 24 * 28, true);
+        let subset = prepare_week_chain(&cfg, &[2], 24 * 28, true);
+        assert_eq!(full.len(), 3);
+        assert_eq!(subset.len(), 1);
+        let (a, b) = (&full[2], &subset[0]);
+        assert_eq!(a.week, 2);
+        assert_eq!(a.kb_live, b.kb_live);
+        assert_eq!(a.mean_ci.to_bits(), b.mean_ci.to_bits());
+        let (ra, rb) = (a.prep.run(PolicyKind::CarbonFlex), b.prep.run(PolicyKind::CarbonFlex));
+        assert_eq!(ra.fingerprint(), rb.fingerprint());
+    }
+}

@@ -304,10 +304,9 @@ pub fn fig13_shift(base: &ExperimentConfig) {
     spec.variants = [-0.2f64, -0.1, 0.0, 0.1, 0.2]
         .iter()
         .map(|&shift| {
-            // Note: `prepare` applies the scales to the historical window
-            // too, so the KB re-learns at the shifted scale — this measures
-            // robustness of the whole pipeline under load scaling, not the
-            // paper's pure learn/eval mismatch (ROADMAP open item).
+            // `prepare` applies the scales to the evaluation window only
+            // (the KB learns on the unshifted history), so this measures
+            // the paper's genuine learn/eval mismatch.
             SweepVariant::new(format!("{:+.0}", shift * 100.0), move |cfg| {
                 cfg.arrival_scale = 1.0 + shift;
                 cfg.length_scale = 1.0 + shift;

@@ -4,6 +4,7 @@
 //! binaries and the CLI `experiment` subcommand are thin wrappers over
 //! these.
 
+pub mod cells;
 pub mod figures;
 pub mod forecast_noise;
 pub mod perf;
@@ -12,5 +13,6 @@ pub mod spatial;
 pub mod sweep;
 pub mod yearlong;
 
+pub use cells::DispatchStrategy;
 pub use runner::{run_policies, run_policy, ExperimentRow, PreparedExperiment};
 pub use sweep::{SweepRunner, SweepSpec, SweepVariant};

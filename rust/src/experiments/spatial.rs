@@ -3,43 +3,25 @@
 //!
 //! A geo-dispatcher owns one cluster per region and routes each job at
 //! arrival; every regional cluster then schedules locally with its own
-//! policy. This composes the existing substrates — per-region carbon
-//! traces, the [`ClusterEngine`], and the CarbonFlex learning loop — into
-//! a multi-region deployment, quantifying how much spatial freedom adds on
-//! top of CarbonFlex's temporal/elastic savings.
+//! policy. Since PR 5, multi-region deployments are **first-class sweep
+//! cells**: a `+`-joined region set on the sweep's `regions` axis plus the
+//! `dispatchers` axis (see `experiments/sweep.rs`; the per-slot dispatch
+//! engine lives in `experiments/cells.rs`). This module is the thin
+//! adapter layer — [`run_spatial`] / [`run_spatial_prepared`] build a
+//! single-cell [`SweepSpec`] and route it through [`SweepRunner`], and
+//! [`print_spatial`] is one dispatch × local-policy grid. The retired
+//! bespoke loop survives in-test as a bitwise reference implementation.
 
-use crate::carbon::forecast::Forecaster;
+use std::sync::Arc;
+
 use crate::carbon::synth::Region;
-use crate::cluster::energy::EnergyModel;
-use crate::cluster::metrics::RunMetrics;
-use crate::cluster::sim::{ClusterEngine, Simulator};
 use crate::config::ExperimentConfig;
+use crate::experiments::cells;
 use crate::experiments::runner::PreparedExperiment;
-use crate::sched::{Policy, PolicyKind};
-use crate::workload::job::Job;
-use crate::workload::tracegen;
+use crate::experiments::sweep::{SweepRow, SweepRunner, SweepSpec};
+use crate::sched::PolicyKind;
 
-/// How the dispatcher picks a region for an arriving job.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum DispatchStrategy {
-    /// Round-robin — the carbon-agnostic baseline for spatial decisions.
-    RoundRobin,
-    /// Route to the region with the lowest *current* carbon intensity.
-    LowestCurrentCi,
-    /// Route to the region whose forecast is cleanest over the job's
-    /// expected window (arrival → deadline), weighted by base length.
-    LowestWindowCi,
-}
-
-impl DispatchStrategy {
-    pub fn as_str(&self) -> &'static str {
-        match self {
-            DispatchStrategy::RoundRobin => "round-robin",
-            DispatchStrategy::LowestCurrentCi => "lowest-current-CI",
-            DispatchStrategy::LowestWindowCi => "lowest-window-CI",
-        }
-    }
-}
+pub use crate::experiments::cells::DispatchStrategy;
 
 /// Result of one multi-region run.
 #[derive(Debug)]
@@ -56,12 +38,28 @@ pub struct SpatialResult {
     pub jobs_per_region: Vec<usize>,
 }
 
-/// One regional cluster: engine + forecaster + local policy.
-struct RegionalCluster {
-    engine: ClusterEngine,
-    forecaster: Forecaster,
-    policy: Box<dyn Policy>,
-    next_id: usize,
+impl SpatialResult {
+    /// Extract the legacy result shape from one spatial sweep row.
+    fn from_row(row: &SweepRow, strategy: DispatchStrategy, local_policy: PolicyKind) -> Self {
+        let m = &row.result.metrics;
+        SpatialResult {
+            strategy,
+            local_policy,
+            carbon_g: m.carbon_g,
+            completed: m.completed,
+            unfinished: m.unfinished,
+            mean_delay_hours: m.mean_delay_hours,
+            jobs_per_region: row
+                .jobs_per_region
+                .clone()
+                .expect("spatial rows carry per-region routing"),
+        }
+    }
+}
+
+/// Join a region list into the sweep engine's `+`-set axis key.
+pub fn region_set_key(regions: &[Region]) -> String {
+    regions.iter().map(|r| r.key()).collect::<Vec<_>>().join("+")
 }
 
 /// Prepare one regional experiment per region (`cfg.capacity` split evenly;
@@ -69,156 +67,67 @@ struct RegionalCluster {
 /// learned knowledge base). Preparation does not depend on the dispatch
 /// strategy or local policy, so callers comparing several combos share one
 /// set of preps across all of them; regions prepare in parallel.
-pub fn prepare_regions(cfg: &ExperimentConfig, regions: &[Region]) -> Vec<PreparedExperiment> {
-    assert!(!regions.is_empty());
-    let per_region_capacity = (cfg.capacity / regions.len()).max(1);
-    crate::experiments::sweep::par_map(
-        crate::experiments::sweep::auto_threads(),
-        regions,
-        |&region, _| {
-            let mut rcfg = cfg.clone();
-            rcfg.region = region.key().to_string();
-            rcfg.capacity = per_region_capacity;
-            PreparedExperiment::prepare(&rcfg)
-        },
-    )
+pub fn prepare_regions(
+    cfg: &ExperimentConfig,
+    regions: &[Region],
+) -> Vec<Arc<PreparedExperiment>> {
+    cells::prepare_spatial(cfg, regions).preps
+}
+
+/// Build the single-cell sweep spec for one (set, strategy, policy) combo.
+fn single_cell_spec(
+    cfg: &ExperimentConfig,
+    regions: &[Region],
+    strategy: DispatchStrategy,
+    local_policy: PolicyKind,
+) -> SweepSpec {
+    let mut spec = SweepSpec::new(cfg.clone());
+    spec.regions = vec![region_set_key(regions)];
+    spec.dispatchers = vec![strategy];
+    spec.policies = vec![local_policy];
+    spec
 }
 
 /// Run a multi-region deployment: `regions.len()` clusters of
 /// `cfg.capacity / regions.len()` servers each, one shared arrival stream.
+/// Thin adapter over a single spatial sweep cell.
 pub fn run_spatial(
     cfg: &ExperimentConfig,
     regions: &[Region],
     strategy: DispatchStrategy,
     local_policy: PolicyKind,
 ) -> SpatialResult {
-    run_spatial_prepared(cfg, &prepare_regions(cfg, regions), strategy, local_policy)
+    let spec = single_cell_spec(cfg, regions, strategy, local_policy);
+    let rows = SweepRunner::auto().run(&spec);
+    SpatialResult::from_row(&rows[0], strategy, local_policy)
 }
 
-/// [`run_spatial`] over already-prepared regions (see [`prepare_regions`]).
+/// [`run_spatial`] over already-prepared regions (see [`prepare_regions`]):
+/// the preps are injected into the spec, so several combos share one
+/// synthesis + learning pass. Routes through the same sweep cell.
 pub fn run_spatial_prepared(
     cfg: &ExperimentConfig,
-    preps: &[PreparedExperiment],
+    preps: &[Arc<PreparedExperiment>],
     strategy: DispatchStrategy,
     local_policy: PolicyKind,
 ) -> SpatialResult {
     assert!(!preps.is_empty());
-    let horizon = cfg.horizon_hours;
-    let energy = EnergyModel::for_hardware(cfg.hardware);
-
-    // Build the regional clusters over the shared prepared state.
-    let mut clusters: Vec<RegionalCluster> = preps
+    let regions: Vec<Region> = preps
         .iter()
-        .map(|prep| {
-            let policy: Box<dyn Policy> = prep.build_policy(local_policy);
-            let sim =
-                Simulator::new(prep.cfg.capacity, energy.clone(), cfg.queues.len(), horizon);
-            RegionalCluster {
-                engine: ClusterEngine::new(sim),
-                forecaster: Forecaster::perfect(prep.eval_trace.clone()),
-                policy,
-                next_id: 0,
-            }
-        })
+        .map(|p| Region::parse(&p.cfg.region).expect("prepared region"))
         .collect();
-
-    // One global arrival stream sized for the aggregate capacity.
-    let jobs = tracegen::generate(cfg, horizon, cfg.seed ^ 0x5EA7);
-    let mut jobs_per_region = vec![0usize; preps.len()];
-    let mut rr = 0usize;
-
-    // Dispatch + step in lockstep.
-    let mut by_arrival: Vec<&Job> = jobs.iter().collect();
-    by_arrival.sort_by_key(|j| j.arrival);
-    let mut next_job = 0usize;
-    let last_arrival = by_arrival.last().map(|j| j.arrival).unwrap_or(0);
-    let t_end = last_arrival + horizon + 4096;
-
-    for t in 0..t_end {
-        // Route this slot's arrivals.
-        while next_job < by_arrival.len() && by_arrival[next_job].arrival == t {
-            let job = by_arrival[next_job];
-            let r = match strategy {
-                DispatchStrategy::RoundRobin => {
-                    rr = (rr + 1) % clusters.len();
-                    rr
-                }
-                DispatchStrategy::LowestCurrentCi => clusters
-                    .iter()
-                    .enumerate()
-                    .min_by(|(_, a), (_, b)| {
-                        a.forecaster.predict(t).partial_cmp(&b.forecaster.predict(t)).unwrap()
-                    })
-                    .map(|(i, _)| i)
-                    .unwrap(),
-                DispatchStrategy::LowestWindowCi => {
-                    let window = (job.length_hours + job.slack_hours).ceil() as usize;
-                    clusters
-                        .iter()
-                        .enumerate()
-                        .min_by(|(_, a), (_, b)| {
-                            let ma = mean_of(&a.forecaster.predict_window(t, window));
-                            let mb = mean_of(&b.forecaster.predict_window(t, window));
-                            ma.partial_cmp(&mb).unwrap()
-                        })
-                        .map(|(i, _)| i)
-                        .unwrap()
-                }
-            };
-            let c = &mut clusters[r];
-            // Re-id within the destination cluster (engines need dense ids).
-            let local = Job { id: c.next_id, arrival: t, ..job.clone() };
-            c.next_id += 1;
-            c.engine.add_job(local);
-            jobs_per_region[r] += 1;
-            next_job += 1;
-        }
-        // Advance every region one slot.
-        let mut any_pending = next_job < by_arrival.len();
-        for c in clusters.iter_mut() {
-            if c.engine.pending_jobs() > 0 {
-                c.engine.step(t, &c.forecaster, c.policy.as_mut());
-                any_pending = true;
-            }
-        }
-        if !any_pending {
-            break;
-        }
-    }
-
-    // Aggregate.
-    let metrics: Vec<RunMetrics> = clusters
-        .into_iter()
-        .map(|c| c.engine.finish("regional").metrics)
-        .collect();
-    let completed = metrics.iter().map(|m| m.completed).sum();
-    let delay_weighted: f64 =
-        metrics.iter().map(|m| m.mean_delay_hours * m.completed as f64).sum();
-    SpatialResult {
-        strategy,
-        local_policy,
-        carbon_g: metrics.iter().map(|m| m.carbon_g).sum(),
-        completed,
-        unfinished: metrics.iter().map(|m| m.unfinished).sum(),
-        mean_delay_hours: if completed == 0 { 0.0 } else { delay_weighted / completed as f64 },
-        jobs_per_region,
-    }
+    let mut spec = single_cell_spec(cfg, &regions, strategy, local_policy);
+    spec.spatial_preps = preps.to_vec();
+    let rows = SweepRunner::auto().run(&spec);
+    SpatialResult::from_row(&rows[0], strategy, local_policy)
 }
 
-fn mean_of(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
-        0.0
-    } else {
-        xs.iter().sum::<f64>() / xs.len() as f64
-    }
-}
-
-/// Print the spatial comparison table (used by the bench and CLI). The
-/// dispatch × local-policy combos are independent deployments, so they run
-/// in parallel on the sweep engine's thread pool; the first combo
-/// (round-robin + carbon-agnostic) is the savings baseline.
+/// Print the spatial comparison table (used by the bench and CLI): one
+/// sweep grid over the dispatch × local-policy axes. The sweep runner
+/// shares each region's synthesis/learning across every dispatch strategy
+/// at the point; the round-robin + carbon-agnostic cell is the savings
+/// baseline, as in the paper-style table.
 pub fn print_spatial(cfg: &ExperimentConfig) {
-    use crate::experiments::sweep::{auto_threads, par_map};
     use crate::util::bench::Table;
     let regions = [Region::SouthAustralia, Region::California, Region::GreatBritain];
     println!(
@@ -226,6 +135,12 @@ pub fn print_spatial(cfg: &ExperimentConfig) {
         regions.len(),
         cfg.capacity / regions.len()
     );
+    let mut spec = SweepSpec::new(cfg.clone());
+    spec.regions = vec![region_set_key(&regions)];
+    spec.dispatchers = DispatchStrategy::ALL.to_vec();
+    spec.policies = vec![PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex];
+    let rows = SweepRunner::auto().run(&spec);
+
     let mut t = Table::new(&[
         "dispatch",
         "local policy",
@@ -234,27 +149,18 @@ pub fn print_spatial(cfg: &ExperimentConfig) {
         "mean delay (h)",
         "jobs/region",
     ]);
-    let combos = [
-        (DispatchStrategy::RoundRobin, PolicyKind::CarbonAgnostic),
-        (DispatchStrategy::LowestCurrentCi, PolicyKind::CarbonAgnostic),
-        (DispatchStrategy::LowestWindowCi, PolicyKind::CarbonAgnostic),
-        (DispatchStrategy::RoundRobin, PolicyKind::CarbonFlex),
-        (DispatchStrategy::LowestWindowCi, PolicyKind::CarbonFlex),
-    ];
-    // Each region's synthesis/learning runs once, shared by all 5 combos.
-    let preps = prepare_regions(cfg, &regions);
-    let results = par_map(auto_threads(), &combos, |&(strategy, local), _| {
-        run_spatial_prepared(cfg, &preps, strategy, local)
-    });
-    let base = results[0].carbon_g;
-    for r in &results {
+    // Savings vs. the fully carbon-agnostic deployment (round-robin +
+    // FCFS), which grid order puts first.
+    let base = rows[0].result.metrics.carbon_g;
+    for r in &rows {
+        let m = &r.result.metrics;
         t.row(&[
-            r.strategy.as_str().to_string(),
-            r.local_policy.as_str().to_string(),
-            format!("{:.2}", r.carbon_g / 1000.0),
-            format!("{:.1}", (1.0 - r.carbon_g / base) * 100.0),
-            format!("{:.2}", r.mean_delay_hours),
-            format!("{:?}", r.jobs_per_region),
+            r.point.dispatch.clone(),
+            m.policy.clone(),
+            format!("{:.2}", m.carbon_g / 1000.0),
+            format!("{:.1}", (1.0 - m.carbon_g / base) * 100.0),
+            format!("{:.2}", m.mean_delay_hours),
+            format!("{:?}", r.jobs_per_region.as_ref().expect("spatial row")),
         ]);
     }
     t.print();
@@ -274,6 +180,204 @@ mod tests {
     }
 
     const REGIONS: [Region; 3] = [Region::SouthAustralia, Region::California, Region::Virginia];
+
+    /// The retired bespoke driver, kept verbatim as the bitwise reference
+    /// the sweep-routed path must reproduce (the PR 3 sanitize/kd-search
+    /// pattern). Any change to the sweep's spatial cell that alters output
+    /// bits fails the equivalence test below.
+    mod legacy_reference {
+        use super::*;
+        use crate::carbon::forecast::Forecaster;
+        use crate::cluster::energy::EnergyModel;
+        use crate::cluster::metrics::RunMetrics;
+        use crate::cluster::sim::{ClusterEngine, Simulator};
+        use crate::sched::Policy;
+        use crate::workload::job::Job;
+        use crate::workload::tracegen;
+
+        struct RegionalCluster {
+            engine: ClusterEngine,
+            forecaster: Forecaster,
+            policy: Box<dyn Policy>,
+            next_id: usize,
+        }
+
+        fn mean_of(xs: &[f64]) -> f64 {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        }
+
+        pub fn run_spatial_prepared(
+            cfg: &ExperimentConfig,
+            preps: &[Arc<PreparedExperiment>],
+            strategy: DispatchStrategy,
+            local_policy: PolicyKind,
+        ) -> SpatialResult {
+            assert!(!preps.is_empty());
+            let horizon = cfg.horizon_hours;
+            let energy = EnergyModel::for_hardware(cfg.hardware);
+
+            let mut clusters: Vec<RegionalCluster> = preps
+                .iter()
+                .map(|prep| {
+                    let policy: Box<dyn Policy> = prep.build_policy(local_policy);
+                    let sim = Simulator::new(
+                        prep.cfg.capacity,
+                        energy.clone(),
+                        cfg.queues.len(),
+                        horizon,
+                    );
+                    RegionalCluster {
+                        engine: ClusterEngine::new(sim),
+                        forecaster: Forecaster::perfect(prep.eval_trace.clone()),
+                        policy,
+                        next_id: 0,
+                    }
+                })
+                .collect();
+
+            let jobs = tracegen::generate(cfg, horizon, cfg.seed ^ 0x5EA7);
+            let mut jobs_per_region = vec![0usize; preps.len()];
+            let mut rr = 0usize;
+
+            let mut by_arrival: Vec<&Job> = jobs.iter().collect();
+            by_arrival.sort_by_key(|j| j.arrival);
+            let mut next_job = 0usize;
+            let last_arrival = by_arrival.last().map(|j| j.arrival).unwrap_or(0);
+            let t_end = last_arrival + horizon + 4096;
+
+            for t in 0..t_end {
+                while next_job < by_arrival.len() && by_arrival[next_job].arrival == t {
+                    let job = by_arrival[next_job];
+                    let r = match strategy {
+                        DispatchStrategy::RoundRobin => {
+                            rr = (rr + 1) % clusters.len();
+                            rr
+                        }
+                        DispatchStrategy::LowestCurrentCi => clusters
+                            .iter()
+                            .enumerate()
+                            .min_by(|(_, a), (_, b)| {
+                                a.forecaster
+                                    .predict(t)
+                                    .partial_cmp(&b.forecaster.predict(t))
+                                    .unwrap()
+                            })
+                            .map(|(i, _)| i)
+                            .unwrap(),
+                        DispatchStrategy::LowestWindowCi => {
+                            let window = (job.length_hours + job.slack_hours).ceil() as usize;
+                            clusters
+                                .iter()
+                                .enumerate()
+                                .min_by(|(_, a), (_, b)| {
+                                    let ma = mean_of(&a.forecaster.predict_window(t, window));
+                                    let mb = mean_of(&b.forecaster.predict_window(t, window));
+                                    ma.partial_cmp(&mb).unwrap()
+                                })
+                                .map(|(i, _)| i)
+                                .unwrap()
+                        }
+                    };
+                    let c = &mut clusters[r];
+                    let local = Job { id: c.next_id, arrival: t, ..job.clone() };
+                    c.next_id += 1;
+                    c.engine.add_job(local);
+                    jobs_per_region[r] += 1;
+                    next_job += 1;
+                }
+                let mut any_pending = next_job < by_arrival.len();
+                for c in clusters.iter_mut() {
+                    if c.engine.pending_jobs() > 0 {
+                        c.engine.step(t, &c.forecaster, c.policy.as_mut());
+                        any_pending = true;
+                    }
+                }
+                if !any_pending {
+                    break;
+                }
+            }
+
+            let metrics: Vec<RunMetrics> = clusters
+                .into_iter()
+                .map(|c| c.engine.finish("regional").metrics)
+                .collect();
+            let completed = metrics.iter().map(|m| m.completed).sum();
+            let delay_weighted: f64 =
+                metrics.iter().map(|m| m.mean_delay_hours * m.completed as f64).sum();
+            SpatialResult {
+                strategy,
+                local_policy,
+                carbon_g: metrics.iter().map(|m| m.carbon_g).sum(),
+                completed,
+                unfinished: metrics.iter().map(|m| m.unfinished).sum(),
+                mean_delay_hours: if completed == 0 {
+                    0.0
+                } else {
+                    delay_weighted / completed as f64
+                },
+                jobs_per_region,
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_cell_is_bitwise_identical_to_legacy_loop() {
+        // The tentpole equivalence: a single-cell sweep over the regions
+        // axis reproduces the retired bespoke driver bit for bit, for every
+        // strategy and for both a plain and a learning local policy.
+        let cfg = cfg();
+        let preps = prepare_regions(&cfg, &REGIONS);
+        for (strategy, local) in [
+            (DispatchStrategy::RoundRobin, PolicyKind::CarbonAgnostic),
+            (DispatchStrategy::LowestCurrentCi, PolicyKind::CarbonAgnostic),
+            (DispatchStrategy::LowestWindowCi, PolicyKind::CarbonAgnostic),
+            (DispatchStrategy::LowestWindowCi, PolicyKind::CarbonFlex),
+        ] {
+            let want = legacy_reference::run_spatial_prepared(&cfg, &preps, strategy, local);
+            let got = run_spatial_prepared(&cfg, &preps, strategy, local);
+            assert_eq!(
+                got.carbon_g.to_bits(),
+                want.carbon_g.to_bits(),
+                "{strategy:?}/{local:?}: carbon diverged ({} vs {})",
+                got.carbon_g,
+                want.carbon_g
+            );
+            assert_eq!(got.completed, want.completed, "{strategy:?}/{local:?}");
+            assert_eq!(got.unfinished, want.unfinished, "{strategy:?}/{local:?}");
+            assert_eq!(
+                got.mean_delay_hours.to_bits(),
+                want.mean_delay_hours.to_bits(),
+                "{strategy:?}/{local:?}: delay diverged"
+            );
+            assert_eq!(got.jobs_per_region, want.jobs_per_region, "{strategy:?}/{local:?}");
+        }
+    }
+
+    #[test]
+    fn fresh_and_injected_preps_agree() {
+        // run_spatial (fresh preps inside the sweep) and
+        // run_spatial_prepared (injected preps) are the same cell.
+        let cfg = cfg();
+        let preps = prepare_regions(&cfg, &REGIONS);
+        let a = run_spatial(
+            &cfg,
+            &REGIONS,
+            DispatchStrategy::LowestWindowCi,
+            PolicyKind::CarbonAgnostic,
+        );
+        let b = run_spatial_prepared(
+            &cfg,
+            &preps,
+            DispatchStrategy::LowestWindowCi,
+            PolicyKind::CarbonAgnostic,
+        );
+        assert_eq!(a.carbon_g.to_bits(), b.carbon_g.to_bits());
+        assert_eq!(a.jobs_per_region, b.jobs_per_region);
+    }
 
     #[test]
     fn all_jobs_complete_under_every_strategy() {

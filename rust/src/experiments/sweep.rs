@@ -7,28 +7,54 @@
 //!
 //! - **Phase 1** prepares each grid *point* — trace synthesis, workload
 //!   generation, and the learning phase — exactly once, in parallel, and
-//!   wraps the immutable [`PreparedExperiment`] in an `Arc`. The
-//!   carbon-agnostic baseline also runs here, once per point.
+//!   wraps the immutable prepared state in an `Arc`. The carbon-agnostic
+//!   baseline also runs here, once per point.
 //! - **Phase 2** runs every *cell* (point × policy) in parallel, sharing
 //!   the prepared state via `Arc` instead of re-synthesizing or re-learning
 //!   per policy.
 //!
+//! Two axes produce **composite cells** (see `experiments/cells.rs`):
+//!
+//! - A `regions` entry may be a `+`-joined **region set**
+//!   ("south-australia+ontario"): the point becomes a multi-region spatial
+//!   deployment — capacity split evenly, per-region carbon traces and
+//!   knowledge bases, and a geo-dispatcher routing each arrival. The
+//!   [`dispatchers`](SweepSpec::dispatchers) axis multiplies such points
+//!   (single-region points ignore it); every dispatch strategy at a point
+//!   shares one set of regional preparations.
+//! - The [`weeks`](SweepSpec::weeks) axis turns points into **week-window
+//!   cells** (the paper's year-long continuous-learning mode): weeks at the
+//!   same point form a sequential learning chain — learn on the trailing
+//!   history, push into a carried knowledge base, slide the rolling window
+//!   with `KnowledgeBase::advance_window` — and each requested week gets an
+//!   immutable snapshot, so its policy runs still execute in parallel. The
+//!   chain always walks weeks `0..=max`, which makes any subset sweep
+//!   bitwise identical to the same weeks of a full sweep.
+//!
 //! Results are bitwise deterministic regardless of thread count: each cell
 //! simulates with the seed from its spec entry (nothing derived from thread
 //! or completion order ever enters), so a single-cell sweep reproduces
-//! `compare` on the same config exactly, and rows are emitted in grid
-//! order. The grid order is region → capacity → horizon → variant → seed,
-//! with policy innermost.
+//! `compare` on the same config exactly — and a single spatial or week cell
+//! reproduces the legacy `run_spatial_prepared` / `run_yearlong` outputs
+//! (pinned by their in-test reference implementations). Rows are emitted in
+//! grid order: region → dispatch → capacity → horizon → week → variant →
+//! seed, with policy innermost.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::cluster::sim::SimResult;
 use crate::config::ExperimentConfig;
+use crate::experiments::cells::{self, DispatchStrategy, SpatialPrep, WeekCell};
 use crate::experiments::runner::PreparedExperiment;
 use crate::sched::PolicyKind;
 use crate::util::bench::Table;
 use crate::util::json::Json;
+
+/// Default knowledge-base aging window for week-window cells (paper §4.2:
+/// a rolling window; ~4 weeks).
+pub const DEFAULT_AGING_WINDOW_HOURS: usize = 24 * 28;
 
 /// A named config mutation — the generic sweep axis for knobs that are not
 /// first-class (delay, elasticity, trace family, utilization, …). The label
@@ -64,27 +90,50 @@ impl std::fmt::Debug for SweepVariant {
 /// headline set), so a fresh spec describes a single-cell grid.
 pub struct SweepSpec {
     pub base: ExperimentConfig,
-    /// Carbon-region keys (see `carbon::synth::Region`).
+    /// Carbon-region keys (see `carbon::synth::Region`). An entry may be a
+    /// `+`-joined set ("south-australia+ontario"), which makes its points
+    /// multi-region spatial cells (capacity split evenly, geo-dispatched
+    /// arrivals, per-region knowledge bases).
     pub regions: Vec<String>,
+    /// Geo-dispatch strategies for region-*set* entries (defaults to
+    /// round-robin). Single-region points ignore this axis.
+    pub dispatchers: Vec<DispatchStrategy>,
     /// Maximum cluster capacities M.
     pub capacities: Vec<usize>,
     /// Evaluation horizons, hours (history is clamped to ≥ horizon).
     pub horizons: Vec<usize>,
+    /// Week-window indices for continuous-learning cells. When non-empty,
+    /// every point evaluates 168 h weekly windows (the horizons axis must
+    /// stay empty) after a sequential learning chain over weeks `0..=max`;
+    /// multi-region `+` sets cannot combine with this axis.
+    pub weeks: Vec<usize>,
+    /// Knowledge-base rolling window for the week-window axis, hours.
+    pub aging_window_hours: usize,
     /// Named config mutations (applied after the first-class axes).
     pub variants: Vec<SweepVariant>,
     /// Workload/trace seeds; each is mixed into a per-cell seed.
     pub seeds: Vec<u64>,
     /// Policies to run at every point.
     pub policies: Vec<PolicyKind>,
+    /// Pre-prepared regional experiments injected by the
+    /// `run_spatial_prepared` adapter (must match the spec's single region
+    /// set, in order). Empty = the runner prepares regions itself.
+    pub spatial_preps: Vec<Arc<PreparedExperiment>>,
 }
 
 /// One grid point: a fully pinned experimental setting (everything except
 /// the policy, which all shares this point's prepared state).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepPoint {
+    /// Region key, or a `+`-joined set for spatial points.
     pub region: String,
+    /// Dispatch-strategy label for spatial points ("" otherwise).
+    pub dispatch: String,
     pub capacity: usize,
     pub horizon_hours: usize,
+    /// Week index for week-window cells (`None` when the axis is unused;
+    /// such points always evaluate a 168 h window).
+    pub week: Option<usize>,
     /// Label of the variant applied ("" when the axis is unused).
     pub variant: String,
     /// The spec-level seed entry this point simulates with (the config's
@@ -96,14 +145,28 @@ pub struct SweepPoint {
     pub seed: u64,
 }
 
+impl SweepPoint {
+    /// Whether this point is a multi-region spatial cell.
+    pub fn is_spatial(&self) -> bool {
+        self.region.contains('+')
+    }
+}
+
 /// One result cell, in grid order.
 #[derive(Debug, Clone)]
 pub struct SweepRow {
     pub point: SweepPoint,
     pub kind: PolicyKind,
     pub result: SimResult,
-    /// Carbon savings (%) vs. this point's carbon-agnostic baseline.
+    /// Carbon savings (%) vs. this point's carbon-agnostic baseline (same
+    /// dispatch strategy for spatial points, same week for week cells).
     pub savings_pct: f64,
+    /// Spatial cells: jobs routed to each region of the set, in set order.
+    pub jobs_per_region: Option<Vec<usize>>,
+    /// Week cells: live knowledge-base cases after the window slide.
+    pub kb_live: Option<usize>,
+    /// Week cells: mean CI of the evaluation week (seasonality indicator).
+    pub mean_ci: Option<f64>,
 }
 
 fn axis_or<T: Clone>(axis: &[T], default: T) -> Vec<T> {
@@ -121,11 +184,15 @@ impl SweepSpec {
         SweepSpec {
             base,
             regions: Vec::new(),
+            dispatchers: Vec::new(),
             capacities: Vec::new(),
             horizons: Vec::new(),
+            weeks: Vec::new(),
+            aging_window_hours: DEFAULT_AGING_WINDOW_HOURS,
             variants: Vec::new(),
             seeds: Vec::new(),
             policies: Vec::new(),
+            spatial_preps: Vec::new(),
         }
     }
 
@@ -138,12 +205,32 @@ impl SweepSpec {
         }
     }
 
-    /// All grid points, in grid order (region → capacity → horizon →
-    /// variant → seed).
+    /// All grid points, in grid order (region → dispatch → capacity →
+    /// horizon → week → variant → seed).
     pub fn points(&self) -> Vec<SweepPoint> {
         let regions = axis_or(&self.regions, self.base.region.clone());
+        let dispatchers = axis_or(&self.dispatchers, DispatchStrategy::RoundRobin);
+        for (i, d) in dispatchers.iter().enumerate() {
+            assert!(!dispatchers[..i].contains(d), "duplicate dispatch strategy {d:?}");
+        }
         let capacities = axis_or(&self.capacities, self.base.capacity);
         let horizons = axis_or(&self.horizons, self.base.horizon_hours);
+        let weeks: Vec<Option<usize>> = if self.weeks.is_empty() {
+            vec![None]
+        } else {
+            assert!(
+                self.horizons.is_empty(),
+                "the week-window axis pins each cell's horizon to 168 h; clear the horizons axis"
+            );
+            assert!(
+                !regions.iter().any(|r| r.contains('+')),
+                "week-window cells cannot combine with multi-region '+' sets"
+            );
+            for (i, w) in self.weeks.iter().enumerate() {
+                assert!(!self.weeks[..i].contains(w), "duplicate week index {w}");
+            }
+            self.weeks.iter().map(|&w| Some(w)).collect()
+        };
         let variant_labels: Vec<String> = if self.variants.is_empty() {
             vec![String::new()]
         } else {
@@ -161,17 +248,36 @@ impl SweepSpec {
 
         let mut points = Vec::new();
         for region in &regions {
-            for &capacity in &capacities {
-                for &horizon_hours in &horizons {
-                    for variant in &variant_labels {
-                        for &seed in &seeds {
-                            points.push(SweepPoint {
-                                region: region.clone(),
-                                capacity,
-                                horizon_hours,
-                                variant: variant.clone(),
-                                seed,
-                            });
+            // The dispatch axis only multiplies multi-region sets; plain
+            // points carry the empty label.
+            let dispatches: Vec<String> = if region.contains('+') {
+                dispatchers.iter().map(|d| d.as_str().to_string()).collect()
+            } else {
+                vec![String::new()]
+            };
+            for dispatch in &dispatches {
+                for &capacity in &capacities {
+                    for &horizon_hours in &horizons {
+                        for &week in &weeks {
+                            for variant in &variant_labels {
+                                for &seed in &seeds {
+                                    points.push(SweepPoint {
+                                        region: region.clone(),
+                                        dispatch: dispatch.clone(),
+                                        capacity,
+                                        // Week cells always evaluate one
+                                        // 168 h week.
+                                        horizon_hours: if week.is_some() {
+                                            168
+                                        } else {
+                                            horizon_hours
+                                        },
+                                        week,
+                                        variant: variant.clone(),
+                                        seed,
+                                    });
+                                }
+                            }
                         }
                     }
                 }
@@ -194,11 +300,145 @@ impl SweepSpec {
         if let Some(v) = self.variants.iter().find(|v| v.label == point.variant) {
             v.apply(&mut cfg);
         }
-        // The learning window must cover at least the evaluation horizon.
-        cfg.history_hours = cfg.history_hours.max(cfg.horizon_hours);
+        if point.week.is_none() && !point.is_spatial() {
+            // The learning window must cover at least the evaluation
+            // horizon. (Week chains keep `history_hours` as their learning
+            // window verbatim, and spatial cells pass the config through to
+            // per-region preparations unclamped — both matching the legacy
+            // drivers bit for bit.)
+            cfg.history_hours = cfg.history_hours.max(cfg.horizon_hours);
+        }
         cfg.seed = point.seed;
         cfg
     }
+
+    /// Apply the optional `[sweep]` table of an experiment TOML, so a
+    /// config file can pin a whole grid declaratively:
+    ///
+    /// ```toml
+    /// [sweep]
+    /// regions = ["south-australia", "south-australia+ontario"]
+    /// dispatch = ["round-robin", "lowest-window-ci"]
+    /// capacities = [100, 150]
+    /// seeds = [1, 2]
+    /// weeks = [0, 1, 2, 3]
+    /// aging_window_hours = 672
+    /// policies = ["agnostic", "carbonflex", "oracle"]
+    /// ```
+    ///
+    /// Axes present in the file replace the spec's; absent ones are left
+    /// untouched (the CLI applies its flags afterwards, so flags override
+    /// the file per axis).
+    pub fn apply_toml_axes(&mut self, src: &str) -> Result<(), String> {
+        use crate::carbon::synth::Region;
+        use crate::config::toml::{self, Value};
+        let root = toml::parse(src).map_err(|e| e.to_string())?;
+        let Some(sweep) = root.get("sweep") else {
+            return Ok(());
+        };
+        fn str_list(v: &Value, field: &str) -> Result<Vec<String>, String> {
+            v.as_arr()
+                .ok_or_else(|| format!("sweep.{field}: expected an array"))?
+                .iter()
+                .map(|e| {
+                    e.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| format!("sweep.{field}: expected strings"))
+                })
+                .collect()
+        }
+        fn int_list(v: &Value, field: &str) -> Result<Vec<usize>, String> {
+            v.as_arr()
+                .ok_or_else(|| format!("sweep.{field}: expected an array"))?
+                .iter()
+                .map(|e| match e.as_int() {
+                    Some(i) if i >= 0 => Ok(i as usize),
+                    _ => Err(format!("sweep.{field}: expected non-negative integers")),
+                })
+                .collect()
+        }
+        if let Some(v) = sweep.get("regions") {
+            // Store the canonical trimmed '+'-joined keys, not the raw
+            // entries — a padded "ontario " must not sneak past validation
+            // only to panic inside preparation.
+            let mut canonical = Vec::new();
+            for entry in &str_list(v, "regions")? {
+                let keys: Result<Vec<String>, String> = entry
+                    .split('+')
+                    .map(|key| {
+                        Region::parse(key.trim())
+                            .map(|r| r.key().to_string())
+                            .ok_or_else(|| format!("sweep.regions: unknown region '{key}'"))
+                    })
+                    .collect();
+                canonical.push(keys?.join("+"));
+            }
+            self.regions = canonical;
+        }
+        if let Some(v) = sweep.get("dispatch") {
+            self.dispatchers = str_list(v, "dispatch")?
+                .iter()
+                .map(|s| {
+                    DispatchStrategy::parse(s)
+                        .ok_or_else(|| format!("sweep.dispatch: unknown strategy '{s}'"))
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = sweep.get("capacities") {
+            self.capacities = int_list(v, "capacities")?;
+        }
+        if let Some(v) = sweep.get("horizons") {
+            self.horizons = int_list(v, "horizons")?;
+        }
+        if let Some(v) = sweep.get("weeks") {
+            self.weeks = int_list(v, "weeks")?;
+        }
+        if let Some(v) = sweep.get("aging_window_hours") {
+            match v.as_int() {
+                Some(h) if h > 0 => self.aging_window_hours = h as usize,
+                _ => return Err("sweep.aging_window_hours: expected a positive integer".into()),
+            }
+        }
+        if let Some(v) = sweep.get("seeds") {
+            self.seeds = v
+                .as_arr()
+                .ok_or_else(|| "sweep.seeds: expected an array".to_string())?
+                .iter()
+                .map(|e| {
+                    e.as_int()
+                        .map(|i| i as u64)
+                        .ok_or_else(|| "sweep.seeds: expected integers".to_string())
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = sweep.get("policies") {
+            self.policies = str_list(v, "policies")?
+                .iter()
+                .map(|s| {
+                    PolicyKind::parse(s)
+                        .ok_or_else(|| format!("sweep.policies: unknown policy '{s}'"))
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-point prepared state: plain, spatial, or week-window.
+enum PointPrep {
+    Single(Arc<PreparedExperiment>),
+    Spatial(Arc<SpatialPrep>),
+    Week(Arc<WeekCell>),
+}
+
+/// A phase-1 preparation unit: points that share prepared state. Spatial
+/// points at the same setting share regional preparations across dispatch
+/// strategies; week points at the same setting form one sequential
+/// learning chain.
+enum PrepUnit {
+    Single(usize),
+    Spatial(Vec<usize>),
+    WeekChain(Vec<usize>),
 }
 
 /// Executes a [`SweepSpec`] on a scoped thread pool.
@@ -224,40 +464,178 @@ impl SweepRunner {
         let policies = spec.policies();
         let needs_kb = policies.contains(&PolicyKind::CarbonFlex);
 
-        struct PreparedPoint {
-            prep: Arc<PreparedExperiment>,
-            baseline: Arc<SimResult>,
-        }
-
-        // Phase 1: prepare each point once (synthesis + learning + the
-        // shared carbon-agnostic baseline), in parallel across points.
-        let prepared: Vec<PreparedPoint> = par_map(self.threads, &points, |point, _| {
-            let cfg = spec.config_for(point);
-            let prep = PreparedExperiment::prepare(&cfg);
-            if needs_kb {
-                // Force the learning phase here so phase 2 cells only pay
-                // for their own simulation.
-                let _ = prep.knowledge_base();
+        // --- Phase 1a: prepared state, one unit per sharing group. ---
+        let mut unit_of: HashMap<(String, usize, usize, String, u64), usize> = HashMap::new();
+        let mut units: Vec<PrepUnit> = Vec::new();
+        for (i, p) in points.iter().enumerate() {
+            if p.is_spatial() || p.week.is_some() {
+                let key =
+                    (p.region.clone(), p.capacity, p.horizon_hours, p.variant.clone(), p.seed);
+                match unit_of.get(&key) {
+                    Some(&u) => match &mut units[u] {
+                        PrepUnit::Spatial(v) | PrepUnit::WeekChain(v) => v.push(i),
+                        PrepUnit::Single(_) => unreachable!("singles are never grouped"),
+                    },
+                    None => {
+                        unit_of.insert(key, units.len());
+                        units.push(if p.is_spatial() {
+                            PrepUnit::Spatial(vec![i])
+                        } else {
+                            PrepUnit::WeekChain(vec![i])
+                        });
+                    }
+                }
+            } else {
+                units.push(PrepUnit::Single(i));
             }
-            let baseline = prep.run(PolicyKind::CarbonAgnostic);
-            PreparedPoint { prep: Arc::new(prep), baseline: Arc::new(baseline) }
+        }
+        let unit_results: Vec<Vec<(usize, PointPrep)>> =
+            par_map(self.threads, &units, |unit, _| match unit {
+                PrepUnit::Single(i) => {
+                    let cfg = spec.config_for(&points[*i]);
+                    let prep = PreparedExperiment::prepare(&cfg);
+                    if needs_kb {
+                        // Force the learning phase here so phase 2 cells
+                        // only pay for their own simulation.
+                        let _ = prep.knowledge_base();
+                    }
+                    vec![(*i, PointPrep::Single(Arc::new(prep)))]
+                }
+                PrepUnit::Spatial(idxs) => {
+                    // The config is identical across the group's dispatch
+                    // strategies (dispatch never enters the config).
+                    let cfg = spec.config_for(&points[idxs[0]]);
+                    let regions = cells::parse_region_set(&points[idxs[0]].region);
+                    let sp = if spec.spatial_preps.is_empty() {
+                        cells::prepare_spatial(&cfg, &regions)
+                    } else {
+                        // Injected pre-prepared regional state (the
+                        // `run_spatial_prepared` adapter); must match this
+                        // unit's setting, not just its region keys —
+                        // otherwise a multi-point spec would silently reuse
+                        // preparations from the wrong seed/capacity/horizon.
+                        assert_eq!(
+                            spec.spatial_preps.len(),
+                            regions.len(),
+                            "spatial_preps does not match the region set"
+                        );
+                        let per_region_capacity = (cfg.capacity / regions.len()).max(1);
+                        for (p, r) in spec.spatial_preps.iter().zip(&regions) {
+                            assert_eq!(p.cfg.region, r.key(), "spatial_preps region mismatch");
+                            assert_eq!(
+                                p.cfg.capacity, per_region_capacity,
+                                "spatial_preps capacity mismatch"
+                            );
+                            assert_eq!(p.cfg.seed, cfg.seed, "spatial_preps seed mismatch");
+                            assert_eq!(
+                                p.cfg.horizon_hours, cfg.horizon_hours,
+                                "spatial_preps horizon mismatch"
+                            );
+                        }
+                        SpatialPrep { regions, preps: spec.spatial_preps.clone() }
+                    };
+                    if needs_kb {
+                        for p in &sp.preps {
+                            let _ = p.knowledge_base();
+                        }
+                    }
+                    let sp = Arc::new(sp);
+                    idxs.iter().map(|&i| (i, PointPrep::Spatial(sp.clone()))).collect()
+                }
+                PrepUnit::WeekChain(idxs) => {
+                    let cfg = spec.config_for(&points[idxs[0]]);
+                    // The chain emits cells in ascending week order; zip
+                    // them back to point indices sorted the same way (the
+                    // weeks axis may be listed in any order).
+                    let mut order: Vec<usize> = idxs.clone();
+                    order.sort_by_key(|&i| points[i].week.unwrap());
+                    let weeks: Vec<usize> =
+                        order.iter().map(|&i| points[i].week.unwrap()).collect();
+                    // The chain's learning passes are its dominant cost;
+                    // skip them when no requested policy reads the KB.
+                    let chain =
+                        cells::prepare_week_chain(&cfg, &weeks, spec.aging_window_hours, needs_kb);
+                    order
+                        .into_iter()
+                        .zip(chain)
+                        .map(|(i, cell)| (i, PointPrep::Week(Arc::new(cell))))
+                        .collect()
+                }
+            });
+        let mut slots: Vec<Option<PointPrep>> = (0..points.len()).map(|_| None).collect();
+        for unit in unit_results {
+            for (i, pp) in unit {
+                slots[i] = Some(pp);
+            }
+        }
+        let preps: Vec<PointPrep> =
+            slots.into_iter().map(|p| p.expect("every point prepared")).collect();
+
+        // --- Phase 1b: the per-point carbon-agnostic baseline. ---
+        struct Baseline {
+            result: Arc<SimResult>,
+            jobs_per_region: Option<Arc<Vec<usize>>>,
+        }
+        let point_idxs: Vec<usize> = (0..points.len()).collect();
+        let baselines: Vec<Baseline> = par_map(self.threads, &point_idxs, |&pi, _| {
+            match &preps[pi] {
+                PointPrep::Single(p) => Baseline {
+                    result: Arc::new(p.run(PolicyKind::CarbonAgnostic)),
+                    jobs_per_region: None,
+                },
+                PointPrep::Week(w) => Baseline {
+                    result: Arc::new(w.prep.run(PolicyKind::CarbonAgnostic)),
+                    jobs_per_region: None,
+                },
+                PointPrep::Spatial(sp) => {
+                    let point = &points[pi];
+                    let cfg = spec.config_for(point);
+                    let strategy =
+                        DispatchStrategy::parse(&point.dispatch).expect("dispatch label");
+                    let (r, jpr) =
+                        cells::run_spatial_cell(&cfg, sp, strategy, PolicyKind::CarbonAgnostic);
+                    Baseline { result: Arc::new(r), jobs_per_region: Some(Arc::new(jpr)) }
+                }
+            }
         });
 
-        // Phase 2: every cell (point × policy) in parallel, sharing the
-        // point's prepared state via Arc.
-        let cells: Vec<(usize, PolicyKind)> = (0..points.len())
+        // --- Phase 2: every cell (point × policy) in parallel. ---
+        let cell_list: Vec<(usize, PolicyKind)> = (0..points.len())
             .flat_map(|pi| policies.iter().map(move |&kind| (pi, kind)))
             .collect();
-        par_map(self.threads, &cells, |&(pi, kind), _| {
-            let pp = &prepared[pi];
-            let result = if kind == PolicyKind::CarbonAgnostic {
+        par_map(self.threads, &cell_list, |&(pi, kind), _| {
+            let point = &points[pi];
+            let bl = &baselines[pi];
+            let (result, jobs_per_region) = if kind == PolicyKind::CarbonAgnostic {
                 // Reuse the baseline run instead of simulating it again.
-                (*pp.baseline).clone()
+                ((*bl.result).clone(), bl.jobs_per_region.as_deref().cloned())
             } else {
-                pp.prep.run(kind)
+                match &preps[pi] {
+                    PointPrep::Single(p) => (p.run(kind), None),
+                    PointPrep::Week(w) => (w.prep.run(kind), None),
+                    PointPrep::Spatial(sp) => {
+                        let cfg = spec.config_for(point);
+                        let strategy =
+                            DispatchStrategy::parse(&point.dispatch).expect("dispatch label");
+                        let (r, jpr) = cells::run_spatial_cell(&cfg, sp, strategy, kind);
+                        (r, Some(jpr))
+                    }
+                }
             };
-            let savings_pct = result.metrics.savings_vs(&pp.baseline.metrics);
-            SweepRow { point: points[pi].clone(), kind, result, savings_pct }
+            let savings_pct = result.metrics.savings_vs(&bl.result.metrics);
+            let (kb_live, mean_ci) = match &preps[pi] {
+                PointPrep::Week(w) => (Some(w.kb_live), Some(w.mean_ci)),
+                _ => (None, None),
+            };
+            SweepRow {
+                point: point.clone(),
+                kind,
+                result,
+                savings_pct,
+                jobs_per_region,
+                kb_live,
+                mean_ci,
+            }
         })
     }
 }
@@ -299,13 +677,23 @@ where
 }
 
 /// Print rows as a fixed-width table (the CLI's default output). The
-/// variant column only appears when the spec used that axis.
+/// dispatch/week/variant columns only appear when the spec used those axes.
 pub fn print_table(rows: &[SweepRow]) {
+    let with_dispatch = rows.iter().any(|r| !r.point.dispatch.is_empty());
+    let with_week = rows.iter().any(|r| r.point.week.is_some());
     let with_variant = rows.iter().any(|r| !r.point.variant.is_empty());
-    let mut headers = vec!["region", "M", "h", "seed"];
-    if with_variant {
-        headers.insert(3, "variant");
+    let mut headers = vec!["region"];
+    if with_dispatch {
+        headers.push("dispatch");
     }
+    headers.extend_from_slice(&["M", "h"]);
+    if with_week {
+        headers.push("week");
+    }
+    if with_variant {
+        headers.push("variant");
+    }
+    headers.push("seed");
     headers.extend_from_slice(&[
         "policy",
         "carbon (kg)",
@@ -317,15 +705,19 @@ pub fn print_table(rows: &[SweepRow]) {
     let mut t = Table::new(&headers);
     for r in rows {
         let m = &r.result.metrics;
-        let mut cells = vec![
-            r.point.region.clone(),
-            format!("{}", r.point.capacity),
-            format!("{}", r.point.horizon_hours),
-            format!("{}", r.point.seed),
-        ];
-        if with_variant {
-            cells.insert(3, r.point.variant.clone());
+        let mut cells = vec![r.point.region.clone()];
+        if with_dispatch {
+            cells.push(r.point.dispatch.clone());
         }
+        cells.push(format!("{}", r.point.capacity));
+        cells.push(format!("{}", r.point.horizon_hours));
+        if with_week {
+            cells.push(r.point.week.map(|w| format!("{w}")).unwrap_or_default());
+        }
+        if with_variant {
+            cells.push(r.point.variant.clone());
+        }
+        cells.push(format!("{}", r.point.seed));
         cells.extend([
             m.policy.clone(),
             format!("{:.2}", m.carbon_kg()),
@@ -341,16 +733,22 @@ pub fn print_table(rows: &[SweepRow]) {
 
 /// Rows as a JSON array (the CLI's `--json` output). Seeds are emitted as
 /// strings: the JSON substrate stores numbers as f64, which cannot hold all
-/// 64 bits.
+/// 64 bits. Composite-cell extras (`jobs_per_region`, `kb_live_cases`,
+/// `mean_ci`) appear only on the rows that carry them.
 pub fn to_json(rows: &[SweepRow]) -> Json {
     Json::Arr(
         rows.iter()
             .map(|r| {
                 let m = &r.result.metrics;
-                Json::obj(vec![
+                let mut fields = vec![
                     ("region", Json::Str(r.point.region.clone())),
+                    ("dispatch", Json::Str(r.point.dispatch.clone())),
                     ("capacity", Json::Num(r.point.capacity as f64)),
                     ("horizon_hours", Json::Num(r.point.horizon_hours as f64)),
+                    (
+                        "week",
+                        r.point.week.map(|w| Json::Num(w as f64)).unwrap_or(Json::Null),
+                    ),
                     ("variant", Json::Str(r.point.variant.clone())),
                     ("seed", Json::Str(format!("{}", r.point.seed))),
                     ("policy", Json::Str(m.policy.clone())),
@@ -363,7 +761,20 @@ pub fn to_json(rows: &[SweepRow]) -> Json {
                     ("mean_delay_hours", Json::Num(m.mean_delay_hours)),
                     ("p95_delay_hours", Json::Num(m.p95_delay_hours)),
                     ("mean_utilization", Json::Num(m.mean_utilization)),
-                ])
+                ];
+                if let Some(jpr) = &r.jobs_per_region {
+                    fields.push((
+                        "jobs_per_region",
+                        Json::Arr(jpr.iter().map(|&n| Json::Num(n as f64)).collect()),
+                    ));
+                }
+                if let Some(live) = r.kb_live {
+                    fields.push(("kb_live_cases", Json::Num(live as f64)));
+                }
+                if let Some(ci) = r.mean_ci {
+                    fields.push(("mean_ci", Json::Num(ci)));
+                }
+                Json::obj(fields)
             })
             .collect(),
     )
@@ -390,6 +801,8 @@ mod tests {
         assert_eq!(points[0].region, "south-australia");
         assert_eq!(points[0].capacity, 10);
         assert_eq!(points[0].seed, 42);
+        assert_eq!(points[0].dispatch, "");
+        assert_eq!(points[0].week, None);
         assert_eq!(spec.policies(), PolicyKind::HEADLINE.to_vec());
     }
 
@@ -456,6 +869,105 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_axis_multiplies_only_region_sets() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.regions = vec!["south-australia".into(), "south-australia+ontario".into()];
+        spec.dispatchers =
+            vec![DispatchStrategy::RoundRobin, DispatchStrategy::LowestWindowCi];
+        let points = spec.points();
+        // 1 (single region) + 2 (set × dispatchers).
+        assert_eq!(points.len(), 3);
+        assert_eq!(points[0].dispatch, "");
+        assert!(!points[0].is_spatial());
+        assert!(points[1].is_spatial());
+        assert_eq!(points[1].dispatch, "round-robin");
+        assert_eq!(points[2].dispatch, "lowest-window-CI");
+        // The spatial config carries the set string and the total capacity.
+        let cfg = spec.config_for(&points[1]);
+        assert_eq!(cfg.region, "south-australia+ontario");
+        assert_eq!(cfg.capacity, 10);
+    }
+
+    #[test]
+    fn week_axis_pins_weekly_horizons() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.base.history_hours = 168;
+        spec.weeks = vec![0, 2];
+        let points = spec.points();
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].week, Some(0));
+        assert_eq!(points[1].week, Some(2));
+        for p in &points {
+            assert_eq!(p.horizon_hours, 168, "week cells evaluate one week");
+            let cfg = spec.config_for(p);
+            assert_eq!(cfg.horizon_hours, 168);
+            // The learning window stays the base's, unclamped.
+            assert_eq!(cfg.history_hours, 168);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot combine with multi-region")]
+    fn week_axis_rejects_region_sets() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.regions = vec!["south-australia+ontario".into()];
+        spec.weeks = vec![0];
+        let _ = spec.points();
+    }
+
+    #[test]
+    #[should_panic(expected = "pins each cell's horizon")]
+    fn week_axis_rejects_horizon_axis() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.horizons = vec![72];
+        spec.weeks = vec![0];
+        let _ = spec.points();
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate week index")]
+    fn duplicate_weeks_panic() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.weeks = vec![1, 1];
+        let _ = spec.points();
+    }
+
+    #[test]
+    fn toml_axes_apply_and_validate() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.apply_toml_axes(
+            r#"
+[sweep]
+regions = ["ontario", "south-australia+great-britain"]
+dispatch = ["rr", "window"]
+capacities = [8, 16]
+seeds = [1, 2]
+policies = ["agnostic", "carbonflex"]
+aging_window_hours = 336
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.regions.len(), 2);
+        assert_eq!(
+            spec.dispatchers,
+            vec![DispatchStrategy::RoundRobin, DispatchStrategy::LowestWindowCi]
+        );
+        assert_eq!(spec.capacities, vec![8, 16]);
+        assert_eq!(spec.seeds, vec![1, 2]);
+        assert_eq!(spec.policies, vec![PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex]);
+        assert_eq!(spec.aging_window_hours, 336);
+        // A config without [sweep] leaves the axes untouched.
+        spec.apply_toml_axes("[experiment]\nseed = 3\n").unwrap();
+        assert_eq!(spec.capacities, vec![8, 16]);
+        // Bad entries are rejected with the offending field named.
+        let mut bad = SweepSpec::new(tiny_base());
+        assert!(bad.apply_toml_axes("[sweep]\nregions = [\"atlantis\"]\n").is_err());
+        assert!(bad.apply_toml_axes("[sweep]\ndispatch = [\"teleport\"]\n").is_err());
+        assert!(bad.apply_toml_axes("[sweep]\npolicies = [\"magic\"]\n").is_err());
+        assert!(bad.apply_toml_axes("[sweep]\naging_window_hours = 0\n").is_err());
+    }
+
+    #[test]
     fn par_map_preserves_order() {
         let items: Vec<usize> = (0..100).collect();
         let doubled = par_map(8, &items, |&x, i| {
@@ -487,5 +999,50 @@ mod tests {
         // The agnostic rows are their own baselines.
         assert_eq!(rows[0].savings_pct, 0.0);
         assert_eq!(rows[2].savings_pct, 0.0);
+    }
+
+    #[test]
+    fn runner_executes_spatial_cells() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.base.capacity = 16; // 8 per region
+        spec.regions = vec!["south-australia+ontario".into()];
+        spec.dispatchers = vec![DispatchStrategy::LowestWindowCi];
+        spec.policies = vec![PolicyKind::CarbonAgnostic, PolicyKind::WaitAwhile];
+        let rows = SweepRunner::new(2).run(&spec);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.point.dispatch, "lowest-window-CI");
+            assert_eq!(r.result.metrics.unfinished, 0, "{:?}", r.point);
+            assert!(r.result.metrics.carbon_g > 0.0);
+            let jpr = r.jobs_per_region.as_ref().expect("spatial rows carry routing");
+            assert_eq!(jpr.len(), 2);
+            assert_eq!(jpr.iter().sum::<usize>(), r.result.metrics.completed);
+        }
+        // The agnostic row is its own baseline; routing is
+        // policy-independent, so both rows saw the same stream split.
+        assert_eq!(rows[0].savings_pct, 0.0);
+        assert_eq!(rows[0].jobs_per_region, rows[1].jobs_per_region);
+    }
+
+    #[test]
+    fn runner_executes_week_cells() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.base.capacity = 12;
+        spec.base.history_hours = 168;
+        spec.weeks = vec![0, 1];
+        spec.policies = vec![PolicyKind::CarbonAgnostic, PolicyKind::WaitAwhile];
+        let rows = SweepRunner::new(4).run(&spec);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].point.week, Some(0));
+        assert_eq!(rows[2].point.week, Some(1));
+        for r in &rows {
+            assert_eq!(r.point.horizon_hours, 168);
+            assert_eq!(r.result.metrics.unfinished, 0, "{:?}", r.point);
+            // No requested policy reads the KB, so the chain skips its
+            // learning passes and reports an empty knowledge base.
+            assert_eq!(r.kb_live, Some(0));
+            assert!(r.mean_ci.unwrap() > 0.0);
+        }
+        assert_eq!(rows[0].savings_pct, 0.0);
     }
 }

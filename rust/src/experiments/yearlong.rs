@@ -4,30 +4,22 @@
 //! §4.2: "older mappings from the knowledge base are aged out over a
 //! rolling window").
 //!
-//! The driver walks the year week by week: before each evaluation week it
-//! re-runs the learning phase over the trailing history window, ages the
-//! knowledge base, and evaluates CarbonFlex against the carbon-agnostic
-//! baseline and the per-week oracle. This exercises the paper's continuous
-//! learning loop end to end, including seasonal drift in the carbon traces.
-//!
-//! Weeks are inherently sequential (each week's knowledge base feeds the
-//! next), but within a week the three evaluation runs are independent and
-//! execute in parallel on the sweep engine's thread pool.
+//! Since PR 5, evaluation weeks are **first-class sweep cells** on the
+//! sweep engine's `weeks` axis (see `experiments/sweep.rs`): the sequential
+//! learning chain — learn on the trailing history, push into the carried
+//! knowledge base, slide the rolling window with
+//! `KnowledgeBase::advance_window` — runs once per grid point during sweep
+//! preparation (`experiments/cells.rs::prepare_week_chain`), and each
+//! week's policy runs execute in parallel against an immutable snapshot.
+//! [`run_yearlong`] is the thin adapter that builds the week-axis spec,
+//! routes it through [`SweepRunner`], and reshapes the rows into the
+//! paper-style [`YearResult`]; the retired bespoke loop survives in-test as
+//! a bitwise reference implementation.
 
-use crate::carbon::forecast::Forecaster;
-use crate::carbon::synth::{self, Region};
-use crate::cluster::energy::EnergyModel;
-use crate::cluster::sim::Simulator;
 use crate::config::ExperimentConfig;
-use crate::experiments::sweep::par_map;
-use crate::learning::kb::{Case, KnowledgeBase};
-use crate::learning::replay::{learn, LearnConfig};
-use crate::sched::carbon_agnostic::CarbonAgnostic;
-use crate::sched::carbonflex::{CarbonFlex, CarbonFlexParams};
-use crate::sched::oracle::Oracle;
-use crate::sched::{Policy, PolicyKind};
+use crate::experiments::sweep::{SweepRunner, SweepSpec};
+use crate::sched::PolicyKind;
 use crate::util::stats;
-use crate::workload::tracegen;
 
 /// One evaluated week.
 #[derive(Debug, Clone)]
@@ -60,87 +52,38 @@ impl YearResult {
     }
 }
 
-/// Run the continuous-learning loop over `weeks` evaluation weeks.
+/// The three policies every week cell evaluates: the savings baseline, the
+/// learned runtime, and the per-week oracle upper bound.
+const WEEK_POLICIES: [PolicyKind; 3] =
+    [PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex, PolicyKind::Oracle];
+
+/// Run the continuous-learning loop over `weeks` evaluation weeks — a thin
+/// adapter over the sweep engine's `weeks` axis.
 ///
 /// `aging_window_hours` bounds the knowledge base's memory (paper: a
-/// rolling window; we default to ~4 weeks). Weeks before the first full
-/// history window are skipped.
+/// rolling window; we default to ~4 weeks in the benches).
 pub fn run_yearlong(cfg: &ExperimentConfig, weeks: usize, aging_window_hours: usize) -> YearResult {
-    let region = Region::parse(&cfg.region).expect("region");
-    let total_hours = cfg.history_hours + weeks * 168 + 336;
-    let year = synth::synthesize(region, total_hours.max(8760), cfg.seed);
-    let energy = EnergyModel::for_hardware(cfg.hardware);
+    if weeks == 0 {
+        return YearResult { weeks: Vec::new() };
+    }
+    let mut spec = SweepSpec::new(cfg.clone());
+    spec.weeks = (0..weeks).collect();
+    spec.aging_window_hours = aging_window_hours;
+    spec.policies = WEEK_POLICIES.to_vec();
+    let rows = SweepRunner::auto().run(&spec);
 
-    let mut kb = KnowledgeBase::new();
-    let mut results = Vec::new();
-
-    for week in 0..weeks {
-        let eval_start = cfg.history_hours + week * 168;
-        let hist_start = eval_start - cfg.history_hours;
-
-        // --- Learning phase on the trailing window, then age the KB ---
-        let hist_trace = year.slice(hist_start, cfg.history_hours);
-        let hist_jobs =
-            tracegen::generate(cfg, cfg.history_hours, cfg.seed ^ (week as u64) << 8 ^ 0x1157);
-        let fresh = learn(
-            &hist_jobs,
-            &hist_trace,
-            &LearnConfig {
-                max_capacity: cfg.capacity,
-                num_queues: cfg.queues.len(),
-                offsets: cfg.replay_offsets,
-                energy: energy.clone(),
-                threads: 0, // parallel per-offset replays, offset-major merge
-            },
-        );
-        for c in fresh.cases() {
-            // Stamp cases with absolute time so aging works across weeks.
-            kb.push(Case { recorded_at: hist_start + c.recorded_at, ..c.clone() });
-        }
-        // Amortized sliding-window maintenance: tombstone aged cases and
-        // keep the fresh tail brute-force-matched, rebuilding the index
-        // only once churn crosses the CARBONFLEX_KB_CHURN fraction.
-        kb.advance_window(eval_start, aging_window_hours);
-
-        // --- Evaluation week: the three runs are independent given the
-        // frozen knowledge base, so run them in parallel. ---
-        let eval_trace = year.slice(eval_start, 168 + 168); // + drain week
-        let eval_jobs = tracegen::generate(cfg, 168, cfg.seed ^ (week as u64) << 8 ^ 0xE7A1);
-        let forecaster = Forecaster::perfect(eval_trace.clone());
-        let sim = Simulator::new(cfg.capacity, energy.clone(), cfg.queues.len(), 168);
-
-        let kinds = [PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex, PolicyKind::Oracle];
-        let runs = par_map(kinds.len(), &kinds, |&kind, _| {
-            let mut policy: Box<dyn Policy> = match kind {
-                PolicyKind::CarbonFlex => Box::new(CarbonFlex::new(
-                    // Memcpy snapshot of the lazily-maintained index — no
-                    // per-run rebuild; tombstones stay filtered at match
-                    // time.
-                    kb.clone(),
-                    CarbonFlexParams {
-                        knn_k: cfg.knn_k,
-                        violation_tolerance: cfg.violation_tolerance,
-                        distance_bound: cfg.distance_bound,
-                        ..Default::default()
-                    },
-                )),
-                PolicyKind::Oracle => {
-                    Box::new(Oracle::new(&eval_jobs, &eval_trace, cfg.capacity))
-                }
-                _ => Box::new(CarbonAgnostic),
-            };
-            sim.run(&eval_jobs, &forecaster, policy.as_mut())
-        });
-        let (baseline, flex_result, oracle_result) = (&runs[0], &runs[1], &runs[2]);
-
-        let base = baseline.metrics.carbon_g;
+    // Rows come back in grid order: week-major, policy-minor (agnostic,
+    // carbonflex, oracle per week).
+    let mut results = Vec::with_capacity(weeks);
+    for chunk in rows.chunks(WEEK_POLICIES.len()) {
+        let (flex, oracle) = (&chunk[1], &chunk[2]);
         results.push(WeekResult {
-            week,
-            mean_ci: year.slice(eval_start, 168).mean(),
-            savings_pct: (1.0 - flex_result.metrics.carbon_g / base) * 100.0,
-            oracle_savings_pct: (1.0 - oracle_result.metrics.carbon_g / base) * 100.0,
-            kb_cases: kb.live(),
-            violations: flex_result.metrics.violations,
+            week: flex.point.week.expect("week cell"),
+            mean_ci: flex.mean_ci.expect("week rows carry the eval-week mean CI"),
+            savings_pct: flex.savings_pct,
+            oracle_savings_pct: oracle.savings_pct,
+            kb_cases: flex.kb_live.expect("week rows carry the live KB size"),
+            violations: flex.result.metrics.violations,
         });
     }
     YearResult { weeks: results }
@@ -156,6 +99,161 @@ mod tests {
         cfg.history_hours = 168;
         cfg.replay_offsets = 2;
         cfg
+    }
+
+    /// The retired bespoke week loop, kept verbatim as the bitwise
+    /// reference the sweep-routed path must reproduce (the PR 3
+    /// sanitize/kd-search pattern).
+    mod legacy_reference {
+        use super::*;
+        use crate::carbon::forecast::Forecaster;
+        use crate::carbon::synth::{self, Region};
+        use crate::cluster::energy::EnergyModel;
+        use crate::cluster::sim::Simulator;
+        use crate::experiments::sweep::par_map;
+        use crate::learning::kb::{Case, KnowledgeBase};
+        use crate::learning::replay::{learn, LearnConfig};
+        use crate::sched::carbon_agnostic::CarbonAgnostic;
+        use crate::sched::carbonflex::{CarbonFlex, CarbonFlexParams};
+        use crate::sched::oracle::Oracle;
+        use crate::sched::Policy;
+        use crate::workload::tracegen;
+
+        pub fn run_yearlong(
+            cfg: &ExperimentConfig,
+            weeks: usize,
+            aging_window_hours: usize,
+        ) -> YearResult {
+            let region = Region::parse(&cfg.region).expect("region");
+            let total_hours = cfg.history_hours + weeks * 168 + 336;
+            let year = synth::synthesize(region, total_hours.max(8760), cfg.seed);
+            let energy = EnergyModel::for_hardware(cfg.hardware);
+            // The Fig. 13 fidelity fix applies here too: the learning
+            // history is generated at the unshifted scale.
+            let hist_cfg = cfg.unshifted_history();
+
+            let mut kb = KnowledgeBase::new();
+            let mut results = Vec::new();
+
+            for week in 0..weeks {
+                let eval_start = cfg.history_hours + week * 168;
+                let hist_start = eval_start - cfg.history_hours;
+
+                let hist_trace = year.slice(hist_start, cfg.history_hours);
+                let hist_jobs = tracegen::generate(
+                    &hist_cfg,
+                    cfg.history_hours,
+                    cfg.seed ^ (week as u64) << 8 ^ 0x1157,
+                );
+                let fresh = learn(
+                    &hist_jobs,
+                    &hist_trace,
+                    &LearnConfig {
+                        max_capacity: cfg.capacity,
+                        num_queues: cfg.queues.len(),
+                        offsets: cfg.replay_offsets,
+                        energy: energy.clone(),
+                        threads: 0,
+                    },
+                );
+                for c in fresh.cases() {
+                    kb.push(Case { recorded_at: hist_start + c.recorded_at, ..c.clone() });
+                }
+                kb.advance_window(eval_start, aging_window_hours);
+
+                let eval_trace = year.slice(eval_start, 168 + 168);
+                let eval_jobs =
+                    tracegen::generate(cfg, 168, cfg.seed ^ (week as u64) << 8 ^ 0xE7A1);
+                let forecaster = Forecaster::perfect(eval_trace.clone());
+                let sim = Simulator::new(cfg.capacity, energy.clone(), cfg.queues.len(), 168);
+
+                let kinds =
+                    [PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex, PolicyKind::Oracle];
+                let runs = par_map(kinds.len(), &kinds, |&kind, _| {
+                    let mut policy: Box<dyn Policy> = match kind {
+                        PolicyKind::CarbonFlex => Box::new(CarbonFlex::new(
+                            kb.clone(),
+                            CarbonFlexParams {
+                                knn_k: cfg.knn_k,
+                                violation_tolerance: cfg.violation_tolerance,
+                                distance_bound: cfg.distance_bound,
+                                ..Default::default()
+                            },
+                        )),
+                        PolicyKind::Oracle => {
+                            Box::new(Oracle::new(&eval_jobs, &eval_trace, cfg.capacity))
+                        }
+                        _ => Box::new(CarbonAgnostic),
+                    };
+                    sim.run(&eval_jobs, &forecaster, policy.as_mut())
+                });
+                let (baseline, flex_result, oracle_result) = (&runs[0], &runs[1], &runs[2]);
+
+                let base = baseline.metrics.carbon_g;
+                results.push(WeekResult {
+                    week,
+                    mean_ci: year.slice(eval_start, 168).mean(),
+                    savings_pct: (1.0 - flex_result.metrics.carbon_g / base) * 100.0,
+                    oracle_savings_pct: (1.0 - oracle_result.metrics.carbon_g / base) * 100.0,
+                    kb_cases: kb.live(),
+                    violations: flex_result.metrics.violations,
+                });
+            }
+            YearResult { weeks: results }
+        }
+    }
+
+    #[test]
+    fn sweep_cells_are_bitwise_identical_to_legacy_loop() {
+        // The tentpole equivalence: the week-axis sweep reproduces the
+        // retired bespoke loop bit for bit, week by week.
+        let cfg = small_cfg();
+        let want = legacy_reference::run_yearlong(&cfg, 3, 24 * 28);
+        let got = run_yearlong(&cfg, 3, 24 * 28);
+        assert_eq!(got.weeks.len(), want.weeks.len());
+        for (g, w) in got.weeks.iter().zip(&want.weeks) {
+            assert_eq!(g.week, w.week);
+            assert_eq!(g.mean_ci.to_bits(), w.mean_ci.to_bits(), "week {}", g.week);
+            assert_eq!(
+                g.savings_pct.to_bits(),
+                w.savings_pct.to_bits(),
+                "week {}: savings diverged ({} vs {})",
+                g.week,
+                g.savings_pct,
+                w.savings_pct
+            );
+            assert_eq!(
+                g.oracle_savings_pct.to_bits(),
+                w.oracle_savings_pct.to_bits(),
+                "week {}: oracle savings diverged",
+                g.week
+            );
+            assert_eq!(g.kb_cases, w.kb_cases, "week {}", g.week);
+            assert_eq!(g.violations, w.violations, "week {}", g.week);
+        }
+    }
+
+    #[test]
+    fn subset_week_sweep_matches_full_run() {
+        // The cross-scenario invariant: sweeping only week 2 yields the
+        // same cell as week 2 of a full run, because the learning chain
+        // always walks from week 0.
+        let cfg = small_cfg();
+        let full = run_yearlong(&cfg, 3, 24 * 28);
+        let mut spec = SweepSpec::new(cfg);
+        spec.weeks = vec![2];
+        spec.policies = vec![PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex];
+        let rows = SweepRunner::auto().run(&spec);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].point.week, Some(2));
+        assert_eq!(
+            rows[1].savings_pct.to_bits(),
+            full.weeks[2].savings_pct.to_bits(),
+            "subset sweep diverged from the full chain ({} vs {})",
+            rows[1].savings_pct,
+            full.weeks[2].savings_pct
+        );
+        assert_eq!(rows[1].kb_live, Some(full.weeks[2].kb_cases));
     }
 
     #[test]

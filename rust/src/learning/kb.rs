@@ -721,6 +721,191 @@ mod tests {
         );
     }
 
+    /// Property: tombstone + churn-threshold maintenance is pure
+    /// bookkeeping. For an arbitrary interleaving of pushes and window
+    /// slides and any churn fraction (covering the `CARBONFLEX_KB_CHURN`
+    /// settings the CI matrix exercises: 0.0 eager, 0.25 default, 1.0
+    /// maximally lazy, plus random values):
+    /// (a) the lazy KB tracks the live-case set of an eagerly-rebuilt twin
+    ///     exactly after every slide,
+    /// (b) matching stays exact over the live set in the last-fitted
+    ///     z-space (ties by case index), and
+    /// (c) once rebuilt, the lazy KB is bitwise identical — cases, fitted
+    ///     scaler, and matches, ties included — to a fresh
+    ///     [`KnowledgeBase::from_cases`] over the surviving cases.
+    #[test]
+    fn property_advance_window_matches_fresh_rebuild() {
+        fn rand_case(rng: &mut Rng, at: usize) -> Case {
+            Case {
+                recorded_at: at,
+                // Coarse grid so exact-distance ties occur.
+                state: StateVector::from_raw(
+                    rng.below(5) as f64 * 150.0,
+                    0.0,
+                    rng.below(3) as f64 * 0.5,
+                    &[rng.below(3), rng.below(3), 0],
+                    0.5,
+                ),
+                capacity: rng.below(30),
+                rho: rng.below(4) as f64 * 0.25,
+            }
+        }
+        #[derive(Debug, Clone, Copy)]
+        enum Op {
+            Push { at: usize },
+            Advance { now: usize, window: usize },
+        }
+        check(
+            "advance_window == fresh rebuild",
+            Config { cases: 64, seed: 0xA6E0_CAFE },
+            |rng| {
+                let churn = match rng.below(4) {
+                    0 => 0.0,
+                    1 => 0.25,
+                    2 => 1.0,
+                    _ => rng.below(100) as f64 / 100.0,
+                };
+                let ops: Vec<Op> = (0..3 + rng.below(24))
+                    .map(|_| {
+                        if rng.below(3) == 0 {
+                            Op::Advance { now: rng.below(80), window: 5 + rng.below(40) }
+                        } else {
+                            Op::Push { at: rng.below(60) }
+                        }
+                    })
+                    .collect();
+                let k = 1 + rng.below(8);
+                let seed = rng.next_u64();
+                (churn, ops, k, seed)
+            },
+            |&(churn, ref ops, k, seed)| {
+                let mut rng = Rng::new(seed);
+                let mut lazy = KnowledgeBase::new();
+                lazy.set_churn_fraction(churn);
+                // Eager twin: rebuilds on every slide (the historical
+                // behaviour the lazy path must be indistinguishable from).
+                let mut eager = KnowledgeBase::new();
+                eager.set_churn_fraction(0.0);
+                let mut floor = 0usize; // shadow of the rolling window
+                for &op in ops {
+                    match op {
+                        Op::Push { at } => {
+                            let c = rand_case(&mut rng, at);
+                            lazy.push(c.clone());
+                            eager.push(c);
+                        }
+                        Op::Advance { now, window } => {
+                            lazy.advance_window(now, window);
+                            eager.advance_window(now, window);
+                            floor = floor.max(now.saturating_sub(window));
+                            // (a) live bookkeeping agrees with the eager
+                            // twin and the shadow floor.
+                            if lazy.live() != eager.live() {
+                                return Err(format!(
+                                    "live diverged: lazy {} vs eager {}",
+                                    lazy.live(),
+                                    eager.live()
+                                ));
+                            }
+                            let shadow_live = lazy
+                                .cases()
+                                .iter()
+                                .filter(|c| c.recorded_at >= floor)
+                                .count();
+                            if lazy.live() != shadow_live {
+                                return Err(format!(
+                                    "live() {} != shadow count {shadow_live}",
+                                    lazy.live()
+                                ));
+                            }
+                        }
+                    }
+                    // (b) matching is exact over the live set in the
+                    // last-fitted z-space after every op, ties by index.
+                    let q = rand_case(&mut rng, 0).state;
+                    let scaler = lazy.scaler();
+                    let zq = scaler.apply(&q);
+                    let mut want: Vec<(f64, usize)> = lazy
+                        .cases()
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, c)| c.recorded_at >= floor)
+                        .map(|(i, c)| (scaler.apply(&c.state).dist(&zq), i))
+                        .collect();
+                    want.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+                    want.truncate(k);
+                    let got = lazy.top_k(&q, k);
+                    if got.len() != want.len() {
+                        return Err(format!(
+                            "hit count: got {} want {}",
+                            got.len(),
+                            want.len()
+                        ));
+                    }
+                    for (j, (&(d, i), g)) in want.iter().zip(&got).enumerate() {
+                        let c = &lazy.cases()[i];
+                        if g.dist.to_bits() != d.to_bits()
+                            || g.capacity != c.capacity
+                            || g.rho.to_bits() != c.rho.to_bits()
+                        {
+                            return Err(format!(
+                                "hit {j}: got {g:?} want case {i} dist {d}"
+                            ));
+                        }
+                    }
+                }
+                // (c) after a forced rebuild the lazy KB is bitwise a fresh
+                // build over the surviving cases — and carries exactly the
+                // eager twin's case set. One final synchronized slide first:
+                // it re-tombstones any stale cases pushed since the last
+                // slide in BOTH twins (rebuild() only reclaims tombstones
+                // counted at the latest advance_window, so without this the
+                // two could legitimately disagree on such stragglers).
+                lazy.advance_window(floor, 0);
+                eager.advance_window(floor, 0);
+                lazy.rebuild();
+                if lazy.len() != eager.len() {
+                    return Err(format!(
+                        "post-rebuild case count: lazy {} vs eager {}",
+                        lazy.len(),
+                        eager.len()
+                    ));
+                }
+                for (a, b) in lazy.cases().iter().zip(eager.cases()) {
+                    if a != b {
+                        return Err(format!("post-rebuild cases diverged: {a:?} vs {b:?}"));
+                    }
+                }
+                let fresh = KnowledgeBase::from_cases(lazy.cases().to_vec());
+                if lazy.scaler() != fresh.scaler() {
+                    return Err("rebuilt scaler != fresh-fit scaler".into());
+                }
+                for probe in 0..4 {
+                    let q = rand_case(&mut rng, probe).state;
+                    let (a, b) = (lazy.top_k(&q, k), fresh.top_k(&q, k));
+                    if a.len() != b.len() {
+                        return Err(format!(
+                            "probe {probe}: rebuilt {} hits vs fresh {}",
+                            a.len(),
+                            b.len()
+                        ));
+                    }
+                    for (x, y) in a.iter().zip(&b) {
+                        if x.dist.to_bits() != y.dist.to_bits()
+                            || x.capacity != y.capacity
+                            || x.rho.to_bits() != y.rho.to_bits()
+                        {
+                            return Err(format!(
+                                "probe {probe}: rebuilt {x:?} vs fresh {y:?}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn csv_roundtrip() {
         let mut kb = KnowledgeBase::new();

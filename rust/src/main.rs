@@ -55,10 +55,16 @@ fn print_usage() {
          COMMANDS:\n\
          \x20 simulate    --config <file> [--policy carbonflex] run one policy\n\
          \x20 compare     --config <file>                       headline comparison (Fig. 6)\n\
-         \x20 sweep       [--config <file>] [--regions a,b] [--policies x,y|all|headline]\n\
-         \x20             [--capacities 100,150] [--horizons 168] [--seeds 1,2]\n\
-         \x20             [--history <h>] [--offsets <n>] [--threads N] [--json] [--check]\n\
-         \x20             parallel cartesian grid; rows in grid order\n\
+         \x20 sweep       [--config <file>] [--regions a,b+c] [--policies x,y|all|headline]\n\
+         \x20             [--dispatch rr,current,window] [--capacities 100,150]\n\
+         \x20             [--horizons 168] [--weeks N|w1,w2] [--aging-window 672]\n\
+         \x20             [--seeds 1,2] [--history <h>] [--offsets <n>] [--threads N]\n\
+         \x20             [--json] [--check]\n\
+         \x20             parallel cartesian grid; rows in grid order. A '+'-joined\n\
+         \x20             region entry is a multi-region spatial cell (the --dispatch\n\
+         \x20             axis applies); --weeks makes cells weekly continuous-learning\n\
+         \x20             windows. A [sweep] table in the config file sets the same\n\
+         \x20             axes declaratively; flags override it per axis\n\
          \x20 bench       [--config <file>] [--json] [--out BENCH_hotpaths.json]\n\
          \x20             [--budget-ms 2000] [--baseline <file>] [--max-regression 3.0]\n\
          \x20             hot-path timings → JSON; non-zero exit on baseline regression\n\
@@ -155,41 +161,100 @@ fn cmd_sweep(args: &Args) -> i32 {
     }
 
     let mut spec = SweepSpec::new(base);
-    spec.regions = match parse_list(args, "regions", |s| {
-        Region::parse(s)
-            .map(|r| r.key().to_string())
-            .ok_or_else(|| format!("unknown region '{s}'"))
+    // Declarative axes from the config file's optional [sweep] table; CLI
+    // flags override them per axis below.
+    if let Some(path) = args.get("config") {
+        let src = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => return fail(&format!("reading {path}: {e}")),
+        };
+        if let Err(e) = spec.apply_toml_axes(&src) {
+            return fail(&e);
+        }
+    }
+    // A region entry may be a '+'-joined set ("south-australia+ontario"):
+    // such points are multi-region spatial cells, multiplied by --dispatch.
+    let regions = match parse_list(args, "regions", |s| {
+        let keys: Result<Vec<_>, String> = s
+            .split('+')
+            .map(|k| {
+                Region::parse(k.trim())
+                    .map(|r| r.key().to_string())
+                    .ok_or_else(|| format!("unknown region '{k}'"))
+            })
+            .collect();
+        keys.map(|k| k.join("+"))
     }) {
         Ok(v) => v,
         Err(e) => return fail(&e),
     };
-    spec.policies = match args.get("policies") {
-        Some("all") => PolicyKind::ALL.to_vec(),
-        Some("headline") | None => PolicyKind::HEADLINE.to_vec(),
+    if !regions.is_empty() {
+        spec.regions = regions;
+    }
+    let dispatchers = match parse_list(args, "dispatch", |s| {
+        carbonflex::experiments::DispatchStrategy::parse(s)
+            .ok_or_else(|| format!("unknown dispatch strategy '{s}' (rr, current, window)"))
+    }) {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    if !dispatchers.is_empty() {
+        spec.dispatchers = dispatchers;
+    }
+    match args.get("policies") {
+        Some("all") => spec.policies = PolicyKind::ALL.to_vec(),
+        Some("headline") => spec.policies = PolicyKind::HEADLINE.to_vec(),
         Some(_) => match parse_list(args, "policies", |s| {
             PolicyKind::parse(s).ok_or_else(|| format!("unknown policy '{s}'"))
         }) {
-            Ok(v) => v,
+            Ok(v) => spec.policies = v,
             Err(e) => return fail(&e),
         },
+        // No flag: keep the [sweep] table's axis if it set one; otherwise
+        // the spec defaults to the headline set.
+        None => {}
     };
     let num = |name: &str| -> Result<Vec<usize>, String> {
         parse_list(args, name, |s| {
             s.parse::<usize>().map_err(|_| format!("invalid --{name} entry '{s}'"))
         })
     };
-    spec.capacities = match num("capacities") {
-        Ok(v) => v,
+    match num("capacities") {
+        Ok(v) if !v.is_empty() => spec.capacities = v,
+        Ok(_) => {}
         Err(e) => return fail(&e),
     };
-    spec.horizons = match num("horizons") {
-        Ok(v) => v,
+    match num("horizons") {
+        Ok(v) if !v.is_empty() => spec.horizons = v,
+        Ok(_) => {}
         Err(e) => return fail(&e),
     };
-    spec.seeds = match parse_list(args, "seeds", |s| {
+    // --weeks N evaluates the first N weeks; --weeks w1,w2,… names specific
+    // week indices (the learning chain still walks from week 0).
+    if let Some(raw) = args.get("weeks") {
+        if raw.contains(',') {
+            match num("weeks") {
+                Ok(v) => spec.weeks = v,
+                Err(e) => return fail(&e),
+            }
+        } else {
+            match raw.trim().parse::<usize>() {
+                Ok(0) => return fail("--weeks must be positive"),
+                Ok(n) => spec.weeks = (0..n).collect(),
+                Err(_) => return fail(&format!("invalid --weeks '{raw}'")),
+            }
+        }
+    }
+    match args.num_or::<usize>("aging-window", spec.aging_window_hours) {
+        Ok(0) => return fail("--aging-window must be positive"),
+        Ok(h) => spec.aging_window_hours = h,
+        Err(e) => return fail(&e),
+    }
+    match parse_list(args, "seeds", |s| {
         s.parse::<u64>().map_err(|_| format!("invalid --seeds entry '{s}'"))
     }) {
-        Ok(v) => v,
+        Ok(v) if !v.is_empty() => spec.seeds = v,
+        Ok(_) => {}
         Err(e) => return fail(&e),
     };
 

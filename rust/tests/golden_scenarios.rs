@@ -1,0 +1,82 @@
+//! Golden fingerprints for the composite sweep cells: one spatial
+//! (multi-region + geo-dispatch) cell and one yearlong (week-window +
+//! continuous learning) cell, on smoke-sized configs.
+//!
+//! Blessing works like the other golden guards (see `common::check_or_bless`):
+//! the first local run writes `tests/golden/scenario_fingerprints.txt` —
+//! commit it to pin the cells bit for bit. On CI the `golden-fixtures` job
+//! generates the file with `CARBONFLEX_BLESS=1` and uploads it as an
+//! artifact, and warns while it remains uncommitted.
+
+use carbonflex::config::ExperimentConfig;
+use carbonflex::experiments::sweep::{SweepRunner, SweepSpec};
+use carbonflex::experiments::DispatchStrategy;
+use carbonflex::sched::PolicyKind;
+
+mod common;
+
+fn spatial_lines() -> Vec<String> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.capacity = 18; // 9 per region
+    cfg.horizon_hours = 48;
+    cfg.history_hours = 96;
+    cfg.replay_offsets = 1;
+    let mut spec = SweepSpec::new(cfg);
+    spec.regions = vec!["south-australia+ontario".into()];
+    spec.dispatchers = vec![DispatchStrategy::LowestWindowCi];
+    spec.policies = vec![PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex];
+    SweepRunner::new(2)
+        .run(&spec)
+        .iter()
+        .map(|r| {
+            format!(
+                "spatial/{}/{}/{}\t{}\tjobs={:?}",
+                r.point.region,
+                r.point.dispatch,
+                r.kind.as_str(),
+                r.result.fingerprint(),
+                r.jobs_per_region.as_ref().expect("spatial row")
+            )
+        })
+        .collect()
+}
+
+fn yearlong_lines() -> Vec<String> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.capacity = 12;
+    cfg.history_hours = 168;
+    cfg.replay_offsets = 1;
+    let mut spec = SweepSpec::new(cfg);
+    spec.weeks = vec![1]; // the chain still learns week 0 first
+    spec.policies =
+        vec![PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex, PolicyKind::Oracle];
+    SweepRunner::new(2)
+        .run(&spec)
+        .iter()
+        .map(|r| {
+            format!(
+                "yearlong/week{}/{}\t{}\tkb={}",
+                r.point.week.expect("week cell"),
+                r.kind.as_str(),
+                r.result.fingerprint(),
+                r.kb_live.expect("week row")
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn scenario_cells_reproduce_checked_in_fingerprints() {
+    let mut lines = spatial_lines();
+    lines.extend(yearlong_lines());
+    common::check_or_bless("scenario_fingerprints.txt", &lines);
+}
+
+#[test]
+fn scenario_cells_are_bitwise_repeatable() {
+    // Independent of the golden file: two full runs of each composite cell
+    // (synthesis, chained learning, dispatch, simulation) agree on every
+    // bit, so the fingerprints above are stable things to pin.
+    assert_eq!(spatial_lines(), spatial_lines(), "spatial cell not reproducible");
+    assert_eq!(yearlong_lines(), yearlong_lines(), "yearlong cell not reproducible");
+}
