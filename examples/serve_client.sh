@@ -1,0 +1,49 @@
+#!/usr/bin/env sh
+# Minimal shell client for the coordinator's JSON-lines protocol (v2).
+#
+# Pipes a scripted session into `carbonflex serve`: a correlated batch
+# submission, a few ticks with status polls, a stats snapshot, and a final
+# drain. Responses come back one JSON line per request, each echoing the
+# request's "id" when one was given.
+#
+# Usage:
+#   sh examples/serve_client.sh [path-to-carbonflex-binary]
+#
+# From the rust/ directory the default resolves via cargo:
+#   cargo build --release && sh ../examples/serve_client.sh
+set -eu
+
+BIN="${1:-rust/target/release/carbonflex}"
+if [ ! -x "$BIN" ]; then
+    BIN="target/release/carbonflex"
+fi
+if [ ! -x "$BIN" ]; then
+    echo "carbonflex binary not found; build with: cargo build --release" >&2
+    exit 1
+fi
+CFG="rust/configs/serve.toml"
+if [ ! -f "$CFG" ]; then
+    CFG="configs/serve.toml"
+fi
+
+{
+    # One envelope, three jobs, one admission round.
+    printf '%s\n' '{"v": 2, "id": "batch-1", "op": "submit_batch", "jobs": [
+        {"workload": "N-body(N=100k)", "length_hours": 4.0, "queue": 1},
+        {"workload": "Heat(N=1k)", "length_hours": 1.0, "queue": 0},
+        {"workload": "Jacobi(N=4k)", "length_hours": 9.0, "queue": 2}]}' | tr -d '\n'
+    printf '\n'
+    # Single submit with a correlation id.
+    printf '%s\n' '{"v": 2, "id": "s-1", "op": "submit", "workload": "N-body(N=2k)", "length_hours": 1.5, "queue": 0}'
+    # Advance virtual time, polling status.
+    for i in 1 2 3; do
+        printf '%s\n' '{"v": 2, "op": "tick"}'
+        printf '%s\n' "{\"v\": 2, \"id\": \"st-$i\", \"op\": \"status\"}"
+    done
+    # Service counters and decision-latency percentiles.
+    printf '%s\n' '{"v": 2, "id": "stats-1", "op": "stats"}'
+    # A legacy v1 line (no "v") still works during the deprecation window.
+    printf '%s\n' '{"op": "status"}'
+    # Finish everything and get the final report.
+    printf '%s\n' '{"v": 2, "id": "final", "op": "drain"}'
+} | "$BIN" serve --config "$CFG" --shards 1

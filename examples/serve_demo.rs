@@ -7,7 +7,7 @@
 
 use carbonflex::carbon::forecast::Forecaster;
 use carbonflex::carbon::synth::{synthesize, Region};
-use carbonflex::config::Hardware;
+use carbonflex::config::{Hardware, ServiceConfig};
 use carbonflex::coordinator::{Coordinator, CoordinatorConfig};
 use carbonflex::sched::carbon_agnostic::CarbonAgnostic;
 
@@ -20,6 +20,7 @@ fn main() {
             num_queues: 3,
             queue_slack_hours: vec![6.0, 24.0, 48.0],
             horizon: 200,
+            service: ServiceConfig::default(),
         },
         Forecaster::perfect(trace),
         Box::new(CarbonAgnostic),

@@ -6,5 +6,5 @@ pub mod toml;
 
 pub use schema::{
     default_queues, ConfigError, ElasticityScenario, ExperimentConfig, Hardware, QueueConfig,
-    TraceFamily,
+    ServiceConfig, ShedPolicy, TraceFamily,
 };

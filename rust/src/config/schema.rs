@@ -385,6 +385,99 @@ impl ExperimentConfig {
     }
 }
 
+/// Backpressure shed policy for the traffic-serving coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// When the pending bound is hit, reject the incoming submission
+    /// (`queue_full`).
+    RejectNewest,
+    /// When the bound is hit, shed submissions destined for delay-tolerant
+    /// queues (`shed`); only queue 0 (least slack) is admitted over the
+    /// bound.
+    RejectLowestQueue,
+}
+
+impl ShedPolicy {
+    pub const ALL: [ShedPolicy; 2] = [ShedPolicy::RejectNewest, ShedPolicy::RejectLowestQueue];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShedPolicy::RejectNewest => "reject-newest",
+            ShedPolicy::RejectLowestQueue => "reject-lowest-queue",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ShedPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "reject-newest" | "newest" => Some(ShedPolicy::RejectNewest),
+            "reject-lowest-queue" | "lowest-queue" => Some(ShedPolicy::RejectLowestQueue),
+            _ => None,
+        }
+    }
+}
+
+/// Service limits for the traffic-serving coordinator, read from an optional
+/// `[service]` table (which [`ExperimentConfig::from_toml_str`] ignores, so
+/// one file can configure both the experiment and the service tier).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceConfig {
+    /// Bound on jobs waiting + running in one coordinator; submissions past
+    /// it are rejected per the shed policy.
+    pub max_pending: usize,
+    /// Largest accepted `submit_batch` envelope.
+    pub max_batch: usize,
+    pub shed: ShedPolicy,
+    /// Default shard count for `serve`/`serve-bench` (one coordinator per
+    /// region).
+    pub shards: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_pending: 4096,
+            max_batch: 1024,
+            shed: ShedPolicy::RejectNewest,
+            shards: 1,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, ConfigError> {
+        let src = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&src)
+    }
+
+    /// Parse the `[service]` table from TOML source; missing fields take
+    /// defaults.
+    pub fn from_toml_str(src: &str) -> Result<Self, ConfigError> {
+        let root = toml::parse(src)?;
+        let mut cfg = ServiceConfig::default();
+        if let Some(v) = root.get_path("service.max_pending") {
+            cfg.max_pending = pos_usize(v, "service.max_pending")?;
+        }
+        if let Some(v) = root.get_path("service.max_batch") {
+            cfg.max_batch = pos_usize(v, "service.max_batch")?;
+        }
+        if let Some(v) = root.get_path("service.shed_policy") {
+            let raw = req_str(v, "service.shed_policy")?;
+            cfg.shed = ShedPolicy::parse(raw).ok_or_else(|| {
+                field_err(
+                    "service.shed_policy",
+                    format!(
+                        "unknown shed policy '{raw}' (valid: reject-newest, reject-lowest-queue)"
+                    ),
+                )
+            })?;
+        }
+        if let Some(v) = root.get_path("service.shards") {
+            cfg.shards = pos_usize(v, "service.shards")?;
+        }
+        Ok(cfg)
+    }
+}
+
 fn req_str<'a>(v: &'a Value, field: &str) -> Result<&'a str, ConfigError> {
     v.as_str().ok_or_else(|| field_err(field, "expected string"))
 }
@@ -505,6 +598,35 @@ delay_hours = 48.0
             "[experiment]\nhorizon_hours = 500\nhistory_hours = 100\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn service_table_parses_and_coexists() {
+        let src = r#"
+[cluster]
+capacity = 24
+
+[service]
+max_pending = 512
+max_batch = 64
+shed_policy = "reject-lowest-queue"
+shards = 2
+"#;
+        // The experiment parser ignores [service]; the service parser reads it.
+        let cfg = ExperimentConfig::from_toml_str(src).unwrap();
+        assert_eq!(cfg.capacity, 24);
+        let svc = ServiceConfig::from_toml_str(src).unwrap();
+        assert_eq!(svc.max_pending, 512);
+        assert_eq!(svc.max_batch, 64);
+        assert_eq!(svc.shed, ShedPolicy::RejectLowestQueue);
+        assert_eq!(svc.shards, 2);
+        // Defaults apply when the table is absent; bad values are errors.
+        assert_eq!(ServiceConfig::from_toml_str("").unwrap(), ServiceConfig::default());
+        assert!(ServiceConfig::from_toml_str("[service]\nmax_pending = 0\n").is_err());
+        assert!(ServiceConfig::from_toml_str("[service]\nshed_policy = \"coin-flip\"\n").is_err());
+        for p in ShedPolicy::ALL {
+            assert_eq!(ShedPolicy::parse(p.as_str()), Some(p));
+        }
     }
 
     #[test]

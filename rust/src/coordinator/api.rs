@@ -1,11 +1,66 @@
-//! Coordinator request/response types and their JSON line codec.
+//! Coordinator wire protocol: versioned request/response envelopes and
+//! their JSON line codec.
 //!
 //! The coordinator speaks a newline-delimited JSON protocol so external
 //! clients (and the `serve` CLI subcommand) can submit jobs and poll status
 //! without linking the library. The codec is built on `util::json` (no
 //! serde offline).
+//!
+//! **Protocol v2** wraps every request in an envelope: the line carries
+//! `"v"` (protocol version) and an optional client-chosen `"id"` string that
+//! is echoed verbatim in the response, so pipelined clients can correlate
+//! replies. Errors are structured: a machine-readable [`ErrorCode`] plus a
+//! human message. Requests without a `"v"` key parse as **legacy v1** lines
+//! (the pre-envelope protocol) and receive legacy-shaped responses; v1 is
+//! deprecated and documented only for compatibility (see README).
 
 use crate::util::json::{self, Json};
+
+/// Current wire protocol version. Lines carrying `"v"` greater than this are
+/// rejected with [`ErrorCode::BadRequest`].
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// Machine-readable error class carried by [`Response::Error`] and
+/// [`SubmitOutcome::Rejected`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed line, unknown op, bad field, unsupported version.
+    BadRequest,
+    /// Workload name not in the hardware catalog.
+    UnknownWorkload,
+    /// Backpressure: the submission queue is at `max_pending` and the shed
+    /// policy is reject-newest.
+    QueueFull,
+    /// Backpressure: shed by the reject-lowest-queue policy (only queue 0 is
+    /// admitted over the bound).
+    Shed,
+    /// The coordinator has drained and no longer accepts requests.
+    Draining,
+}
+
+impl ErrorCode {
+    pub const ALL: [ErrorCode; 5] = [
+        ErrorCode::BadRequest,
+        ErrorCode::UnknownWorkload,
+        ErrorCode::QueueFull,
+        ErrorCode::Shed,
+        ErrorCode::Draining,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownWorkload => "unknown_workload",
+            ErrorCode::QueueFull => "queue_full",
+            ErrorCode::Shed => "shed",
+            ErrorCode::Draining => "draining",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        ErrorCode::ALL.into_iter().find(|c| c.as_str() == s)
+    }
+}
 
 /// A job submission as it arrives over the API: the user picks a workload
 /// from the catalog and a queue (paper §3: "users submit their batch jobs to
@@ -24,15 +79,19 @@ pub struct SubmitRequest {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Submit(SubmitRequest),
+    /// Batched ingest: one envelope, one admission decision round, many jobs.
+    SubmitBatch(Vec<SubmitRequest>),
     /// Advance one slot (virtual time).
     Tick,
     /// Current cluster status.
     Status,
+    /// Service counters and latency percentiles.
+    Stats,
     /// Finish all work and return the final report.
     Drain,
 }
 
-/// Responses produced by the coordinator.
+/// Snapshot of cluster state.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StatusResponse {
     pub slot: usize,
@@ -44,122 +103,475 @@ pub struct StatusResponse {
     pub energy_kwh: f64,
 }
 
+/// Service-level counters and latency percentiles (the `stats` op).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsResponse {
+    pub slot: usize,
+    /// Envelopes processed (including this stats request).
+    pub requests: u64,
+    /// Job submissions admitted into the engine.
+    pub accepted: u64,
+    /// Job submissions rejected by backpressure (queue_full + shed).
+    pub shed: u64,
+    /// `submit_batch` envelopes processed.
+    pub batches: u64,
+    /// Jobs currently waiting or running.
+    pub pending: usize,
+    /// Configured backpressure bound.
+    pub max_pending: usize,
+    /// Waiting + running jobs per queue.
+    pub queue_depths: Vec<usize>,
+    /// Median per-submission decision latency (milliseconds).
+    pub p50_decision_ms: f64,
+    /// Tail per-submission decision latency (milliseconds).
+    pub p99_decision_ms: f64,
+    /// Carbon emitted by completed jobs so far (grams).
+    pub carbon_g: f64,
+}
+
+/// Per-member outcome inside a [`Response::Batch`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitOutcome {
+    Accepted { job_id: usize },
+    Rejected { code: ErrorCode, message: String },
+}
+
+/// Responses produced by the coordinator.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
     Submitted { job_id: usize },
+    /// One outcome per batch member, in member order.
+    Batch { results: Vec<SubmitOutcome> },
     Ticked { slot: usize },
     Status(StatusResponse),
+    Stats(StatsResponse),
     Drained { completed: usize, carbon_g: f64, mean_delay_hours: f64 },
-    Error { message: String },
+    Error { code: ErrorCode, message: String },
+}
+
+/// A parse failure with enough recovered context to answer the client: the
+/// error code/message plus the client `id` when the line was at least valid
+/// JSON with an `"id"` field.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseFailure {
+    pub code: ErrorCode,
+    pub message: String,
+    pub id: Option<String>,
+}
+
+impl ParseFailure {
+    fn bad(message: impl Into<String>, id: Option<String>) -> ParseFailure {
+        ParseFailure { code: ErrorCode::BadRequest, message: message.into(), id }
+    }
+}
+
+/// A request envelope: protocol version, optional client correlation id, and
+/// the operation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    pub v: u64,
+    pub id: Option<String>,
+    pub req: Request,
+}
+
+/// A response envelope mirroring [`WireRequest`]: the version the client
+/// spoke and its `id` echoed back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireResponse {
+    pub v: u64,
+    pub id: Option<String>,
+    pub resp: Response,
+}
+
+impl WireRequest {
+    /// Envelope at the current protocol version, no correlation id.
+    pub fn new(req: Request) -> WireRequest {
+        WireRequest { v: PROTOCOL_VERSION, id: None, req }
+    }
+
+    pub fn with_id(req: Request, id: impl Into<String>) -> WireRequest {
+        WireRequest { v: PROTOCOL_VERSION, id: Some(id.into()), req }
+    }
+
+    pub fn to_json_line(&self) -> String {
+        // Legacy v1 lines keep the pre-envelope shape (no "v"/"id"); ops
+        // that postdate v1 fall through to the v2 encoding.
+        if self.v <= 1 {
+            match &self.req {
+                Request::Submit(_) | Request::Tick | Request::Status | Request::Drain => {
+                    return legacy_request_json(&self.req).to_string();
+                }
+                Request::SubmitBatch(_) | Request::Stats => {}
+            }
+        }
+        let mut pairs: Vec<(&str, Json)> = vec![("v", Json::Num(self.v.max(2) as f64))];
+        if let Some(id) = &self.id {
+            pairs.push(("id", Json::Str(id.clone())));
+        }
+        match &self.req {
+            Request::Submit(s) => {
+                pairs.push(("op", Json::Str("submit".into())));
+                pairs.extend(submit_fields(s));
+            }
+            Request::SubmitBatch(jobs) => {
+                pairs.push(("op", Json::Str("submit_batch".into())));
+                let arr = jobs.iter().map(|s| Json::obj(submit_fields(s))).collect();
+                pairs.push(("jobs", Json::Arr(arr)));
+            }
+            Request::Tick => pairs.push(("op", Json::Str("tick".into()))),
+            Request::Status => pairs.push(("op", Json::Str("status".into()))),
+            Request::Stats => pairs.push(("op", Json::Str("stats".into()))),
+            Request::Drain => pairs.push(("op", Json::Str("drain".into()))),
+        }
+        Json::obj(pairs).to_string()
+    }
+
+    /// Parse a request line, accepting both the v2 envelope and legacy v1
+    /// lines (no `"v"` key). On failure the client `id` is recovered when
+    /// possible so the caller can still address its error response.
+    pub fn from_json_line(line: &str) -> Result<WireRequest, ParseFailure> {
+        let v = json::parse(line.trim())
+            .map_err(|e| ParseFailure::bad(format!("invalid json: {e}"), None))?;
+        let id = v.get("id").and_then(Json::as_str).map(str::to_string);
+        let version = match v.get("v") {
+            None => 1,
+            Some(n) => match n.as_f64() {
+                Some(f) if f >= 1.0 && f.fract() == 0.0 => f as u64,
+                _ => return Err(ParseFailure::bad("'v' must be a positive integer", id)),
+            },
+        };
+        if version > PROTOCOL_VERSION {
+            return Err(ParseFailure::bad(
+                format!("unsupported protocol version {version} (max {PROTOCOL_VERSION})"),
+                id,
+            ));
+        }
+        let op = v
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ParseFailure::bad("missing 'op'", id.clone()))?;
+        let req = match op {
+            "submit" => Request::Submit(
+                parse_submit(&v).map_err(|m| ParseFailure::bad(m, id.clone()))?,
+            ),
+            "submit_batch" => {
+                let arr = v
+                    .get("jobs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| ParseFailure::bad("missing 'jobs' array", id.clone()))?;
+                let jobs: Result<Vec<SubmitRequest>, String> =
+                    arr.iter().map(parse_submit).collect();
+                Request::SubmitBatch(jobs.map_err(|m| ParseFailure::bad(m, id.clone()))?)
+            }
+            "tick" => Request::Tick,
+            "status" => Request::Status,
+            "stats" => Request::Stats,
+            "drain" => Request::Drain,
+            other => return Err(ParseFailure::bad(format!("unknown op '{other}'"), id)),
+        };
+        Ok(WireRequest { v: version, id, req })
+    }
+}
+
+impl WireResponse {
+    pub fn to_json_line(&self) -> String {
+        // Legacy-shaped emission for v1 clients; ops without a v1 shape
+        // (batch, stats) fall through to the v2 encoding.
+        if self.v <= 1 {
+            match &self.resp {
+                Response::Batch { .. } | Response::Stats(_) => {}
+                other => return legacy_response_json(other).to_string(),
+            }
+        }
+        let ok = !matches!(self.resp, Response::Error { .. });
+        let mut pairs: Vec<(&str, Json)> =
+            vec![("v", Json::Num(self.v.max(2) as f64)), ("ok", Json::Bool(ok))];
+        if let Some(id) = &self.id {
+            pairs.push(("id", Json::Str(id.clone())));
+        }
+        match &self.resp {
+            Response::Submitted { job_id } => {
+                pairs.push(("kind", Json::Str("submitted".into())));
+                pairs.push(("job_id", Json::Num(*job_id as f64)));
+            }
+            Response::Batch { results } => {
+                pairs.push(("kind", Json::Str("batch".into())));
+                let arr = results
+                    .iter()
+                    .map(|r| match r {
+                        SubmitOutcome::Accepted { job_id } => {
+                            Json::obj(vec![("job_id", Json::Num(*job_id as f64))])
+                        }
+                        SubmitOutcome::Rejected { code, message } => Json::obj(vec![
+                            ("code", Json::Str(code.as_str().into())),
+                            ("error", Json::Str(message.clone())),
+                        ]),
+                    })
+                    .collect();
+                pairs.push(("results", Json::Arr(arr)));
+            }
+            Response::Ticked { slot } => {
+                pairs.push(("kind", Json::Str("ticked".into())));
+                pairs.push(("slot", Json::Num(*slot as f64)));
+            }
+            Response::Status(s) => {
+                pairs.push(("kind", Json::Str("status".into())));
+                pairs.push(("slot", Json::Num(s.slot as f64)));
+                pairs.push(("active_jobs", Json::Num(s.active_jobs as f64)));
+                pairs.push(("completed", Json::Num(s.completed as f64)));
+                pairs.push(("provisioned", Json::Num(s.provisioned as f64)));
+                pairs.push(("used", Json::Num(s.used as f64)));
+                pairs.push(("carbon_g", Json::Num(s.carbon_g)));
+                pairs.push(("energy_kwh", Json::Num(s.energy_kwh)));
+            }
+            Response::Stats(s) => {
+                pairs.push(("kind", Json::Str("stats".into())));
+                pairs.push(("slot", Json::Num(s.slot as f64)));
+                pairs.push(("requests", Json::Num(s.requests as f64)));
+                pairs.push(("accepted", Json::Num(s.accepted as f64)));
+                pairs.push(("shed", Json::Num(s.shed as f64)));
+                pairs.push(("batches", Json::Num(s.batches as f64)));
+                pairs.push(("pending", Json::Num(s.pending as f64)));
+                pairs.push(("max_pending", Json::Num(s.max_pending as f64)));
+                let depths = s.queue_depths.iter().map(|&d| Json::Num(d as f64)).collect();
+                pairs.push(("queue_depths", Json::Arr(depths)));
+                pairs.push(("p50_decision_ms", Json::Num(s.p50_decision_ms)));
+                pairs.push(("p99_decision_ms", Json::Num(s.p99_decision_ms)));
+                pairs.push(("carbon_g", Json::Num(s.carbon_g)));
+            }
+            Response::Drained { completed, carbon_g, mean_delay_hours } => {
+                pairs.push(("kind", Json::Str("drained".into())));
+                pairs.push(("completed", Json::Num(*completed as f64)));
+                pairs.push(("carbon_g", Json::Num(*carbon_g)));
+                pairs.push(("mean_delay_hours", Json::Num(*mean_delay_hours)));
+            }
+            Response::Error { code, message } => {
+                pairs.push(("kind", Json::Str("error".into())));
+                pairs.push(("code", Json::Str(code.as_str().into())));
+                pairs.push(("error", Json::Str(message.clone())));
+            }
+        }
+        Json::obj(pairs).to_string()
+    }
+
+    pub fn from_json_line(line: &str) -> Result<WireResponse, String> {
+        let v = json::parse(line.trim()).map_err(|e| e.to_string())?;
+        let id = v.get("id").and_then(Json::as_str).map(str::to_string);
+        match v.get("v").and_then(Json::as_usize) {
+            Some(version) => {
+                let resp = parse_v2_response(&v)?;
+                Ok(WireResponse { v: version as u64, id, resp })
+            }
+            None => Ok(WireResponse { v: 1, id, resp: parse_legacy_response(&v)? }),
+        }
+    }
+}
+
+fn submit_fields(s: &SubmitRequest) -> Vec<(&'static str, Json)> {
+    vec![
+        ("workload", Json::Str(s.workload.clone())),
+        ("length_hours", Json::Num(s.length_hours)),
+        ("queue", Json::Num(s.queue as f64)),
+    ]
+}
+
+fn parse_submit(v: &Json) -> Result<SubmitRequest, String> {
+    Ok(SubmitRequest {
+        workload: v
+            .get("workload")
+            .and_then(Json::as_str)
+            .ok_or("missing 'workload'")?
+            .to_string(),
+        length_hours: v
+            .get("length_hours")
+            .and_then(Json::as_f64)
+            .ok_or("missing 'length_hours'")?,
+        queue: v.get("queue").and_then(Json::as_usize).unwrap_or(0),
+    })
+}
+
+/// Pre-envelope (v1) request shape.
+fn legacy_request_json(req: &Request) -> Json {
+    match req {
+        Request::Submit(s) => {
+            let mut pairs = vec![("op", Json::Str("submit".into()))];
+            pairs.extend(submit_fields(s));
+            Json::obj(pairs)
+        }
+        Request::Tick => Json::obj(vec![("op", Json::Str("tick".into()))]),
+        Request::Status => Json::obj(vec![("op", Json::Str("status".into()))]),
+        Request::Drain => Json::obj(vec![("op", Json::Str("drain".into()))]),
+        // No v1 shape exists for these; callers route them to v2.
+        Request::SubmitBatch(_) | Request::Stats => unreachable!("no legacy shape"),
+    }
+}
+
+/// Pre-envelope (v1) response shape. Errors additionally carry the v2
+/// `"code"` key, which v1 clients ignore.
+fn legacy_response_json(resp: &Response) -> Json {
+    match resp {
+        Response::Submitted { job_id } => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("job_id", Json::Num(*job_id as f64)),
+        ]),
+        Response::Ticked { slot } => {
+            Json::obj(vec![("ok", Json::Bool(true)), ("slot", Json::Num(*slot as f64))])
+        }
+        Response::Status(s) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("slot", Json::Num(s.slot as f64)),
+            ("active_jobs", Json::Num(s.active_jobs as f64)),
+            ("completed", Json::Num(s.completed as f64)),
+            ("provisioned", Json::Num(s.provisioned as f64)),
+            ("used", Json::Num(s.used as f64)),
+            ("carbon_g", Json::Num(s.carbon_g)),
+            ("energy_kwh", Json::Num(s.energy_kwh)),
+        ]),
+        Response::Drained { completed, carbon_g, mean_delay_hours } => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("completed", Json::Num(*completed as f64)),
+            ("carbon_g", Json::Num(*carbon_g)),
+            ("mean_delay_hours", Json::Num(*mean_delay_hours)),
+        ]),
+        Response::Error { code, message } => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("code", Json::Str(code.as_str().into())),
+            ("error", Json::Str(message.clone())),
+        ]),
+        Response::Batch { .. } | Response::Stats(_) => unreachable!("no legacy shape"),
+    }
+}
+
+fn parse_v2_response(v: &Json) -> Result<Response, String> {
+    let kind = v.get("kind").and_then(Json::as_str).ok_or("missing 'kind'")?;
+    match kind {
+        "submitted" => Ok(Response::Submitted {
+            job_id: v.get("job_id").and_then(Json::as_usize).ok_or("missing 'job_id'")?,
+        }),
+        "batch" => {
+            let arr = v.get("results").and_then(Json::as_arr).ok_or("missing 'results'")?;
+            let results: Result<Vec<SubmitOutcome>, String> = arr
+                .iter()
+                .map(|r| {
+                    if let Some(job_id) = r.get("job_id").and_then(Json::as_usize) {
+                        Ok(SubmitOutcome::Accepted { job_id })
+                    } else {
+                        let code = r
+                            .get("code")
+                            .and_then(Json::as_str)
+                            .and_then(ErrorCode::parse)
+                            .ok_or("batch member missing 'job_id' or 'code'")?;
+                        let message =
+                            r.get("error").and_then(Json::as_str).unwrap_or("").to_string();
+                        Ok(SubmitOutcome::Rejected { code, message })
+                    }
+                })
+                .collect();
+            Ok(Response::Batch { results: results? })
+        }
+        "ticked" => Ok(Response::Ticked {
+            slot: v.get("slot").and_then(Json::as_usize).ok_or("missing 'slot'")?,
+        }),
+        "status" => Ok(Response::Status(parse_status_fields(v))),
+        "stats" => Ok(Response::Stats(StatsResponse {
+            slot: v.get("slot").and_then(Json::as_usize).unwrap_or(0),
+            requests: v.get("requests").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            accepted: v.get("accepted").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            shed: v.get("shed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            batches: v.get("batches").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            pending: v.get("pending").and_then(Json::as_usize).unwrap_or(0),
+            max_pending: v.get("max_pending").and_then(Json::as_usize).unwrap_or(0),
+            queue_depths: v
+                .get("queue_depths")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            p50_decision_ms: v.get("p50_decision_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            p99_decision_ms: v.get("p99_decision_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            carbon_g: v.get("carbon_g").and_then(Json::as_f64).unwrap_or(0.0),
+        })),
+        "drained" => Ok(Response::Drained {
+            completed: v.get("completed").and_then(Json::as_usize).unwrap_or(0),
+            carbon_g: v.get("carbon_g").and_then(Json::as_f64).unwrap_or(0.0),
+            mean_delay_hours: v.get("mean_delay_hours").and_then(Json::as_f64).unwrap_or(0.0),
+        }),
+        "error" => Ok(Response::Error {
+            code: v
+                .get("code")
+                .and_then(Json::as_str)
+                .and_then(ErrorCode::parse)
+                .unwrap_or(ErrorCode::BadRequest),
+            message: v.get("error").and_then(Json::as_str).unwrap_or("?").to_string(),
+        }),
+        other => Err(format!("unknown response kind '{other}'")),
+    }
+}
+
+fn parse_status_fields(v: &Json) -> StatusResponse {
+    StatusResponse {
+        slot: v.get("slot").and_then(Json::as_usize).unwrap_or(0),
+        active_jobs: v.get("active_jobs").and_then(Json::as_usize).unwrap_or(0),
+        completed: v.get("completed").and_then(Json::as_usize).unwrap_or(0),
+        provisioned: v.get("provisioned").and_then(Json::as_usize).unwrap_or(0),
+        used: v.get("used").and_then(Json::as_usize).unwrap_or(0),
+        carbon_g: v.get("carbon_g").and_then(Json::as_f64).unwrap_or(0.0),
+        energy_kwh: v.get("energy_kwh").and_then(Json::as_f64).unwrap_or(0.0),
+    }
+}
+
+/// Legacy (v1) response recognition: shape heuristics over the flat keys.
+fn parse_legacy_response(v: &Json) -> Result<Response, String> {
+    let ok = v.get("ok").and_then(Json::as_bool).ok_or("missing 'ok'")?;
+    if !ok {
+        return Ok(Response::Error {
+            code: v
+                .get("code")
+                .and_then(Json::as_str)
+                .and_then(ErrorCode::parse)
+                .unwrap_or(ErrorCode::BadRequest),
+            message: v.get("error").and_then(Json::as_str).unwrap_or("?").to_string(),
+        });
+    }
+    if let Some(id) = v.get("job_id").and_then(Json::as_usize) {
+        return Ok(Response::Submitted { job_id: id });
+    }
+    if v.get("active_jobs").is_some() {
+        return Ok(Response::Status(parse_status_fields(v)));
+    }
+    if v.get("mean_delay_hours").is_some() {
+        return Ok(Response::Drained {
+            completed: v.get("completed").and_then(Json::as_usize).unwrap_or(0),
+            carbon_g: v.get("carbon_g").and_then(Json::as_f64).unwrap_or(0.0),
+            mean_delay_hours: v.get("mean_delay_hours").and_then(Json::as_f64).unwrap_or(0.0),
+        });
+    }
+    if let Some(slot) = v.get("slot").and_then(Json::as_usize) {
+        return Ok(Response::Ticked { slot });
+    }
+    Err("unrecognized response".into())
 }
 
 impl Request {
+    /// Legacy (v1) encoding shim; prefer [`WireRequest::to_json_line`].
     pub fn to_json_line(&self) -> String {
-        let v = match self {
-            Request::Submit(s) => Json::obj(vec![
-                ("op", Json::Str("submit".into())),
-                ("workload", Json::Str(s.workload.clone())),
-                ("length_hours", Json::Num(s.length_hours)),
-                ("queue", Json::Num(s.queue as f64)),
-            ]),
-            Request::Tick => Json::obj(vec![("op", Json::Str("tick".into()))]),
-            Request::Status => Json::obj(vec![("op", Json::Str("status".into()))]),
-            Request::Drain => Json::obj(vec![("op", Json::Str("drain".into()))]),
-        };
-        v.to_string()
+        WireRequest { v: 1, id: None, req: self.clone() }.to_json_line()
     }
 
+    /// Version-agnostic parse shim; accepts v1 and v2 lines.
     pub fn from_json_line(line: &str) -> Result<Request, String> {
-        let v = json::parse(line.trim()).map_err(|e| e.to_string())?;
-        let op = v.get("op").and_then(Json::as_str).ok_or("missing 'op'")?;
-        match op {
-            "submit" => Ok(Request::Submit(SubmitRequest {
-                workload: v
-                    .get("workload")
-                    .and_then(Json::as_str)
-                    .ok_or("missing 'workload'")?
-                    .to_string(),
-                length_hours: v
-                    .get("length_hours")
-                    .and_then(Json::as_f64)
-                    .ok_or("missing 'length_hours'")?,
-                queue: v.get("queue").and_then(Json::as_usize).unwrap_or(0),
-            })),
-            "tick" => Ok(Request::Tick),
-            "status" => Ok(Request::Status),
-            "drain" => Ok(Request::Drain),
-            other => Err(format!("unknown op '{other}'")),
-        }
+        WireRequest::from_json_line(line).map(|w| w.req).map_err(|p| p.message)
     }
 }
 
 impl Response {
+    /// Legacy (v1) encoding shim; prefer [`WireResponse::to_json_line`].
     pub fn to_json_line(&self) -> String {
-        let v = match self {
-            Response::Submitted { job_id } => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("job_id", Json::Num(*job_id as f64)),
-            ]),
-            Response::Ticked { slot } => {
-                Json::obj(vec![("ok", Json::Bool(true)), ("slot", Json::Num(*slot as f64))])
-            }
-            Response::Status(s) => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("slot", Json::Num(s.slot as f64)),
-                ("active_jobs", Json::Num(s.active_jobs as f64)),
-                ("completed", Json::Num(s.completed as f64)),
-                ("provisioned", Json::Num(s.provisioned as f64)),
-                ("used", Json::Num(s.used as f64)),
-                ("carbon_g", Json::Num(s.carbon_g)),
-                ("energy_kwh", Json::Num(s.energy_kwh)),
-            ]),
-            Response::Drained { completed, carbon_g, mean_delay_hours } => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("completed", Json::Num(*completed as f64)),
-                ("carbon_g", Json::Num(*carbon_g)),
-                ("mean_delay_hours", Json::Num(*mean_delay_hours)),
-            ]),
-            Response::Error { message } => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str(message.clone())),
-            ]),
-        };
-        v.to_string()
+        WireResponse { v: 1, id: None, resp: self.clone() }.to_json_line()
     }
 
+    /// Version-agnostic parse shim; accepts v1 and v2 lines.
     pub fn from_json_line(line: &str) -> Result<Response, String> {
-        let v = json::parse(line.trim()).map_err(|e| e.to_string())?;
-        let ok = v.get("ok").and_then(Json::as_bool).ok_or("missing 'ok'")?;
-        if !ok {
-            return Ok(Response::Error {
-                message: v.get("error").and_then(Json::as_str).unwrap_or("?").to_string(),
-            });
-        }
-        if let Some(id) = v.get("job_id").and_then(Json::as_usize) {
-            return Ok(Response::Submitted { job_id: id });
-        }
-        if v.get("active_jobs").is_some() {
-            return Ok(Response::Status(StatusResponse {
-                slot: v.get("slot").and_then(Json::as_usize).unwrap_or(0),
-                active_jobs: v.get("active_jobs").and_then(Json::as_usize).unwrap_or(0),
-                completed: v.get("completed").and_then(Json::as_usize).unwrap_or(0),
-                provisioned: v.get("provisioned").and_then(Json::as_usize).unwrap_or(0),
-                used: v.get("used").and_then(Json::as_usize).unwrap_or(0),
-                carbon_g: v.get("carbon_g").and_then(Json::as_f64).unwrap_or(0.0),
-                energy_kwh: v.get("energy_kwh").and_then(Json::as_f64).unwrap_or(0.0),
-            }));
-        }
-        if v.get("mean_delay_hours").is_some() {
-            return Ok(Response::Drained {
-                completed: v.get("completed").and_then(Json::as_usize).unwrap_or(0),
-                carbon_g: v.get("carbon_g").and_then(Json::as_f64).unwrap_or(0.0),
-                mean_delay_hours: v.get("mean_delay_hours").and_then(Json::as_f64).unwrap_or(0.0),
-            });
-        }
-        if let Some(slot) = v.get("slot").and_then(Json::as_usize) {
-            return Ok(Response::Ticked { slot });
-        }
-        Err("unrecognized response".into())
+        WireResponse::from_json_line(line).map(|w| w.resp)
     }
 }
 
@@ -200,7 +612,7 @@ mod tests {
                 energy_kwh: 4.25,
             }),
             Response::Drained { completed: 10, carbon_g: 500.0, mean_delay_hours: 2.5 },
-            Response::Error { message: "nope".into() },
+            Response::Error { code: ErrorCode::BadRequest, message: "nope".into() },
         ];
         for r in resps {
             let line = r.to_json_line();
@@ -209,9 +621,65 @@ mod tests {
     }
 
     #[test]
+    fn envelope_roundtrip_with_id() {
+        let w = WireRequest::with_id(
+            Request::SubmitBatch(vec![
+                SubmitRequest { workload: "A".into(), length_hours: 1.0, queue: 0 },
+                SubmitRequest { workload: "B".into(), length_hours: 2.5, queue: 2 },
+            ]),
+            "req-17",
+        );
+        let line = w.to_json_line();
+        assert_eq!(WireRequest::from_json_line(&line).unwrap(), w, "{line}");
+
+        let r = WireResponse {
+            v: PROTOCOL_VERSION,
+            id: Some("req-17".into()),
+            resp: Response::Batch {
+                results: vec![
+                    SubmitOutcome::Accepted { job_id: 0 },
+                    SubmitOutcome::Rejected {
+                        code: ErrorCode::QueueFull,
+                        message: "queue full".into(),
+                    },
+                ],
+            },
+        };
+        let line = r.to_json_line();
+        assert_eq!(WireResponse::from_json_line(&line).unwrap(), r, "{line}");
+    }
+
+    #[test]
+    fn legacy_lines_parse_as_v1() {
+        let w = WireRequest::from_json_line(r#"{"op": "tick"}"#).unwrap();
+        assert_eq!(w.v, 1);
+        assert_eq!(w.req, Request::Tick);
+        let r = WireResponse::from_json_line(r#"{"ok": true, "slot": 3}"#).unwrap();
+        assert_eq!(r.v, 1);
+        assert_eq!(r.resp, Response::Ticked { slot: 3 });
+    }
+
+    #[test]
+    fn future_version_rejected() {
+        let err = WireRequest::from_json_line(r#"{"v": 99, "id": "x", "op": "tick"}"#)
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert_eq!(err.id.as_deref(), Some("x"));
+        assert!(err.message.contains("unsupported protocol version"));
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(Request::from_json_line("{}").is_err());
         assert!(Request::from_json_line("not json").is_err());
         assert!(Request::from_json_line(r#"{"op": "fly"}"#).is_err());
+    }
+
+    #[test]
+    fn error_code_roundtrip() {
+        for c in ErrorCode::ALL {
+            assert_eq!(ErrorCode::parse(c.as_str()), Some(c));
+        }
+        assert_eq!(ErrorCode::parse("teapot"), None);
     }
 }

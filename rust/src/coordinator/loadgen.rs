@@ -1,0 +1,390 @@
+//! Closed-loop load generator for the traffic-serving coordinator.
+//!
+//! Replays a [`tracegen`](crate::workload::tracegen) trace against a
+//! [`ShardedCoordinator`]: each virtual slot submits that slot's arrivals
+//! (singly or in batches), ticks, and finally drains. The same job stream is
+//! driven through single, batched, and sharded ingest so `serve-bench` can
+//! assert both throughput gains and bitwise-identical drain reports.
+
+use std::time::Instant;
+
+use crate::carbon::synth::Region;
+use crate::config::{ExperimentConfig, ServiceConfig};
+use crate::coordinator::api::{ErrorCode, Request, Response, SubmitOutcome, SubmitRequest};
+use crate::coordinator::shard::ShardedCoordinator;
+use crate::experiments::cells::DispatchStrategy;
+use crate::sched::PolicyKind;
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+use crate::workload::job::Job;
+use crate::workload::tracegen;
+
+/// Turn a generated trace into `(arrival_slot, request)` pairs, preserving
+/// trace order (tracegen emits arrivals sorted).
+pub fn submissions_of(jobs: &[Job]) -> Vec<(usize, SubmitRequest)> {
+    jobs.iter()
+        .map(|j| {
+            (
+                j.arrival,
+                SubmitRequest {
+                    workload: j.workload.to_string(),
+                    length_hours: j.length_hours,
+                    queue: j.queue,
+                },
+            )
+        })
+        .collect()
+}
+
+/// Outcome of one closed-loop drive of a coordinator deployment.
+#[derive(Debug, Clone)]
+pub struct DriveReport {
+    pub mode: String,
+    pub submitted: usize,
+    pub accepted: usize,
+    pub shed: usize,
+    pub rejected_other: usize,
+    pub wall_seconds: f64,
+    pub submissions_per_sec: f64,
+    pub shed_rate: f64,
+    pub p50_decision_ms: f64,
+    pub p99_decision_ms: f64,
+    pub completed: usize,
+    pub carbon_g: f64,
+    pub mean_delay_hours: f64,
+}
+
+impl DriveReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::str(self.mode.clone())),
+            ("submitted", Json::num(self.submitted as f64)),
+            ("accepted", Json::num(self.accepted as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("rejected_other", Json::num(self.rejected_other as f64)),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+            ("submissions_per_sec", Json::num(self.submissions_per_sec)),
+            ("shed_rate", Json::num(self.shed_rate)),
+            ("p50_decision_ms", Json::num(self.p50_decision_ms)),
+            ("p99_decision_ms", Json::num(self.p99_decision_ms)),
+            ("completed", Json::num(self.completed as f64)),
+            ("carbon_g", Json::num(self.carbon_g)),
+            ("mean_delay_hours", Json::num(self.mean_delay_hours)),
+        ])
+    }
+
+    /// Drain-report equality at the bit level — the determinism check
+    /// `serve-bench` reports.
+    pub fn drain_matches(&self, other: &DriveReport) -> bool {
+        self.completed == other.completed
+            && self.carbon_g.to_bits() == other.carbon_g.to_bits()
+            && self.mean_delay_hours.to_bits() == other.mean_delay_hours.to_bits()
+    }
+}
+
+fn count_outcome(
+    out: &SubmitOutcome,
+    accepted: &mut usize,
+    shed: &mut usize,
+    other: &mut usize,
+) {
+    match out {
+        SubmitOutcome::Accepted { .. } => *accepted += 1,
+        SubmitOutcome::Rejected { code: ErrorCode::QueueFull | ErrorCode::Shed, .. } => *shed += 1,
+        SubmitOutcome::Rejected { .. } => *other += 1,
+    }
+}
+
+/// Drive `arrivals` through `cluster` slot by slot. `batch <= 1` submits
+/// singly; otherwise arrivals within a slot go in chunks of up to `batch`
+/// via `SubmitBatch`. Client-side decision latency is measured around each
+/// request (batch latency amortized per member). Ends with a drain.
+pub fn drive(
+    cluster: &mut ShardedCoordinator,
+    arrivals: &[(usize, SubmitRequest)],
+    batch: usize,
+    mode: &str,
+) -> DriveReport {
+    let last_slot = arrivals.iter().map(|(t, _)| *t).max().unwrap_or(0);
+    let mut hist = LatencyHistogram::new();
+    let (mut accepted, mut shed, mut other) = (0usize, 0usize, 0usize);
+    let wall = Instant::now();
+    let mut cursor = 0usize;
+    for t in 0..=last_slot {
+        let start = cursor;
+        while cursor < arrivals.len() && arrivals[cursor].0 == t {
+            cursor += 1;
+        }
+        let slot_jobs = &arrivals[start..cursor];
+        if batch <= 1 {
+            for (_, s) in slot_jobs {
+                let t0 = Instant::now();
+                let resp = cluster.submit(s);
+                hist.record(t0.elapsed());
+                match resp {
+                    Response::Submitted { .. } => accepted += 1,
+                    Response::Error {
+                        code: ErrorCode::QueueFull | ErrorCode::Shed, ..
+                    } => shed += 1,
+                    _ => other += 1,
+                }
+            }
+        } else {
+            for chunk in slot_jobs.chunks(batch) {
+                let jobs: Vec<SubmitRequest> = chunk.iter().map(|(_, s)| s.clone()).collect();
+                let n = jobs.len() as u32;
+                let t0 = Instant::now();
+                let resp = cluster.handle_request(Request::SubmitBatch(jobs));
+                let per = t0.elapsed() / n.max(1);
+                match resp {
+                    Response::Batch { results } => {
+                        for out in &results {
+                            hist.record(per);
+                            count_outcome(out, &mut accepted, &mut shed, &mut other);
+                        }
+                    }
+                    _ => {
+                        for _ in chunk {
+                            hist.record(per);
+                            other += 1;
+                        }
+                    }
+                }
+            }
+        }
+        cluster.tick();
+    }
+    let drained = cluster.drain();
+    let wall_seconds = wall.elapsed().as_secs_f64();
+    let submitted = arrivals.len();
+    let (completed, carbon_g, mean_delay_hours) = match drained {
+        Response::Drained { completed, carbon_g, mean_delay_hours } => {
+            (completed, carbon_g, mean_delay_hours)
+        }
+        _ => (0, 0.0, 0.0),
+    };
+    DriveReport {
+        mode: mode.to_string(),
+        submitted,
+        accepted,
+        shed,
+        rejected_other: other,
+        wall_seconds,
+        submissions_per_sec: if wall_seconds > 0.0 { submitted as f64 / wall_seconds } else { 0.0 },
+        shed_rate: if submitted > 0 { shed as f64 / submitted as f64 } else { 0.0 },
+        p50_decision_ms: hist.percentile_ms(50.0),
+        p99_decision_ms: hist.percentile_ms(99.0),
+        completed,
+        carbon_g,
+        mean_delay_hours,
+    }
+}
+
+/// Options for [`run_serve_bench`].
+#[derive(Debug, Clone)]
+pub struct ServeBenchOpts {
+    pub cfg: ExperimentConfig,
+    pub service: ServiceConfig,
+    pub kind: PolicyKind,
+    pub jobs: usize,
+    pub horizon: usize,
+    pub seed: u64,
+    pub batch: usize,
+    pub regions: Vec<Region>,
+    pub strategy: DispatchStrategy,
+}
+
+/// Run the serve benchmark: the same generated trace driven three ways —
+/// single submits, batched submits, and batched submits over the sharded
+/// deployment — and report throughput, tail latency, shed rate, and whether
+/// the drain reports match bitwise.
+pub fn run_serve_bench(opts: &ServeBenchOpts) -> (Vec<DriveReport>, Json) {
+    let base_region = Region::parse(&opts.cfg.region).unwrap_or(Region::ALL[0]);
+    let trace = tracegen::generate_n(&opts.cfg, opts.horizon, opts.seed, opts.jobs);
+    let arrivals = submissions_of(&trace);
+    let batch = opts.batch.clamp(2, opts.service.max_batch.max(2));
+
+    let mut single_c = ShardedCoordinator::start(
+        &opts.cfg,
+        &opts.service,
+        opts.kind,
+        &[base_region],
+        opts.strategy,
+    );
+    let single = drive(&mut single_c, &arrivals, 1, "single");
+    single_c.shutdown();
+
+    let mut batch_c = ShardedCoordinator::start(
+        &opts.cfg,
+        &opts.service,
+        opts.kind,
+        &[base_region],
+        opts.strategy,
+    );
+    let batched = drive(&mut batch_c, &arrivals, batch, "batch");
+    batch_c.shutdown();
+
+    let mut shard_c = ShardedCoordinator::start(
+        &opts.cfg,
+        &opts.service,
+        opts.kind,
+        &opts.regions,
+        opts.strategy,
+    );
+    let sharded = drive(&mut shard_c, &arrivals, batch, "sharded");
+    shard_c.shutdown();
+
+    // Single vs batched ingest must match bitwise always; the sharded run
+    // only joins the comparison when its topology matches (1 shard in the
+    // base region) — shard count legitimately changes placement.
+    let mut identical = single.drain_matches(&batched);
+    let sharded_comparable =
+        opts.regions.len() == 1 && opts.regions[0].key() == base_region.key();
+    if sharded_comparable {
+        identical = identical && single.drain_matches(&sharded);
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        (
+            "config",
+            Json::obj(vec![
+                ("policy", Json::str(opts.kind.key())),
+                ("jobs", Json::num(opts.jobs as f64)),
+                ("horizon_hours", Json::num(opts.horizon as f64)),
+                ("seed", Json::num(opts.seed as f64)),
+                ("batch", Json::num(batch as f64)),
+                ("shards", Json::num(opts.regions.len() as f64)),
+                (
+                    "regions",
+                    Json::Arr(opts.regions.iter().map(|r| Json::str(r.key())).collect()),
+                ),
+                ("capacity", Json::num(opts.cfg.capacity as f64)),
+                ("region", Json::str(opts.cfg.region.clone())),
+                ("max_pending", Json::num(opts.service.max_pending as f64)),
+                ("shed_policy", Json::str(opts.service.shed.as_str())),
+            ]),
+        ),
+        // Headline metrics come from the batched run — the shape `serve`
+        // deployments are expected to use.
+        ("submissions_per_sec", Json::num(batched.submissions_per_sec)),
+        ("p99_decision_ms", Json::num(batched.p99_decision_ms)),
+        ("shed_rate", Json::num(batched.shed_rate)),
+        (
+            "modes",
+            Json::obj(vec![
+                ("single", single.to_json()),
+                ("batch", batched.to_json()),
+                ("sharded", sharded.to_json()),
+            ]),
+        ),
+        (
+            "drain",
+            Json::obj(vec![
+                ("completed", Json::num(batched.completed as f64)),
+                ("carbon_g", Json::num(batched.carbon_g)),
+                ("mean_delay_hours", Json::num(batched.mean_delay_hours)),
+            ]),
+        ),
+        ("reports_identical", Json::Bool(identical)),
+        ("batch_speedup", {
+            let s = if single.submissions_per_sec > 0.0 {
+                batched.submissions_per_sec / single.submissions_per_sec
+            } else {
+                0.0
+            };
+            Json::num(s)
+        }),
+    ]);
+    (vec![single, batched, sharded], doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn small_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 12;
+        cfg.horizon_hours = 48;
+        cfg.history_hours = 48;
+        cfg
+    }
+
+    #[test]
+    fn submissions_preserve_trace_order() {
+        let cfg = small_cfg();
+        let jobs = tracegen::generate_n(&cfg, 48, 7, 40);
+        let subs = submissions_of(&jobs);
+        assert_eq!(subs.len(), 40);
+        for (pair, job) in subs.iter().zip(&jobs) {
+            assert_eq!(pair.0, job.arrival);
+            assert_eq!(pair.1.workload, job.workload);
+            assert_eq!(pair.1.queue, job.queue);
+        }
+        for w in subs.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+    }
+
+    #[test]
+    fn single_and_batched_drains_match_bitwise() {
+        let cfg = small_cfg();
+        let service = ServiceConfig::default();
+        let jobs = tracegen::generate_n(&cfg, 48, 21, 60);
+        let arrivals = submissions_of(&jobs);
+        let region = Region::parse(&cfg.region).unwrap_or(Region::ALL[0]);
+
+        let mut a = ShardedCoordinator::start(
+            &cfg,
+            &service,
+            PolicyKind::CarbonAgnostic,
+            &[region],
+            DispatchStrategy::RoundRobin,
+        );
+        let ra = drive(&mut a, &arrivals, 1, "single");
+        a.shutdown();
+
+        let mut b = ShardedCoordinator::start(
+            &cfg,
+            &service,
+            PolicyKind::CarbonAgnostic,
+            &[region],
+            DispatchStrategy::RoundRobin,
+        );
+        let rb = drive(&mut b, &arrivals, 16, "batch");
+        b.shutdown();
+
+        assert_eq!(ra.accepted, rb.accepted);
+        assert!(ra.drain_matches(&rb), "single {ra:?} vs batch {rb:?}");
+        assert_eq!(ra.completed, ra.accepted);
+    }
+
+    #[test]
+    fn serve_bench_doc_has_headline_fields() {
+        let cfg = small_cfg();
+        let opts = ServeBenchOpts {
+            cfg: cfg.clone(),
+            service: ServiceConfig::default(),
+            kind: PolicyKind::CarbonAgnostic,
+            jobs: 30,
+            horizon: 48,
+            seed: 3,
+            batch: 8,
+            regions: vec![Region::parse(&cfg.region).unwrap_or(Region::ALL[0])],
+            strategy: DispatchStrategy::RoundRobin,
+        };
+        let (reports, doc) = run_serve_bench(&opts);
+        assert_eq!(reports.len(), 3);
+        let obj = doc.as_obj().expect("doc is an object");
+        for key in ["submissions_per_sec", "p99_decision_ms", "shed_rate", "reports_identical"] {
+            assert!(obj.contains_key(key), "missing {key}");
+        }
+        // 1-shard sharded run is topology-identical → all three match.
+        assert_eq!(obj["reports_identical"], Json::Bool(true));
+        let text = doc.to_string();
+        let parsed = json::parse(&text).expect("round-trips");
+        assert_eq!(parsed.get("schema").and_then(Json::as_f64), Some(1.0));
+    }
+}

@@ -1,9 +1,17 @@
 //! The coordinator service: a leader thread owning the cluster engine and a
-//! policy, with a channel-based submission/status API and a JSON line codec
-//! for external clients.
+//! policy, behind a versioned JSON-lines wire API with batched ingest,
+//! backpressure, service stats, and an optional sharded (one coordinator
+//! per region) deployment shape.
 
 pub mod api;
+pub mod loadgen;
 pub mod server;
+pub mod shard;
 
-pub use api::{Request, Response, StatusResponse, SubmitRequest};
+pub use api::{
+    ErrorCode, ParseFailure, Request, Response, StatsResponse, StatusResponse, SubmitOutcome,
+    SubmitRequest, WireRequest, WireResponse, PROTOCOL_VERSION,
+};
+pub use loadgen::{drive, run_serve_bench, submissions_of, DriveReport, ServeBenchOpts};
 pub use server::{ClusterHandle, Coordinator, CoordinatorConfig};
+pub use shard::{shard_regions, ShardedCoordinator};

@@ -7,16 +7,29 @@
 //! the same separation — the policy decides, the engine actuates. The
 //! leader runs on a dedicated thread (no tokio offline); clients hold a
 //! cheap [`ClusterHandle`] of mpsc senders.
+//!
+//! Traffic-serving additions: batched ingest ([`Request::SubmitBatch`] —
+//! one envelope, one backpressure consultation, many jobs), a bounded
+//! submission queue with an explicit [`ShedPolicy`], and a [`Request::Stats`]
+//! endpoint exposing counters plus p50/p99 decision-latency percentiles from
+//! an O(1) [`LatencyHistogram`]. Admission is strictly per-member in arrival
+//! order for both single and batched submits, so a drain report is bitwise
+//! identical whichever ingest shape delivered the same job stream.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::carbon::forecast::Forecaster;
 use crate::cluster::metrics::RunMetrics;
 use crate::cluster::sim::{ClusterEngine, Simulator};
-use crate::config::Hardware;
-use crate::coordinator::api::{Request, Response, StatusResponse, SubmitRequest};
+use crate::config::{ExperimentConfig, Hardware, ServiceConfig, ShedPolicy};
+use crate::coordinator::api::{
+    ErrorCode, Request, Response, StatsResponse, StatusResponse, SubmitOutcome, SubmitRequest,
+};
 use crate::sched::Policy;
+use crate::util::stats::LatencyHistogram;
 use crate::workload::job::Job;
 use crate::workload::profile;
 
@@ -39,6 +52,7 @@ pub struct Coordinator {
 }
 
 /// Coordinator configuration.
+#[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     pub max_capacity: usize,
     pub hardware: Hardware,
@@ -46,6 +60,23 @@ pub struct CoordinatorConfig {
     /// Per-queue slack hours indexed by queue.
     pub queue_slack_hours: Vec<f64>,
     pub horizon: usize,
+    /// Service limits: pending bound, batch cap, shed policy.
+    pub service: ServiceConfig,
+}
+
+impl CoordinatorConfig {
+    /// Derive the coordinator shape from an experiment config plus service
+    /// limits — the construction every serving entrypoint shares.
+    pub fn from_experiment(cfg: &ExperimentConfig, service: ServiceConfig) -> CoordinatorConfig {
+        CoordinatorConfig {
+            max_capacity: cfg.capacity,
+            hardware: cfg.hardware,
+            num_queues: cfg.queues.len(),
+            queue_slack_hours: cfg.queues.iter().map(|q| q.delay_hours).collect(),
+            horizon: cfg.horizon_hours,
+            service,
+        }
+    }
 }
 
 impl Coordinator {
@@ -74,13 +105,18 @@ impl Coordinator {
 }
 
 impl ClusterHandle {
-    /// Send a request and wait for the reply.
+    /// Send a request and wait for the reply. A stopped (drained)
+    /// coordinator answers with [`ErrorCode::Draining`].
     pub fn request(&self, req: Request) -> Response {
+        let stopped = || Response::Error {
+            code: ErrorCode::Draining,
+            message: "coordinator stopped".into(),
+        };
         let (reply_tx, reply_rx) = mpsc::channel();
         if self.tx.send(Envelope { req, reply: reply_tx }).is_err() {
-            return Response::Error { message: "coordinator stopped".into() };
+            return stopped();
         }
-        reply_rx.recv().unwrap_or(Response::Error { message: "coordinator stopped".into() })
+        reply_rx.recv().unwrap_or_else(|_| stopped())
     }
 
     pub fn submit(&self, workload: &str, length_hours: f64, queue: usize) -> Result<usize, String> {
@@ -90,7 +126,16 @@ impl ClusterHandle {
             queue,
         })) {
             Response::Submitted { job_id } => Ok(job_id),
-            Response::Error { message } => Err(message),
+            Response::Error { message, .. } => Err(message),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Submit many jobs in one envelope; outcomes come back in member order.
+    pub fn submit_batch(&self, jobs: Vec<SubmitRequest>) -> Result<Vec<SubmitOutcome>, String> {
+        match self.request(Request::SubmitBatch(jobs)) {
+            Response::Batch { results } => Ok(results),
+            Response::Error { message, .. } => Err(message),
             other => Err(format!("unexpected response {other:?}")),
         }
     }
@@ -98,7 +143,7 @@ impl ClusterHandle {
     pub fn tick(&self) -> Result<usize, String> {
         match self.request(Request::Tick) {
             Response::Ticked { slot } => Ok(slot),
-            Response::Error { message } => Err(message),
+            Response::Error { message, .. } => Err(message),
             other => Err(format!("unexpected response {other:?}")),
         }
     }
@@ -106,8 +151,272 @@ impl ClusterHandle {
     pub fn status(&self) -> Result<StatusResponse, String> {
         match self.request(Request::Status) {
             Response::Status(s) => Ok(s),
-            Response::Error { message } => Err(message),
+            Response::Error { message, .. } => Err(message),
             other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+
+    pub fn stats(&self) -> Result<StatsResponse, String> {
+        match self.request(Request::Stats) {
+            Response::Stats(s) => Ok(s),
+            Response::Error { message, .. } => Err(message),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+}
+
+/// Leader-side state: engine, catalog index, service counters.
+struct Leader {
+    cfg: CoordinatorConfig,
+    catalog: Vec<profile::WorkloadSpec>,
+    /// Workload name → catalog index, built once (hot-path lookup).
+    index: BTreeMap<&'static str, usize>,
+    k_max: usize,
+    engine: ClusterEngine,
+    slot: usize,
+    next_id: usize,
+    /// Queue of each admitted job, indexed by job id (for depth tracking —
+    /// outcomes don't carry the queue).
+    queue_of: Vec<u8>,
+    /// Engine outcomes already folded into `depths`.
+    outcomes_seen: usize,
+    /// Waiting + running jobs per queue.
+    depths: Vec<usize>,
+    requests: u64,
+    accepted: u64,
+    shed: u64,
+    batches: u64,
+    latency: LatencyHistogram,
+}
+
+impl Leader {
+    fn new(cfg: CoordinatorConfig) -> Leader {
+        let catalog = profile::catalog_for(cfg.hardware);
+        let index = catalog.iter().enumerate().map(|(i, w)| (w.name, i)).collect();
+        let k_max = profile::default_k_max(cfg.hardware);
+        let sim = Simulator::new(
+            cfg.max_capacity,
+            crate::cluster::energy::EnergyModel::for_hardware(cfg.hardware),
+            cfg.num_queues,
+            cfg.horizon,
+        );
+        let depths = vec![0usize; cfg.num_queues.max(1)];
+        Leader {
+            cfg,
+            catalog,
+            index,
+            k_max,
+            engine: ClusterEngine::new(sim),
+            slot: 0,
+            next_id: 0,
+            queue_of: Vec::new(),
+            outcomes_seen: 0,
+            depths,
+            requests: 0,
+            accepted: 0,
+            shed: 0,
+            batches: 0,
+            latency: LatencyHistogram::new(),
+        }
+    }
+
+    /// Remaining admission room under the pending bound.
+    fn room(&self) -> usize {
+        self.cfg.service.max_pending.saturating_sub(self.engine.pending_jobs())
+    }
+
+    /// Admit or reject one submission. `room` is the envelope's remaining
+    /// admission budget; decrements on admit so batch members see the same
+    /// decisions they would get submitted singly.
+    fn admit_one(&mut self, s: &SubmitRequest, room: &mut usize) -> SubmitOutcome {
+        let Some(&widx) = self.index.get(s.workload.as_str()) else {
+            return SubmitOutcome::Rejected {
+                code: ErrorCode::UnknownWorkload,
+                message: format!("unknown workload '{}'", s.workload),
+            };
+        };
+        if !s.length_hours.is_finite() || s.length_hours <= 0.0 {
+            return SubmitOutcome::Rejected {
+                code: ErrorCode::BadRequest,
+                message: "length_hours must be positive and finite".into(),
+            };
+        }
+        let queue = s.queue.min(self.cfg.num_queues.saturating_sub(1));
+        if *room == 0 {
+            match self.cfg.service.shed {
+                ShedPolicy::RejectNewest => {
+                    self.shed += 1;
+                    return SubmitOutcome::Rejected {
+                        code: ErrorCode::QueueFull,
+                        message: format!(
+                            "queue full (max_pending {})",
+                            self.cfg.service.max_pending
+                        ),
+                    };
+                }
+                ShedPolicy::RejectLowestQueue if queue != 0 => {
+                    self.shed += 1;
+                    return SubmitOutcome::Rejected {
+                        code: ErrorCode::Shed,
+                        message: format!(
+                            "shed under backpressure (queue {queue}; only queue 0 admits \
+                             over the bound)"
+                        ),
+                    };
+                }
+                // Queue 0 (least slack) is admitted over the bound.
+                ShedPolicy::RejectLowestQueue => {}
+            }
+        } else {
+            *room -= 1;
+        }
+        let spec = &self.catalog[widx];
+        let job = Job {
+            id: self.next_id,
+            workload: spec.name,
+            workload_idx: widx,
+            arrival: self.slot,
+            length_hours: s.length_hours,
+            queue,
+            slack_hours: self.cfg.queue_slack_hours.get(queue).copied().unwrap_or(24.0),
+            k_min: 1,
+            k_max: self.k_max,
+            profile: spec.profile(self.k_max),
+            watts_per_unit: spec.watts_per_unit,
+        };
+        self.engine.add_job(job);
+        self.queue_of.push(queue as u8);
+        self.depths[queue.min(self.depths.len() - 1)] += 1;
+        self.accepted += 1;
+        self.next_id += 1;
+        SubmitOutcome::Accepted { job_id: self.next_id - 1 }
+    }
+
+    /// Fold newly completed jobs into the per-queue depth counters.
+    fn sync_completions(&mut self) {
+        let outs = self.engine.outcomes();
+        while self.outcomes_seen < outs.len() {
+            let q = self.queue_of.get(outs[self.outcomes_seen].id).copied().unwrap_or(0) as usize;
+            let q = q.min(self.depths.len() - 1);
+            self.depths[q] = self.depths[q].saturating_sub(1);
+            self.outcomes_seen += 1;
+        }
+    }
+
+    fn status(&self) -> StatusResponse {
+        let last = self.engine.slots().last();
+        StatusResponse {
+            slot: self.slot,
+            active_jobs: self.engine.pending_jobs(),
+            completed: self.engine.outcomes().len(),
+            provisioned: last.map(|s| s.provisioned).unwrap_or(0),
+            used: last.map(|s| s.used).unwrap_or(0),
+            carbon_g: self.engine.outcomes().iter().map(|o| o.carbon_g).sum(),
+            energy_kwh: self.engine.outcomes().iter().map(|o| o.energy_kwh).sum(),
+        }
+    }
+
+    fn stats(&self) -> StatsResponse {
+        StatsResponse {
+            slot: self.slot,
+            requests: self.requests,
+            accepted: self.accepted,
+            shed: self.shed,
+            batches: self.batches,
+            pending: self.engine.pending_jobs(),
+            max_pending: self.cfg.service.max_pending,
+            queue_depths: self.depths.clone(),
+            p50_decision_ms: self.latency.percentile_ms(50.0),
+            p99_decision_ms: self.latency.percentile_ms(99.0),
+            carbon_g: self.engine.outcomes().iter().map(|o| o.carbon_g).sum(),
+        }
+    }
+
+    /// Process one request; returns the response and whether the leader
+    /// should stop (after a drain).
+    fn handle(
+        &mut self,
+        req: Request,
+        forecaster: &Forecaster,
+        policy: &mut dyn Policy,
+    ) -> (Response, bool) {
+        match req {
+            Request::Submit(s) => {
+                let t0 = Instant::now();
+                let mut room = self.room();
+                let out = self.admit_one(&s, &mut room);
+                self.latency.record(t0.elapsed());
+                let resp = match out {
+                    SubmitOutcome::Accepted { job_id } => Response::Submitted { job_id },
+                    SubmitOutcome::Rejected { code, message } => {
+                        Response::Error { code, message }
+                    }
+                };
+                (resp, false)
+            }
+            Request::SubmitBatch(jobs) => {
+                self.batches += 1;
+                if jobs.is_empty() {
+                    let resp = Response::Error {
+                        code: ErrorCode::BadRequest,
+                        message: "empty batch".into(),
+                    };
+                    return (resp, false);
+                }
+                if jobs.len() > self.cfg.service.max_batch {
+                    let resp = Response::Error {
+                        code: ErrorCode::BadRequest,
+                        message: format!(
+                            "batch of {} exceeds max_batch {}",
+                            jobs.len(),
+                            self.cfg.service.max_batch
+                        ),
+                    };
+                    return (resp, false);
+                }
+                let t0 = Instant::now();
+                // One backpressure consultation for the whole envelope.
+                let mut room = self.room();
+                let results: Vec<SubmitOutcome> =
+                    jobs.iter().map(|s| self.admit_one(s, &mut room)).collect();
+                // Amortized per-submission decision latency.
+                let per = t0.elapsed() / results.len() as u32;
+                for _ in 0..results.len() {
+                    self.latency.record(per);
+                }
+                (Response::Batch { results }, false)
+            }
+            Request::Tick => {
+                self.engine.step(self.slot, forecaster, policy);
+                self.slot += 1;
+                self.sync_completions();
+                (Response::Ticked { slot: self.slot }, false)
+            }
+            Request::Status => {
+                self.sync_completions();
+                (Response::Status(self.status()), false)
+            }
+            Request::Stats => {
+                self.sync_completions();
+                (Response::Stats(self.stats()), false)
+            }
+            Request::Drain => {
+                let mut guard = 0usize;
+                while self.engine.pending_jobs() > 0 && guard < 100_000 {
+                    self.engine.step(self.slot, forecaster, policy);
+                    self.slot += 1;
+                    guard += 1;
+                }
+                self.sync_completions();
+                let delays: Vec<f64> =
+                    self.engine.outcomes().iter().map(|o| o.delay_hours()).collect();
+                let resp = Response::Drained {
+                    completed: self.engine.outcomes().len(),
+                    carbon_g: self.engine.outcomes().iter().map(|o| o.carbon_g).sum(),
+                    mean_delay_hours: crate::util::stats::mean(&delays),
+                };
+                (resp, true)
+            }
         }
     }
 }
@@ -118,88 +427,16 @@ fn leader_loop(
     mut policy: Box<dyn Policy + Send>,
     rx: mpsc::Receiver<Envelope>,
 ) -> RunMetrics {
-    let catalog = profile::catalog_for(cfg.hardware);
-    let k_max = profile::default_k_max(cfg.hardware);
-    let sim = Simulator::new(
-        cfg.max_capacity,
-        crate::cluster::energy::EnergyModel::for_hardware(cfg.hardware),
-        cfg.num_queues,
-        cfg.horizon,
-    );
-    let mut engine = ClusterEngine::new(sim);
-    let mut slot = 0usize;
-    let mut next_id = 0usize;
-    let mut drained = false;
-
+    let mut leader = Leader::new(cfg);
     while let Ok(Envelope { req, reply }) = rx.recv() {
-        let resp = match req {
-            Request::Submit(s) => match catalog.iter().position(|w| w.name == s.workload) {
-                None => Response::Error { message: format!("unknown workload '{}'", s.workload) },
-                Some(widx) if s.length_hours <= 0.0 => {
-                    let _ = widx;
-                    Response::Error { message: "length_hours must be positive".into() }
-                }
-                Some(widx) => {
-                    let spec = &catalog[widx];
-                    let queue = s.queue.min(cfg.num_queues.saturating_sub(1));
-                    let job = Job {
-                        id: next_id,
-                        workload: spec.name,
-                        workload_idx: widx,
-                        arrival: slot,
-                        length_hours: s.length_hours,
-                        queue,
-                        slack_hours: cfg.queue_slack_hours.get(queue).copied().unwrap_or(24.0),
-                        k_min: 1,
-                        k_max,
-                        profile: spec.profile(k_max),
-                        watts_per_unit: spec.watts_per_unit,
-                    };
-                    engine.add_job(job);
-                    next_id += 1;
-                    Response::Submitted { job_id: next_id - 1 }
-                }
-            },
-            Request::Tick => {
-                engine.step(slot, &forecaster, policy.as_mut());
-                slot += 1;
-                Response::Ticked { slot }
-            }
-            Request::Status => {
-                let last = engine.slots().last();
-                Response::Status(StatusResponse {
-                    slot,
-                    active_jobs: engine.pending_jobs(),
-                    completed: engine.outcomes().len(),
-                    provisioned: last.map(|s| s.provisioned).unwrap_or(0),
-                    used: last.map(|s| s.used).unwrap_or(0),
-                    carbon_g: engine.outcomes().iter().map(|o| o.carbon_g).sum(),
-                    energy_kwh: engine.outcomes().iter().map(|o| o.energy_kwh).sum(),
-                })
-            }
-            Request::Drain => {
-                let mut guard = 0usize;
-                while engine.pending_jobs() > 0 && guard < 100_000 {
-                    engine.step(slot, &forecaster, policy.as_mut());
-                    slot += 1;
-                    guard += 1;
-                }
-                drained = true;
-                let delays: Vec<f64> =
-                    engine.outcomes().iter().map(|o| o.delay_hours()).collect();
-                Response::Drained {
-                    completed: engine.outcomes().len(),
-                    carbon_g: engine.outcomes().iter().map(|o| o.carbon_g).sum(),
-                    mean_delay_hours: crate::util::stats::mean(&delays),
-                }
-            }
-        };
+        leader.requests += 1;
+        let (resp, done) = leader.handle(req, &forecaster, policy.as_mut());
         let _ = reply.send(resp);
-        if drained {
+        if done {
             break;
         }
     }
-    engine.finish(policy.name()).metrics
+    leader.engine.finish(policy.name()).metrics
 }
 
 #[cfg(test)]
@@ -208,19 +445,28 @@ mod tests {
     use crate::carbon::trace::CarbonTrace;
     use crate::sched::carbon_agnostic::CarbonAgnostic;
 
-    fn start_coordinator() -> Coordinator {
+    fn config() -> CoordinatorConfig {
+        CoordinatorConfig {
+            max_capacity: 10,
+            hardware: Hardware::Cpu,
+            num_queues: 3,
+            queue_slack_hours: vec![6.0, 24.0, 48.0],
+            horizon: 100,
+            service: ServiceConfig::default(),
+        }
+    }
+
+    fn start_with(cfg: CoordinatorConfig) -> Coordinator {
         let trace = CarbonTrace::new("flat", vec![100.0; 500]);
-        Coordinator::start(
-            CoordinatorConfig {
-                max_capacity: 10,
-                hardware: Hardware::Cpu,
-                num_queues: 3,
-                queue_slack_hours: vec![6.0, 24.0, 48.0],
-                horizon: 100,
-            },
-            Forecaster::perfect(trace),
-            Box::new(CarbonAgnostic),
-        )
+        Coordinator::start(cfg, Forecaster::perfect(trace), Box::new(CarbonAgnostic))
+    }
+
+    fn start_coordinator() -> Coordinator {
+        start_with(config())
+    }
+
+    fn sub(workload: &str, length_hours: f64, queue: usize) -> SubmitRequest {
+        SubmitRequest { workload: workload.to_string(), length_hours, queue }
     }
 
     #[test]
@@ -259,5 +505,96 @@ mod tests {
         assert_eq!(id, 0);
         let metrics = coord.shutdown();
         assert_eq!(metrics.completed, 1);
+    }
+
+    #[test]
+    fn batch_submit_outcomes_in_member_order() {
+        let coord = start_coordinator();
+        let h = coord.handle();
+        let results = h
+            .submit_batch(vec![
+                sub("N-body(N=100k)", 2.0, 0),
+                sub("NotAWorkload", 1.0, 0),
+                sub("Jacobi(N=1k)", 3.0, 1),
+            ])
+            .unwrap();
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0], SubmitOutcome::Accepted { job_id: 0 });
+        assert!(matches!(
+            results[1],
+            SubmitOutcome::Rejected { code: ErrorCode::UnknownWorkload, .. }
+        ));
+        assert_eq!(results[2], SubmitOutcome::Accepted { job_id: 1 });
+        // Empty and oversize batches are envelope-level errors.
+        assert!(h.submit_batch(vec![]).is_err());
+        let metrics = coord.shutdown();
+        assert_eq!(metrics.completed, 2);
+    }
+
+    #[test]
+    fn backpressure_reject_newest() {
+        let mut cfg = config();
+        cfg.service.max_pending = 2;
+        let coord = start_with(cfg);
+        let h = coord.handle();
+        h.submit("N-body(N=100k)", 2.0, 2).unwrap();
+        h.submit("N-body(N=100k)", 2.0, 2).unwrap();
+        match h.request(Request::Submit(sub("N-body(N=100k)", 2.0, 0))) {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::QueueFull),
+            other => panic!("expected queue_full, got {other:?}"),
+        }
+        let st = h.stats().unwrap();
+        assert_eq!((st.accepted, st.shed), (2, 1));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn backpressure_lowest_queue_admits_urgent() {
+        let mut cfg = config();
+        cfg.service.max_pending = 1;
+        cfg.service.shed = ShedPolicy::RejectLowestQueue;
+        let coord = start_with(cfg);
+        let h = coord.handle();
+        h.submit("N-body(N=100k)", 2.0, 2).unwrap();
+        // Bound hit: delay-tolerant queues shed, queue 0 still admits.
+        match h.request(Request::Submit(sub("N-body(N=100k)", 2.0, 2))) {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::Shed),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert!(h.submit("N-body(N=100k)", 1.0, 0).is_ok());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stats_counts_and_depths() {
+        let coord = start_coordinator();
+        let h = coord.handle();
+        h.submit("N-body(N=100k)", 2.0, 0).unwrap();
+        h.submit_batch(vec![sub("Jacobi(N=1k)", 3.0, 1), sub("Heat(N=1k)", 1.0, 1)]).unwrap();
+        let st = h.stats().unwrap();
+        assert_eq!(st.accepted, 3);
+        assert_eq!(st.batches, 1);
+        assert_eq!(st.shed, 0);
+        assert_eq!(st.pending, 3);
+        assert_eq!(st.queue_depths, vec![1, 2, 0]);
+        assert!(st.requests >= 3);
+        assert!(st.p99_decision_ms >= st.p50_decision_ms);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stopped_coordinator_reports_draining() {
+        let coord = start_coordinator();
+        let h = coord.handle();
+        match h.request(Request::Drain) {
+            Response::Drained { .. } => {}
+            other => panic!("expected drained, got {other:?}"),
+        }
+        // Leader has stopped; further requests get a typed Draining error.
+        match h.request(Request::Status) {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::Draining),
+            other => panic!("expected draining, got {other:?}"),
+        }
+        coord.shutdown();
     }
 }

@@ -1,0 +1,360 @@
+//! Sharded deployment shape: one coordinator per region behind a
+//! deterministic geo-dispatcher.
+//!
+//! The dispatcher reuses the spatial sweep's routing
+//! ([`route_arrival`](crate::experiments::cells::route_arrival)), so a
+//! sharded service routes exactly like the paper's multi-region experiment
+//! cells. Routing depends only on (job order, virtual slot, per-region
+//! forecasts) — never on ingest granularity — so a fixed job stream produces
+//! bitwise-identical drain reports whether it arrives singly or in batches.
+//!
+//! With one shard the frontend is a transparent passthrough over a single
+//! [`Coordinator`]; `serve` and `serve-bench` always go through this type so
+//! every deployment shape exercises the same code path.
+
+use crate::carbon::forecast::Forecaster;
+use crate::carbon::synth::Region;
+use crate::cluster::metrics::RunMetrics;
+use crate::config::{ExperimentConfig, ServiceConfig};
+use crate::coordinator::api::{
+    ErrorCode, Request, Response, StatsResponse, StatusResponse, SubmitOutcome, SubmitRequest,
+};
+use crate::coordinator::server::{ClusterHandle, Coordinator, CoordinatorConfig};
+use crate::experiments::cells::{route_arrival, DispatchStrategy};
+use crate::experiments::runner::PreparedExperiment;
+use crate::sched::PolicyKind;
+
+/// Parse a `--shards` value: either a shard count (regions drawn cyclically
+/// from [`Region::ALL`] starting at the base config's region, so `1` keeps
+/// the configured region) or a '+'-joined region set
+/// ("south-australia+ontario").
+pub fn shard_regions(raw: &str, base_region: &str) -> Result<Vec<Region>, String> {
+    let raw = raw.trim();
+    if let Ok(n) = raw.parse::<usize>() {
+        if n == 0 {
+            return Err("--shards must be positive".into());
+        }
+        let start = Region::ALL.iter().position(|r| r.key() == base_region).unwrap_or(0);
+        return Ok((0..n).map(|i| Region::ALL[(start + i) % Region::ALL.len()]).collect());
+    }
+    let regions: Result<Vec<Region>, String> = raw
+        .split('+')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|k| {
+            Region::parse(k).ok_or_else(|| {
+                format!(
+                    "unknown region '{k}' (known: {})",
+                    Region::ALL.map(|r| r.key()).join(", ")
+                )
+            })
+        })
+        .collect();
+    let regions = regions?;
+    if regions.is_empty() {
+        return Err("--shards region set is empty".into());
+    }
+    Ok(regions)
+}
+
+struct Shard {
+    region: Region,
+    /// The dispatcher's view of the shard's carbon forecast (same trace the
+    /// shard's own policy sees).
+    forecaster: Forecaster,
+    coord: Coordinator,
+    handle: ClusterHandle,
+}
+
+/// A fleet of per-region coordinators behind a deterministic geo-dispatcher.
+pub struct ShardedCoordinator {
+    shards: Vec<Shard>,
+    strategy: DispatchStrategy,
+    rr: usize,
+    slot: usize,
+    cfg: ExperimentConfig,
+    service: ServiceConfig,
+}
+
+impl ShardedCoordinator {
+    /// Start one coordinator per region. Aggregate capacity is split evenly
+    /// (at least 1 server per shard); each shard gets its own region trace,
+    /// forecaster, and policy instance prepared from the base config.
+    pub fn start(
+        cfg: &ExperimentConfig,
+        service: &ServiceConfig,
+        kind: PolicyKind,
+        regions: &[Region],
+        strategy: DispatchStrategy,
+    ) -> ShardedCoordinator {
+        assert!(!regions.is_empty(), "at least one shard region required");
+        let per_capacity = (cfg.capacity / regions.len()).max(1);
+        let shards = regions
+            .iter()
+            .map(|&region| {
+                let mut rcfg = cfg.clone();
+                rcfg.region = region.key().to_string();
+                rcfg.capacity = per_capacity;
+                let prep = PreparedExperiment::prepare(&rcfg);
+                let policy = prep.build_policy(kind);
+                let forecaster = Forecaster::perfect(prep.eval_trace.clone());
+                let coord = Coordinator::start(
+                    CoordinatorConfig::from_experiment(&rcfg, service.clone()),
+                    forecaster.clone(),
+                    policy,
+                );
+                let handle = coord.handle();
+                Shard { region, forecaster, coord, handle }
+            })
+            .collect();
+        ShardedCoordinator {
+            shards,
+            strategy,
+            rr: 0,
+            slot: 0,
+            cfg: cfg.clone(),
+            service: service.clone(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn regions(&self) -> Vec<Region> {
+        self.shards.iter().map(|s| s.region).collect()
+    }
+
+    /// Route one submission to its destination shard index.
+    fn route(&mut self, s: &SubmitRequest) -> usize {
+        let queue = s.queue.min(self.cfg.queues.len().saturating_sub(1));
+        let slack = self.cfg.queues.get(queue).map(|q| q.delay_hours).unwrap_or(24.0);
+        let window = (s.length_hours + slack).ceil() as usize;
+        route_arrival(
+            self.strategy,
+            &mut self.rr,
+            &self.shards,
+            |sh| &sh.forecaster,
+            self.slot,
+            window,
+        )
+    }
+
+    /// Dispatch any wire request — the entry point `serve` uses.
+    pub fn handle_request(&mut self, req: Request) -> Response {
+        match req {
+            Request::Submit(s) => self.submit(&s),
+            Request::SubmitBatch(jobs) => self.submit_batch(jobs),
+            Request::Tick => self.tick(),
+            Request::Status => self.status(),
+            Request::Stats => self.stats_merged(),
+            Request::Drain => self.drain(),
+        }
+    }
+
+    pub fn submit(&mut self, s: &SubmitRequest) -> Response {
+        let r = self.route(s);
+        self.shards[r].handle.request(Request::Submit(s.clone()))
+    }
+
+    /// Route a batch member-by-member (same rr/forecast decisions as single
+    /// submits), forward one sub-batch per shard, and merge outcomes back
+    /// into member order.
+    pub fn submit_batch(&mut self, jobs: Vec<SubmitRequest>) -> Response {
+        if jobs.is_empty() {
+            return Response::Error { code: ErrorCode::BadRequest, message: "empty batch".into() };
+        }
+        if jobs.len() > self.service.max_batch {
+            return Response::Error {
+                code: ErrorCode::BadRequest,
+                message: format!(
+                    "batch of {} exceeds max_batch {}",
+                    jobs.len(),
+                    self.service.max_batch
+                ),
+            };
+        }
+        if self.shards.len() == 1 {
+            return self.shards[0].handle.request(Request::SubmitBatch(jobs));
+        }
+        let n = jobs.len();
+        let mut groups: Vec<Vec<SubmitRequest>> = vec![Vec::new(); self.shards.len()];
+        let mut positions: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (i, s) in jobs.into_iter().enumerate() {
+            let r = self.route(&s);
+            groups[r].push(s);
+            positions[r].push(i);
+        }
+        let mut merged: Vec<Option<SubmitOutcome>> = vec![None; n];
+        for (r, group) in groups.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            match self.shards[r].handle.request(Request::SubmitBatch(group)) {
+                Response::Batch { results } => {
+                    for (&pos, out) in positions[r].iter().zip(results) {
+                        merged[pos] = Some(out);
+                    }
+                }
+                Response::Error { code, message } => {
+                    for &pos in &positions[r] {
+                        merged[pos] =
+                            Some(SubmitOutcome::Rejected { code, message: message.clone() });
+                    }
+                }
+                other => {
+                    for &pos in &positions[r] {
+                        merged[pos] = Some(SubmitOutcome::Rejected {
+                            code: ErrorCode::BadRequest,
+                            message: format!("unexpected shard response {other:?}"),
+                        });
+                    }
+                }
+            }
+        }
+        let results = merged
+            .into_iter()
+            .map(|o| {
+                o.unwrap_or(SubmitOutcome::Rejected {
+                    code: ErrorCode::BadRequest,
+                    message: "unrouted batch member".into(),
+                })
+            })
+            .collect();
+        Response::Batch { results }
+    }
+
+    /// Advance every shard one slot (and the dispatcher's clock with them).
+    pub fn tick(&mut self) -> Response {
+        for sh in &self.shards {
+            let _ = sh.handle.request(Request::Tick);
+        }
+        self.slot += 1;
+        Response::Ticked { slot: self.slot }
+    }
+
+    /// Merged cluster status: sums across shards, dispatcher slot.
+    pub fn status(&self) -> Response {
+        let mut agg = StatusResponse {
+            slot: self.slot,
+            active_jobs: 0,
+            completed: 0,
+            provisioned: 0,
+            used: 0,
+            carbon_g: 0.0,
+            energy_kwh: 0.0,
+        };
+        for sh in &self.shards {
+            if let Response::Status(s) = sh.handle.request(Request::Status) {
+                agg.active_jobs += s.active_jobs;
+                agg.completed += s.completed;
+                agg.provisioned += s.provisioned;
+                agg.used += s.used;
+                agg.carbon_g += s.carbon_g;
+                agg.energy_kwh += s.energy_kwh;
+            }
+        }
+        Response::Status(agg)
+    }
+
+    /// Per-shard stats snapshots, in shard order (errors skipped).
+    pub fn stats(&self) -> Vec<StatsResponse> {
+        self.shards
+            .iter()
+            .filter_map(|sh| match sh.handle.request(Request::Stats) {
+                Response::Stats(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Merged service stats: counters and queue depths sum across shards;
+    /// latency percentiles take the max (a conservative fleet-tail
+    /// approximation).
+    pub fn stats_merged(&self) -> Response {
+        let per = self.stats();
+        let mut agg = StatsResponse {
+            slot: self.slot,
+            requests: 0,
+            accepted: 0,
+            shed: 0,
+            batches: 0,
+            pending: 0,
+            max_pending: 0,
+            queue_depths: vec![0; self.cfg.queues.len().max(1)],
+            p50_decision_ms: 0.0,
+            p99_decision_ms: 0.0,
+            carbon_g: 0.0,
+        };
+        for s in &per {
+            agg.requests += s.requests;
+            agg.accepted += s.accepted;
+            agg.shed += s.shed;
+            agg.batches += s.batches;
+            agg.pending += s.pending;
+            agg.max_pending += s.max_pending;
+            for (d, &sd) in agg.queue_depths.iter_mut().zip(&s.queue_depths) {
+                *d += sd;
+            }
+            agg.p50_decision_ms = agg.p50_decision_ms.max(s.p50_decision_ms);
+            agg.p99_decision_ms = agg.p99_decision_ms.max(s.p99_decision_ms);
+            agg.carbon_g += s.carbon_g;
+        }
+        Response::Stats(agg)
+    }
+
+    /// Drain every shard (fixed shard order) and merge: counts and carbon
+    /// sum; mean delay is completed-weighted, mirroring the spatial cells'
+    /// regional aggregation. Terminal — shards answer `draining` afterwards.
+    pub fn drain(&mut self) -> Response {
+        let mut completed = 0usize;
+        let mut carbon_g = 0.0f64;
+        let mut delay_weighted = 0.0f64;
+        for sh in &self.shards {
+            if let Response::Drained { completed: c, carbon_g: g, mean_delay_hours: d } =
+                sh.handle.request(Request::Drain)
+            {
+                completed += c;
+                carbon_g += g;
+                delay_weighted += d * c as f64;
+            }
+        }
+        let mean_delay_hours =
+            if completed == 0 { 0.0 } else { delay_weighted / completed as f64 };
+        Response::Drained { completed, carbon_g, mean_delay_hours }
+    }
+
+    /// Stop every shard and collect their final run metrics (shard order).
+    pub fn shutdown(self) -> Vec<RunMetrics> {
+        self.shards.into_iter().map(|sh| sh.coord.shutdown()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_regions_count_and_set() {
+        let rs = shard_regions("2", "ontario").unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].key(), "ontario");
+        // shards=1 keeps the configured region.
+        let one = shard_regions("1", "south-australia").unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].key(), "south-australia");
+        let set = shard_regions("south-australia+ontario", "ignored").unwrap();
+        assert_eq!(set.len(), 2);
+        assert!(shard_regions("0", "ontario").is_err());
+        assert!(shard_regions("narnia", "ontario").is_err());
+        assert!(shard_regions("", "ontario").is_err());
+    }
+
+    #[test]
+    fn shard_count_wraps_region_table() {
+        let all = Region::ALL.len();
+        let rs = shard_regions(&(all + 2).to_string(), Region::ALL[0].key()).unwrap();
+        assert_eq!(rs.len(), all + 2);
+        assert_eq!(rs[all].key(), Region::ALL[0].key());
+    }
+}

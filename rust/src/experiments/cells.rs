@@ -77,6 +77,50 @@ impl DispatchStrategy {
     }
 }
 
+/// Deterministic geo-dispatch: pick the destination shard for one arrival at
+/// slot `t`. `rr` is the round-robin cursor (pre-incremented, matching the
+/// historical spatial-cell semantics pinned by the golden fingerprints);
+/// `window_hours` is the job's expected occupancy window (length + slack,
+/// ceiled) and is only read by [`DispatchStrategy::LowestWindowCi`]. Shared
+/// by the spatial sweep cells and the sharded serving coordinator so both
+/// route identically.
+pub fn route_arrival<T>(
+    strategy: DispatchStrategy,
+    rr: &mut usize,
+    shards: &[T],
+    forecaster_of: impl Fn(&T) -> &Forecaster,
+    t: usize,
+    window_hours: usize,
+) -> usize {
+    match strategy {
+        DispatchStrategy::RoundRobin => {
+            *rr = (*rr + 1) % shards.len();
+            *rr
+        }
+        DispatchStrategy::LowestCurrentCi => shards
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                forecaster_of(a)
+                    .predict(t)
+                    .partial_cmp(&forecaster_of(b).predict(t))
+                    .unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap(),
+        DispatchStrategy::LowestWindowCi => shards
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                let ma = mean_of(&forecaster_of(a).predict_window(t, window_hours));
+                let mb = mean_of(&forecaster_of(b).predict_window(t, window_hours));
+                ma.partial_cmp(&mb).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap(),
+    }
+}
+
 /// Split a `+`-joined region-set key ("south-australia+ontario") into
 /// regions; panics on unknown keys (axis entries are validated up front by
 /// the CLI, so a bad key here is a programming error).
@@ -172,33 +216,8 @@ pub fn run_spatial_cell(
         // Route this slot's arrivals.
         while next_job < by_arrival.len() && by_arrival[next_job].arrival == t {
             let job = by_arrival[next_job];
-            let r = match strategy {
-                DispatchStrategy::RoundRobin => {
-                    rr = (rr + 1) % clusters.len();
-                    rr
-                }
-                DispatchStrategy::LowestCurrentCi => clusters
-                    .iter()
-                    .enumerate()
-                    .min_by(|(_, a), (_, b)| {
-                        a.forecaster.predict(t).partial_cmp(&b.forecaster.predict(t)).unwrap()
-                    })
-                    .map(|(i, _)| i)
-                    .unwrap(),
-                DispatchStrategy::LowestWindowCi => {
-                    let window = (job.length_hours + job.slack_hours).ceil() as usize;
-                    clusters
-                        .iter()
-                        .enumerate()
-                        .min_by(|(_, a), (_, b)| {
-                            let ma = mean_of(&a.forecaster.predict_window(t, window));
-                            let mb = mean_of(&b.forecaster.predict_window(t, window));
-                            ma.partial_cmp(&mb).unwrap()
-                        })
-                        .map(|(i, _)| i)
-                        .unwrap()
-                }
-            };
+            let window = (job.length_hours + job.slack_hours).ceil() as usize;
+            let r = route_arrival(strategy, &mut rr, &clusters, |c| &c.forecaster, t, window);
             let c = &mut clusters[r];
             // Re-id within the destination cluster (engines need dense ids).
             let local = Job { id: c.next_id, arrival: t, ..job.clone() };

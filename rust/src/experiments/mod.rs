@@ -13,6 +13,6 @@ pub mod spatial;
 pub mod sweep;
 pub mod yearlong;
 
-pub use cells::DispatchStrategy;
+pub use cells::{route_arrival, DispatchStrategy};
 pub use runner::{run_policies, run_policy, ExperimentRow, PreparedExperiment};
 pub use sweep::{SweepRunner, SweepSpec, SweepVariant};

@@ -8,11 +8,16 @@
 //! - `gen-traces --region <key> --hours <n> --out <csv>` — export CI traces
 //! - `catalog` — print the Table 3 workload catalog
 //! - `experiment <fig5|fig6|...|fig14|overheads>` — regenerate a paper figure
-//! - `serve [--policy <name>]` — run the coordinator on stdin/stdout JSON lines
+//! - `serve [--policy <name>] [--shards n|a+b]` — run the (optionally
+//!   sharded) coordinator on stdin/stdout JSON lines (wire protocol v2)
+//! - `serve-bench [--jobs n] [--batch b] [--json]` — closed-loop serving
+//!   benchmark → `BENCH_serve.json`
 
 use carbonflex::carbon::synth::{self, Region};
-use carbonflex::config::ExperimentConfig;
+use carbonflex::config::{ExperimentConfig, ServiceConfig, ShedPolicy};
+use carbonflex::coordinator;
 use carbonflex::experiments::perf;
+use carbonflex::experiments::DispatchStrategy;
 use carbonflex::experiments::runner;
 use carbonflex::experiments::sweep::{self, SweepRunner, SweepSpec};
 use carbonflex::sched::PolicyKind;
@@ -33,6 +38,7 @@ fn main() {
         Some("catalog") => cmd_catalog(),
         Some("experiment") => cmd_experiment(&args),
         Some("serve") => cmd_serve(&args),
+        Some("serve-bench") => cmd_serve_bench(&args),
         _ => {
             print_usage();
             if args.command.is_none() || args.flag("help") {
@@ -72,7 +78,16 @@ fn print_usage() {
          \x20 gen-traces  [--region south-australia] [--hours 8760] [--out trace.csv]\n\
          \x20 catalog                                           Table 3 workload catalog\n\
          \x20 experiment  <fig5..fig14|overheads|yearlong|noise|spatial>\n\
-         \x20 serve       [--config <file>] [--policy <name>]   JSON-line coordinator on stdio"
+         \x20 serve       [--config <file>] [--policy <name>] [--shards n|a+b]\n\
+         \x20             [--dispatch rr|current|window] [--max-pending N]\n\
+         \x20             [--max-batch N] [--shed reject-newest|reject-lowest-queue]\n\
+         \x20             JSON-line coordinator on stdio (wire protocol v2; a\n\
+         \x20             [service] table in the config sets the same knobs)\n\
+         \x20 serve-bench [--config <file>] [--policy <name>] [--jobs 2000]\n\
+         \x20             [--horizon <h>] [--seed <s>] [--batch 64] [--shards n|a+b]\n\
+         \x20             [--json] [--out BENCH_serve.json]\n\
+         \x20             closed-loop serving benchmark: single vs batched vs\n\
+         \x20             sharded ingest of one generated trace"
     );
 }
 
@@ -88,9 +103,9 @@ fn cmd_simulate(args: &Args) -> i32 {
         Ok(c) => c,
         Err(e) => return fail(&e),
     };
-    let kind = match PolicyKind::parse(args.get_or("policy", "carbonflex")) {
-        Some(k) => k,
-        None => return fail("unknown policy"),
+    let kind = match PolicyKind::parse_or_err(args.get_or("policy", "carbonflex")) {
+        Ok(k) => k,
+        Err(e) => return fail(&e),
     };
     let row = runner::run_policy(&cfg, kind);
     let m = &row.result.metrics;
@@ -204,9 +219,7 @@ fn cmd_sweep(args: &Args) -> i32 {
     match args.get("policies") {
         Some("all") => spec.policies = PolicyKind::ALL.to_vec(),
         Some("headline") => spec.policies = PolicyKind::HEADLINE.to_vec(),
-        Some(_) => match parse_list(args, "policies", |s| {
-            PolicyKind::parse(s).ok_or_else(|| format!("unknown policy '{s}'"))
-        }) {
+        Some(_) => match parse_list(args, "policies", PolicyKind::parse_or_err) {
             Ok(v) => spec.policies = v,
             Err(e) => return fail(&e),
         },
@@ -214,17 +227,12 @@ fn cmd_sweep(args: &Args) -> i32 {
         // the spec defaults to the headline set.
         None => {}
     };
-    let num = |name: &str| -> Result<Vec<usize>, String> {
-        parse_list(args, name, |s| {
-            s.parse::<usize>().map_err(|_| format!("invalid --{name} entry '{s}'"))
-        })
-    };
-    match num("capacities") {
+    match args.num_list::<usize>("capacities") {
         Ok(v) if !v.is_empty() => spec.capacities = v,
         Ok(_) => {}
         Err(e) => return fail(&e),
     };
-    match num("horizons") {
+    match args.num_list::<usize>("horizons") {
         Ok(v) if !v.is_empty() => spec.horizons = v,
         Ok(_) => {}
         Err(e) => return fail(&e),
@@ -233,7 +241,7 @@ fn cmd_sweep(args: &Args) -> i32 {
     // week indices (the learning chain still walks from week 0).
     if let Some(raw) = args.get("weeks") {
         if raw.contains(',') {
-            match num("weeks") {
+            match args.num_list::<usize>("weeks") {
                 Ok(v) => spec.weeks = v,
                 Err(e) => return fail(&e),
             }
@@ -441,60 +449,214 @@ fn cmd_experiment(args: &Args) -> i32 {
     carbonflex::experiments::figures::run_by_name(which, args.get("config"))
 }
 
+/// Service knobs for `serve`/`serve-bench`: the optional `[service]` table
+/// of `--config`, overridden by `--max-pending`, `--max-batch`, `--shed`.
+fn load_service(args: &Args) -> Result<ServiceConfig, String> {
+    let mut service = match args.get("config") {
+        Some(path) => ServiceConfig::load(path).map_err(|e| e.to_string())?,
+        None => ServiceConfig::default(),
+    };
+    service.max_pending = args.num_or("max-pending", service.max_pending)?;
+    service.max_batch = args.num_or("max-batch", service.max_batch)?;
+    if service.max_pending == 0 {
+        return Err("--max-pending must be positive".into());
+    }
+    if service.max_batch == 0 {
+        return Err("--max-batch must be positive".into());
+    }
+    if let Some(raw) = args.get("shed") {
+        service.shed = ShedPolicy::parse(raw).ok_or_else(|| {
+            format!(
+                "unknown shed policy '{raw}' (valid: {})",
+                ShedPolicy::ALL.map(|p| p.as_str()).join(", ")
+            )
+        })?;
+    }
+    Ok(service)
+}
+
+/// Resolve `--shards` (count or '+'-joined regions), defaulting to the
+/// service config's shard count anchored at the experiment's region.
+fn serve_regions(
+    args: &Args,
+    cfg: &ExperimentConfig,
+    service: &ServiceConfig,
+) -> Result<Vec<Region>, String> {
+    let raw = args
+        .get("shards")
+        .map(str::to_string)
+        .unwrap_or_else(|| service.shards.to_string());
+    coordinator::shard_regions(&raw, &cfg.region)
+}
+
+fn serve_strategy(args: &Args) -> Result<DispatchStrategy, String> {
+    let raw = args.get_or("dispatch", "rr");
+    DispatchStrategy::parse(raw)
+        .ok_or_else(|| format!("unknown dispatch strategy '{raw}' (rr, current, window)"))
+}
+
 fn cmd_serve(args: &Args) -> i32 {
-    use carbonflex::carbon::forecast::Forecaster;
-    use carbonflex::coordinator::{Coordinator, CoordinatorConfig, Request};
+    use carbonflex::coordinator::{ErrorCode, Request, Response, WireRequest, WireResponse};
     let cfg = match load_config(args) {
         Ok(c) => c,
         Err(e) => return fail(&e),
     };
-    let kind =
-        PolicyKind::parse(args.get_or("policy", "agnostic")).unwrap_or(PolicyKind::CarbonAgnostic);
-    let prep = runner::PreparedExperiment::prepare(&cfg);
-    let policy = prep.build_policy(kind);
-    let coord = Coordinator::start(
-        CoordinatorConfig {
-            max_capacity: cfg.capacity,
-            hardware: cfg.hardware,
-            num_queues: cfg.queues.len(),
-            queue_slack_hours: cfg.queues.iter().map(|q| q.delay_hours).collect(),
-            horizon: cfg.horizon_hours,
-        },
-        Forecaster::perfect(prep.eval_trace.clone()),
-        policy,
+    let service = match load_service(args) {
+        Ok(s) => s,
+        Err(e) => return fail(&e),
+    };
+    let kind = match PolicyKind::parse_or_err(args.get_or("policy", "agnostic")) {
+        Ok(k) => k,
+        Err(e) => return fail(&e),
+    };
+    let regions = match serve_regions(args, &cfg, &service) {
+        Ok(r) => r,
+        Err(e) => return fail(&e),
+    };
+    let strategy = match serve_strategy(args) {
+        Ok(s) => s,
+        Err(e) => return fail(&e),
+    };
+    let mut cluster =
+        coordinator::ShardedCoordinator::start(&cfg, &service, kind, &regions, strategy);
+    eprintln!(
+        "carbonflex coordinator ready (policy: {}, shards: {}, max_pending: {}, shed: {}); \
+         JSON lines on stdin (protocol v2; un-versioned lines read as legacy v1)",
+        kind.key(),
+        cluster.num_shards(),
+        service.max_pending,
+        service.shed.as_str()
     );
-    let handle = coord.handle();
-    eprintln!("carbonflex coordinator ready (policy: {}); JSON lines on stdin", kind.as_str());
+    let bad_line = |code: ErrorCode, message: String, id: Option<String>| {
+        let wire = WireResponse {
+            v: carbonflex::coordinator::PROTOCOL_VERSION,
+            id,
+            resp: Response::Error { code, message },
+        };
+        println!("{}", wire.to_json_line());
+    };
     let stdin = std::io::stdin();
     let mut line = String::new();
     loop {
         line.clear();
         match stdin.read_line(&mut line) {
-            Ok(0) | Err(_) => break,
+            Ok(0) => break,
             Ok(_) => {}
+            // A malformed byte sequence consumes the line; answer and keep
+            // serving. Real I/O errors end the session.
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                bad_line(ErrorCode::BadRequest, "line is not valid UTF-8".into(), None);
+                continue;
+            }
+            Err(_) => break,
         }
         if line.trim().is_empty() {
             continue;
         }
-        match Request::from_json_line(&line) {
-            Ok(req) => {
-                let drain = req == Request::Drain;
-                let resp = handle.request(req);
-                println!("{}", resp.to_json_line());
+        match WireRequest::from_json_line(&line) {
+            Ok(wire) => {
+                let drain = matches!(wire.req, Request::Drain);
+                let resp = cluster.handle_request(wire.req);
+                let out = WireResponse { v: wire.v, id: wire.id, resp };
+                println!("{}", out.to_json_line());
                 if drain {
+                    cluster.shutdown();
                     return 0;
                 }
             }
-            Err(e) => {
-                println!(
-                    "{}",
-                    carbonflex::coordinator::Response::Error { message: e }.to_json_line()
-                );
-            }
+            Err(pf) => bad_line(pf.code, pf.message, pf.id),
         }
     }
-    let metrics = coord.shutdown();
-    eprintln!("coordinator done: {} jobs, {:.2} kg CO2", metrics.completed, metrics.carbon_kg());
+    // EOF without an explicit drain: drain for the caller, then report.
+    if let Response::Drained { completed, carbon_g, .. } = cluster.drain() {
+        eprintln!("coordinator done: {} jobs, {:.2} kg CO2", completed, carbon_g / 1000.0);
+    }
+    cluster.shutdown();
+    0
+}
+
+fn cmd_serve_bench(args: &Args) -> i32 {
+    use carbonflex::coordinator::{run_serve_bench, ServeBenchOpts};
+    use carbonflex::util::bench::fmt_rate;
+    let mut cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => return fail(&e),
+    };
+    let service = match load_service(args) {
+        Ok(s) => s,
+        Err(e) => return fail(&e),
+    };
+    let kind = match PolicyKind::parse_or_err(args.get_or("policy", "agnostic")) {
+        Ok(k) => k,
+        Err(e) => return fail(&e),
+    };
+    let horizon = match args.num_or::<usize>("horizon", cfg.horizon_hours) {
+        Ok(0) => return fail("--horizon must be positive"),
+        Ok(h) => h,
+        Err(e) => return fail(&e),
+    };
+    // Keep the prepared traces long enough for the benched horizon.
+    cfg.horizon_hours = cfg.horizon_hours.max(horizon);
+    cfg.history_hours = cfg.history_hours.max(cfg.horizon_hours);
+    let jobs = match args.num_or::<usize>("jobs", 2000) {
+        Ok(0) => return fail("--jobs must be positive"),
+        Ok(n) => n,
+        Err(e) => return fail(&e),
+    };
+    let seed = match args.num_or::<u64>("seed", cfg.seed) {
+        Ok(s) => s,
+        Err(e) => return fail(&e),
+    };
+    let batch = match args.num_or::<usize>("batch", 64) {
+        Ok(b) => b,
+        Err(e) => return fail(&e),
+    };
+    let regions = match serve_regions(args, &cfg, &service) {
+        Ok(r) => r,
+        Err(e) => return fail(&e),
+    };
+    let strategy = match serve_strategy(args) {
+        Ok(s) => s,
+        Err(e) => return fail(&e),
+    };
+
+    let opts = ServeBenchOpts { cfg, service, kind, jobs, horizon, seed, batch, regions, strategy };
+    let (reports, doc) = run_serve_bench(&opts);
+
+    if args.flag("json") {
+        println!("{doc}");
+    } else {
+        let mut table = Table::new(&[
+            "mode",
+            "submissions/s",
+            "p50 (ms)",
+            "p99 (ms)",
+            "shed %",
+            "completed",
+            "carbon (kg)",
+        ]);
+        for r in &reports {
+            table.row(&[
+                r.mode.clone(),
+                fmt_rate(r.submissions_per_sec),
+                format!("{:.3}", r.p50_decision_ms),
+                format!("{:.3}", r.p99_decision_ms),
+                format!("{:.1}", r.shed_rate * 100.0),
+                format!("{}", r.completed),
+                format!("{:.2}", r.carbon_g / 1000.0),
+            ]);
+        }
+        table.print();
+    }
+    let identical = doc.get("reports_identical").and_then(Json::as_bool).unwrap_or(false);
+    if !identical {
+        eprintln!("warning: drain reports differ across ingest shapes (see modes in the JSON)");
+    }
+    let out = args.get_or("out", "BENCH_serve.json");
+    if let Err(e) = std::fs::write(out, format!("{doc}\n")) {
+        return fail(&format!("writing {out}: {e}"));
+    }
+    eprintln!("serve bench written to {out}");
     0
 }
 

@@ -193,6 +193,34 @@ impl PolicyKind {
             _ => return None,
         })
     }
+
+    /// Canonical CLI key for this policy; always round-trips through
+    /// [`PolicyKind::parse`].
+    pub fn key(&self) -> &'static str {
+        match self {
+            PolicyKind::CarbonAgnostic => "agnostic",
+            PolicyKind::Gaia => "gaia",
+            PolicyKind::WaitAwhile => "wait-awhile",
+            PolicyKind::CarbonScaler => "carbon-scaler",
+            PolicyKind::Vcc => "vcc",
+            PolicyKind::VccScaling => "vcc-scaling",
+            PolicyKind::CarbonFlex => "carbonflex",
+            PolicyKind::Oracle => "oracle",
+        }
+    }
+
+    /// Comma-joined list of all canonical CLI keys (for error messages).
+    pub fn valid_keys() -> String {
+        PolicyKind::ALL.map(|k| k.key()).join(", ")
+    }
+
+    /// Like [`PolicyKind::parse`] but with an error message listing the
+    /// valid names — the single parser every subcommand's `--policy` /
+    /// `--policies` flag goes through.
+    pub fn parse_or_err(s: &str) -> Result<PolicyKind, String> {
+        PolicyKind::parse(s)
+            .ok_or_else(|| format!("unknown policy '{s}' (valid: {})", PolicyKind::valid_keys()))
+    }
 }
 
 #[cfg(test)]
@@ -206,5 +234,16 @@ mod tests {
         }
         assert_eq!(PolicyKind::parse("oracle"), Some(PolicyKind::Oracle));
         assert_eq!(PolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn policy_kind_keys_roundtrip() {
+        for k in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(k.key()), Some(k), "{}", k.key());
+            assert_eq!(PolicyKind::parse_or_err(k.key()), Ok(k));
+        }
+        let err = PolicyKind::parse_or_err("warp-drive").unwrap_err();
+        assert!(err.contains("valid:"), "{err}");
+        assert!(err.contains("carbonflex"), "{err}");
     }
 }

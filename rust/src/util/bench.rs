@@ -67,6 +67,17 @@ pub fn fmt_duration(d: Duration) -> String {
     }
 }
 
+/// Human rate formatting with unit auto-scaling ("12.3k/s", "1.20M/s").
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec < 1e3 {
+        format!("{per_sec:.1}/s")
+    } else if per_sec < 1e6 {
+        format!("{:.1}k/s", per_sec / 1e3)
+    } else {
+        format!("{:.2}M/s", per_sec / 1e6)
+    }
+}
+
 /// Run `f` with `warmup` untimed iterations then `iters` timed ones.
 pub fn bench<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> BenchResult {
     for _ in 0..warmup {
@@ -202,6 +213,13 @@ mod tests {
         assert_eq!(r.iters, 10);
         assert_eq!(n, 12);
         assert!(r.min <= r.mean && r.mean <= r.max);
+    }
+
+    #[test]
+    fn fmt_rate_scales() {
+        assert_eq!(fmt_rate(12.0), "12.0/s");
+        assert_eq!(fmt_rate(12_300.0), "12.3k/s");
+        assert_eq!(fmt_rate(1_200_000.0), "1.20M/s");
     }
 
     #[test]

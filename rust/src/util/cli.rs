@@ -74,6 +74,20 @@ impl Args {
             Some(r) => r,
         }
     }
+
+    /// Comma-separated typed list: `--name 1,2,3`. Absent or empty option
+    /// yields an empty vec ("axis not given"); any malformed entry is an Err.
+    pub fn num_list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>, String> {
+        match self.get(name) {
+            None => Ok(Vec::new()),
+            Some(raw) => raw
+                .split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(|s| s.parse::<T>().map_err(|_| format!("invalid --{name} entry '{s}'")))
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -119,5 +133,13 @@ mod tests {
         let a = parse("");
         assert!(a.command.is_none());
         assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn num_list_parses_and_rejects() {
+        let a = parse("sweep --seeds 1,2, 3 --capacities 10,oops");
+        assert_eq!(a.num_list::<u64>("seeds").unwrap(), vec![1, 2]);
+        assert!(a.num_list::<usize>("capacities").is_err());
+        assert!(a.num_list::<usize>("absent").unwrap().is_empty());
     }
 }

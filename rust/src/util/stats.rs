@@ -134,6 +134,87 @@ pub fn histogram(xs: &[f64], bins: usize) -> (Vec<f64>, Vec<usize>) {
     (edges, counts)
 }
 
+/// Fixed-footprint log₂-bucketed latency histogram for the serving path.
+///
+/// `record` is O(1) and allocation-free (one `u64` counter per power-of-two
+/// nanosecond bucket), so it can sit on the coordinator's hot submit path.
+/// Percentiles are read from the cumulative bucket counts and are exact to
+/// within one octave (each bucket spans `[2^(k-1), 2^k)` ns), which is
+/// plenty for p50/p99 decision-latency reporting.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; 64],
+    total: u64,
+    sum_ns: f64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { counts: [0; 64], total: 0, sum_ns: 0.0, max_ns: 0 }
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        let bucket = (64 - ns.leading_zeros() as usize).min(63);
+        self.counts[bucket] += 1;
+        self.total += 1;
+        self.sum_ns += ns as f64;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum_ns / self.total as f64 / 1e6 }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_ns as f64 / 1e6
+    }
+
+    /// p-th percentile (0..=100) in milliseconds: the upper edge of the
+    /// bucket holding the p-th sample, clamped to the observed max.
+    /// 0.0 when empty.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target =
+            ((p.clamp(0.0, 100.0) / 100.0 * self.total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (bucket, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let upper_ns = (1u128 << bucket) as f64;
+                return (upper_ns / 1e6).min(self.max_ns as f64 / 1e6);
+            }
+        }
+        self.max_ns as f64 / 1e6
+    }
+
+    /// Merge another histogram into this one (shard aggregation).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
 /// Welford online accumulator — used by the bench harness and metrics to
 /// stream statistics without storing samples.
 #[derive(Debug, Clone, Default)]
@@ -251,6 +332,39 @@ mod tests {
         assert!((o.variance() - variance(&xs)).abs() < 1e-9);
         assert_eq!(o.min(), 2.0);
         assert_eq!(o.max(), 9.0);
+    }
+
+    #[test]
+    fn latency_histogram_percentiles() {
+        let mut h = LatencyHistogram::new();
+        // 99 fast samples (~1 µs) and one slow outlier (~16 ms).
+        for _ in 0..99 {
+            h.record_ns(1_000);
+        }
+        h.record_ns(16_000_000);
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile_ms(50.0);
+        let p99 = h.percentile_ms(99.0);
+        let p100 = h.percentile_ms(100.0);
+        // p50/p99 fall in the fast bucket (≤ 2^10 ns ≈ 1 µs upper edge ×2).
+        assert!(p50 <= 0.01, "p50 {p50}");
+        assert!(p99 <= 0.01, "p99 {p99}");
+        // p100 lands on the outlier's bucket, clamped to the observed max.
+        assert!(p100 >= 8.0 && p100 <= 16.0, "p100 {p100}");
+        assert!(h.mean_ms() > 0.0);
+        assert!(p50 <= p99 && p99 <= p100);
+    }
+
+    #[test]
+    fn latency_histogram_empty_and_merge() {
+        let mut a = LatencyHistogram::new();
+        assert_eq!(a.percentile_ms(99.0), 0.0);
+        assert_eq!(a.mean_ms(), 0.0);
+        let mut b = LatencyHistogram::new();
+        b.record(std::time::Duration::from_micros(5));
+        a.merge(&b);
+        assert_eq!(a.count(), 1);
+        assert!(a.percentile_ms(50.0) > 0.0);
     }
 
     #[test]

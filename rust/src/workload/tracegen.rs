@@ -119,16 +119,36 @@ fn pick_workload(
 /// then scaled by `cfg.arrival_scale`; lengths scale by `cfg.length_scale`
 /// (the Fig. 13 distribution-shift knobs).
 pub fn generate(cfg: &ExperimentConfig, horizon: usize, seed: u64) -> Vec<Job> {
+    generate_with(cfg, horizon, seed, None)
+}
+
+/// Like [`generate`], but with an explicit job count instead of the
+/// utilization-calibrated one — used by the serve load generator to pin an
+/// exact submission volume. When `n` equals the calibrated count this is
+/// bitwise identical to [`generate`] (the RNG sequence is untouched).
+pub fn generate_n(cfg: &ExperimentConfig, horizon: usize, seed: u64, n: usize) -> Vec<Job> {
+    generate_with(cfg, horizon, seed, Some(n))
+}
+
+fn generate_with(
+    cfg: &ExperimentConfig,
+    horizon: usize,
+    seed: u64,
+    jobs_override: Option<usize>,
+) -> Vec<Job> {
     let params = FamilyParams::for_family(cfg.trace);
     let catalog = profile::catalog_for(cfg.hardware);
     let k_max_hw = profile::default_k_max(cfg.hardware);
     let mut rng = Rng::new(seed);
 
     let mean_len = params.mean_length(cfg.length_scale);
-    let target_jobs = (cfg.capacity as f64 * cfg.target_utilization * horizon as f64 / mean_len
-        * cfg.arrival_scale)
-        .round()
-        .max(1.0) as usize;
+    let target_jobs = jobs_override.unwrap_or_else(|| {
+        (cfg.capacity as f64 * cfg.target_utilization * horizon as f64 / mean_len
+            * cfg.arrival_scale)
+            .round()
+            .max(1.0) as usize
+    });
+    let target_jobs = target_jobs.max(1);
 
     // Sample arrival slots from the normalized intensity.
     let weights: Vec<f64> = (0..horizon).map(|t| params.intensity(t)).collect();
@@ -191,6 +211,21 @@ mod tests {
             assert_eq!(x.length_hours, y.length_hours);
             assert_eq!(x.workload, y.workload);
         }
+    }
+
+    #[test]
+    fn generate_n_pins_count_and_preserves_sequence() {
+        let c = cfg();
+        let calibrated = generate(&c, 168, 11);
+        let pinned = generate_n(&c, 168, 11, calibrated.len());
+        assert_eq!(calibrated.len(), pinned.len());
+        for (a, b) in calibrated.iter().zip(&pinned) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.length_hours.to_bits(), b.length_hours.to_bits());
+            assert_eq!(a.workload, b.workload);
+        }
+        assert_eq!(generate_n(&c, 168, 11, 37).len(), 37);
+        assert_eq!(generate_n(&c, 168, 11, 0).len(), 1); // clamped to ≥ 1
     }
 
     #[test]

@@ -6,7 +6,7 @@ use carbonflex::carbon::forecast::Forecaster;
 use carbonflex::carbon::trace::CarbonTrace;
 use carbonflex::cluster::energy::EnergyModel;
 use carbonflex::cluster::sim::Simulator;
-use carbonflex::config::{ExperimentConfig, Hardware};
+use carbonflex::config::{ExperimentConfig, Hardware, ServiceConfig};
 use carbonflex::coordinator::{Coordinator, CoordinatorConfig, Request, Response};
 use carbonflex::experiments::runner::PreparedExperiment;
 use carbonflex::sched::carbon_agnostic::CarbonAgnostic;
@@ -129,6 +129,7 @@ fn coordinator_rejects_bad_wire_input_without_dying() {
             num_queues: 3,
             queue_slack_hours: vec![6.0, 24.0, 48.0],
             horizon: 50,
+            service: ServiceConfig::default(),
         },
         flat(200),
         Box::new(CarbonAgnostic),
@@ -158,6 +159,7 @@ fn coordinator_handle_survives_shutdown() {
             num_queues: 3,
             queue_slack_hours: vec![6.0],
             horizon: 50,
+            service: ServiceConfig::default(),
         },
         flat(100),
         Box::new(CarbonAgnostic),

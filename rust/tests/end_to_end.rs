@@ -4,7 +4,7 @@
 
 use carbonflex::carbon::forecast::Forecaster;
 use carbonflex::carbon::synth::{synthesize_year, Region};
-use carbonflex::config::{ExperimentConfig, Hardware};
+use carbonflex::config::{ExperimentConfig, Hardware, ServiceConfig};
 use carbonflex::coordinator::{Coordinator, CoordinatorConfig, Request, Response, SubmitRequest};
 use carbonflex::experiments::runner::{run_policies, PreparedExperiment};
 use carbonflex::sched::PolicyKind;
@@ -104,6 +104,7 @@ fn coordinator_json_protocol_round_trip() {
             num_queues: 3,
             queue_slack_hours: vec![6.0, 24.0, 48.0],
             horizon: 120,
+            service: ServiceConfig::default(),
         },
         Forecaster::perfect(trace),
         Box::new(carbonflex::sched::carbon_agnostic::CarbonAgnostic),

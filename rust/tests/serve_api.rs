@@ -1,0 +1,393 @@
+//! Wire-protocol and serving-path integration tests: codec round-trip
+//! properties, adversarial malformed lines, and the ingest-shape determinism
+//! guarantee (single vs batched vs sharded drains).
+
+use carbonflex::carbon::forecast::Forecaster;
+use carbonflex::carbon::synth::Region;
+use carbonflex::config::{ExperimentConfig, ServiceConfig};
+use carbonflex::coordinator::{
+    drive, shard_regions, submissions_of, Coordinator, CoordinatorConfig, ErrorCode, Request,
+    Response, ShardedCoordinator, StatsResponse, StatusResponse, SubmitOutcome, SubmitRequest,
+    WireRequest, WireResponse, PROTOCOL_VERSION,
+};
+use carbonflex::experiments::runner::PreparedExperiment;
+use carbonflex::experiments::DispatchStrategy;
+use carbonflex::sched::PolicyKind;
+use carbonflex::util::proptest_lite::{check, Config};
+use carbonflex::util::rng::Rng;
+use carbonflex::workload::tracegen;
+
+const WORKLOADS: [&str; 6] = [
+    "ResNet18",
+    "N-body(N=2k)",
+    "with \"quotes\"",
+    "back\\slash",
+    "unicode-λ-⚡",
+    "",
+];
+
+fn arb_submit(r: &mut Rng) -> SubmitRequest {
+    SubmitRequest {
+        workload: (*r.choose(&WORKLOADS)).to_string(),
+        length_hours: r.range(0.01, 500.0),
+        queue: r.below(4),
+    }
+}
+
+fn arb_id(r: &mut Rng) -> Option<String> {
+    match r.below(4) {
+        0 => None,
+        1 => Some(format!("req-{}", r.below(10_000))),
+        2 => Some("id with \"quotes\" and \\slashes\\".to_string()),
+        _ => Some("λ-⚡".to_string()),
+    }
+}
+
+fn arb_request(r: &mut Rng) -> Request {
+    match r.below(6) {
+        0 => Request::Submit(arb_submit(r)),
+        1 => {
+            let n = r.below(4);
+            Request::SubmitBatch((0..n.max(1)).map(|_| arb_submit(r)).collect())
+        }
+        2 => Request::Tick,
+        3 => Request::Status,
+        4 => Request::Stats,
+        _ => Request::Drain,
+    }
+}
+
+fn arb_status(r: &mut Rng) -> StatusResponse {
+    StatusResponse {
+        slot: r.below(1000),
+        active_jobs: r.below(500),
+        completed: r.below(500),
+        provisioned: r.below(200),
+        used: r.below(200),
+        carbon_g: r.range(0.0, 1e6),
+        energy_kwh: r.range(0.0, 1e4),
+    }
+}
+
+fn arb_response(r: &mut Rng) -> Response {
+    match r.below(7) {
+        0 => Response::Submitted { job_id: r.below(100_000) },
+        1 => {
+            let n = r.below(4);
+            let results = (0..n.max(1))
+                .map(|_| {
+                    if r.below(2) == 0 {
+                        SubmitOutcome::Accepted { job_id: r.below(100_000) }
+                    } else {
+                        SubmitOutcome::Rejected {
+                            code: *r.choose(&ErrorCode::ALL),
+                            message: "queue full".to_string(),
+                        }
+                    }
+                })
+                .collect();
+            Response::Batch { results }
+        }
+        2 => Response::Ticked { slot: r.below(10_000) },
+        3 => Response::Status(arb_status(r)),
+        4 => Response::Stats(StatsResponse {
+            slot: r.below(1000),
+            requests: r.below(100_000) as u64,
+            accepted: r.below(100_000) as u64,
+            shed: r.below(1000) as u64,
+            batches: r.below(1000) as u64,
+            pending: r.below(5000),
+            max_pending: 4096,
+            queue_depths: (0..3).map(|_| r.below(100)).collect(),
+            p50_decision_ms: r.range(0.0, 50.0),
+            p99_decision_ms: r.range(0.0, 500.0),
+            carbon_g: r.range(0.0, 1e6),
+        }),
+        5 => Response::Drained {
+            completed: r.below(10_000),
+            carbon_g: r.range(0.0, 1e7),
+            mean_delay_hours: r.range(0.0, 100.0),
+        },
+        _ => Response::Error {
+            code: *r.choose(&ErrorCode::ALL),
+            message: "something broke".to_string(),
+        },
+    }
+}
+
+#[test]
+fn wire_request_v2_roundtrip_property() {
+    check(
+        "v2 request envelope round-trips",
+        Config { cases: 256, seed: 0x5E21E },
+        |r| WireRequest { v: PROTOCOL_VERSION, id: arb_id(r), req: arb_request(r) },
+        |w| {
+            let line = w.to_json_line();
+            let parsed = WireRequest::from_json_line(&line)
+                .map_err(|p| format!("parse failed on {line}: {}", p.message))?;
+            if &parsed == w {
+                Ok(())
+            } else {
+                Err(format!("mismatch:\n  sent {w:?}\n  got  {parsed:?}\n  line {line}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn wire_request_v1_roundtrip_property() {
+    // v1 has no envelope: only the legacy ops, no correlation id.
+    check(
+        "legacy v1 request lines round-trip",
+        Config { cases: 128, seed: 0xB0A7 },
+        |r| {
+            let req = match r.below(4) {
+                0 => Request::Submit(arb_submit(r)),
+                1 => Request::Tick,
+                2 => Request::Status,
+                _ => Request::Drain,
+            };
+            WireRequest { v: 1, id: None, req }
+        },
+        |w| {
+            let line = w.to_json_line();
+            if line.contains("\"v\"") {
+                return Err(format!("legacy line leaked an envelope: {line}"));
+            }
+            let parsed =
+                WireRequest::from_json_line(&line).map_err(|p| p.message)?;
+            if &parsed == w {
+                Ok(())
+            } else {
+                Err(format!("mismatch: sent {w:?} got {parsed:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn wire_response_roundtrip_property() {
+    check(
+        "response envelope round-trips in both versions",
+        Config { cases: 256, seed: 0xD00DAD },
+        |r| {
+            let resp = arb_response(r);
+            // v1 pairs only with legacy-shaped kinds and carries no id.
+            let legacy_ok = !matches!(resp, Response::Batch { .. } | Response::Stats(_));
+            if legacy_ok && r.below(3) == 0 {
+                WireResponse { v: 1, id: None, resp }
+            } else {
+                WireResponse { v: PROTOCOL_VERSION, id: arb_id(r), resp }
+            }
+        },
+        |w| {
+            let line = w.to_json_line();
+            let parsed = WireResponse::from_json_line(&line)
+                .map_err(|e| format!("parse failed on {line}: {e}"))?;
+            if &parsed == w {
+                Ok(())
+            } else {
+                Err(format!("mismatch:\n  sent {w:?}\n  got  {parsed:?}\n  line {line}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn malformed_lines_all_answer_bad_request() {
+    let cases: [&str; 15] = [
+        "",
+        "not json",
+        "{",
+        "[]",
+        "{\"op\": 5}",
+        "{\"v\": 0, \"op\": \"tick\"}",
+        "{\"v\": 1.5, \"op\": \"tick\"}",
+        "{\"v\": -3, \"op\": \"tick\"}",
+        "{\"v\": 99, \"op\": \"tick\"}",
+        "{\"v\": 2}",
+        "{\"v\": 2, \"op\": \"submit\"}",
+        "{\"v\": 2, \"op\": \"submit\", \"workload\": \"X\"}",
+        "{\"v\": 2, \"op\": \"submit_batch\"}",
+        "{\"v\": 2, \"op\": \"submit_batch\", \"jobs\": [{\"workload\": \"X\"}]}",
+        "{\"v\": 2, \"op\": \"fly\"}",
+    ];
+    for line in cases {
+        let err = WireRequest::from_json_line(line)
+            .expect_err(&format!("line should be rejected: {line}"));
+        assert_eq!(err.code, ErrorCode::BadRequest, "{line}");
+        assert!(!err.message.is_empty(), "{line}");
+    }
+    // The client id is recovered from bad-but-parseable lines so the error
+    // response can still be correlated.
+    let err = WireRequest::from_json_line("{\"v\": 2, \"id\": \"abc\", \"op\": \"fly\"}")
+        .unwrap_err();
+    assert_eq!(err.id.as_deref(), Some("abc"));
+    let err = WireRequest::from_json_line("{\"v\": 99, \"id\": \"zz\", \"op\": \"tick\"}")
+        .unwrap_err();
+    assert_eq!(err.id.as_deref(), Some("zz"));
+}
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.capacity = 12;
+    cfg.horizon_hours = 48;
+    cfg.history_hours = 48;
+    cfg.replay_offsets = 1;
+    cfg
+}
+
+/// Drive the same submissions through a bare (unsharded) coordinator with
+/// the same submit/tick cadence the load generator uses.
+fn drive_plain(cfg: &ExperimentConfig, arrivals: &[(usize, SubmitRequest)]) -> (usize, u64, u64) {
+    let prep = PreparedExperiment::prepare(cfg);
+    let coord = Coordinator::start(
+        CoordinatorConfig::from_experiment(cfg, ServiceConfig::default()),
+        Forecaster::perfect(prep.eval_trace.clone()),
+        prep.build_policy(PolicyKind::CarbonAgnostic),
+    );
+    let h = coord.handle();
+    let last = arrivals.iter().map(|(t, _)| *t).max().unwrap_or(0);
+    let mut i = 0;
+    for t in 0..=last {
+        while i < arrivals.len() && arrivals[i].0 == t {
+            let resp = h.request(Request::Submit(arrivals[i].1.clone()));
+            assert!(matches!(resp, Response::Submitted { .. }), "{resp:?}");
+            i += 1;
+        }
+        h.request(Request::Tick);
+    }
+    let drained = h.request(Request::Drain);
+    let Response::Drained { completed, carbon_g, mean_delay_hours } = drained else {
+        panic!("expected drained, got {drained:?}");
+    };
+    coord.shutdown();
+    (completed, carbon_g.to_bits(), mean_delay_hours.to_bits())
+}
+
+#[test]
+fn drain_reports_identical_across_ingest_shapes() {
+    let cfg = small_cfg();
+    let service = ServiceConfig::default();
+    let jobs = tracegen::generate_n(&cfg, 48, 13, 50);
+    let arrivals = submissions_of(&jobs);
+    let region = Region::parse(&cfg.region).expect("default region parses");
+
+    // Shape 1: bare coordinator, one submit per request.
+    let plain = drive_plain(&cfg, &arrivals);
+
+    // Shape 2: sharded frontend with a single shard, batched ingest.
+    let mut one = ShardedCoordinator::start(
+        &cfg,
+        &service,
+        PolicyKind::CarbonAgnostic,
+        &[region],
+        DispatchStrategy::RoundRobin,
+    );
+    let r_one = drive(&mut one, &arrivals, 16, "batch");
+    one.shutdown();
+    assert_eq!(
+        plain,
+        (r_one.completed, r_one.carbon_g.to_bits(), r_one.mean_delay_hours.to_bits()),
+        "bare coordinator vs sharded(1) batched"
+    );
+
+    // Shape 3: two shards — topology differs from shape 1/2, but single and
+    // batched ingest over the SAME topology must still match bitwise.
+    let regions = shard_regions("2", &cfg.region).unwrap();
+    let mut a = ShardedCoordinator::start(
+        &cfg,
+        &service,
+        PolicyKind::CarbonAgnostic,
+        &regions,
+        DispatchStrategy::RoundRobin,
+    );
+    let r_single = drive(&mut a, &arrivals, 1, "single");
+    a.shutdown();
+    let mut b = ShardedCoordinator::start(
+        &cfg,
+        &service,
+        PolicyKind::CarbonAgnostic,
+        &regions,
+        DispatchStrategy::RoundRobin,
+    );
+    let r_batch = drive(&mut b, &arrivals, 16, "batch");
+    b.shutdown();
+    assert_eq!(r_single.accepted, r_batch.accepted);
+    assert!(
+        r_single.drain_matches(&r_batch),
+        "sharded(2) single {r_single:?} vs batched {r_batch:?}"
+    );
+}
+
+#[test]
+fn backpressure_shapes_are_visible_on_the_wire() {
+    let mut cfg = small_cfg();
+    cfg.capacity = 4;
+    let mut service = ServiceConfig::default();
+    service.max_pending = 2;
+    let region = Region::parse(&cfg.region).unwrap();
+    let mut cluster = ShardedCoordinator::start(
+        &cfg,
+        &service,
+        PolicyKind::CarbonAgnostic,
+        &[region],
+        DispatchStrategy::RoundRobin,
+    );
+
+    let mut line = |s: &str| {
+        let w = WireRequest::from_json_line(s).expect("parses");
+        let v = w.v;
+        let id = w.id.clone();
+        let resp = cluster.handle_request(w.req);
+        WireResponse { v, id, resp }
+    };
+
+    // Fill the queue via a batch, then watch the third member shed.
+    let out = line(
+        "{\"v\": 2, \"id\": \"b1\", \"op\": \"submit_batch\", \"jobs\": [\
+         {\"workload\": \"Heat(N=1k)\", \"length_hours\": 2.0, \"queue\": 0},\
+         {\"workload\": \"Heat(N=1k)\", \"length_hours\": 2.0, \"queue\": 1},\
+         {\"workload\": \"Heat(N=1k)\", \"length_hours\": 2.0, \"queue\": 2}]}",
+    );
+    assert_eq!(out.id.as_deref(), Some("b1"));
+    let Response::Batch { results } = &out.resp else {
+        panic!("expected batch, got {:?}", out.resp);
+    };
+    assert_eq!(results.len(), 3);
+    assert!(matches!(results[0], SubmitOutcome::Accepted { .. }));
+    assert!(matches!(results[1], SubmitOutcome::Accepted { .. }));
+    assert!(matches!(
+        results[2],
+        SubmitOutcome::Rejected { code: ErrorCode::QueueFull, .. }
+    ));
+    let encoded = out.to_json_line();
+    assert!(encoded.contains("\"queue_full\""), "{encoded}");
+
+    // Stats reflect the shed decision and queue depths.
+    let out = line("{\"v\": 2, \"op\": \"stats\"}");
+    let Response::Stats(stats) = &out.resp else {
+        panic!("expected stats, got {:?}", out.resp);
+    };
+    assert_eq!(stats.accepted, 2);
+    assert_eq!(stats.shed, 1);
+    assert_eq!(stats.pending, 2);
+
+    // Legacy (no "v") lines still work and answer in the flat v1 shape.
+    let out = line("{\"op\": \"status\"}");
+    assert_eq!(out.v, 1);
+    let encoded = out.to_json_line();
+    assert!(encoded.contains("\"active_jobs\""), "{encoded}");
+    assert!(!encoded.contains("\"kind\""), "{encoded}");
+
+    let out = line("{\"v\": 2, \"op\": \"drain\"}");
+    assert!(matches!(out.resp, Response::Drained { .. }), "{:?}", out.resp);
+    // Post-drain requests answer with a typed draining error.
+    let out = line("{\"v\": 2, \"op\": \"status\"}");
+    assert!(
+        matches!(out.resp, Response::Error { code: ErrorCode::Draining, .. }),
+        "{:?}",
+        out.resp
+    );
+    cluster.shutdown();
+}
