@@ -17,6 +17,16 @@
 //! sanitizer scratch live in reusable engine fields, and slot records store
 //! queue lengths inline. `tests/zero_alloc.rs` enforces the invariant with
 //! a counting global allocator.
+//!
+//! The hot state is **structure-of-arrays**: per-job runtime state lives in
+//! [`JobColumns`] (parallel `f64`/`u32` columns indexed by dense job id),
+//! per-slot records accumulate in [`SlotColumns`] (one column per
+//! [`SlotRecord`] field, queue lengths flattened), and the policy sees a
+//! [`crate::sched::JobViewCols`] mirror of the view slice — so the advance
+//! loop, sanitize, and the Table 2 feature extraction are branch-light
+//! index loops over contiguous arrays. Output is bitwise-identical to the
+//! old array-of-structs engine, pinned by the in-test AoS reference
+//! (`aos_reference_run`) and the golden-fingerprint harness.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -24,13 +34,14 @@ use std::collections::{BinaryHeap, VecDeque};
 use crate::carbon::forecast::Forecaster;
 use crate::cluster::energy::EnergyModel;
 use crate::cluster::metrics::{JobOutcome, RunMetrics};
-use crate::sched::{Decision, JobView, Policy, SlotCtx, MAX_QUEUES};
+use crate::sched::{Decision, JobView, JobViewCols, Policy, SlotCtx, MAX_QUEUES};
 use crate::workload::job::Job;
 
 /// Per-slot record of what the policy did — the raw material for the
 /// learning phase's `(STATE → m_t, ρ)` mappings (paper §4.2) and for
-/// plotting capacity curves.
-#[derive(Debug, Clone)]
+/// plotting capacity curves. During a run the engine stores these as
+/// [`SlotColumns`]; the record form is materialized for [`SimResult`].
+#[derive(Debug, Clone, Default)]
 pub struct SlotRecord {
     pub t: usize,
     /// Carbon intensity this slot, g/kWh.
@@ -58,6 +69,87 @@ pub struct SlotRecord {
 /// (no marginal throughput qualifies: with `p ≤ 1`, a threshold above 1
 /// excludes every job).
 pub const RHO_IDLE: f64 = 1.01;
+
+/// §Perf: the engine's slot history as structure-of-arrays — one column per
+/// [`SlotRecord`] field, with the inline queue-length arrays flattened at
+/// stride [`MAX_QUEUES`] (slot `s` occupies `s*MAX_QUEUES ..
+/// (s+1)*MAX_QUEUES`). The step loop appends to contiguous arrays, and
+/// live consumers (the coordinator's stats, the zero-alloc harness) scan a
+/// single column instead of striding a struct array.
+#[derive(Debug, Clone, Default)]
+pub struct SlotColumns {
+    pub t: Vec<u32>,
+    pub ci: Vec<f64>,
+    pub provisioned: Vec<u32>,
+    pub used: Vec<u32>,
+    pub rho: Vec<f64>,
+    /// Flattened per-queue active-job counts, stride [`MAX_QUEUES`].
+    pub queue_lengths: Vec<u32>,
+    pub mean_elasticity: Vec<f64>,
+    pub energy_kwh: Vec<f64>,
+    pub carbon_g: Vec<f64>,
+}
+
+impl SlotColumns {
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    fn reserve(&mut self, additional: usize) {
+        self.t.reserve(additional);
+        self.ci.reserve(additional);
+        self.provisioned.reserve(additional);
+        self.used.reserve(additional);
+        self.rho.reserve(additional);
+        self.queue_lengths.reserve(additional * MAX_QUEUES);
+        self.mean_elasticity.reserve(additional);
+        self.energy_kwh.reserve(additional);
+        self.carbon_g.reserve(additional);
+    }
+
+    fn push(&mut self, r: &SlotRecord) {
+        debug_assert!(r.t <= u32::MAX as usize, "slot index exceeds u32");
+        self.t.push(r.t as u32);
+        self.ci.push(r.ci);
+        self.provisioned.push(r.provisioned as u32);
+        self.used.push(r.used as u32);
+        self.rho.push(r.rho);
+        for &q in &r.queue_lengths {
+            self.queue_lengths.push(q as u32);
+        }
+        self.mean_elasticity.push(r.mean_elasticity);
+        self.energy_kwh.push(r.energy_kwh);
+        self.carbon_g.push(r.carbon_g);
+    }
+
+    /// Rebuild the record vector (run teardown — not on the step path).
+    pub fn materialize(&self) -> Vec<SlotRecord> {
+        (0..self.len())
+            .map(|s| {
+                let mut queue_lengths = [0usize; MAX_QUEUES];
+                let flat = &self.queue_lengths[s * MAX_QUEUES..(s + 1) * MAX_QUEUES];
+                for (q, &v) in queue_lengths.iter_mut().zip(flat) {
+                    *q = v as usize;
+                }
+                SlotRecord {
+                    t: self.t[s] as usize,
+                    ci: self.ci[s],
+                    provisioned: self.provisioned[s] as usize,
+                    used: self.used[s] as usize,
+                    rho: self.rho[s],
+                    queue_lengths,
+                    mean_elasticity: self.mean_elasticity[s],
+                    energy_kwh: self.energy_kwh[s],
+                    carbon_g: self.carbon_g[s],
+                }
+            })
+            .collect()
+    }
+}
 
 /// Result of one simulation run.
 #[derive(Debug, Clone)]
@@ -127,16 +219,41 @@ pub struct Simulator {
     pub max_drain_slots: usize,
 }
 
-/// Internal per-job runtime state.
-#[derive(Debug)]
-struct JobState {
-    remaining: f64,
-    prev_alloc: usize,
-    started: bool,
-    done: bool,
-    energy_kwh: f64,
-    carbon_g: f64,
-    rescales: usize,
+/// `JobColumns::flags` bit: the job has run at least one slot.
+const STARTED: u8 = 1;
+/// `JobColumns::flags` bit: the job completed (its columns are tombstones).
+const DONE: u8 = 2;
+
+/// Internal per-job runtime state, structure-of-arrays (§Perf): the advance
+/// loop reads and writes parallel `f64`/`u32` columns indexed by dense job
+/// id instead of striding a struct array, so each field access touches one
+/// contiguous allocation.
+#[derive(Debug, Default)]
+struct JobColumns {
+    /// Remaining work in base-hours.
+    remaining: Vec<f64>,
+    /// Allocation in the previous slot (0 = suspended/queued).
+    prev_alloc: Vec<u32>,
+    energy_kwh: Vec<f64>,
+    carbon_g: Vec<f64>,
+    rescales: Vec<u32>,
+    /// Status bits: [`STARTED`] | [`DONE`].
+    flags: Vec<u8>,
+}
+
+impl JobColumns {
+    fn push_job(&mut self, work: f64) {
+        self.remaining.push(work);
+        self.prev_alloc.push(0);
+        self.energy_kwh.push(0.0);
+        self.carbon_g.push(0.0);
+        self.rescales.push(0);
+        self.flags.push(0);
+    }
+
+    fn len(&self) -> usize {
+        self.flags.len()
+    }
 }
 
 /// Reusable scratch for [`sanitize`] (§Perf: one allocation-free sanitize
@@ -160,10 +277,13 @@ struct SanitizeScratch {
 pub struct ClusterEngine {
     cfg: Simulator,
     jobs: Vec<Job>,
-    st: Vec<JobState>,
+    /// Columnar per-job runtime state (index = dense job id).
+    state: JobColumns,
     outcomes: Vec<JobOutcome>,
-    slots: Vec<SlotRecord>,
-    usage_per_slot: Vec<usize>,
+    /// Columnar slot history; `last` holds the materialized most recent
+    /// record so `step` can keep returning `&SlotRecord`.
+    slot_cols: SlotColumns,
+    last: SlotRecord,
     prev_capacity: usize,
     prev_used: usize,
     overhead_energy: f64,
@@ -181,6 +301,9 @@ pub struct ClusterEngine {
     /// Recycled policy-view buffer; always empty between steps, only its
     /// allocation is reused (see the lifetime note in `step`).
     views_buf: Vec<JobView<'static>>,
+    /// Columnar mirror of the views, refilled each step (clear+push keeps
+    /// the capacity, so steady-state slots allocate nothing).
+    cols: JobViewCols,
     /// Recycled policy decision (capacity + alloc buffer).
     decision: Decision,
     scratch: SanitizeScratch,
@@ -197,10 +320,10 @@ impl ClusterEngine {
         ClusterEngine {
             cfg,
             jobs: vec![],
-            st: vec![],
+            state: JobColumns::default(),
             outcomes: vec![],
-            slots: vec![],
-            usage_per_slot: vec![],
+            slot_cols: SlotColumns::default(),
+            last: SlotRecord::default(),
             prev_capacity,
             prev_used: 0,
             overhead_energy: 0.0,
@@ -210,6 +333,7 @@ impl ClusterEngine {
             waiting: vec![],
             active: vec![],
             views_buf: vec![],
+            cols: JobViewCols::default(),
             decision: Decision::default(),
             scratch: SanitizeScratch::default(),
         }
@@ -221,15 +345,7 @@ impl ClusterEngine {
         let idx = self.jobs.len();
         let arrival = job.arrival;
         self.jobs.push(job);
-        self.st.push(JobState {
-            remaining: self.jobs.last().unwrap().work(),
-            prev_alloc: 0,
-            started: false,
-            done: false,
-            energy_kwh: 0.0,
-            carbon_g: 0.0,
-            rescales: 0,
-        });
+        self.state.push_job(self.jobs.last().unwrap().work());
         self.active_jobs += 1;
         // Keep `waiting` sorted by (arrival, id) descending; the next due
         // arrival is at the back. Submission outside the step loop, so the
@@ -243,12 +359,12 @@ impl ClusterEngine {
     /// over the registered jobs allocates nothing in steady state.
     pub fn reserve(&mut self, slots: usize) {
         let n = self.jobs.len();
-        self.slots.reserve(slots);
-        self.usage_per_slot.reserve(slots);
+        self.slot_cols.reserve(slots);
         self.outcomes.reserve(n);
         self.recent.reserve(n + 1);
         self.active.reserve(n);
         self.views_buf.reserve(n);
+        self.cols.reserve(n);
         self.decision.alloc.reserve(n);
         self.scratch.alloc.reserve(n);
         self.scratch.idx_of.reserve(n);
@@ -264,8 +380,19 @@ impl ClusterEngine {
         &self.outcomes
     }
 
-    pub fn slots(&self) -> &[SlotRecord] {
-        &self.slots
+    /// The columnar slot history (one entry per completed step).
+    pub fn slot_columns(&self) -> &SlotColumns {
+        &self.slot_cols
+    }
+
+    /// Number of recorded slots.
+    pub fn num_slots(&self) -> usize {
+        self.slot_cols.len()
+    }
+
+    /// The most recent slot record, if any step has run.
+    pub fn last_slot(&self) -> Option<&SlotRecord> {
+        (!self.slot_cols.is_empty()).then_some(&self.last)
     }
 
     /// Advance one slot. Returns the slot record.
@@ -292,8 +419,7 @@ impl ClusterEngine {
 
         if self.active.is_empty() {
             self.prev_used = 0;
-            self.usage_per_slot.push(0);
-            self.slots.push(SlotRecord {
+            self.last = SlotRecord {
                 t,
                 ci: forecaster.truth().at(t),
                 provisioned: 0,
@@ -303,8 +429,9 @@ impl ClusterEngine {
                 mean_elasticity: 0.0,
                 energy_kwh: 0.0,
                 carbon_g: 0.0,
-            });
-            return self.slots.last().unwrap();
+            };
+            self.slot_cols.push(&self.last);
+            return &self.last;
         }
 
         while let Some(&(ct, _)) = self.recent.front() {
@@ -326,20 +453,23 @@ impl ClusterEngine {
         // is a plain coercion.
         let mut views: Vec<JobView<'_>> = std::mem::take(&mut self.views_buf);
         debug_assert!(views.is_empty());
+        self.cols.clear();
         for &i in &self.active {
             let jv = JobView {
                 job: &self.jobs[i],
-                remaining: self.st[i].remaining,
-                prev_alloc: self.st[i].prev_alloc,
+                remaining: self.state.remaining[i],
+                prev_alloc: self.state.prev_alloc[i] as usize,
                 overdue: false,
             };
             let overdue = jv.slack_left(t) <= 0.0;
+            self.cols.push(&self.jobs[i], jv.remaining, jv.prev_alloc, overdue);
             views.push(JobView { overdue, ..jv });
         }
 
         let ctx = SlotCtx {
             t,
             jobs: &views,
+            cols: &self.cols,
             forecaster,
             max_capacity: self.cfg.max_capacity,
             num_queues: self.cfg.num_queues,
@@ -352,7 +482,7 @@ impl ClusterEngine {
         policy.decide_into(&ctx, &mut self.decision);
 
         let provisioned =
-            sanitize(self.cfg.max_capacity, &self.decision, &views, &mut self.scratch);
+            sanitize(self.cfg.max_capacity, &self.decision, &views, &self.cols, &mut self.scratch);
 
         // --- Advance jobs ---
         let ci = forecaster.truth().at(t);
@@ -363,16 +493,17 @@ impl ClusterEngine {
         let mut any_ran = false;
         let mut completed_any = false;
 
+        // Index-driven advance over the job columns: each field access hits
+        // one contiguous array, with `i` the dense job id.
         for (idx, &i) in self.active.iter().enumerate() {
             let k = self.scratch.alloc[idx];
-            let s = &mut self.st[i];
             let job = &self.jobs[i];
             if k == 0 {
                 // Suspension of a running job is a checkpoint event.
-                if s.prev_alloc > 0 {
-                    s.rescales += 1;
+                if self.state.prev_alloc[i] > 0 {
+                    self.state.rescales[i] += 1;
                 }
-                s.prev_alloc = 0;
+                self.state.prev_alloc[i] = 0;
                 continue;
             }
             any_ran = true;
@@ -381,27 +512,29 @@ impl ClusterEngine {
 
             let rate = job.rate(k);
             let mut penalty = 0.0;
-            if s.started && s.prev_alloc != k && s.prev_alloc > 0 {
-                s.rescales += 1;
+            let prev = self.state.prev_alloc[i] as usize;
+            if self.state.flags[i] & STARTED != 0 && prev != k && prev > 0 {
+                self.state.rescales[i] += 1;
                 penalty = self.cfg.energy.ckpt_progress_penalty(rate);
             }
-            s.started = true;
+            self.state.flags[i] |= STARTED;
             let progress = (rate - penalty).max(0.0);
-            let (fraction, finished) = if s.remaining <= progress {
-                ((s.remaining + penalty) / rate, true)
+            let remaining = self.state.remaining[i];
+            let (fraction, finished) = if remaining <= progress {
+                ((remaining + penalty) / rate, true)
             } else {
                 (1.0, false)
             };
             let e = self.cfg.energy.job_energy_kwh(job, k, fraction.min(1.0));
-            s.energy_kwh += e;
-            s.carbon_g += e * ci;
+            self.state.energy_kwh[i] += e;
+            self.state.carbon_g[i] += e * ci;
             slot_energy += e;
             slot_carbon += e * ci;
 
             if finished {
-                s.remaining = 0.0;
-                s.done = true;
-                s.prev_alloc = 0;
+                self.state.remaining[i] = 0.0;
+                self.state.flags[i] |= DONE;
+                self.state.prev_alloc[i] = 0;
                 self.active_jobs -= 1;
                 let outcome = JobOutcome {
                     id: job.id,
@@ -409,22 +542,22 @@ impl ClusterEngine {
                     completion: t,
                     length_hours: job.length_hours,
                     slack_hours: job.slack_hours,
-                    energy_kwh: s.energy_kwh,
-                    carbon_g: s.carbon_g,
-                    rescales: s.rescales,
+                    energy_kwh: self.state.energy_kwh[i],
+                    carbon_g: self.state.carbon_g[i],
+                    rescales: self.state.rescales[i] as usize,
                 };
                 self.recent.push_back((t, outcome.violated_slo()));
                 policy.on_complete(job.id, t);
                 self.outcomes.push(outcome);
                 completed_any = true;
             } else {
-                s.remaining -= progress;
-                s.prev_alloc = k;
+                self.state.remaining[i] -= progress;
+                self.state.prev_alloc[i] = k as u32;
             }
         }
         if completed_any {
-            let st = &self.st;
-            self.active.retain(|&i| !st[i].done);
+            let flags = &self.state.flags;
+            self.active.retain(|&i| flags[i] & DONE == 0);
         }
 
         // Boot energy for newly provisioned servers (3–5 min lag, §6.8).
@@ -456,8 +589,7 @@ impl ClusterEngine {
                 unsafe { std::mem::transmute::<Vec<JobView<'_>>, Vec<JobView<'static>>>(views) };
         }
 
-        self.usage_per_slot.push(used);
-        self.slots.push(SlotRecord {
+        self.last = SlotRecord {
             t,
             ci,
             provisioned,
@@ -467,18 +599,24 @@ impl ClusterEngine {
             mean_elasticity,
             energy_kwh: slot_energy,
             carbon_g: slot_carbon,
-        });
-        self.slots.last().unwrap()
+        };
+        self.slot_cols.push(&self.last);
+        &self.last
     }
 
     /// Finalize into a [`SimResult`].
     pub fn finish(self, policy_name: &str) -> SimResult {
-        let unfinished = self.st.iter().filter(|s| !s.done).count();
+        let unfinished = self.state.flags.iter().filter(|&&f| f & DONE == 0).count();
+        debug_assert_eq!(self.state.len(), self.jobs.len());
+        // The `used` column doubles as the usage-per-slot series the
+        // metrics need (teardown-time widening copy, off the step path).
+        let usage_per_slot: Vec<usize> =
+            self.slot_cols.used.iter().map(|&u| u as usize).collect();
         let mut metrics = RunMetrics::from_outcomes(
             policy_name,
             &self.outcomes,
             unfinished,
-            &self.usage_per_slot,
+            &usage_per_slot,
             self.cfg.max_capacity,
             self.cfg.horizon,
         );
@@ -487,7 +625,7 @@ impl ClusterEngine {
         SimResult {
             metrics,
             outcomes: self.outcomes,
-            slots: self.slots,
+            slots: self.slot_cols.materialize(),
             overhead_energy_kwh: self.overhead_energy,
             overhead_carbon_g: self.overhead_carbon,
         }
@@ -519,42 +657,47 @@ fn victim_key(is_base: bool, marginal: f64) -> u128 {
 /// the reusable scratch, and the trim loop pops victims from a lazily
 /// invalidated binary heap instead of rescanning every view per trimmed
 /// server (O(n·excess) → O((n + excess)·log n)), bitwise-identical to the
-/// scan (see `sanitize_matches_reference_on_random_decisions`).
+/// scan (see `sanitize_matches_reference_on_random_decisions`). The id map
+/// fill, clamp, and overdue scans are index loops over the columnar view
+/// mirror (`cols`, entry `i` ↔ `views[i]`); `views` is only consulted for
+/// the profile-dependent fields (marginal throughput, deadline).
 fn sanitize(
     max_capacity: usize,
     decision: &Decision,
     views: &[JobView],
+    cols: &JobViewCols,
     s: &mut SanitizeScratch,
 ) -> usize {
+    debug_assert_eq!(views.len(), cols.len());
     let provisioned = decision.capacity.min(max_capacity);
     s.alloc.clear();
-    s.alloc.resize(views.len(), 0);
+    s.alloc.resize(cols.len(), 0);
     // Dense job-id → view-index map. Stale entries from previous slots are
-    // fine: every lookup is validated against the live view's id.
-    let max_id = views.iter().map(|v| v.job.id).max().unwrap_or(0);
+    // fine: every lookup is validated against the live id column.
+    let max_id = cols.id.iter().copied().max().unwrap_or(0);
     if s.idx_of.len() <= max_id {
         s.idx_of.resize(max_id + 1, usize::MAX);
     }
-    for (i, v) in views.iter().enumerate() {
-        s.idx_of[v.job.id] = i;
+    for (i, &id) in cols.id.iter().enumerate() {
+        s.idx_of[id] = i;
     }
     for &(id, k) in &decision.alloc {
         let Some(&idx) = s.idx_of.get(id) else { continue };
-        if idx >= views.len() || views[idx].job.id != id {
+        if idx >= cols.len() || cols.id[idx] != id {
             continue; // unknown or stale id
         }
         if k > 0 {
-            s.alloc[idx] = k.clamp(views[idx].job.k_min, views[idx].job.k_max);
+            s.alloc[idx] = k.clamp(cols.k_min[idx] as usize, cols.k_max[idx] as usize);
         }
     }
-    // Force-run overdue jobs.
-    for (idx, v) in views.iter().enumerate() {
-        if v.overdue && s.alloc[idx] == 0 {
-            s.alloc[idx] = v.job.k_min;
+    // Force-run overdue jobs (flag-column scan).
+    for (idx, &overdue) in cols.overdue.iter().enumerate() {
+        if overdue && s.alloc[idx] == 0 {
+            s.alloc[idx] = cols.k_min[idx] as usize;
         }
     }
     let forced: usize =
-        views.iter().enumerate().filter(|(_, v)| v.overdue).map(|(i, _)| s.alloc[i]).sum();
+        cols.overdue.iter().enumerate().filter(|(_, &o)| o).map(|(i, _)| s.alloc[i]).sum();
     let budget = provisioned.max(forced).min(max_capacity);
 
     // Trim until the allocation fits the budget. Victim: the allocated top
@@ -569,8 +712,8 @@ fn sanitize(
             if k == 0 {
                 continue;
             }
-            let is_base = k == v.job.k_min;
-            if is_base && v.overdue {
+            let is_base = k == cols.k_min[idx] as usize;
+            if is_base && cols.overdue[idx] {
                 continue; // untouchable
             }
             s.heap.push(Reverse((victim_key(is_base, v.job.marginal(k)), idx, k)));
@@ -582,17 +725,21 @@ fn sanitize(
             if s.alloc[idx] != k {
                 continue; // stale: this job changed since the entry was pushed
             }
-            let v = &views[idx];
-            if k == v.job.k_min {
+            let k_min = cols.k_min[idx] as usize;
+            if k == k_min {
                 total -= k;
                 s.alloc[idx] = 0;
             } else {
                 let nk = k - 1;
                 s.alloc[idx] = nk;
                 total -= 1;
-                let now_base = nk == v.job.k_min;
-                if nk > 0 && !(now_base && v.overdue) {
-                    s.heap.push(Reverse((victim_key(now_base, v.job.marginal(nk)), idx, nk)));
+                let now_base = nk == k_min;
+                if nk > 0 && !(now_base && cols.overdue[idx]) {
+                    s.heap.push(Reverse((
+                        victim_key(now_base, views[idx].job.marginal(nk)),
+                        idx,
+                        nk,
+                    )));
                 }
             }
         }
@@ -970,11 +1117,61 @@ mod tests {
                 .collect();
             let decision = Decision { capacity: rng.below(14), alloc };
             let max_capacity = 1 + rng.below(10);
-            let provisioned = sanitize(max_capacity, &decision, &views, &mut scratch);
+            let cols = JobViewCols::from_views(&views);
+            let provisioned = sanitize(max_capacity, &decision, &views, &cols, &mut scratch);
             let (ref_provisioned, ref_alloc) = reference_sanitize(max_capacity, &decision, &views);
             assert_eq!(provisioned, ref_provisioned, "case {case}: provisioned diverged");
             assert_eq!(scratch.alloc, ref_alloc, "case {case}: allocation diverged");
         }
+    }
+
+    /// Property: columnar sanitize == AoS reference under dense marginal
+    /// ties — every job shares one scaling profile, so the trim loop's
+    /// victim keys collide constantly and only the (is_base, marginal,
+    /// view index) tie order separates them.
+    #[test]
+    fn property_sanitize_ties_match_reference() {
+        use crate::util::proptest_lite::{check, Config};
+        check(
+            "sanitize ties == reference",
+            Config { cases: 128, seed: 0x71E5 },
+            |rng| {
+                let n = 2 + rng.below(8);
+                let k_max = 2 + rng.below(3);
+                // One shared profile → identical marginals at every k.
+                let jobs: Vec<Job> = (0..n).map(|i| job(i, 0, 3.0, 2.0, k_max)).collect();
+                let overdue: Vec<bool> = (0..n).map(|_| rng.chance(0.3)).collect();
+                let alloc: Vec<(usize, usize)> =
+                    (0..n).map(|i| (i, rng.below(k_max + 2))).collect();
+                let capacity = rng.below(2 * n);
+                let max_capacity = 1 + rng.below(n + 2);
+                (jobs, overdue, alloc, capacity, max_capacity)
+            },
+            |(jobs, overdue, alloc, capacity, max_capacity)| {
+                let views: Vec<JobView> = jobs
+                    .iter()
+                    .zip(overdue)
+                    .map(|(j, &o)| JobView {
+                        job: j,
+                        remaining: j.work(),
+                        prev_alloc: 0,
+                        overdue: o,
+                    })
+                    .collect();
+                let cols = JobViewCols::from_views(&views);
+                let decision = Decision { capacity: *capacity, alloc: alloc.clone() };
+                let mut scratch = SanitizeScratch::default();
+                let got = sanitize(*max_capacity, &decision, &views, &cols, &mut scratch);
+                let (want, want_alloc) = reference_sanitize(*max_capacity, &decision, &views);
+                if got != want {
+                    return Err(format!("provisioned: got {got} want {want}"));
+                }
+                if scratch.alloc != want_alloc {
+                    return Err(format!("alloc: got {:?} want {want_alloc:?}", scratch.alloc));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]
@@ -993,5 +1190,340 @@ mod tests {
         }
         let r = engine.finish("run-all");
         assert_eq!(r.metrics.completed, 2);
+    }
+
+    #[test]
+    fn slot_columns_round_trip_and_last_slot() {
+        let f = flat_forecaster(50, 100.0);
+        let mut engine = ClusterEngine::new(sim(10, 24));
+        assert!(engine.last_slot().is_none());
+        engine.add_job(job(0, 0, 2.0, 6.0, 4));
+        let mut policy = RunAll;
+        for t in 0..4 {
+            let rec = engine.step(t, &f, &mut policy).clone();
+            let from_last = engine.last_slot().expect("stepped").clone();
+            assert_eq!(rec.t, from_last.t);
+            assert_eq!(rec.used, from_last.used);
+        }
+        assert_eq!(engine.num_slots(), 4);
+        let cols = engine.slot_columns();
+        let records = cols.materialize();
+        assert_eq!(records.len(), 4);
+        for (s, r) in records.iter().enumerate() {
+            assert_eq!(r.t, cols.t[s] as usize);
+            assert_eq!(r.used, cols.used[s] as usize);
+            assert_eq!(r.rho.to_bits(), cols.rho[s].to_bits());
+            let flat = &cols.queue_lengths[s * MAX_QUEUES..(s + 1) * MAX_QUEUES];
+            for (q, &v) in r.queue_lengths.iter().zip(flat) {
+                assert_eq!(*q, v as usize);
+            }
+        }
+        // finish() materializes the identical records.
+        let result = engine.finish("run-all");
+        for (a, b) in result.slots.iter().zip(&records) {
+            assert_eq!(a.t, b.t);
+            assert_eq!(a.energy_kwh.to_bits(), b.energy_kwh.to_bits());
+        }
+    }
+
+    /// The pre-SoA engine, retained verbatim as the semantic reference: a
+    /// struct-per-job state vector, per-slot allocating view construction,
+    /// per-struct feature walks, and [`reference_sanitize`]. The columnar
+    /// production engine must reproduce its [`SimResult::fingerprint`]
+    /// bitwise on any input.
+    fn aos_reference_run(
+        cfg: &Simulator,
+        jobs: &[Job],
+        forecaster: &Forecaster,
+        policy: &mut dyn Policy,
+    ) -> SimResult {
+        struct St {
+            remaining: f64,
+            prev_alloc: usize,
+            started: bool,
+            done: bool,
+            energy_kwh: f64,
+            carbon_g: f64,
+            rescales: usize,
+        }
+        let mut st: Vec<St> = jobs
+            .iter()
+            .map(|j| St {
+                remaining: j.work(),
+                prev_alloc: 0,
+                started: false,
+                done: false,
+                energy_kwh: 0.0,
+                carbon_g: 0.0,
+                rescales: 0,
+            })
+            .collect();
+        let mut outcomes: Vec<JobOutcome> = Vec::new();
+        let mut slots: Vec<SlotRecord> = Vec::new();
+        let mut usage_per_slot: Vec<usize> = Vec::new();
+        let mut prev_capacity = cfg.max_capacity;
+        let mut prev_used = 0usize;
+        let mut overhead_energy = 0.0f64;
+        let mut overhead_carbon = 0.0f64;
+        let mut recent: VecDeque<(usize, bool)> = VecDeque::new();
+        let mut pending = jobs.len();
+        let last_arrival = jobs.iter().map(|j| j.arrival).max().unwrap_or(0);
+        let t_end = last_arrival + cfg.horizon + cfg.max_drain_slots;
+        let mut t = 0usize;
+        while pending > 0 && t < t_end {
+            let active: Vec<usize> =
+                (0..jobs.len()).filter(|&i| jobs[i].arrival <= t && !st[i].done).collect();
+            if active.is_empty() {
+                prev_used = 0;
+                usage_per_slot.push(0);
+                slots.push(SlotRecord {
+                    t,
+                    ci: forecaster.truth().at(t),
+                    provisioned: 0,
+                    used: 0,
+                    rho: 1.0,
+                    queue_lengths: [0; MAX_QUEUES],
+                    mean_elasticity: 0.0,
+                    energy_kwh: 0.0,
+                    carbon_g: 0.0,
+                });
+                t += 1;
+                continue;
+            }
+            while let Some(&(ct, _)) = recent.front() {
+                if ct + 24 <= t {
+                    recent.pop_front();
+                } else {
+                    break;
+                }
+            }
+            let recent_violation_rate = if recent.is_empty() {
+                0.0
+            } else {
+                recent.iter().filter(|(_, v)| *v).count() as f64 / recent.len() as f64
+            };
+            let views: Vec<JobView> = active
+                .iter()
+                .map(|&i| {
+                    let jv = JobView {
+                        job: &jobs[i],
+                        remaining: st[i].remaining,
+                        prev_alloc: st[i].prev_alloc,
+                        overdue: false,
+                    };
+                    let overdue = jv.slack_left(t) <= 0.0;
+                    JobView { overdue, ..jv }
+                })
+                .collect();
+            // AoS Table 2 features: per-struct walks, the pre-columnar code.
+            let mut queue_lengths = [0usize; MAX_QUEUES];
+            let top = cfg.num_queues.max(1).min(MAX_QUEUES) - 1;
+            for jv in &views {
+                queue_lengths[jv.job.queue.min(top)] += 1;
+            }
+            let mean_elasticity =
+                views.iter().map(|j| j.job.elasticity()).sum::<f64>() / views.len() as f64;
+            let cols = JobViewCols::from_views(&views);
+            let ctx = SlotCtx {
+                t,
+                jobs: &views,
+                cols: &cols,
+                forecaster,
+                max_capacity: cfg.max_capacity,
+                num_queues: cfg.num_queues,
+                prev_capacity,
+                prev_used,
+                recent_violation_rate,
+            };
+            let mut decision = Decision::default();
+            policy.decide_into(&ctx, &mut decision);
+            let (provisioned, alloc) = reference_sanitize(cfg.max_capacity, &decision, &views);
+
+            let ci = forecaster.truth().at(t);
+            let mut slot_energy = 0.0f64;
+            let mut slot_carbon = 0.0f64;
+            let mut used = 0usize;
+            let mut rho: f64 = f64::INFINITY;
+            let mut any_ran = false;
+            for (idx, &i) in active.iter().enumerate() {
+                let k = alloc[idx];
+                let s = &mut st[i];
+                let job = &jobs[i];
+                if k == 0 {
+                    if s.prev_alloc > 0 {
+                        s.rescales += 1;
+                    }
+                    s.prev_alloc = 0;
+                    continue;
+                }
+                any_ran = true;
+                used += k;
+                rho = rho.min(job.marginal(k));
+                let rate = job.rate(k);
+                let mut penalty = 0.0;
+                if s.started && s.prev_alloc != k && s.prev_alloc > 0 {
+                    s.rescales += 1;
+                    penalty = cfg.energy.ckpt_progress_penalty(rate);
+                }
+                s.started = true;
+                let progress = (rate - penalty).max(0.0);
+                let (fraction, finished) = if s.remaining <= progress {
+                    ((s.remaining + penalty) / rate, true)
+                } else {
+                    (1.0, false)
+                };
+                let e = cfg.energy.job_energy_kwh(job, k, fraction.min(1.0));
+                s.energy_kwh += e;
+                s.carbon_g += e * ci;
+                slot_energy += e;
+                slot_carbon += e * ci;
+                if finished {
+                    s.remaining = 0.0;
+                    s.done = true;
+                    s.prev_alloc = 0;
+                    pending -= 1;
+                    let outcome = JobOutcome {
+                        id: job.id,
+                        arrival: job.arrival,
+                        completion: t,
+                        length_hours: job.length_hours,
+                        slack_hours: job.slack_hours,
+                        energy_kwh: s.energy_kwh,
+                        carbon_g: s.carbon_g,
+                        rescales: s.rescales,
+                    };
+                    recent.push_back((t, outcome.violated_slo()));
+                    policy.on_complete(job.id, t);
+                    outcomes.push(outcome);
+                } else {
+                    s.remaining -= progress;
+                    s.prev_alloc = k;
+                }
+            }
+            if provisioned > prev_capacity {
+                let boot = cfg.energy.boot_energy_kwh(provisioned - prev_capacity);
+                overhead_energy += boot;
+                overhead_carbon += boot * ci;
+            }
+            prev_capacity = provisioned;
+            prev_used = used;
+            let rho = if any_ran { rho } else { RHO_IDLE };
+            usage_per_slot.push(used);
+            slots.push(SlotRecord {
+                t,
+                ci,
+                provisioned,
+                used,
+                rho,
+                queue_lengths,
+                mean_elasticity,
+                energy_kwh: slot_energy,
+                carbon_g: slot_carbon,
+            });
+            t += 1;
+        }
+        let unfinished = st.iter().filter(|s| !s.done).count();
+        let mut metrics = RunMetrics::from_outcomes(
+            policy.name(),
+            &outcomes,
+            unfinished,
+            &usage_per_slot,
+            cfg.max_capacity,
+            cfg.horizon,
+        );
+        metrics.energy_kwh += overhead_energy;
+        metrics.carbon_g += overhead_carbon;
+        SimResult {
+            metrics,
+            outcomes,
+            slots,
+            overhead_energy_kwh: overhead_energy,
+            overhead_carbon_g: overhead_carbon,
+        }
+    }
+
+    /// Adversarial decision stream: random capacities and allocations
+    /// (including out-of-range scales) drawn from a seeded RNG, so paired
+    /// instances issue identical decisions when fed identical contexts.
+    struct RandomDecider(crate::util::rng::Rng);
+    impl Policy for RandomDecider {
+        fn name(&self) -> &'static str {
+            "random"
+        }
+        fn decide(&mut self, ctx: &SlotCtx) -> Decision {
+            let rng = &mut self.0;
+            let capacity = rng.below(ctx.max_capacity + 4);
+            let mut alloc = Vec::new();
+            for v in ctx.jobs {
+                if rng.chance(0.8) {
+                    alloc.push((v.job.id, rng.below(v.job.k_max + 2)));
+                }
+            }
+            Decision { capacity, alloc }
+        }
+    }
+
+    /// Property: the columnar engine reproduces the retained AoS reference
+    /// bitwise (full [`SimResult::fingerprint`], covering every slot record
+    /// and outcome) across random workloads and four policy shapes —
+    /// including NeverRun (overdue force-run path), ScaleAll (trim-loop tie
+    /// storms), and a random decider (stale ids, out-of-range scales,
+    /// mid-run completions tombstoning the job columns).
+    #[test]
+    fn property_columnar_step_matches_aos_reference() {
+        use crate::util::proptest_lite::{check, Config};
+        use crate::util::rng::Rng;
+        check(
+            "columnar engine == AoS reference",
+            Config { cases: 48, seed: 0xA05D },
+            |rng| {
+                let n = 1 + rng.below(10);
+                let jobs: Vec<Job> = (0..n)
+                    .map(|i| {
+                        let k_max = 1 + rng.below(4);
+                        let mut j = job(
+                            i,
+                            rng.below(6),
+                            0.5 + rng.range(0.0, 5.0),
+                            rng.range(0.0, 8.0),
+                            k_max,
+                        );
+                        j.queue = rng.below(3);
+                        j.profile = ScalingProfile::from_comm_ratio(rng.range(0.0, 0.25), k_max);
+                        j
+                    })
+                    .collect();
+                let capacity = 1 + rng.below(8);
+                let policy_choice = rng.below(4);
+                let policy_seed = rng.below(1 << 30) as u64;
+                (jobs, capacity, policy_choice, policy_seed)
+            },
+            |(jobs, capacity, policy_choice, policy_seed)| {
+                fn mk(choice: usize, seed: u64) -> Box<dyn Policy> {
+                    match choice {
+                        0 => Box::new(RunAll),
+                        1 => Box::new(ScaleAll),
+                        2 => Box::new(NeverRun),
+                        _ => Box::new(RandomDecider(Rng::new(seed))),
+                    }
+                }
+                let hourly: Vec<f64> =
+                    (0..128).map(|h| 100.0 + 37.5 * ((h % 24) as f64)).collect();
+                let f = Forecaster::perfect(CarbonTrace::new("vary", hourly));
+                let s = sim(*capacity, 24);
+                let mut prod_policy = mk(*policy_choice, *policy_seed);
+                let mut ref_policy = mk(*policy_choice, *policy_seed);
+                let got = s.run(jobs, &f, prod_policy.as_mut());
+                let want = aos_reference_run(&s, jobs, &f, ref_policy.as_mut());
+                if got.fingerprint() != want.fingerprint() {
+                    return Err(format!(
+                        "fingerprints diverge: got {} want {}",
+                        got.fingerprint(),
+                        want.fingerprint()
+                    ));
+                }
+                Ok(())
+            },
+        );
     }
 }

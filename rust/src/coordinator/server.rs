@@ -33,10 +33,14 @@ use crate::util::stats::LatencyHistogram;
 use crate::workload::job::Job;
 use crate::workload::profile;
 
-/// Message envelope: request + reply channel.
-struct Envelope {
-    req: Request,
-    reply: mpsc::Sender<Response>,
+/// Message to the leader thread.
+enum Envelope {
+    /// A wire request + its reply channel.
+    Api { req: Request, reply: mpsc::Sender<Response> },
+    /// Out-of-band fetch of the leader's decision-latency histogram, used
+    /// by the sharded frontend to merge fleet percentiles bucket-wise. Not
+    /// a service request: it does not count toward the `requests` stat.
+    Latency { reply: mpsc::Sender<LatencyHistogram> },
 }
 
 /// Client handle to a running coordinator.
@@ -113,10 +117,22 @@ impl ClusterHandle {
             message: "coordinator stopped".into(),
         };
         let (reply_tx, reply_rx) = mpsc::channel();
-        if self.tx.send(Envelope { req, reply: reply_tx }).is_err() {
+        if self.tx.send(Envelope::Api { req, reply: reply_tx }).is_err() {
             return stopped();
         }
         reply_rx.recv().unwrap_or_else(|_| stopped())
+    }
+
+    /// Snapshot of the leader's decision-latency histogram (empty when the
+    /// coordinator has stopped). The sharded frontend merges these
+    /// bucket-wise, so fleet percentiles come from the union of samples
+    /// rather than the worst shard's percentile.
+    pub fn latency_histogram(&self) -> LatencyHistogram {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if self.tx.send(Envelope::Latency { reply: reply_tx }).is_err() {
+            return LatencyHistogram::new();
+        }
+        reply_rx.recv().unwrap_or_else(|_| LatencyHistogram::new())
     }
 
     pub fn submit(&self, workload: &str, length_hours: f64, queue: usize) -> Result<usize, String> {
@@ -304,7 +320,7 @@ impl Leader {
     }
 
     fn status(&self) -> StatusResponse {
-        let last = self.engine.slots().last();
+        let last = self.engine.last_slot();
         StatusResponse {
             slot: self.slot,
             active_jobs: self.engine.pending_jobs(),
@@ -428,12 +444,19 @@ fn leader_loop(
     rx: mpsc::Receiver<Envelope>,
 ) -> RunMetrics {
     let mut leader = Leader::new(cfg);
-    while let Ok(Envelope { req, reply }) = rx.recv() {
-        leader.requests += 1;
-        let (resp, done) = leader.handle(req, &forecaster, policy.as_mut());
-        let _ = reply.send(resp);
-        if done {
-            break;
+    while let Ok(env) = rx.recv() {
+        match env {
+            Envelope::Api { req, reply } => {
+                leader.requests += 1;
+                let (resp, done) = leader.handle(req, &forecaster, policy.as_mut());
+                let _ = reply.send(resp);
+                if done {
+                    break;
+                }
+            }
+            Envelope::Latency { reply } => {
+                let _ = reply.send(leader.latency.clone());
+            }
         }
     }
     leader.engine.finish(policy.name()).metrics
@@ -579,6 +602,23 @@ mod tests {
         assert_eq!(st.queue_depths, vec![1, 2, 0]);
         assert!(st.requests >= 3);
         assert!(st.p99_decision_ms >= st.p50_decision_ms);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn latency_histogram_fetch_is_not_a_service_request() {
+        let coord = start_coordinator();
+        let h = coord.handle();
+        h.submit("N-body(N=100k)", 2.0, 0).unwrap();
+        h.submit("Jacobi(N=1k)", 3.0, 1).unwrap();
+        let before = h.stats().unwrap().requests;
+        // The histogram snapshot carries every recorded submit decision…
+        let hist = h.latency_histogram();
+        assert_eq!(hist.count(), 2);
+        assert!(hist.percentile_ms(99.0) >= hist.percentile_ms(50.0));
+        // …and fetching it does not bump the request counter.
+        let after = h.stats().unwrap().requests;
+        assert_eq!(after, before + 1, "only the Stats call itself may count");
         coord.shutdown();
     }
 

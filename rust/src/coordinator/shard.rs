@@ -23,6 +23,7 @@ use crate::coordinator::server::{ClusterHandle, Coordinator, CoordinatorConfig};
 use crate::experiments::cells::{route_arrival, DispatchStrategy};
 use crate::experiments::runner::PreparedExperiment;
 use crate::sched::PolicyKind;
+use crate::util::stats::LatencyHistogram;
 
 /// Parse a `--shards` value: either a shard count (regions drawn cyclically
 /// from [`Region::ALL`] starting at the base config's region, so `1` keeps
@@ -269,10 +270,17 @@ impl ShardedCoordinator {
     }
 
     /// Merged service stats: counters and queue depths sum across shards;
-    /// latency percentiles take the max (a conservative fleet-tail
-    /// approximation).
+    /// latency percentiles come from the bucket-wise sum of every shard's
+    /// [`LatencyHistogram`] — the percentile of the union of all recorded
+    /// decisions. (Taking the max shard percentile instead would report a
+    /// fleet median of 1 ms when one near-idle shard is slow and thousands
+    /// of fast decisions ran elsewhere.)
     pub fn stats_merged(&self) -> Response {
         let per = self.stats();
+        let mut merged = LatencyHistogram::new();
+        for sh in &self.shards {
+            merged.merge(&sh.handle.latency_histogram());
+        }
         let mut agg = StatsResponse {
             slot: self.slot,
             requests: 0,
@@ -282,8 +290,8 @@ impl ShardedCoordinator {
             pending: 0,
             max_pending: 0,
             queue_depths: vec![0; self.cfg.queues.len().max(1)],
-            p50_decision_ms: 0.0,
-            p99_decision_ms: 0.0,
+            p50_decision_ms: merged.percentile_ms(50.0),
+            p99_decision_ms: merged.percentile_ms(99.0),
             carbon_g: 0.0,
         };
         for s in &per {
@@ -296,8 +304,6 @@ impl ShardedCoordinator {
             for (d, &sd) in agg.queue_depths.iter_mut().zip(&s.queue_depths) {
                 *d += sd;
             }
-            agg.p50_decision_ms = agg.p50_decision_ms.max(s.p50_decision_ms);
-            agg.p99_decision_ms = agg.p99_decision_ms.max(s.p99_decision_ms);
             agg.carbon_g += s.carbon_g;
         }
         Response::Stats(agg)
@@ -356,5 +362,71 @@ mod tests {
         let rs = shard_regions(&(all + 2).to_string(), Region::ALL[0].key()).unwrap();
         assert_eq!(rs.len(), all + 2);
         assert_eq!(rs[all].key(), Region::ALL[0].key());
+    }
+
+    #[test]
+    fn merged_percentile_is_not_max_of_shard_percentiles() {
+        // Shard A: 99 fast decisions (~1 µs). Shard B: one slow (~1 ms).
+        // Max-of-shards would claim the fleet median is 1 ms; the union of
+        // samples knows 99 out of 100 are microseconds.
+        let mut a = LatencyHistogram::new();
+        for _ in 0..99 {
+            a.record_ns(1_000);
+        }
+        let mut b = LatencyHistogram::new();
+        b.record_ns(1_000_000);
+        let max_p50 = a.percentile_ms(50.0).max(b.percentile_ms(50.0));
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.count(), 100);
+        assert!(
+            merged.percentile_ms(50.0) < max_p50 / 100.0,
+            "merged p50 {} should be orders below max-of-shards {}",
+            merged.percentile_ms(50.0),
+            max_p50
+        );
+        // The tail is still visible in the union.
+        assert!(merged.percentile_ms(99.5) >= b.percentile_ms(50.0) * 0.5);
+    }
+
+    #[test]
+    fn sharded_stats_merge_latency_across_shards() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 8;
+        cfg.horizon_hours = 48;
+        cfg.history_hours = 72;
+        cfg.replay_offsets = 1;
+        let service = ServiceConfig::default();
+        let regions = shard_regions("2", &cfg.region).unwrap();
+        let mut cluster = ShardedCoordinator::start(
+            &cfg,
+            &service,
+            PolicyKind::CarbonAgnostic,
+            &regions,
+            DispatchStrategy::RoundRobin,
+        );
+        for i in 0..6usize {
+            let r = cluster.submit(&SubmitRequest {
+                workload: "N-body(N=100k)".to_string(),
+                length_hours: 2.0,
+                queue: i % 3,
+            });
+            assert!(matches!(r, Response::Submitted { .. }), "{r:?}");
+        }
+        // Round-robin spread the stream, so the union must hold every
+        // recorded decision across both shards.
+        let total: u64 =
+            cluster.shards.iter().map(|sh| sh.handle.latency_histogram().count()).sum();
+        assert_eq!(total, 6);
+        match cluster.stats_merged() {
+            Response::Stats(st) => {
+                assert_eq!(st.accepted, 6);
+                assert!(st.p99_decision_ms > 0.0);
+                assert!(st.p99_decision_ms >= st.p50_decision_ms);
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+        cluster.drain();
+        cluster.shutdown();
     }
 }

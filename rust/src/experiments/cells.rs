@@ -133,21 +133,22 @@ pub fn parse_region_set(set: &str) -> Vec<Region> {
         .collect()
 }
 
-/// Prepared state shared by every cell of one spatial grid point (all
-/// dispatch strategies and local policies at that point): one
-/// [`PreparedExperiment`] per region, each with `cfg.capacity /
-/// regions.len()` servers, its own carbon trace and — for CarbonFlex — its
-/// own locally learned knowledge base.
+/// Prepared state shared by every local-policy cell of one (spatial grid
+/// point, dispatch strategy) pair: one [`PreparedExperiment`] per region,
+/// each with `cfg.capacity / regions.len()` servers, its own carbon trace
+/// and — for CarbonFlex — its own locally learned knowledge base.
 pub struct SpatialPrep {
     pub regions: Vec<Region>,
     pub preps: Vec<Arc<PreparedExperiment>>,
 }
 
-/// Prepare one regional experiment per region. Preparation does not depend
-/// on the dispatch strategy or local policy, so the sweep engine shares one
-/// `SpatialPrep` across every cell of the point; regions prepare in
-/// parallel.
-pub fn prepare_spatial(cfg: &ExperimentConfig, regions: &[Region]) -> SpatialPrep {
+/// Prepare one regional experiment per region with the region's **full**
+/// historical stream — each region learns as if the whole (per-region-scaled)
+/// load landed on it, regardless of how the dispatcher would actually split
+/// arrivals. This is the pre-skew behaviour, kept as the building block for
+/// [`prepare_spatial`] and as the strategy-independent preparation behind
+/// the `run_spatial_prepared` injection path; regions prepare in parallel.
+pub fn prepare_spatial_unskewed(cfg: &ExperimentConfig, regions: &[Region]) -> SpatialPrep {
     assert!(!regions.is_empty());
     let per_region_capacity = (cfg.capacity / regions.len()).max(1);
     let preps = par_map(auto_threads(), regions, |&region, _| {
@@ -156,6 +157,67 @@ pub fn prepare_spatial(cfg: &ExperimentConfig, regions: &[Region]) -> SpatialPre
         rcfg.capacity = per_region_capacity;
         Arc::new(PreparedExperiment::prepare(&rcfg))
     });
+    SpatialPrep { regions: regions.to_vec(), preps }
+}
+
+/// Prepare one regional experiment per region, learning each region's
+/// knowledge base from the **dispatch-skewed** historical split: one global
+/// history stream at deployment scale (the hist analogue of the eval loop's
+/// shared arrival stream) is routed job-by-job with the same
+/// [`route_arrival`] the evaluation dispatcher uses — against each region's
+/// *historical* forecast — and every region keeps only its routed subset as
+/// `hist_jobs`. A clean region that the dispatcher favours therefore trains
+/// on the heavier stream it will actually serve, instead of the uniform
+/// full-stream history that confounded CarbonFlex under carbon-aware
+/// dispatch (the PR-5 train/serve mismatch). Preparation now depends on the
+/// strategy, so the sweep engine keys spatial prep units by (point,
+/// dispatch).
+pub fn prepare_spatial(
+    cfg: &ExperimentConfig,
+    regions: &[Region],
+    strategy: DispatchStrategy,
+) -> SpatialPrep {
+    let base = prepare_spatial_unskewed(cfg, regions);
+
+    // The global historical stream: same generator + seed lineage as
+    // `PreparedExperiment::prepare` (unshifted history, `seed ^ 0x1157`) but
+    // at the *aggregate* capacity, mirroring how `run_spatial_cell` sizes
+    // the shared evaluation stream for the whole deployment.
+    let hist_jobs =
+        tracegen::generate(&cfg.unshifted_history(), cfg.history_hours, cfg.seed ^ 0x1157);
+    let forecasters: Vec<Forecaster> =
+        base.preps.iter().map(|p| Forecaster::perfect(p.hist_trace.clone())).collect();
+
+    // Route by arrival order with the evaluation dispatcher's exact
+    // semantics (pre-incremented round-robin cursor, window = length +
+    // slack); re-id densely per region so replay learning sees a normal
+    // dense stream.
+    let mut by_arrival: Vec<&Job> = hist_jobs.iter().collect();
+    by_arrival.sort_by_key(|j| j.arrival);
+    let mut routed: Vec<Vec<Job>> = vec![Vec::new(); regions.len()];
+    let mut rr = 0usize;
+    for job in by_arrival {
+        let window = (job.length_hours + job.slack_hours).ceil() as usize;
+        let r = route_arrival(strategy, &mut rr, &forecasters, |f| f, job.arrival, window);
+        let local = Job { id: routed[r].len(), ..job.clone() };
+        routed[r].push(local);
+    }
+
+    let preps = base
+        .preps
+        .iter()
+        .zip(routed)
+        .map(|(p, region_hist)| {
+            Arc::new(PreparedExperiment::from_parts(
+                p.cfg.clone(),
+                p.hist_trace.clone(),
+                p.eval_trace.clone(),
+                region_hist,
+                p.eval_jobs.clone(),
+                None,
+            ))
+        })
+        .collect();
     SpatialPrep { regions: regions.to_vec(), preps }
 }
 
@@ -441,6 +503,57 @@ mod tests {
     #[should_panic(expected = "unknown region")]
     fn region_set_rejects_unknown_keys() {
         parse_region_set("south-australia+atlantis");
+    }
+
+    #[test]
+    fn spatial_prep_learns_on_the_dispatch_skewed_split() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 24; // 8 per region
+        cfg.horizon_hours = 48;
+        cfg.history_hours = 120;
+        cfg.replay_offsets = 1;
+        let regions = [Region::SouthAustralia, Region::California, Region::Virginia];
+        let rr = prepare_spatial(&cfg, &regions, DispatchStrategy::RoundRobin);
+        let geo = prepare_spatial(&cfg, &regions, DispatchStrategy::LowestWindowCi);
+
+        // Both strategies partition the same global stream: every hist job
+        // lands in exactly one region, with dense per-region ids.
+        let rr_total: usize = rr.preps.iter().map(|p| p.hist_jobs.len()).sum();
+        let geo_total: usize = geo.preps.iter().map(|p| p.hist_jobs.len()).sum();
+        assert_eq!(rr_total, geo_total);
+        assert!(rr_total > 0);
+        for p in geo.preps.iter().chain(&rr.preps) {
+            for (i, j) in p.hist_jobs.iter().enumerate() {
+                assert_eq!(j.id, i, "routed hist jobs must be densely re-id'd");
+            }
+        }
+
+        // Round-robin splits evenly; carbon-aware dispatch skews the
+        // learning load toward the clean region (South Australia) and away
+        // from the dirty one (Virginia).
+        let rr_counts: Vec<usize> = rr.preps.iter().map(|p| p.hist_jobs.len()).collect();
+        assert!(
+            rr_counts.iter().max().unwrap() - rr_counts.iter().min().unwrap() <= 1,
+            "round-robin split should be even: {rr_counts:?}"
+        );
+        let geo_counts: Vec<usize> = geo.preps.iter().map(|p| p.hist_jobs.len()).collect();
+        assert!(
+            geo_counts[0] > geo_counts[2],
+            "window-CI dispatch should favour the clean region: {geo_counts:?}"
+        );
+        assert!(
+            geo_counts[2] < rr_counts[2],
+            "the dirty region must train on fewer jobs than under round-robin"
+        );
+
+        // The regression this pins: the dirty region's knowledge base is
+        // learned from its (smaller) routed stream, not the full one.
+        let geo_kb = geo.preps[2].knowledge_base().live();
+        let rr_kb = rr.preps[2].knowledge_base().live();
+        assert!(
+            geo_kb < rr_kb,
+            "skewed KB should hold fewer cases than the round-robin KB ({geo_kb} vs {rr_kb})"
+        );
     }
 
     #[test]

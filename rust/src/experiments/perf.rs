@@ -13,12 +13,19 @@
 
 use std::time::Duration;
 
+use crate::carbon::forecast::Forecaster;
+use crate::carbon::trace::CarbonTrace;
+use crate::cluster::energy::EnergyModel;
+use crate::cluster::sim::{ClusterEngine, Simulator};
 use crate::config::ExperimentConfig;
 use crate::experiments::runner::PreparedExperiment;
 use crate::learning::kb::{Case, KnowledgeBase, Matcher};
 use crate::learning::state::StateVector;
+use crate::sched::carbon_agnostic::CarbonAgnostic;
 use crate::sched::oracle::compute_schedule;
 use crate::sched::PolicyKind;
+use crate::workload::job::Job;
+use crate::workload::profile::ScalingProfile;
 use crate::util::bench::{bench_chunked, bench_for, BenchResult};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -140,6 +147,55 @@ pub fn bench_hotpaths(cfg: &ExperimentConfig, budget: Duration) -> HotpathReport
         }
         slide_kb.advance_window(now, window);
         std::hint::black_box(slide_kb.live());
+    });
+    cells.push(BenchCell { name: r.name.clone(), result: r, slots_per_second: None });
+
+    // Columnar engine stepping under full, stable occupancy: 32
+    // never-finishing jobs at base scale for 256 slots per iteration.
+    // Isolates exactly the SoA step loop — view/column fill, columnar
+    // Table 2 feature extraction, sanitize, and the per-column advance —
+    // with completion bookkeeping and policy search excluded.
+    const STEP_SLOTS: usize = 256;
+    let step_forecaster = Forecaster::perfect(CarbonTrace::new("flat", vec![150.0; STEP_SLOTS]));
+    let step_jobs: Vec<Job> = (0..32)
+        .map(|i| Job {
+            id: i,
+            workload: "bench",
+            workload_idx: 0,
+            arrival: 0,
+            length_hours: 1e6, // never completes inside the window
+            queue: i % 3,
+            slack_hours: 1e9,
+            k_min: 1,
+            k_max: 4,
+            profile: ScalingProfile::from_comm_ratio(0.05, 4),
+            watts_per_unit: 40.0,
+        })
+        .collect();
+    let hardware = cfg.hardware;
+    let r = bench_for("engine_step_soa", budget.min(Duration::from_secs(2)), || {
+        let sim = Simulator::new(64, EnergyModel::for_hardware(hardware), 3, STEP_SLOTS);
+        let mut engine = ClusterEngine::new(sim);
+        for j in &step_jobs {
+            engine.add_job(j.clone());
+        }
+        engine.reserve(STEP_SLOTS);
+        let mut policy = CarbonAgnostic;
+        for t in 0..STEP_SLOTS {
+            engine.step(t, &step_forecaster, &mut policy);
+        }
+        std::hint::black_box(engine.num_slots());
+    });
+    let sps = STEP_SLOTS as f64 / r.mean.as_secs_f64().max(1e-12);
+    cells.push(BenchCell { name: r.name.clone(), result: r, slots_per_second: Some(sps) });
+
+    // Memoized-prepare rebind: what a hash-equal sweep cell pays instead of
+    // full trace synthesis + replay learning (the KB above is already
+    // learned, so the rebind carries it — the steady-state sweep path).
+    let mut rebind_cfg = cfg.clone();
+    rebind_cfg.knn_k = cfg.knn_k + 2;
+    let r = bench_for("sweep_prepare_memoized", budget.min(Duration::from_secs(2)), || {
+        std::hint::black_box(prep.rebind(&rebind_cfg).eval_jobs.len());
     });
     cells.push(BenchCell { name: r.name.clone(), result: r, slots_per_second: None });
 
@@ -340,12 +396,20 @@ mod tests {
             "state_match_batch",
             "kb_build",
             "kb_rebuild_amortized",
+            "engine_step_soa",
+            "sweep_prepare_memoized",
             "engine/carbonflex",
         ] {
             assert!(names.contains(&want), "missing cell '{want}' in {names:?}");
         }
         let json = report.to_json(0.0);
-        for want in ["state_match_batch", "kb_build", "kb_rebuild_amortized"] {
+        for want in [
+            "state_match_batch",
+            "kb_build",
+            "kb_rebuild_amortized",
+            "engine_step_soa",
+            "sweep_prepare_memoized",
+        ] {
             assert!(
                 json.get("cells").and_then(|c| c.get(want)).is_some(),
                 "cell '{want}' missing from the JSON document"

@@ -64,14 +64,18 @@ pub fn region_set_key(regions: &[Region]) -> String {
 
 /// Prepare one regional experiment per region (`cfg.capacity` split evenly;
 /// each region gets its own trace and, for CarbonFlex, its own locally
-/// learned knowledge base). Preparation does not depend on the dispatch
-/// strategy or local policy, so callers comparing several combos share one
-/// set of preps across all of them; regions prepare in parallel.
+/// learned knowledge base). This is the strategy-independent *unskewed*
+/// preparation (each region learns on a full per-region-scaled history), so
+/// callers comparing several combos can still share one set of preps across
+/// all of them via [`run_spatial_prepared`]; regions prepare in parallel.
+/// The sweep engine's own (non-injected) spatial cells instead learn each
+/// region's knowledge base from the dispatch-skewed historical split — see
+/// [`cells::prepare_spatial`].
 pub fn prepare_regions(
     cfg: &ExperimentConfig,
     regions: &[Region],
 ) -> Vec<Arc<PreparedExperiment>> {
-    cells::prepare_spatial(cfg, regions).preps
+    cells::prepare_spatial_unskewed(cfg, regions).preps
 }
 
 /// Build the single-cell sweep spec for one (set, strategy, policy) combo.
@@ -416,11 +420,11 @@ mod tests {
     #[test]
     fn spatial_and_temporal_compose_vs_baseline() {
         // CarbonFlex locally + geo dispatch must clearly beat the fully
-        // carbon-agnostic deployment (round-robin + FCFS). Note it does
-        // NOT always beat geo + agnostic: carbon-aware dispatch skews each
-        // region's load away from the distribution its knowledge base was
-        // learned on — an interaction worth reporting, not hiding (see the
-        // spatial_shifting bench output).
+        // carbon-agnostic deployment (round-robin + FCFS). The fresh-prep
+        // sweep path (run_spatial) now learns each region's knowledge base
+        // from the dispatch-skewed historical split, so the KBs match the
+        // load distribution carbon-aware dispatch actually sends them (the
+        // PR-5 train/serve-mismatch follow-up).
         let baseline =
             run_spatial(&cfg(), &REGIONS, DispatchStrategy::RoundRobin, PolicyKind::CarbonAgnostic);
         let both =

@@ -20,8 +20,10 @@
 //!   deployment — capacity split evenly, per-region carbon traces and
 //!   knowledge bases, and a geo-dispatcher routing each arrival. The
 //!   [`dispatchers`](SweepSpec::dispatchers) axis multiplies such points
-//!   (single-region points ignore it); every dispatch strategy at a point
-//!   shares one set of regional preparations.
+//!   (single-region points ignore it); each dispatch strategy at a point
+//!   prepares its own regional state, because the per-region knowledge
+//!   bases are learned from that strategy's dispatch-skewed historical
+//!   split (see `cells::prepare_spatial`).
 //! - The [`weeks`](SweepSpec::weeks) axis turns points into **week-window
 //!   cells** (the paper's year-long continuous-learning mode): weeks at the
 //!   same point form a sequential learning chain — learn on the trailing
@@ -39,6 +41,21 @@
 //! (pinned by their in-test reference implementations). Rows are emitted in
 //! grid order: region → dispatch → capacity → horizon → week → variant →
 //! seed, with policy innermost.
+//!
+//! Two further batching features (§Perf):
+//!
+//! - **Cross-cell memoized preparation**: plain points whose configs share a
+//!   [`prep_hash`](crate::experiments::runner::prep_hash) — i.e. differ only
+//!   in knobs downstream of preparation, such as `knn_k` variants — form one
+//!   phase-1a group. The first point synthesizes and learns; the rest
+//!   [`rebind`](PreparedExperiment::rebind) the shared state, so a k-sweep
+//!   over one workload pays for synthesis + learning exactly once
+//!   ([`SweepRunner::run_with_stats`] exposes the counters).
+//! - **Multi-process sharding**: [`SweepSpec::shard`] = `(i, n)` restricts a
+//!   run to the `i`-th of `n` contiguous slices of the point list. Because
+//!   every cell is self-seeded and week chains always walk from week 0,
+//!   concatenating the rows of shards `0/n .. (n-1)/n` is bitwise identical
+//!   to the unsharded grid — the contract behind `carbonflex sweep --shard`.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -47,7 +64,7 @@ use std::sync::{Arc, Mutex};
 use crate::cluster::sim::SimResult;
 use crate::config::ExperimentConfig;
 use crate::experiments::cells::{self, DispatchStrategy, SpatialPrep, WeekCell};
-use crate::experiments::runner::PreparedExperiment;
+use crate::experiments::runner::{prep_hash, PreparedExperiment};
 use crate::sched::PolicyKind;
 use crate::util::bench::Table;
 use crate::util::json::Json;
@@ -119,6 +136,12 @@ pub struct SweepSpec {
     /// `run_spatial_prepared` adapter (must match the spec's single region
     /// set, in order). Empty = the runner prepares regions itself.
     pub spatial_preps: Vec<Arc<PreparedExperiment>>,
+    /// Deterministic multi-process partitioning: `Some((i, n))` runs only
+    /// the `i`-th of `n` contiguous slices of [`points`](SweepSpec::points)
+    /// (0-based; slice `i` is `points[i*len/n .. (i+1)*len/n]`). Rows of all
+    /// shards, concatenated in shard order, are bitwise identical to the
+    /// unsharded run. `None` = the whole grid.
+    pub shard: Option<(usize, usize)>,
 }
 
 /// One grid point: a fully pinned experimental setting (everything except
@@ -193,6 +216,7 @@ impl SweepSpec {
             seeds: Vec::new(),
             policies: Vec::new(),
             spatial_preps: Vec::new(),
+            shard: None,
         }
     }
 
@@ -431,14 +455,31 @@ enum PointPrep {
     Week(Arc<WeekCell>),
 }
 
-/// A phase-1 preparation unit: points that share prepared state. Spatial
-/// points at the same setting share regional preparations across dispatch
-/// strategies; week points at the same setting form one sequential
-/// learning chain.
+/// A phase-1 preparation unit: points that share prepared state. Plain
+/// points with hash-equal prepared inputs ([`prep_hash`]) form one memoized
+/// group (first prepares, rest rebind); spatial points at the same
+/// (setting, dispatch strategy) share regional preparations across local
+/// policies; week points at the same setting form one sequential learning
+/// chain.
 enum PrepUnit {
-    Single(usize),
+    Single(Vec<usize>),
     Spatial(Vec<usize>),
     WeekChain(Vec<usize>),
+}
+
+/// Phase-1 work counters from [`SweepRunner::run_with_stats`]: how many
+/// plain (non-composite) grid points actually paid for preparation (trace
+/// synthesis + workload generation) and for the learning phase. With
+/// cross-cell memoization, [`prep_hash`]-equal points share one
+/// preparation, so `prepares` counts distinct hash groups — not points.
+/// Composite (spatial / week-chain) units keep their own sharing and are
+/// not counted here.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrepStats {
+    /// `PreparedExperiment::prepare` executions for plain points.
+    pub prepares: usize,
+    /// Learning-phase (`knowledge_base()`) executions forced in phase 1a.
+    pub learns: usize,
 }
 
 /// Executes a [`SweepSpec`] on a scoped thread pool.
@@ -460,21 +501,48 @@ impl SweepRunner {
     /// Run the grid; rows come back in grid order (policy innermost)
     /// regardless of which worker finished which cell first.
     pub fn run(&self, spec: &SweepSpec) -> Vec<SweepRow> {
-        let points = spec.points();
+        self.run_with_stats(spec).0
+    }
+
+    /// [`run`](SweepRunner::run), plus the phase-1 [`PrepStats`] counters —
+    /// the probe the memoization tests assert on (a k-sweep over one
+    /// workload must report `prepares == 1`).
+    pub fn run_with_stats(&self, spec: &SweepSpec) -> (Vec<SweepRow>, PrepStats) {
+        let mut points = spec.points();
+        if let Some((i, n)) = spec.shard {
+            assert!(n > 0, "shard denominator must be positive");
+            assert!(i < n, "shard index {i} out of range for {n} shards");
+            let len = points.len();
+            points = points[i * len / n..(i + 1) * len / n].to_vec();
+        }
         let policies = spec.policies();
         let needs_kb = policies.contains(&PolicyKind::CarbonFlex);
+        let prepares = AtomicUsize::new(0);
+        let learns = AtomicUsize::new(0);
 
         // --- Phase 1a: prepared state, one unit per sharing group. ---
-        let mut unit_of: HashMap<(String, usize, usize, String, u64), usize> = HashMap::new();
+        let mut unit_of: HashMap<(String, String, usize, usize, String, u64), usize> =
+            HashMap::new();
+        let mut single_of: HashMap<u64, usize> = HashMap::new();
         let mut units: Vec<PrepUnit> = Vec::new();
         for (i, p) in points.iter().enumerate() {
             if p.is_spatial() || p.week.is_some() {
-                let key =
-                    (p.region.clone(), p.capacity, p.horizon_hours, p.variant.clone(), p.seed);
+                // Dispatch enters the key: spatial preparation learns the
+                // per-region knowledge bases from the dispatch-skewed
+                // historical split, so strategies no longer share prepared
+                // state. (Week points carry the empty dispatch label.)
+                let key = (
+                    p.region.clone(),
+                    p.dispatch.clone(),
+                    p.capacity,
+                    p.horizon_hours,
+                    p.variant.clone(),
+                    p.seed,
+                );
                 match unit_of.get(&key) {
                     Some(&u) => match &mut units[u] {
                         PrepUnit::Spatial(v) | PrepUnit::WeekChain(v) => v.push(i),
-                        PrepUnit::Single(_) => unreachable!("singles are never grouped"),
+                        PrepUnit::Single(_) => unreachable!("singles are keyed separately"),
                     },
                     None => {
                         unit_of.insert(key, units.len());
@@ -486,28 +554,56 @@ impl SweepRunner {
                     }
                 }
             } else {
-                units.push(PrepUnit::Single(i));
+                // Plain points group by prepared-input content hash: cells
+                // that differ only in downstream knobs (knn_k, tolerance,
+                // distance bound) share one synthesis + learning pass.
+                let h = prep_hash(&spec.config_for(p));
+                match single_of.get(&h) {
+                    Some(&u) => match &mut units[u] {
+                        PrepUnit::Single(v) => v.push(i),
+                        _ => unreachable!("hash groups only hold singles"),
+                    },
+                    None => {
+                        single_of.insert(h, units.len());
+                        units.push(PrepUnit::Single(vec![i]));
+                    }
+                }
             }
         }
         let unit_results: Vec<Vec<(usize, PointPrep)>> =
             par_map(self.threads, &units, |unit, _| match unit {
-                PrepUnit::Single(i) => {
-                    let cfg = spec.config_for(&points[*i]);
+                PrepUnit::Single(idxs) => {
+                    let cfg = spec.config_for(&points[idxs[0]]);
                     let prep = PreparedExperiment::prepare(&cfg);
+                    prepares.fetch_add(1, Ordering::Relaxed);
                     if needs_kb {
                         // Force the learning phase here so phase 2 cells
                         // only pay for their own simulation.
                         let _ = prep.knowledge_base();
+                        learns.fetch_add(1, Ordering::Relaxed);
                     }
-                    vec![(*i, PointPrep::Single(Arc::new(prep)))]
+                    let first = Arc::new(prep);
+                    idxs.iter()
+                        .map(|&i| {
+                            if i == idxs[0] {
+                                (i, PointPrep::Single(first.clone()))
+                            } else {
+                                // Hash-equal cell: same prepared inputs,
+                                // different downstream knobs — rebind
+                                // instead of re-preparing.
+                                let cell_cfg = spec.config_for(&points[i]);
+                                (i, PointPrep::Single(Arc::new(first.rebind(&cell_cfg))))
+                            }
+                        })
+                        .collect()
                 }
                 PrepUnit::Spatial(idxs) => {
-                    // The config is identical across the group's dispatch
-                    // strategies (dispatch never enters the config).
                     let cfg = spec.config_for(&points[idxs[0]]);
                     let regions = cells::parse_region_set(&points[idxs[0]].region);
+                    let strategy = DispatchStrategy::parse(&points[idxs[0]].dispatch)
+                        .expect("dispatch label");
                     let sp = if spec.spatial_preps.is_empty() {
-                        cells::prepare_spatial(&cfg, &regions)
+                        cells::prepare_spatial(&cfg, &regions, strategy)
                     } else {
                         // Injected pre-prepared regional state (the
                         // `run_spatial_prepared` adapter); must match this
@@ -603,7 +699,7 @@ impl SweepRunner {
         let cell_list: Vec<(usize, PolicyKind)> = (0..points.len())
             .flat_map(|pi| policies.iter().map(move |&kind| (pi, kind)))
             .collect();
-        par_map(self.threads, &cell_list, |&(pi, kind), _| {
+        let rows = par_map(self.threads, &cell_list, |&(pi, kind), _| {
             let point = &points[pi];
             let bl = &baselines[pi];
             let (result, jobs_per_region) = if kind == PolicyKind::CarbonAgnostic {
@@ -636,7 +732,14 @@ impl SweepRunner {
                 kb_live,
                 mean_ci,
             }
-        })
+        });
+        (
+            rows,
+            PrepStats {
+                prepares: prepares.load(Ordering::Relaxed),
+                learns: learns.load(Ordering::Relaxed),
+            },
+        )
     }
 }
 
@@ -999,6 +1102,82 @@ aging_window_hours = 336
         // The agnostic rows are their own baselines.
         assert_eq!(rows[0].savings_pct, 0.0);
         assert_eq!(rows[2].savings_pct, 0.0);
+    }
+
+    #[test]
+    fn memoized_prepare_shares_hash_equal_cells() {
+        // Three variants differing only in downstream scheduler knobs: one
+        // prepared-input hash group → synthesis + learning run exactly once.
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.variants = vec![
+            SweepVariant::new("k5", |cfg| cfg.knn_k = 5),
+            SweepVariant::new("k9", |cfg| cfg.knn_k = 9),
+            SweepVariant::new("tol", |cfg| cfg.violation_tolerance = 0.05),
+        ];
+        spec.policies = vec![PolicyKind::CarbonFlex];
+        let (rows, stats) = SweepRunner::new(4).run_with_stats(&spec);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(stats, PrepStats { prepares: 1, learns: 1 }, "hash group not shared");
+        // Output preservation: every memoized row is bitwise what a fresh,
+        // unshared preparation of its cell config produces.
+        for (r, p) in rows.iter().zip(spec.points()) {
+            let cfg = spec.config_for(&p);
+            let fresh = PreparedExperiment::prepare(&cfg).run(r.kind);
+            assert_eq!(
+                r.result.fingerprint(),
+                fresh.fingerprint(),
+                "memoized cell '{}' diverged from fresh prepare",
+                p.variant
+            );
+        }
+        // A knob that feeds preparation must NOT share: seeds split groups.
+        let mut split = SweepSpec::new(tiny_base());
+        split.seeds = vec![1, 2];
+        split.policies = vec![PolicyKind::CarbonFlex];
+        let (_, stats) = SweepRunner::new(4).run_with_stats(&split);
+        assert_eq!(stats.prepares, 2, "distinct seeds must prepare separately");
+    }
+
+    #[test]
+    fn sharded_rows_concatenate_to_the_unsharded_grid() {
+        let mk = |shard: Option<(usize, usize)>| {
+            let mut spec = SweepSpec::new(tiny_base());
+            spec.regions = vec!["south-australia".into(), "ontario".into()];
+            spec.seeds = vec![1, 2];
+            spec.policies = vec![PolicyKind::CarbonAgnostic, PolicyKind::WaitAwhile];
+            spec.shard = shard;
+            spec
+        };
+        let full = SweepRunner::new(2).run(&mk(None));
+        // n=3 over 4 points exercises uneven slices (1/1/2).
+        let mut concat: Vec<SweepRow> = Vec::new();
+        for i in 0..3 {
+            concat.extend(SweepRunner::new(2).run(&mk(Some((i, 3)))));
+        }
+        assert_eq!(full.len(), concat.len());
+        for (a, b) in full.iter().zip(&concat) {
+            assert_eq!(a.point, b.point);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(
+                a.result.fingerprint(),
+                b.result.fingerprint(),
+                "shard diverged at {:?}/{:?}",
+                a.point,
+                a.kind
+            );
+            assert_eq!(a.savings_pct.to_bits(), b.savings_pct.to_bits());
+        }
+        // More shards than points: some slices are empty, nothing panics
+        // (4 points over 6 shards: slice 3 spans [2, 2)).
+        assert!(SweepRunner::new(1).run(&mk(Some((3, 6)))).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn shard_index_must_be_below_denominator() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.shard = Some((2, 2));
+        let _ = SweepRunner::new(1).run(&spec);
     }
 
     #[test]

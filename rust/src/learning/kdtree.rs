@@ -20,7 +20,7 @@
 //! resolve to the lower case index (the in-test brute-force and recursive
 //! references pin this bit for bit).
 
-use crate::learning::state::{StateVector, STATE_DIM};
+use crate::learning::state::{dist2_flat, StateVector, STATE_DIM};
 
 /// Child-slot sentinel ("no subtree").
 const NONE: u32 = u32::MAX;
@@ -31,9 +31,12 @@ const NONE: u32 = u32::MAX;
 /// O(n log n) rebuild a boxed-node tree would force.
 #[derive(Debug, Clone)]
 pub struct KdTree {
-    /// Point coordinates in slot (pre-order) order: the descent reads this
-    /// array mostly front-to-back.
-    points: Vec<StateVector>,
+    /// Point coordinates in slot (pre-order) order, flattened into one
+    /// contiguous `f64` array with stride [`STATE_DIM`] (slot `s` occupies
+    /// `s*STATE_DIM .. (s+1)*STATE_DIM`): the descent reads this array
+    /// mostly front-to-back, and the distance inner loop runs over raw
+    /// slices ([`dist2_flat`]) instead of per-point structs.
+    points: Vec<f64>,
     /// slot → original point index (the case index reported in hits).
     case: Vec<u32>,
     /// slot → splitting axis (depth % [`STATE_DIM`]).
@@ -61,7 +64,7 @@ impl KdTree {
         let n = points.len();
         assert!(n < NONE as usize, "kd-tree capped at u32 point indices");
         let mut tree = KdTree {
-            points: Vec::with_capacity(n),
+            points: Vec::with_capacity(n * STATE_DIM),
             case: Vec::with_capacity(n),
             axis: Vec::with_capacity(n),
             left: Vec::with_capacity(n),
@@ -93,7 +96,7 @@ impl KdTree {
         }
         let point = idx[mid];
         let slot = self.case.len() as u32;
-        self.points.push(points[point as usize]);
+        self.points.extend_from_slice(&points[point as usize].0);
         self.case.push(point);
         self.axis.push(axis as u8);
         self.left.push(NONE);
@@ -112,11 +115,11 @@ impl KdTree {
     }
 
     pub fn len(&self) -> usize {
-        self.points.len()
+        self.case.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.points.is_empty()
+        self.case.is_empty()
     }
 
     /// k nearest neighbours of `query`, sorted ascending by
@@ -147,7 +150,7 @@ impl KdTree {
         out: &mut Vec<Hit>,
     ) {
         out.clear();
-        if k == 0 || self.points.is_empty() {
+        if k == 0 || self.case.is_empty() {
             return;
         }
         out.reserve(k + 1);
@@ -170,12 +173,12 @@ impl KdTree {
         offsets.clear();
         offsets.reserve(queries.len() + 1);
         offsets.push(0);
-        if k == 0 || self.points.is_empty() {
+        if k == 0 || self.case.is_empty() {
             offsets.resize(queries.len() + 1, 0);
             return;
         }
         // +1: a segment transiently holds k+1 hits before the worst pops.
-        out.reserve(queries.len().saturating_mul(k.min(self.points.len())) + 1);
+        out.reserve(queries.len().saturating_mul(k.min(self.case.len())) + 1);
         for q in queries {
             let start = out.len();
             self.search(q, k, &|_| true, out, start);
@@ -214,8 +217,9 @@ impl KdTree {
             while cur != NONE {
                 let s = cur as usize;
                 let case = self.case[s] as usize;
+                let coords = &self.points[s * STATE_DIM..(s + 1) * STATE_DIM];
                 if keep(case) {
-                    let d = self.points[s].dist2(query).sqrt();
+                    let d = dist2_flat(coords, &query.0).sqrt();
                     let pos = out[start..]
                         .partition_point(|h| h.dist < d || (h.dist == d && h.index < case));
                     if pos < k {
@@ -226,7 +230,7 @@ impl KdTree {
                     }
                 }
                 let axis = self.axis[s] as usize;
-                let diff = query.0[axis] - self.points[s].0[axis];
+                let diff = query.0[axis] - coords[axis];
                 let (near, far) = if diff <= 0.0 {
                     (self.left[s], self.right[s])
                 } else {
@@ -503,6 +507,56 @@ mod tests {
         for w in hits.windows(2) {
             assert!(w[0].dist <= w[1].dist);
         }
+    }
+
+    /// Property: the flat (structure-of-arrays) tree's *filtered* search —
+    /// the lazy-aging tombstone path — matches the AoS brute force
+    /// ([`StateVector::dist`] over struct points) bitwise, across random
+    /// grid-valued point sets (dense exact-distance ties) and random
+    /// tombstone masks including all-dead and all-alive.
+    #[test]
+    fn property_filtered_flat_matches_aos_brute() {
+        check(
+            "flat filtered knn == AoS brute",
+            Config { cases: 96, seed: 0x50A7 },
+            |rng| {
+                let n = rng.below(40);
+                let points: Vec<StateVector> = (0..n).map(|_| grid_state(rng)).collect();
+                // 0 = all dead, 1 = all alive, otherwise i.i.d. coin flips.
+                let dead: Vec<bool> = match rng.below(4) {
+                    0 => vec![true; n],
+                    1 => vec![false; n],
+                    _ => (0..n).map(|_| rng.below(2) == 0).collect(),
+                };
+                let q = grid_state(rng);
+                let k = rng.below(n + 3);
+                (points, dead, q, k)
+            },
+            |(points, dead, q, k)| {
+                let tree = KdTree::build(points.clone());
+                let mut out = Vec::new();
+                tree.knn_filtered_into(q, *k, |i| !dead[i], &mut out);
+                let mut want: Vec<Hit> = points
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| !dead[*i])
+                    .map(|(i, p)| Hit { index: i, dist: p.dist(q) })
+                    .collect();
+                want.sort_by(|a, b| {
+                    a.dist.partial_cmp(&b.dist).unwrap().then(a.index.cmp(&b.index))
+                });
+                want.truncate(*k);
+                if out.len() != want.len() {
+                    return Err(format!("lens: got {} want {}", out.len(), want.len()));
+                }
+                for (j, (g, w)) in out.iter().zip(&want).enumerate() {
+                    if g.index != w.index || g.dist.to_bits() != w.dist.to_bits() {
+                        return Err(format!("hit {j}: got {g:?} want {w:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     /// Property: batched kNN == per-query kNN == brute force, across random

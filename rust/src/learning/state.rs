@@ -22,6 +22,20 @@
 /// Dimensionality of the state vector (must match `python/compile/model.py`).
 pub const STATE_DIM: usize = 8;
 
+/// Squared Euclidean distance over two contiguous coordinate slices.
+///
+/// §Perf: the structure-of-arrays KD-tree stores point coordinates as one
+/// flat `f64` array (stride [`STATE_DIM`]), so the match inner loop calls
+/// this on raw slices instead of going through [`StateVector`]. The
+/// iteration order and operation sequence are identical to
+/// [`StateVector::dist2`] (which delegates here), keeping results bitwise
+/// equal to the AoS path.
+#[inline]
+pub fn dist2_flat(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(a, b)| (a - b) * (a - b)).sum()
+}
+
 /// Normalization constants.
 const CI_SCALE: f64 = 700.0; // g/kWh full scale
 const GRAD_SCALE: f64 = 100.0; // g/kWh per hour
@@ -60,11 +74,7 @@ impl StateVector {
 
     /// Squared Euclidean distance.
     pub fn dist2(&self, other: &StateVector) -> f64 {
-        self.0
-            .iter()
-            .zip(other.0.iter())
-            .map(|(a, b)| (a - b) * (a - b))
-            .sum()
+        dist2_flat(&self.0, &other.0)
     }
 
     /// Euclidean distance.
@@ -147,6 +157,14 @@ mod tests {
         }
         assert!(StateVector::from_csv_cell("1;2;3").is_none());
         assert!(StateVector::from_csv_cell("a;b;c;d;e;f;g;h").is_none());
+    }
+
+    #[test]
+    fn flat_distance_matches_struct_distance_bitwise() {
+        let a = StateVector::from_raw(421.5, 13.0, 0.7, &[3, 9, 2], 0.66);
+        let b = StateVector::from_raw(118.0, -42.0, 0.1, &[0, 4, 7], 0.31);
+        assert_eq!(dist2_flat(&a.0, &b.0).to_bits(), a.dist2(&b).to_bits());
+        assert_eq!(dist2_flat(&a.0, &a.0), 0.0);
     }
 
     #[test]

@@ -65,12 +65,14 @@ fn print_usage() {
          \x20             [--dispatch rr,current,window] [--capacities 100,150]\n\
          \x20             [--horizons 168] [--weeks N|w1,w2] [--aging-window 672]\n\
          \x20             [--seeds 1,2] [--history <h>] [--offsets <n>] [--threads N]\n\
-         \x20             [--json] [--check]\n\
+         \x20             [--shard i/n] [--json] [--check]\n\
          \x20             parallel cartesian grid; rows in grid order. A '+'-joined\n\
          \x20             region entry is a multi-region spatial cell (the --dispatch\n\
          \x20             axis applies); --weeks makes cells weekly continuous-learning\n\
          \x20             windows. A [sweep] table in the config file sets the same\n\
-         \x20             axes declaratively; flags override it per axis\n\
+         \x20             axes declaratively; flags override it per axis. --shard i/n\n\
+         \x20             runs slice i of n for multi-process grids; concatenated\n\
+         \x20             shard rows equal the unsharded output bitwise\n\
          \x20 bench       [--config <file>] [--json] [--out BENCH_hotpaths.json]\n\
          \x20             [--budget-ms 2000] [--baseline <file>] [--max-regression 3.0]\n\
          \x20             hot-path timings → JSON; non-zero exit on baseline regression\n\
@@ -265,6 +267,21 @@ fn cmd_sweep(args: &Args) -> i32 {
         Ok(_) => {}
         Err(e) => return fail(&e),
     };
+    // --shard i/n runs the i-th of n contiguous slices of the point list;
+    // concatenating the shards' rows in order reproduces the unsharded grid
+    // bitwise (each cell is self-seeded, week chains walk from week 0).
+    if let Some(raw) = args.get("shard") {
+        let parsed = raw.split_once('/').and_then(|(i, n)| {
+            Some((i.trim().parse::<usize>().ok()?, n.trim().parse::<usize>().ok()?))
+        });
+        match parsed {
+            Some((i, n)) if n > 0 && i < n => spec.shard = Some((i, n)),
+            Some((i, n)) => {
+                return fail(&format!("--shard {i}/{n}: index must satisfy i < n, n > 0"))
+            }
+            None => return fail(&format!("invalid --shard '{raw}' (expected i/n, e.g. 0/4)")),
+        }
+    }
 
     let threads = match args.num_or::<usize>("threads", 0) {
         Ok(0) => sweep::auto_threads(),

@@ -18,13 +18,15 @@ impl Policy for CarbonAgnostic {
         out.alloc.clear();
         let mut used = 0usize;
         // Jobs arrive sorted by arrival time; FCFS = take them in order.
-        for v in ctx.jobs {
-            let k = v.job.k_min;
+        // §Perf: only ids and k_min matter here, so the loop reads the two
+        // contiguous columns instead of dereferencing each `&Job`.
+        for (&id, &k_min) in ctx.cols.id.iter().zip(&ctx.cols.k_min) {
+            let k = k_min as usize;
             if used + k > ctx.max_capacity {
                 continue; // queue (FCFS head-of-line within capacity)
             }
             used += k;
-            out.alloc.push((v.job.id, k));
+            out.alloc.push((id, k));
         }
     }
 }
@@ -63,9 +65,11 @@ mod tests {
             })
             .collect();
         let f = Forecaster::perfect(CarbonTrace::new("x", vec![100.0; 10]));
+        let cols = crate::sched::JobViewCols::from_views(&views);
         let ctx = SlotCtx {
             t: 0,
             jobs: &views,
+            cols: &cols,
             forecaster: &f,
             max_capacity: 3,
             num_queues: 3,

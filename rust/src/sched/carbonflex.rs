@@ -373,9 +373,14 @@ mod tests {
         f: &'a Forecaster,
         violations: f64,
     ) -> SlotCtx<'a> {
+        // Leaked so the columnar mirror outlives the returned ctx; a few
+        // dozen bytes per test call.
+        let cols: &'static crate::sched::JobViewCols =
+            Box::leak(Box::new(crate::sched::JobViewCols::from_views(views)));
         SlotCtx {
             t,
             jobs: views,
+            cols,
             forecaster: f,
             max_capacity: 20,
             num_queues: 3,

@@ -46,6 +46,90 @@ impl JobView<'_> {
     }
 }
 
+/// Columnar (structure-of-arrays) mirror of the active [`JobView`] slice.
+///
+/// §Perf: the engine fills one entry per active job, in the same order as
+/// `SlotCtx::jobs`, so policies and the Table 2 feature extraction can run
+/// branch-light index loops over contiguous `f64`/`u32` slices instead of
+/// pointer-chasing `&Job` structs. Column `i` always describes
+/// `ctx.jobs[i]`. All buffers are clear+refill, so steady-state slots
+/// allocate nothing once warm.
+#[derive(Debug, Clone, Default)]
+pub struct JobViewCols {
+    /// Job id (dense engine index).
+    pub id: Vec<JobId>,
+    /// Remaining work in base-hours.
+    pub remaining: Vec<f64>,
+    /// Allocation in the previous slot (0 = suspended/queued).
+    pub prev_alloc: Vec<u32>,
+    /// True once the job has exhausted its slack.
+    pub overdue: Vec<bool>,
+    /// Submission queue index.
+    pub queue: Vec<u32>,
+    /// `Job::elasticity()` captured at fill time.
+    pub elasticity: Vec<f64>,
+    /// Minimum allocation k_min.
+    pub k_min: Vec<u32>,
+    /// Maximum allocation k_max.
+    pub k_max: Vec<u32>,
+}
+
+impl JobViewCols {
+    pub fn clear(&mut self) {
+        self.id.clear();
+        self.remaining.clear();
+        self.prev_alloc.clear();
+        self.overdue.clear();
+        self.queue.clear();
+        self.elasticity.clear();
+        self.k_min.clear();
+        self.k_max.clear();
+    }
+
+    /// Append one job's columns (same field values a [`JobView`] would carry).
+    pub fn push(&mut self, job: &Job, remaining: f64, prev_alloc: usize, overdue: bool) {
+        self.id.push(job.id);
+        self.remaining.push(remaining);
+        self.prev_alloc.push(prev_alloc as u32);
+        self.overdue.push(overdue);
+        self.queue.push(job.queue as u32);
+        self.elasticity.push(job.elasticity());
+        self.k_min.push(job.k_min as u32);
+        self.k_max.push(job.k_max as u32);
+    }
+
+    /// Pre-size every column (the engine calls this from its own
+    /// `reserve`, so steady-state slots never grow the buffers).
+    pub fn reserve(&mut self, additional: usize) {
+        self.id.reserve(additional);
+        self.remaining.reserve(additional);
+        self.prev_alloc.reserve(additional);
+        self.overdue.reserve(additional);
+        self.queue.reserve(additional);
+        self.elasticity.reserve(additional);
+        self.k_min.reserve(additional);
+        self.k_max.reserve(additional);
+    }
+
+    pub fn len(&self) -> usize {
+        self.id.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id.is_empty()
+    }
+
+    /// Build from an existing view slice (tests and one-shot callers; the
+    /// engine fills incrementally instead).
+    pub fn from_views(views: &[JobView]) -> JobViewCols {
+        let mut cols = JobViewCols::default();
+        for v in views {
+            cols.push(v.job, v.remaining, v.prev_alloc, v.overdue);
+        }
+        cols
+    }
+}
+
 /// A policy's decision for one slot.
 #[derive(Debug, Clone, Default)]
 pub struct Decision {
@@ -62,6 +146,9 @@ pub struct SlotCtx<'a> {
     pub t: usize,
     /// Active (queued + running) jobs, in arrival order.
     pub jobs: &'a [JobView<'a>],
+    /// Columnar mirror of `jobs` (entry `i` ↔ `jobs[i]`): policies that
+    /// only need scalar per-job fields read these contiguous slices.
+    pub cols: &'a JobViewCols,
     /// Day-ahead forecast service (the only carbon signal online policies
     /// may consult).
     pub forecaster: &'a Forecaster,
@@ -80,23 +167,27 @@ pub struct SlotCtx<'a> {
 
 impl SlotCtx<'_> {
     /// Number of active jobs per queue — the Table 2 "queue length" feature.
-    /// Entries past `num_queues` are zero (inline array, no heap).
+    /// Entries past `num_queues` are zero (inline array, no heap). Runs
+    /// over the contiguous queue column; bitwise-identical to the old
+    /// per-struct walk (same iteration order, same clamping).
     pub fn queue_lengths(&self) -> [usize; MAX_QUEUES] {
         let mut lens = [0usize; MAX_QUEUES];
         let top = self.num_queues.max(1).min(MAX_QUEUES) - 1;
-        for jv in self.jobs {
-            let q = jv.job.queue.min(top);
-            lens[q] += 1;
+        for &q in &self.cols.queue {
+            lens[(q as usize).min(top)] += 1;
         }
         lens
     }
 
     /// Mean elasticity across active jobs (Table 2 feature); 0 when idle.
+    /// Sums the elasticity column in fill order — the same operation
+    /// sequence as the old `jobs.iter()` walk, so the result is bitwise
+    /// identical.
     pub fn mean_elasticity(&self) -> f64 {
-        if self.jobs.is_empty() {
+        if self.cols.is_empty() {
             return 0.0;
         }
-        self.jobs.iter().map(|j| j.job.elasticity()).sum::<f64>() / self.jobs.len() as f64
+        self.cols.elasticity.iter().sum::<f64>() / self.cols.len() as f64
     }
 }
 
@@ -234,6 +325,69 @@ mod tests {
         }
         assert_eq!(PolicyKind::parse("oracle"), Some(PolicyKind::Oracle));
         assert_eq!(PolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn job_view_cols_mirror_views() {
+        use crate::workload::profile::ScalingProfile;
+        let jobs: Vec<Job> = (0..6)
+            .map(|i| Job {
+                id: i,
+                workload: "t",
+                workload_idx: 0,
+                arrival: i,
+                length_hours: 2.0 + i as f64,
+                queue: i % 3,
+                slack_hours: 6.0,
+                k_min: 1,
+                k_max: 4,
+                profile: ScalingProfile::from_comm_ratio(0.05, 4),
+                watts_per_unit: 40.0,
+            })
+            .collect();
+        let views: Vec<JobView> = jobs
+            .iter()
+            .map(|j| JobView {
+                job: j,
+                remaining: j.length_hours,
+                prev_alloc: j.id % 2,
+                overdue: j.id == 5,
+            })
+            .collect();
+        let cols = JobViewCols::from_views(&views);
+        assert_eq!(cols.len(), views.len());
+        for (i, v) in views.iter().enumerate() {
+            assert_eq!(cols.id[i], v.job.id);
+            assert_eq!(cols.remaining[i].to_bits(), v.remaining.to_bits());
+            assert_eq!(cols.prev_alloc[i] as usize, v.prev_alloc);
+            assert_eq!(cols.overdue[i], v.overdue);
+            assert_eq!(cols.queue[i] as usize, v.job.queue);
+            assert_eq!(cols.elasticity[i].to_bits(), v.job.elasticity().to_bits());
+            assert_eq!(cols.k_min[i] as usize, v.job.k_min);
+            assert_eq!(cols.k_max[i] as usize, v.job.k_max);
+        }
+        // The columnar Table 2 features match a per-struct recomputation.
+        use crate::carbon::forecast::Forecaster;
+        use crate::carbon::trace::CarbonTrace;
+        let f = Forecaster::perfect(CarbonTrace::new("x", vec![100.0; 4]));
+        let ctx = SlotCtx {
+            t: 0,
+            jobs: &views,
+            cols: &cols,
+            forecaster: &f,
+            max_capacity: 8,
+            num_queues: 3,
+            prev_capacity: 8,
+            prev_used: 0,
+            recent_violation_rate: 0.0,
+        };
+        let mut want = [0usize; MAX_QUEUES];
+        for v in &views {
+            want[v.job.queue.min(2)] += 1;
+        }
+        assert_eq!(ctx.queue_lengths(), want);
+        let mean = views.iter().map(|v| v.job.elasticity()).sum::<f64>() / views.len() as f64;
+        assert_eq!(ctx.mean_elasticity().to_bits(), mean.to_bits());
     }
 
     #[test]

@@ -120,9 +120,12 @@ fn steady_state_step_does_not_allocate() {
     );
 
     // The measured window did real work: every slot ran all jobs at base scale.
-    let slots = engine.slots();
-    assert_eq!(slots.len(), WARMUP + MEASURED);
-    assert!(slots[WARMUP..].iter().all(|s| s.used == JOBS), "cluster idled during measurement");
+    let cols = engine.slot_columns();
+    assert_eq!(cols.len(), WARMUP + MEASURED);
+    assert!(
+        cols.used[WARMUP..].iter().all(|&u| u as usize == JOBS),
+        "cluster idled during measurement"
+    );
 
     // --- Phase 2: the full CarbonFlex policy over a learned KB. Each slot
     // builds the Table 2 state, runs a k-NN match on the flat KD-tree into
@@ -179,10 +182,10 @@ fn steady_state_step_does_not_allocate() {
     );
 
     // The measured window exercised the match + schedule path for real.
-    let slots = engine.slots();
-    assert_eq!(slots.len(), WARMUP + MEASURED);
+    let cols = engine.slot_columns();
+    assert_eq!(cols.len(), WARMUP + MEASURED);
     assert!(
-        slots[WARMUP..].iter().any(|s| s.used > 0),
+        cols.used[WARMUP..].iter().any(|&u| u > 0),
         "CarbonFlex scheduled nothing during measurement"
     );
 }
