@@ -6,8 +6,23 @@
 //! experiments can probe forecast-error sensitivity.
 
 use crate::carbon::trace::CarbonTrace;
+use crate::faults::SignalOutage;
 use crate::util::rng::Rng;
 use crate::util::stats;
+
+/// Availability of the carbon signal at a slot — the input to CarbonFlex's
+/// degradation ladder (see `crate::faults`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SignalState {
+    /// Signal is live: forecasts for this slot are trustworthy.
+    Fresh,
+    /// Signal is out, but a last-known-good slot exists within the bounded
+    /// staleness window — decide as if it were still slot `last_good`.
+    Stale { last_good: usize },
+    /// Signal is out and too stale (or never seen) — fall back to the
+    /// carbon-agnostic policy.
+    Dark,
+}
 
 /// Day-ahead forecast provider over a ground-truth trace.
 #[derive(Debug, Clone)]
@@ -17,19 +32,72 @@ pub struct Forecaster {
     noise_sigma: f64,
     /// Pre-drawn noise per hour so repeated queries are consistent.
     noise: Vec<f64>,
+    /// Fault injection: `outage_mask[t] == true` means the signal is out at
+    /// slot `t`. Empty (the constructors' default) = always fresh, so every
+    /// existing call path is untouched bit for bit.
+    outage_mask: Vec<bool>,
+    /// Bounded-staleness knob: how many slots a last-known-good forecast
+    /// may be reused before the ladder drops to the carbon-agnostic rung.
+    max_stale: usize,
 }
 
 impl Forecaster {
     /// Perfect day-ahead forecast (the paper's assumption).
     pub fn perfect(truth: CarbonTrace) -> Self {
-        Forecaster { noise_sigma: 0.0, noise: vec![], truth }
+        Forecaster { noise_sigma: 0.0, noise: vec![], truth, outage_mask: vec![], max_stale: 0 }
     }
 
     /// Noisy forecast with relative error σ (e.g. 0.05 ≈ CarbonCast-level).
     pub fn noisy(truth: CarbonTrace, sigma: f64, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let noise = (0..truth.len()).map(|_| 1.0 + sigma * rng.normal()).collect();
-        Forecaster { noise_sigma: sigma, noise, truth }
+        Forecaster { noise_sigma: sigma, noise, truth, outage_mask: vec![], max_stale: 0 }
+    }
+
+    /// Overlay signal outages from a fault plan: during `[start, start+len)`
+    /// the signal reads as out, and [`Forecaster::signal_state`] walks the
+    /// degradation ladder with staleness bound `max_stale`.
+    pub fn with_outages(
+        mut self,
+        outages: &[SignalOutage],
+        max_stale: usize,
+        horizon: usize,
+    ) -> Self {
+        if outages.is_empty() {
+            return self;
+        }
+        let len = outages
+            .iter()
+            .map(|o| o.start.saturating_add(o.len))
+            .max()
+            .unwrap_or(0)
+            .max(horizon);
+        let mut mask = vec![false; len];
+        for o in outages {
+            for slot in mask.iter_mut().skip(o.start).take(o.len) {
+                *slot = true;
+            }
+        }
+        self.outage_mask = mask;
+        self.max_stale = max_stale;
+        self
+    }
+
+    /// Degradation-ladder state of the signal at slot `t`. Fresh whenever no
+    /// outage covers `t` (always, if no outages were overlaid).
+    pub fn signal_state(&self, t: usize) -> SignalState {
+        if t >= self.outage_mask.len() || !self.outage_mask[t] {
+            return SignalState::Fresh;
+        }
+        // Scan back for the last fresh slot, bounded by the staleness knob.
+        let mut u = t;
+        while u > 0 && t - u < self.max_stale {
+            u -= 1;
+            if !self.outage_mask[u] {
+                return SignalState::Stale { last_good: u };
+            }
+        }
+        SignalState::Dark
     }
 
     pub fn noise_sigma(&self) -> f64 {
@@ -116,6 +184,31 @@ mod tests {
         assert_eq!(f.day_ahead_rank(10), 0.0);
         // Slot 9's window still contains the clean hour → its own rank > 0.
         assert!(f.day_ahead_rank(9) > 0.0);
+    }
+
+    #[test]
+    fn signal_state_ladder() {
+        let trace = CarbonTrace::new("x", vec![100.0; 48]);
+        // No outages overlaid → always fresh.
+        let clean = Forecaster::perfect(trace.clone());
+        assert_eq!(clean.signal_state(0), SignalState::Fresh);
+        assert_eq!(clean.signal_state(1000), SignalState::Fresh);
+        // Outage over [10, 20) with staleness bound 4.
+        let outage = SignalOutage { start: 10, len: 10 };
+        let f = Forecaster::perfect(trace.clone()).with_outages(&[outage], 4, 48);
+        assert_eq!(f.signal_state(9), SignalState::Fresh);
+        assert_eq!(f.signal_state(10), SignalState::Stale { last_good: 9 });
+        assert_eq!(f.signal_state(13), SignalState::Stale { last_good: 9 });
+        // t=14: last good slot 9 is 5 slots back > max_stale 4 → dark.
+        assert_eq!(f.signal_state(14), SignalState::Dark);
+        assert_eq!(f.signal_state(19), SignalState::Dark);
+        assert_eq!(f.signal_state(20), SignalState::Fresh);
+        // Outage from slot 0: no last-known-good exists at all → dark.
+        let from_zero = Forecaster::perfect(trace)
+            .with_outages(&[SignalOutage { start: 0, len: 5 }], 8, 48);
+        assert_eq!(from_zero.signal_state(0), SignalState::Dark);
+        assert_eq!(from_zero.signal_state(3), SignalState::Dark);
+        assert_eq!(from_zero.signal_state(5), SignalState::Fresh);
     }
 
     #[test]

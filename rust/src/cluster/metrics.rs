@@ -63,6 +63,20 @@ pub struct RunMetrics {
     pub total_rescales: usize,
     /// Slot at which the last job completed.
     pub makespan: usize,
+    /// Fault injection: jobs force-suspended by slot crashes (0 in
+    /// fault-free runs; see `crate::faults`).
+    pub restarts: u64,
+    /// Fault injection: completed progress re-done after crashes, hours.
+    pub lost_work_hours: f64,
+    /// Fault injection: recovery-time percentiles across crashes, slots
+    /// (0.0 when no crash fired).
+    pub recovery_p50_slots: f64,
+    pub recovery_p99_slots: f64,
+    /// Degradation ladder: slots decided on a stale last-known-good
+    /// forecast during a signal outage.
+    pub degraded_stale: u64,
+    /// Degradation ladder: slots decided by the carbon-agnostic fallback.
+    pub degraded_fallback: u64,
 }
 
 impl RunMetrics {
@@ -99,6 +113,12 @@ impl RunMetrics {
             peak_allocated: usage_per_slot.iter().copied().max().unwrap_or(0),
             total_rescales: outcomes.iter().map(|o| o.rescales).sum(),
             makespan: outcomes.iter().map(|o| o.completion).max().unwrap_or(0),
+            restarts: 0,
+            lost_work_hours: 0.0,
+            recovery_p50_slots: 0.0,
+            recovery_p99_slots: 0.0,
+            degraded_stale: 0,
+            degraded_fallback: 0,
         }
     }
 

@@ -34,7 +34,9 @@ use std::collections::{BinaryHeap, VecDeque};
 use crate::carbon::forecast::Forecaster;
 use crate::cluster::energy::EnergyModel;
 use crate::cluster::metrics::{JobOutcome, RunMetrics};
+use crate::faults::FaultPlan;
 use crate::sched::{Decision, JobView, JobViewCols, Policy, SlotCtx, MAX_QUEUES};
+use crate::util::stats;
 use crate::workload::job::Job;
 
 /// Per-slot record of what the policy did — the raw material for the
@@ -273,6 +275,15 @@ struct SanitizeScratch {
     heap: BinaryHeap<Reverse<(u128, usize, usize)>>,
 }
 
+/// A slot crash whose victims have not all resumed (or completed) yet —
+/// the engine tracks these to measure per-fault recovery time.
+#[derive(Debug, Clone)]
+struct OpenCrash {
+    at: usize,
+    repair_slots: usize,
+    victims: Vec<usize>,
+}
+
 /// The stepping core: job state + accounting, advanced one slot at a time.
 pub struct ClusterEngine {
     cfg: Simulator,
@@ -307,6 +318,16 @@ pub struct ClusterEngine {
     /// Recycled policy decision (capacity + alloc buffer).
     decision: Decision,
     scratch: SanitizeScratch,
+    /// Injected fault schedule (empty = no faults; see [`crate::faults`]).
+    /// Every fault hook below guards on `plan.is_empty()`, so the empty
+    /// plan executes the exact pre-fault instruction sequence.
+    plan: FaultPlan,
+    /// Crashes whose victims have not all resumed or completed yet.
+    open_crashes: Vec<OpenCrash>,
+    /// Fault bookkeeping surfaced through `RunMetrics`.
+    restarts: u64,
+    lost_work_hours: f64,
+    recovery_slots: Vec<f64>,
 }
 
 impl ClusterEngine {
@@ -336,7 +357,18 @@ impl ClusterEngine {
             cols: JobViewCols::default(),
             decision: Decision::default(),
             scratch: SanitizeScratch::default(),
+            plan: FaultPlan::none(),
+            open_crashes: vec![],
+            restarts: 0,
+            lost_work_hours: 0.0,
+            recovery_slots: vec![],
         }
+    }
+
+    /// Install a fault schedule (before stepping). The default is the
+    /// empty plan, which injects nothing.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.plan = plan;
     }
 
     /// Register a job. `job.id` must equal its submission index.
@@ -417,7 +449,20 @@ impl ClusterEngine {
             self.active.sort_unstable();
         }
 
+        // Fault injection: crash onsets suspend victims through the
+        // ordinary checkpoint path, and in-repair crashes shrink the
+        // usable capacity. Guarded so the empty plan touches nothing.
+        let mut eff_max = self.cfg.max_capacity;
+        if !self.plan.is_empty() {
+            self.crash_onset(t);
+            eff_max =
+                self.cfg.max_capacity.saturating_sub(self.plan.capacity_down_at(t)).max(1);
+        }
+
         if self.active.is_empty() {
+            if !self.plan.is_empty() {
+                self.resolve_crashes(t);
+            }
             self.prev_used = 0;
             self.last = SlotRecord {
                 t,
@@ -471,7 +516,7 @@ impl ClusterEngine {
             jobs: &views,
             cols: &self.cols,
             forecaster,
-            max_capacity: self.cfg.max_capacity,
+            max_capacity: eff_max,
             num_queues: self.cfg.num_queues,
             prev_capacity: self.prev_capacity,
             prev_used: self.prev_used,
@@ -482,7 +527,7 @@ impl ClusterEngine {
         policy.decide_into(&ctx, &mut self.decision);
 
         let provisioned =
-            sanitize(self.cfg.max_capacity, &self.decision, &views, &self.cols, &mut self.scratch);
+            sanitize(eff_max, &self.decision, &views, &self.cols, &mut self.scratch);
 
         // --- Advance jobs ---
         let ci = forecaster.truth().at(t);
@@ -559,6 +604,9 @@ impl ClusterEngine {
             let flags = &self.state.flags;
             self.active.retain(|&i| flags[i] & DONE == 0);
         }
+        if !self.plan.is_empty() {
+            self.resolve_crashes(t);
+        }
 
         // Boot energy for newly provisioned servers (3–5 min lag, §6.8).
         if provisioned > self.prev_capacity {
@@ -604,6 +652,69 @@ impl ClusterEngine {
         &self.last
     }
 
+    /// Fault hook: crashes whose onset is slot `t` suspend enough running
+    /// jobs (latest admissions first, a deterministic order) to free the
+    /// crashed servers. Victims go through the ordinary checkpoint path —
+    /// a rescale event plus suspension — and additionally lose up to the
+    /// crash's `rework_hours` of completed progress.
+    fn crash_onset(&mut self, t: usize) {
+        for ci in 0..self.plan.crashes.len() {
+            let c = self.plan.crashes[ci];
+            if c.at != t {
+                continue;
+            }
+            let mut freed = 0usize;
+            let mut victims: Vec<usize> = Vec::new();
+            for pos in (0..self.active.len()).rev() {
+                if freed >= c.down {
+                    break;
+                }
+                let i = self.active[pos];
+                let prev = self.state.prev_alloc[i] as usize;
+                if prev == 0 {
+                    continue; // already queued; nothing to displace
+                }
+                freed += prev;
+                // Suspend through the existing suspend/resume path: the
+                // advance loop sees prev_alloc == 0 and requeues the job.
+                self.state.rescales[i] += 1;
+                self.state.prev_alloc[i] = 0;
+                let done = (self.jobs[i].work() - self.state.remaining[i]).max(0.0);
+                let lost = done.min(c.rework_hours);
+                self.state.remaining[i] += lost;
+                self.lost_work_hours += lost;
+                self.restarts += 1;
+                victims.push(i);
+            }
+            self.open_crashes.push(OpenCrash {
+                at: c.at,
+                repair_slots: c.repair_slots,
+                victims,
+            });
+        }
+    }
+
+    /// Fault hook: a crash is recovered once every victim is running again
+    /// (or completed) *and* its servers are repaired; the elapsed slots
+    /// feed the recovery-time percentiles in [`RunMetrics`].
+    fn resolve_crashes(&mut self, t: usize) {
+        let mut k = 0;
+        while k < self.open_crashes.len() {
+            let oc = &self.open_crashes[k];
+            let victims_back = oc
+                .victims
+                .iter()
+                .all(|&i| self.state.flags[i] & DONE != 0 || self.state.prev_alloc[i] > 0);
+            if victims_back {
+                let oc = self.open_crashes.swap_remove(k);
+                let recovery = (t - oc.at).max(oc.repair_slots);
+                self.recovery_slots.push(recovery as f64);
+            } else {
+                k += 1;
+            }
+        }
+    }
+
     /// Finalize into a [`SimResult`].
     pub fn finish(self, policy_name: &str) -> SimResult {
         let unfinished = self.state.flags.iter().filter(|&&f| f & DONE == 0).count();
@@ -622,6 +733,21 @@ impl ClusterEngine {
         );
         metrics.energy_kwh += self.overhead_energy;
         metrics.carbon_g += self.overhead_carbon;
+        metrics.restarts = self.restarts;
+        metrics.lost_work_hours = self.lost_work_hours;
+        // Crashes still open at drain never recovered within the run;
+        // charge them the full span to the last stepped slot.
+        let mut recovery = self.recovery_slots;
+        if !self.open_crashes.is_empty() {
+            let end_t = self.slot_cols.t.last().copied().unwrap_or(0) as usize;
+            for oc in &self.open_crashes {
+                recovery.push(end_t.saturating_sub(oc.at).max(oc.repair_slots) as f64);
+            }
+        }
+        if !recovery.is_empty() {
+            metrics.recovery_p50_slots = stats::percentile(&recovery, 50.0);
+            metrics.recovery_p99_slots = stats::percentile(&recovery, 99.0);
+        }
         SimResult {
             metrics,
             outcomes: self.outcomes,
@@ -776,7 +902,21 @@ impl Simulator {
 
     /// Batch driver: run `policy` over `jobs` until every job drains.
     pub fn run(&self, jobs: &[Job], forecaster: &Forecaster, policy: &mut dyn Policy) -> SimResult {
+        self.run_with_plan(jobs, forecaster, policy, &FaultPlan::none())
+    }
+
+    /// Batch driver with an injected fault schedule. The empty plan is
+    /// bitwise identical to [`Simulator::run`]; a non-empty plan replays
+    /// the same failure history on every run with the same inputs.
+    pub fn run_with_plan(
+        &self,
+        jobs: &[Job],
+        forecaster: &Forecaster,
+        policy: &mut dyn Policy,
+        plan: &FaultPlan,
+    ) -> SimResult {
         let mut engine = ClusterEngine::new(self.clone());
+        engine.set_fault_plan(plan.clone());
         for job in jobs {
             engine.add_job(job.clone());
         }
@@ -790,7 +930,11 @@ impl Simulator {
             engine.step(t, forecaster, policy);
             t += 1;
         }
-        engine.finish(policy.name())
+        let mut result = engine.finish(policy.name());
+        let d = policy.degradation();
+        result.metrics.degraded_stale = d.stale;
+        result.metrics.degraded_fallback = d.fallback;
+        result
     }
 }
 

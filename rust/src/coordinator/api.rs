@@ -127,6 +127,18 @@ pub struct StatsResponse {
     pub p99_decision_ms: f64,
     /// Carbon emitted by completed jobs so far (grams).
     pub carbon_g: f64,
+    /// Degradation ladder: slots decided on a stale last-known-good carbon
+    /// forecast (see `crate::faults`; 0 when the signal never degraded).
+    pub degraded_stale: u64,
+    /// Degradation ladder: slots decided by the carbon-agnostic fallback.
+    pub degraded_fallback: u64,
+    /// Shard supervisor: shard kills detected and failed over (0 at the
+    /// single-shard leader; populated by the sharded frontend).
+    pub failovers: u64,
+    /// Shard supervisor: checkpointed submissions re-routed to survivors.
+    pub rerouted: u64,
+    /// Shard supervisor: checkpointed submissions no survivor would admit.
+    pub failover_shed: u64,
 }
 
 /// Per-member outcome inside a [`Response::Batch`].
@@ -338,6 +350,11 @@ impl WireResponse {
                 pairs.push(("p50_decision_ms", Json::Num(s.p50_decision_ms)));
                 pairs.push(("p99_decision_ms", Json::Num(s.p99_decision_ms)));
                 pairs.push(("carbon_g", Json::Num(s.carbon_g)));
+                pairs.push(("degraded_stale", Json::Num(s.degraded_stale as f64)));
+                pairs.push(("degraded_fallback", Json::Num(s.degraded_fallback as f64)));
+                pairs.push(("failovers", Json::Num(s.failovers as f64)));
+                pairs.push(("rerouted", Json::Num(s.rerouted as f64)));
+                pairs.push(("failover_shed", Json::Num(s.failover_shed as f64)));
             }
             Response::Drained { completed, carbon_g, mean_delay_hours } => {
                 pairs.push(("kind", Json::Str("drained".into())));
@@ -442,6 +459,24 @@ fn legacy_response_json(resp: &Response) -> Json {
     }
 }
 
+/// Checked decode of a `u64` counter field: absent keys read as 0 (additive
+/// fields stay wire-compatible with older peers), but a present value must
+/// be a nonnegative integer representable losslessly in the f64-carried JSON
+/// number (≤ 2^53) — a lossy `as u64` cast would silently wrap negative
+/// values and truncate fractions.
+fn counter_field(v: &Json, key: &str) -> Result<u64, String> {
+    match v.get(key) {
+        None => Ok(0),
+        Some(n) => n
+            .as_f64()
+            .filter(|f| {
+                f.is_finite() && *f >= 0.0 && f.fract() == 0.0 && *f <= 9_007_199_254_740_992.0
+            })
+            .map(|f| f as u64)
+            .ok_or_else(|| format!("'{key}' must be a nonnegative integer counter")),
+    }
+}
+
 fn parse_v2_response(v: &Json) -> Result<Response, String> {
     let kind = v.get("kind").and_then(Json::as_str).ok_or("missing 'kind'")?;
     match kind {
@@ -475,10 +510,10 @@ fn parse_v2_response(v: &Json) -> Result<Response, String> {
         "status" => Ok(Response::Status(parse_status_fields(v))),
         "stats" => Ok(Response::Stats(StatsResponse {
             slot: v.get("slot").and_then(Json::as_usize).unwrap_or(0),
-            requests: v.get("requests").and_then(Json::as_f64).unwrap_or(0.0) as u64,
-            accepted: v.get("accepted").and_then(Json::as_f64).unwrap_or(0.0) as u64,
-            shed: v.get("shed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
-            batches: v.get("batches").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            requests: counter_field(v, "requests")?,
+            accepted: counter_field(v, "accepted")?,
+            shed: counter_field(v, "shed")?,
+            batches: counter_field(v, "batches")?,
             pending: v.get("pending").and_then(Json::as_usize).unwrap_or(0),
             max_pending: v.get("max_pending").and_then(Json::as_usize).unwrap_or(0),
             queue_depths: v
@@ -489,6 +524,11 @@ fn parse_v2_response(v: &Json) -> Result<Response, String> {
             p50_decision_ms: v.get("p50_decision_ms").and_then(Json::as_f64).unwrap_or(0.0),
             p99_decision_ms: v.get("p99_decision_ms").and_then(Json::as_f64).unwrap_or(0.0),
             carbon_g: v.get("carbon_g").and_then(Json::as_f64).unwrap_or(0.0),
+            degraded_stale: counter_field(v, "degraded_stale")?,
+            degraded_fallback: counter_field(v, "degraded_fallback")?,
+            failovers: counter_field(v, "failovers")?,
+            rerouted: counter_field(v, "rerouted")?,
+            failover_shed: counter_field(v, "failover_shed")?,
         })),
         "drained" => Ok(Response::Drained {
             completed: v.get("completed").and_then(Json::as_usize).unwrap_or(0),
@@ -647,6 +687,62 @@ mod tests {
         };
         let line = r.to_json_line();
         assert_eq!(WireResponse::from_json_line(&line).unwrap(), r, "{line}");
+    }
+
+    #[test]
+    fn stats_roundtrip_with_fault_counters() {
+        let r = WireResponse {
+            v: PROTOCOL_VERSION,
+            id: None,
+            resp: Response::Stats(StatsResponse {
+                slot: 9,
+                requests: 1_234_567_890_123,
+                accepted: 42,
+                shed: 3,
+                batches: 7,
+                pending: 5,
+                max_pending: 4096,
+                queue_depths: vec![2, 2, 1],
+                p50_decision_ms: 0.25,
+                p99_decision_ms: 1.5,
+                carbon_g: 10.0,
+                degraded_stale: 4,
+                degraded_fallback: 2,
+                failovers: 1,
+                rerouted: 6,
+                failover_shed: 1,
+            }),
+        };
+        let line = r.to_json_line();
+        assert_eq!(WireResponse::from_json_line(&line).unwrap(), r, "{line}");
+        // Absent additive fields decode as 0 (wire back-compat).
+        let old = r#"{"v": 2, "ok": true, "kind": "stats", "slot": 1, "requests": 3}"#;
+        match WireResponse::from_json_line(old).unwrap().resp {
+            Response::Stats(s) => {
+                assert_eq!(s.requests, 3);
+                assert_eq!(s.degraded_stale, 0);
+                assert_eq!(s.failovers, 0);
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn counter_decode_rejects_lossy_values() {
+        // A lossy `as u64` cast would wrap -3 to a huge counter and truncate
+        // 1.5 to 1; the checked path refuses both instead.
+        for bad in ["-3", "1.5", "1e300", "\"many\""] {
+            let line =
+                format!(r#"{{"v": 2, "ok": true, "kind": "stats", "slot": 0, "shed": {bad}}}"#);
+            let err = WireResponse::from_json_line(&line).unwrap_err();
+            assert!(err.contains("shed"), "{bad}: {err}");
+        }
+        // Boundary: 2^53 is the largest losslessly-representable counter.
+        let ok = r#"{"v": 2, "ok": true, "kind": "stats", "slot": 0, "shed": 9007199254740992}"#;
+        match WireResponse::from_json_line(ok).unwrap().resp {
+            Response::Stats(s) => assert_eq!(s.shed, 9_007_199_254_740_992),
+            other => panic!("expected stats, got {other:?}"),
+        }
     }
 
     #[test]

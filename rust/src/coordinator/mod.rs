@@ -13,5 +13,5 @@ pub use api::{
     SubmitRequest, WireRequest, WireResponse, PROTOCOL_VERSION,
 };
 pub use loadgen::{drive, run_serve_bench, submissions_of, DriveReport, ServeBenchOpts};
-pub use server::{ClusterHandle, Coordinator, CoordinatorConfig};
+pub use server::{CheckpointState, ClusterHandle, Coordinator, CoordinatorConfig};
 pub use shard::{shard_regions, ShardedCoordinator};

@@ -18,6 +18,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -41,6 +42,36 @@ enum Envelope {
     /// by the sharded frontend to merge fleet percentiles bucket-wise. Not
     /// a service request: it does not count toward the `requests` stat.
     Latency { reply: mpsc::Sender<LatencyHistogram> },
+    /// Fault injection: stop immediately without draining — the shard
+    /// supervisor's simulated crash (see `crate::faults`). Pending jobs stay
+    /// in the write-ahead checkpoint for failover.
+    Kill,
+}
+
+/// Write-ahead record of a coordinator's externally visible submission
+/// state, kept exactly in step with the leader (the leader appends within
+/// the same request handling that admits or completes a job). On a shard
+/// kill the supervisor replays [`CheckpointState::pending`] onto surviving
+/// shards, and a restarted shard rejoins empty but deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct CheckpointState {
+    /// Every admitted submission, in admission order: (job id, request).
+    pub accepted: Vec<(usize, SubmitRequest)>,
+    /// Job ids whose outcomes the leader has observed.
+    pub completed: Vec<usize>,
+}
+
+impl CheckpointState {
+    /// Submissions admitted but not yet completed, in admission order —
+    /// exactly the jobs a failover must re-route.
+    pub fn pending(&self) -> Vec<SubmitRequest> {
+        let done: std::collections::BTreeSet<usize> = self.completed.iter().copied().collect();
+        self.accepted
+            .iter()
+            .filter(|(id, _)| !done.contains(id))
+            .map(|(_, s)| s.clone())
+            .collect()
+    }
 }
 
 /// Client handle to a running coordinator.
@@ -53,6 +84,7 @@ pub struct ClusterHandle {
 pub struct Coordinator {
     handle: Option<JoinHandle<RunMetrics>>,
     tx: mpsc::Sender<Envelope>,
+    checkpoint: Arc<Mutex<CheckpointState>>,
 }
 
 /// Coordinator configuration.
@@ -91,12 +123,21 @@ impl Coordinator {
         policy: Box<dyn Policy + Send>,
     ) -> Coordinator {
         let (tx, rx) = mpsc::channel::<Envelope>();
-        let handle = std::thread::spawn(move || leader_loop(cfg, forecaster, policy, rx));
-        Coordinator { handle: Some(handle), tx }
+        let checkpoint = Arc::new(Mutex::new(CheckpointState::default()));
+        let ck = Arc::clone(&checkpoint);
+        let handle = std::thread::spawn(move || leader_loop(cfg, forecaster, policy, rx, ck));
+        Coordinator { handle: Some(handle), tx, checkpoint }
     }
 
     pub fn handle(&self) -> ClusterHandle {
         ClusterHandle { tx: self.tx.clone() }
+    }
+
+    /// Snapshot of the write-ahead checkpoint. Exact whenever no request is
+    /// in flight (every [`ClusterHandle::request`] is synchronous, so a
+    /// single-threaded caller always observes a quiescent leader).
+    pub fn checkpoint(&self) -> CheckpointState {
+        self.checkpoint.lock().expect("checkpoint poisoned").clone()
     }
 
     /// Drain all jobs, stop the leader, and return the final metrics.
@@ -105,6 +146,14 @@ impl Coordinator {
         let _ = h.request(Request::Drain);
         drop(self.tx);
         self.handle.take().expect("shutdown called once").join().expect("leader panicked")
+    }
+
+    /// Fault injection: stop the leader immediately — no drain, pending
+    /// jobs abandoned (they remain visible via [`Coordinator::checkpoint`]).
+    /// Returns the metrics of what the shard completed before dying.
+    pub fn kill(mut self) -> RunMetrics {
+        let _ = self.tx.send(Envelope::Kill);
+        self.handle.take().expect("kill called once").join().expect("leader panicked")
     }
 }
 
@@ -203,10 +252,13 @@ struct Leader {
     shed: u64,
     batches: u64,
     latency: LatencyHistogram,
+    /// Write-ahead submission checkpoint shared with the supervisor side
+    /// (appended within the same request handling that admits/completes).
+    checkpoint: Arc<Mutex<CheckpointState>>,
 }
 
 impl Leader {
-    fn new(cfg: CoordinatorConfig) -> Leader {
+    fn new(cfg: CoordinatorConfig, checkpoint: Arc<Mutex<CheckpointState>>) -> Leader {
         let catalog = profile::catalog_for(cfg.hardware);
         let index = catalog.iter().enumerate().map(|(i, w)| (w.name, i)).collect();
         let k_max = profile::default_k_max(cfg.hardware);
@@ -233,6 +285,7 @@ impl Leader {
             shed: 0,
             batches: 0,
             latency: LatencyHistogram::new(),
+            checkpoint,
         }
     }
 
@@ -301,6 +354,11 @@ impl Leader {
             watts_per_unit: spec.watts_per_unit,
         };
         self.engine.add_job(job);
+        self.checkpoint
+            .lock()
+            .expect("checkpoint poisoned")
+            .accepted
+            .push((self.next_id, s.clone()));
         self.queue_of.push(queue as u8);
         self.depths[queue.min(self.depths.len() - 1)] += 1;
         self.accepted += 1;
@@ -308,11 +366,18 @@ impl Leader {
         SubmitOutcome::Accepted { job_id: self.next_id - 1 }
     }
 
-    /// Fold newly completed jobs into the per-queue depth counters.
+    /// Fold newly completed jobs into the per-queue depth counters (and the
+    /// write-ahead checkpoint's completed set).
     fn sync_completions(&mut self) {
         let outs = self.engine.outcomes();
+        if self.outcomes_seen == outs.len() {
+            return;
+        }
+        let mut ck = self.checkpoint.lock().expect("checkpoint poisoned");
         while self.outcomes_seen < outs.len() {
-            let q = self.queue_of.get(outs[self.outcomes_seen].id).copied().unwrap_or(0) as usize;
+            let id = outs[self.outcomes_seen].id;
+            ck.completed.push(id);
+            let q = self.queue_of.get(id).copied().unwrap_or(0) as usize;
             let q = q.min(self.depths.len() - 1);
             self.depths[q] = self.depths[q].saturating_sub(1);
             self.outcomes_seen += 1;
@@ -345,6 +410,14 @@ impl Leader {
             p50_decision_ms: self.latency.percentile_ms(50.0),
             p99_decision_ms: self.latency.percentile_ms(99.0),
             carbon_g: self.engine.outcomes().iter().map(|o| o.carbon_g).sum(),
+            // Degradation counters live in the policy; `handle` patches them
+            // in (the policy is not reachable from `&self` here). Supervisor
+            // counters are always 0 at the single-shard leader.
+            degraded_stale: 0,
+            degraded_fallback: 0,
+            failovers: 0,
+            rerouted: 0,
+            failover_shed: 0,
         }
     }
 
@@ -414,7 +487,11 @@ impl Leader {
             }
             Request::Stats => {
                 self.sync_completions();
-                (Response::Stats(self.stats()), false)
+                let mut st = self.stats();
+                let d = policy.degradation();
+                st.degraded_stale = d.stale;
+                st.degraded_fallback = d.fallback;
+                (Response::Stats(st), false)
             }
             Request::Drain => {
                 let mut guard = 0usize;
@@ -442,8 +519,9 @@ fn leader_loop(
     forecaster: Forecaster,
     mut policy: Box<dyn Policy + Send>,
     rx: mpsc::Receiver<Envelope>,
+    checkpoint: Arc<Mutex<CheckpointState>>,
 ) -> RunMetrics {
-    let mut leader = Leader::new(cfg);
+    let mut leader = Leader::new(cfg, checkpoint);
     while let Ok(env) = rx.recv() {
         match env {
             Envelope::Api { req, reply } => {
@@ -457,9 +535,16 @@ fn leader_loop(
             Envelope::Latency { reply } => {
                 let _ = reply.send(leader.latency.clone());
             }
+            // Simulated crash: stop without draining. The checkpoint keeps
+            // the pending set for the supervisor's failover.
+            Envelope::Kill => break,
         }
     }
-    leader.engine.finish(policy.name()).metrics
+    let mut metrics = leader.engine.finish(policy.name()).metrics;
+    let d = policy.degradation();
+    metrics.degraded_stale = d.stale;
+    metrics.degraded_fallback = d.fallback;
+    metrics
 }
 
 #[cfg(test)]
@@ -620,6 +705,28 @@ mod tests {
         let after = h.stats().unwrap().requests;
         assert_eq!(after, before + 1, "only the Stats call itself may count");
         coord.shutdown();
+    }
+
+    #[test]
+    fn kill_preserves_checkpoint_pending() {
+        let coord = start_coordinator();
+        let h = coord.handle();
+        h.submit("N-body(N=100k)", 1.0, 0).unwrap();
+        h.submit("Jacobi(N=1k)", 30.0, 1).unwrap();
+        h.submit("Heat(N=1k)", 30.0, 2).unwrap();
+        // One slot: the 1 h job completes, the long jobs stay pending.
+        h.tick().unwrap();
+        let ck = coord.checkpoint();
+        assert_eq!(ck.accepted.len(), 3);
+        assert_eq!(ck.completed, vec![0]);
+        let pending = ck.pending();
+        assert_eq!(pending.len(), 2);
+        assert_eq!(pending[0].workload, "Jacobi(N=1k)");
+        assert_eq!(pending[1].workload, "Heat(N=1k)");
+        // Kill without drain: only the completed job shows in the metrics.
+        let metrics = coord.kill();
+        assert_eq!(metrics.completed, 1);
+        assert_eq!(metrics.unfinished, 2);
     }
 
     #[test]

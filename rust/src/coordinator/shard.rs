@@ -22,6 +22,7 @@ use crate::coordinator::api::{
 use crate::coordinator::server::{ClusterHandle, Coordinator, CoordinatorConfig};
 use crate::experiments::cells::{route_arrival, DispatchStrategy};
 use crate::experiments::runner::PreparedExperiment;
+use crate::faults::ShardKill;
 use crate::sched::PolicyKind;
 use crate::util::stats::LatencyHistogram;
 
@@ -68,6 +69,13 @@ struct Shard {
 }
 
 /// A fleet of per-region coordinators behind a deterministic geo-dispatcher.
+///
+/// The frontend doubles as the **shard supervisor** for fault injection
+/// (see `crate::faults`): a [`ShardKill`] plan kills chosen shards at chosen
+/// submission counts; the supervisor replays the dead shard's write-ahead
+/// checkpoint onto survivors (bounded retry, deterministic rotation) and
+/// restarts the shard from its original recipe so it rejoins empty but
+/// deterministic at the dispatcher's current virtual slot.
 pub struct ShardedCoordinator {
     shards: Vec<Shard>,
     strategy: DispatchStrategy,
@@ -75,6 +83,20 @@ pub struct ShardedCoordinator {
     slot: usize,
     cfg: ExperimentConfig,
     service: ServiceConfig,
+    /// Policy every shard runs (part of the restart recipe).
+    kind: PolicyKind,
+    /// Per-shard capacity (part of the restart recipe).
+    per_capacity: usize,
+    /// Pending shard kills, consumed as their submission counts are reached.
+    kill_plan: Vec<ShardKill>,
+    /// Submissions routed so far (accepted or not) — the kill-plan clock.
+    submissions_seen: u64,
+    /// Supervisor counters reported through `stats`.
+    failovers: u64,
+    rerouted: u64,
+    failover_shed: u64,
+    /// Final metrics of killed shard incarnations (folded into `shutdown`).
+    killed_metrics: Vec<RunMetrics>,
 }
 
 impl ShardedCoordinator {
@@ -92,21 +114,7 @@ impl ShardedCoordinator {
         let per_capacity = (cfg.capacity / regions.len()).max(1);
         let shards = regions
             .iter()
-            .map(|&region| {
-                let mut rcfg = cfg.clone();
-                rcfg.region = region.key().to_string();
-                rcfg.capacity = per_capacity;
-                let prep = PreparedExperiment::prepare(&rcfg);
-                let policy = prep.build_policy(kind);
-                let forecaster = Forecaster::perfect(prep.eval_trace.clone());
-                let coord = Coordinator::start(
-                    CoordinatorConfig::from_experiment(&rcfg, service.clone()),
-                    forecaster.clone(),
-                    policy,
-                );
-                let handle = coord.handle();
-                Shard { region, forecaster, coord, handle }
-            })
+            .map(|&region| Self::spawn_shard(cfg, service, kind, region, per_capacity))
             .collect();
         ShardedCoordinator {
             shards,
@@ -115,6 +123,110 @@ impl ShardedCoordinator {
             slot: 0,
             cfg: cfg.clone(),
             service: service.clone(),
+            kind,
+            per_capacity,
+            kill_plan: Vec::new(),
+            submissions_seen: 0,
+            failovers: 0,
+            rerouted: 0,
+            failover_shed: 0,
+            killed_metrics: Vec::new(),
+        }
+    }
+
+    /// The shard construction recipe shared by `start` and failover
+    /// restarts — same inputs, same shard, deterministically.
+    fn spawn_shard(
+        cfg: &ExperimentConfig,
+        service: &ServiceConfig,
+        kind: PolicyKind,
+        region: Region,
+        per_capacity: usize,
+    ) -> Shard {
+        let mut rcfg = cfg.clone();
+        rcfg.region = region.key().to_string();
+        rcfg.capacity = per_capacity;
+        let prep = PreparedExperiment::prepare(&rcfg);
+        let policy = prep.build_policy(kind);
+        let forecaster = Forecaster::perfect(prep.eval_trace.clone());
+        let coord = Coordinator::start(
+            CoordinatorConfig::from_experiment(&rcfg, service.clone()),
+            forecaster.clone(),
+            policy,
+        );
+        let handle = coord.handle();
+        Shard { region, forecaster, coord, handle }
+    }
+
+    /// Arm the supervisor with a seeded kill plan (see
+    /// [`crate::faults::FaultPlan`]). Kills fire as submissions arrive.
+    pub fn set_kill_plan(&mut self, kills: &[ShardKill]) {
+        self.kill_plan = kills.to_vec();
+    }
+
+    /// Supervisor counters: (failovers, rerouted, failover_shed).
+    pub fn failover_counters(&self) -> (u64, u64, u64) {
+        (self.failovers, self.rerouted, self.failover_shed)
+    }
+
+    /// Final metrics of shard incarnations killed by the fault plan.
+    pub fn killed_metrics(&self) -> &[RunMetrics] {
+        &self.killed_metrics
+    }
+
+    /// Fire any armed kills whose submission count has been reached.
+    fn maybe_kill(&mut self) {
+        while let Some(pos) = self
+            .kill_plan
+            .iter()
+            .position(|k| k.at_submission <= self.submissions_seen && k.shard < self.shards.len())
+        {
+            let k = self.kill_plan.remove(pos);
+            self.fail_shard(k.shard);
+        }
+    }
+
+    /// Kill shard `s`, fail its checkpointed pending submissions over to the
+    /// survivors, and restart it from the original recipe. Deterministic end
+    /// to end: the checkpoint is exact (requests are synchronous), the
+    /// retry rotation is a function of (pending index, attempt), and the
+    /// restarted shard is rebuilt from the same inputs and ticked to the
+    /// dispatcher's clock.
+    fn fail_shard(&mut self, s: usize) {
+        if self.shards.len() <= 1 || s >= self.shards.len() {
+            return; // no survivor to fail over to
+        }
+        self.failovers += 1;
+        let region = self.shards[s].region;
+        let fresh =
+            Self::spawn_shard(&self.cfg, &self.service, self.kind, region, self.per_capacity);
+        let dead = std::mem::replace(&mut self.shards[s], fresh);
+        let checkpoint = dead.coord.checkpoint();
+        self.killed_metrics.push(dead.coord.kill());
+        // Rejoin: catch the fresh incarnation up to the dispatcher's clock.
+        for _ in 0..self.slot {
+            let _ = self.shards[s].handle.request(Request::Tick);
+        }
+        // Bounded retry over the survivors: pending job j starts at survivor
+        // (j mod n-1) and rotates once per attempt — deterministic backoff
+        // in virtual time, at most one attempt per survivor.
+        let pending = checkpoint.pending();
+        let survivors: Vec<usize> = (0..self.shards.len()).filter(|&i| i != s).collect();
+        for (j, sub) in pending.iter().enumerate() {
+            let mut placed = false;
+            for attempt in 0..survivors.len() {
+                let target = survivors[(j + attempt) % survivors.len()];
+                if let Response::Submitted { .. } =
+                    self.shards[target].handle.request(Request::Submit(sub.clone()))
+                {
+                    self.rerouted += 1;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                self.failover_shed += 1;
+            }
         }
     }
 
@@ -154,6 +266,10 @@ impl ShardedCoordinator {
     }
 
     pub fn submit(&mut self, s: &SubmitRequest) -> Response {
+        self.submissions_seen += 1;
+        if !self.kill_plan.is_empty() {
+            self.maybe_kill();
+        }
         let r = self.route(s);
         self.shards[r].handle.request(Request::Submit(s.clone()))
     }
@@ -176,12 +292,20 @@ impl ShardedCoordinator {
             };
         }
         if self.shards.len() == 1 {
+            self.submissions_seen += jobs.len() as u64;
             return self.shards[0].handle.request(Request::SubmitBatch(jobs));
         }
         let n = jobs.len();
         let mut groups: Vec<Vec<SubmitRequest>> = vec![Vec::new(); self.shards.len()];
         let mut positions: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
         for (i, s) in jobs.into_iter().enumerate() {
+            // Each member advances the kill-plan clock exactly as a single
+            // submit would, so a fixed stream kills at the same point
+            // whichever ingest shape delivered it.
+            self.submissions_seen += 1;
+            if !self.kill_plan.is_empty() {
+                self.maybe_kill();
+            }
             let r = self.route(&s);
             groups[r].push(s);
             positions[r].push(i);
@@ -293,6 +417,11 @@ impl ShardedCoordinator {
             p50_decision_ms: merged.percentile_ms(50.0),
             p99_decision_ms: merged.percentile_ms(99.0),
             carbon_g: 0.0,
+            degraded_stale: 0,
+            degraded_fallback: 0,
+            failovers: self.failovers,
+            rerouted: self.rerouted,
+            failover_shed: self.failover_shed,
         };
         for s in &per {
             agg.requests += s.requests;
@@ -305,6 +434,8 @@ impl ShardedCoordinator {
                 *d += sd;
             }
             agg.carbon_g += s.carbon_g;
+            agg.degraded_stale += s.degraded_stale;
+            agg.degraded_fallback += s.degraded_fallback;
         }
         Response::Stats(agg)
     }
@@ -330,9 +461,13 @@ impl ShardedCoordinator {
         Response::Drained { completed, carbon_g, mean_delay_hours }
     }
 
-    /// Stop every shard and collect their final run metrics (shard order).
+    /// Stop every shard and collect their final run metrics (shard order,
+    /// followed by any fault-killed incarnations in kill order).
     pub fn shutdown(self) -> Vec<RunMetrics> {
-        self.shards.into_iter().map(|sh| sh.coord.shutdown()).collect()
+        let mut out: Vec<RunMetrics> =
+            self.shards.into_iter().map(|sh| sh.coord.shutdown()).collect();
+        out.extend(self.killed_metrics);
+        out
     }
 }
 
@@ -387,6 +522,57 @@ mod tests {
         );
         // The tail is still visible in the union.
         assert!(merged.percentile_ms(99.5) >= b.percentile_ms(50.0) * 0.5);
+    }
+
+    #[test]
+    fn shard_kill_failover_drains_accepted_exactly_once() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 8;
+        cfg.horizon_hours = 48;
+        cfg.history_hours = 72;
+        cfg.replay_offsets = 1;
+        let service = ServiceConfig::default();
+        let regions = shard_regions("2", &cfg.region).unwrap();
+        let mut cluster = ShardedCoordinator::start(
+            &cfg,
+            &service,
+            PolicyKind::CarbonAgnostic,
+            &regions,
+            DispatchStrategy::RoundRobin,
+        );
+        cluster.set_kill_plan(&[ShardKill { shard: 0, at_submission: 4 }]);
+        let mut accepted = 0usize;
+        for i in 0..8usize {
+            let r = cluster.submit(&SubmitRequest {
+                workload: "N-body(N=100k)".to_string(),
+                length_hours: 2.0,
+                queue: i % 3,
+            });
+            if matches!(r, Response::Submitted { .. }) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 8);
+        let (failovers, rerouted, shed) = cluster.failover_counters();
+        assert_eq!(failovers, 1);
+        assert!(rerouted > 0, "killed shard held pending jobs to fail over");
+        assert_eq!(shed, 0, "ample survivor capacity must not shed");
+        match cluster.stats_merged() {
+            Response::Stats(st) => assert_eq!(st.failovers, 1),
+            other => panic!("expected stats, got {other:?}"),
+        }
+        // Exactly-once: what the killed incarnation completed plus what the
+        // fleet drains equals every accepted submission.
+        let killed_completed: usize =
+            cluster.killed_metrics().iter().map(|m| m.completed).sum();
+        let drained = match cluster.drain() {
+            Response::Drained { completed, .. } => completed,
+            other => panic!("expected drained, got {other:?}"),
+        };
+        assert_eq!(killed_completed + drained, accepted);
+        let metrics = cluster.shutdown();
+        // Live shards plus one killed incarnation.
+        assert_eq!(metrics.len(), 3);
     }
 
     #[test]

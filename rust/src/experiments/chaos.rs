@@ -1,0 +1,276 @@
+//! Chaos benchmark (§Robustness): what running through faults costs.
+//!
+//! Two deterministic legs over one seeded [`FaultPlan`]:
+//!
+//! - **Sim leg** — one prepared experiment, the chosen policy run clean and
+//!   under the plan's slot crashes + signal outages: the carbon overhead of
+//!   the degradation ladder, restart counts, lost work, and crash-recovery
+//!   percentiles.
+//! - **Serve leg** — a sharded deployment driven through the same arrival
+//!   stream with the plan's mid-stream shard kills armed: supervisor
+//!   failover counters, the shed-during-failover rate, and the exactly-once
+//!   drain identity (killed-incarnation completions + failover sheds +
+//!   fleet drain == every accepted submission).
+//!
+//! Emitted as the `BENCH_chaos.json` document; the CI `chaos-smoke` job
+//! runs the smoke config, asserts the headline fields, and uploads the
+//! JSON as an artifact.
+
+use crate::carbon::synth::Region;
+use crate::config::{ExperimentConfig, ServiceConfig};
+use crate::coordinator::loadgen::{drive, submissions_of};
+use crate::coordinator::shard::ShardedCoordinator;
+use crate::experiments::cells::DispatchStrategy;
+use crate::experiments::runner::PreparedExperiment;
+use crate::faults::{FaultPlan, FaultSpec};
+use crate::sched::PolicyKind;
+use crate::util::json::Json;
+use crate::workload::tracegen;
+
+/// Options for [`run_chaos_bench`].
+#[derive(Debug, Clone)]
+pub struct ChaosBenchOpts {
+    pub cfg: ExperimentConfig,
+    pub service: ServiceConfig,
+    /// Fault preset name (see [`FaultSpec::preset`]).
+    pub preset: String,
+    /// Sim-leg policy (the paper's headline is CarbonFlex — it is the only
+    /// policy with a non-trivial degradation ladder).
+    pub kind: PolicyKind,
+    /// Serve-leg shard policy.
+    pub serve_kind: PolicyKind,
+    /// Serve-leg arrival count. Must exceed the preset's
+    /// `kill_after_max` for the shard kill to fire mid-stream.
+    pub serve_jobs: usize,
+    /// Serve-leg shard count (kills need at least one survivor).
+    pub shards: usize,
+}
+
+impl ChaosBenchOpts {
+    pub fn new(cfg: ExperimentConfig, service: ServiceConfig) -> ChaosBenchOpts {
+        ChaosBenchOpts {
+            cfg,
+            service,
+            preset: "light".to_string(),
+            kind: PolicyKind::CarbonFlex,
+            serve_kind: PolicyKind::CarbonAgnostic,
+            serve_jobs: 120,
+            shards: 2,
+        }
+    }
+}
+
+/// The measured chaos document.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub preset: String,
+    // Sim leg.
+    pub carbon_clean_g: f64,
+    pub carbon_faulted_g: f64,
+    /// Carbon cost of running through the faults, % over the clean run.
+    pub carbon_overhead_pct: f64,
+    pub restarts: u64,
+    pub lost_work_hours: f64,
+    pub recovery_p50_slots: f64,
+    pub recovery_p99_slots: f64,
+    pub degraded_stale: u64,
+    pub degraded_fallback: u64,
+    // Serve leg.
+    pub serve_submitted: usize,
+    pub serve_accepted: usize,
+    pub serve_completed: usize,
+    pub killed_completed: usize,
+    pub failovers: u64,
+    pub rerouted: u64,
+    pub failover_shed: u64,
+    /// Fraction of failed-over submissions lost: shed / (rerouted + shed).
+    pub shed_during_failover_rate: f64,
+    /// Exactly-once drain identity: killed-incarnation completions +
+    /// failover sheds + fleet drain == accepted submissions.
+    pub drained_exactly_once: bool,
+}
+
+/// Run both chaos legs. Deterministic in `(opts.cfg.seed, preset)`; the
+/// "none" preset degenerates to a clean run with zero overhead.
+pub fn run_chaos_bench(opts: &ChaosBenchOpts) -> Result<ChaosReport, String> {
+    let spec = FaultSpec::preset(&opts.preset)
+        .ok_or_else(|| format!("unknown fault preset '{}'", opts.preset))?;
+    let cfg = &opts.cfg;
+
+    // --- Sim leg: clean vs faulted on one prepared experiment. ---
+    let plan = FaultPlan::generate(cfg.seed, &spec, cfg.horizon_hours, cfg.capacity, 1);
+    let prep = PreparedExperiment::prepare(cfg);
+    let clean = prep.run(opts.kind);
+    let faulted = prep.run_with_plan(opts.kind, &plan);
+    let (cg, fg) = (clean.metrics.carbon_g, faulted.metrics.carbon_g);
+    let carbon_overhead_pct = if cg > 0.0 { (fg - cg) / cg * 100.0 } else { 0.0 };
+
+    // --- Serve leg: sharded deployment with mid-stream shard kills. ---
+    let shards = opts.shards.max(2);
+    let serve_plan = FaultPlan::generate(cfg.seed, &spec, cfg.horizon_hours, cfg.capacity, shards);
+    let base = Region::parse(&cfg.region).unwrap_or(Region::ALL[0]);
+    let start = Region::ALL.iter().position(|r| r.key() == base.key()).unwrap_or(0);
+    let regions: Vec<Region> =
+        (0..shards).map(|i| Region::ALL[(start + i) % Region::ALL.len()]).collect();
+    let trace = tracegen::generate_n(cfg, cfg.horizon_hours, cfg.seed, opts.serve_jobs);
+    let arrivals = submissions_of(&trace);
+    let mut cluster = ShardedCoordinator::start(
+        cfg,
+        &opts.service,
+        opts.serve_kind,
+        &regions,
+        DispatchStrategy::RoundRobin,
+    );
+    cluster.set_kill_plan(&serve_plan.shard_kills);
+    let report = drive(&mut cluster, &arrivals, 1, "chaos");
+    let (failovers, rerouted, failover_shed) = cluster.failover_counters();
+    let killed_completed: usize = cluster.killed_metrics().iter().map(|m| m.completed).sum();
+    cluster.shutdown();
+    let failed_over = rerouted + failover_shed;
+    let shed_during_failover_rate =
+        if failed_over > 0 { failover_shed as f64 / failed_over as f64 } else { 0.0 };
+    let drained_exactly_once = killed_completed as u64
+        + report.completed as u64
+        + failover_shed
+        == report.accepted as u64;
+
+    Ok(ChaosReport {
+        preset: opts.preset.clone(),
+        carbon_clean_g: cg,
+        carbon_faulted_g: fg,
+        carbon_overhead_pct,
+        restarts: faulted.metrics.restarts,
+        lost_work_hours: faulted.metrics.lost_work_hours,
+        recovery_p50_slots: faulted.metrics.recovery_p50_slots,
+        recovery_p99_slots: faulted.metrics.recovery_p99_slots,
+        degraded_stale: faulted.metrics.degraded_stale,
+        degraded_fallback: faulted.metrics.degraded_fallback,
+        serve_submitted: report.submitted,
+        serve_accepted: report.accepted,
+        serve_completed: report.completed,
+        killed_completed,
+        failovers,
+        rerouted,
+        failover_shed,
+        shed_during_failover_rate,
+        drained_exactly_once,
+    })
+}
+
+impl ChaosReport {
+    /// The `BENCH_chaos.json` document.
+    pub fn to_json(&self, opts: &ChaosBenchOpts, wall_seconds: f64) -> Json {
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("region", Json::str(opts.cfg.region.clone())),
+                    ("capacity", Json::num(opts.cfg.capacity as f64)),
+                    ("horizon_hours", Json::num(opts.cfg.horizon_hours as f64)),
+                    ("seed", Json::num(opts.cfg.seed as f64)),
+                    ("preset", Json::str(self.preset.clone())),
+                    ("policy", Json::str(opts.kind.key())),
+                    ("serve_policy", Json::str(opts.serve_kind.key())),
+                    ("serve_jobs", Json::num(opts.serve_jobs as f64)),
+                    ("shards", Json::num(opts.shards.max(2) as f64)),
+                ]),
+            ),
+            ("carbon_clean_g", Json::num(self.carbon_clean_g)),
+            ("carbon_faulted_g", Json::num(self.carbon_faulted_g)),
+            ("carbon_overhead_pct", Json::num(self.carbon_overhead_pct)),
+            ("restarts", Json::num(self.restarts as f64)),
+            ("lost_work_hours", Json::num(self.lost_work_hours)),
+            ("recovery_p50_slots", Json::num(self.recovery_p50_slots)),
+            ("recovery_p99_slots", Json::num(self.recovery_p99_slots)),
+            ("degraded_stale", Json::num(self.degraded_stale as f64)),
+            ("degraded_fallback", Json::num(self.degraded_fallback as f64)),
+            (
+                "serve",
+                Json::obj(vec![
+                    ("submitted", Json::num(self.serve_submitted as f64)),
+                    ("accepted", Json::num(self.serve_accepted as f64)),
+                    ("completed", Json::num(self.serve_completed as f64)),
+                    ("killed_completed", Json::num(self.killed_completed as f64)),
+                    ("failovers", Json::num(self.failovers as f64)),
+                    ("rerouted", Json::num(self.rerouted as f64)),
+                    ("failover_shed", Json::num(self.failover_shed as f64)),
+                ]),
+            ),
+            ("shed_during_failover_rate", Json::num(self.shed_during_failover_rate)),
+            ("drained_exactly_once", Json::Bool(self.drained_exactly_once)),
+            ("wall_seconds", Json::num(wall_seconds)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_opts() -> ChaosBenchOpts {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 10;
+        cfg.horizon_hours = 48;
+        cfg.history_hours = 72;
+        cfg.replay_offsets = 1;
+        ChaosBenchOpts::new(cfg, ServiceConfig::default())
+    }
+
+    #[test]
+    fn chaos_bench_light_fires_and_balances() {
+        let opts = smoke_opts();
+        let r = run_chaos_bench(&opts).unwrap();
+        // The light preset's outage walks the ladder, and its shard kill
+        // (kill_after ≤ 96 < 120 arrivals) fires mid-stream.
+        assert!(r.degraded_stale + r.degraded_fallback > 0, "ladder never engaged");
+        assert_eq!(r.failovers, 1, "shard kill did not fire");
+        assert!(r.drained_exactly_once, "accepted submissions lost or duplicated");
+        assert!(r.carbon_clean_g > 0.0 && r.carbon_faulted_g > 0.0);
+        // Determinism: a second run reproduces the document bitwise.
+        let again = run_chaos_bench(&opts).unwrap();
+        assert_eq!(
+            r.to_json(&opts, 0.0).to_string(),
+            again.to_json(&opts, 0.0).to_string()
+        );
+    }
+
+    #[test]
+    fn chaos_bench_none_preset_is_clean() {
+        let mut opts = smoke_opts();
+        opts.preset = "none".to_string();
+        let r = run_chaos_bench(&opts).unwrap();
+        assert_eq!(r.carbon_overhead_pct, 0.0);
+        assert_eq!(r.restarts, 0);
+        assert_eq!(r.failovers, 0);
+        assert!(r.drained_exactly_once);
+        assert_eq!(r.carbon_clean_g.to_bits(), r.carbon_faulted_g.to_bits());
+    }
+
+    #[test]
+    fn chaos_bench_rejects_unknown_preset() {
+        let mut opts = smoke_opts();
+        opts.preset = "ragnarok".to_string();
+        assert!(run_chaos_bench(&opts).is_err());
+    }
+
+    #[test]
+    fn chaos_json_has_headline_fields() {
+        let opts = smoke_opts();
+        let doc = run_chaos_bench(&opts).unwrap().to_json(&opts, 1.5);
+        for field in [
+            "carbon_overhead_pct",
+            "recovery_p50_slots",
+            "recovery_p99_slots",
+            "shed_during_failover_rate",
+            "drained_exactly_once",
+        ] {
+            assert!(doc.get(field).is_some(), "missing headline field '{field}'");
+        }
+        assert_eq!(doc.get("schema").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            doc.get("config").and_then(|c| c.get("preset")).and_then(Json::as_str),
+            Some("light")
+        );
+    }
+}

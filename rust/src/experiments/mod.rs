@@ -5,6 +5,7 @@
 //! these.
 
 pub mod cells;
+pub mod chaos;
 pub mod figures;
 pub mod forecast_noise;
 pub mod perf;
@@ -14,5 +15,6 @@ pub mod sweep;
 pub mod yearlong;
 
 pub use cells::{route_arrival, DispatchStrategy};
+pub use chaos::{run_chaos_bench, ChaosBenchOpts, ChaosReport};
 pub use runner::{run_policies, run_policy, ExperimentRow, PreparedExperiment};
 pub use sweep::{SweepRunner, SweepSpec, SweepVariant};

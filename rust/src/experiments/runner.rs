@@ -257,6 +257,30 @@ impl PreparedExperiment {
         );
         sim.run(&self.eval_jobs, forecaster, policy.as_mut())
     }
+
+    /// Run one policy under a fault plan (see `crate::faults`): slot crashes
+    /// hit the engine, signal outages mask the forecaster (with the plan's
+    /// bounded-staleness knob) so the policy walks its degradation ladder.
+    /// An empty plan takes exactly the [`run`](PreparedExperiment::run)
+    /// path — bitwise identical.
+    pub fn run_with_plan(&self, kind: PolicyKind, plan: &crate::faults::FaultPlan) -> SimResult {
+        if plan.is_empty() {
+            return self.run(kind);
+        }
+        let mut policy = self.build_policy(kind);
+        let forecaster = self.eval_forecaster.clone().with_outages(
+            &plan.outages,
+            plan.max_stale_slots,
+            self.cfg.horizon_hours,
+        );
+        let sim = Simulator::new(
+            self.cfg.capacity,
+            EnergyModel::for_hardware(self.cfg.hardware),
+            self.cfg.queues.len(),
+            self.cfg.horizon_hours,
+        );
+        sim.run_with_plan(&self.eval_jobs, &forecaster, policy.as_mut(), plan)
+    }
 }
 
 /// One row of a paper-style results table.

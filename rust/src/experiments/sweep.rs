@@ -40,7 +40,7 @@
 //! reproduces the legacy `run_spatial_prepared` / `run_yearlong` outputs
 //! (pinned by their in-test reference implementations). Rows are emitted in
 //! grid order: region → dispatch → capacity → horizon → week → variant →
-//! seed, with policy innermost.
+//! faults → seed, with policy innermost.
 //!
 //! Two further batching features (§Perf):
 //!
@@ -65,6 +65,7 @@ use crate::cluster::sim::SimResult;
 use crate::config::ExperimentConfig;
 use crate::experiments::cells::{self, DispatchStrategy, SpatialPrep, WeekCell};
 use crate::experiments::runner::{prep_hash, PreparedExperiment};
+use crate::faults::{FaultPlan, FaultSpec};
 use crate::sched::PolicyKind;
 use crate::util::bench::Table;
 use crate::util::json::Json;
@@ -128,6 +129,13 @@ pub struct SweepSpec {
     pub aging_window_hours: usize,
     /// Named config mutations (applied after the first-class axes).
     pub variants: Vec<SweepVariant>,
+    /// Fault-injection presets (see `faults::FaultSpec::preset`; defaults
+    /// to `["none"]`). A non-"none" entry makes its points simulate under a
+    /// [`FaultPlan`] generated from `(point.seed, preset)`. The axis stays
+    /// out of [`config_for`](SweepSpec::config_for), so faulted and clean
+    /// points at the same setting share one memoized preparation; it cannot
+    /// combine with multi-region `+` sets or the week-window axis.
+    pub faults: Vec<String>,
     /// Workload/trace seeds; each is mixed into a per-cell seed.
     pub seeds: Vec<u64>,
     /// Policies to run at every point.
@@ -159,6 +167,8 @@ pub struct SweepPoint {
     pub week: Option<usize>,
     /// Label of the variant applied ("" when the axis is unused).
     pub variant: String,
+    /// Fault-preset label ("none" when the axis is unused).
+    pub faults: String,
     /// The spec-level seed entry this point simulates with (the config's
     /// seed, verbatim — so a single-cell sweep reproduces `compare`
     /// bitwise). Region/capacity/variant rows deliberately share their seed
@@ -213,6 +223,7 @@ impl SweepSpec {
             weeks: Vec::new(),
             aging_window_hours: DEFAULT_AGING_WINDOW_HOURS,
             variants: Vec::new(),
+            faults: Vec::new(),
             seeds: Vec::new(),
             policies: Vec::new(),
             spatial_preps: Vec::new(),
@@ -230,7 +241,7 @@ impl SweepSpec {
     }
 
     /// All grid points, in grid order (region → dispatch → capacity →
-    /// horizon → week → variant → seed).
+    /// horizon → week → variant → faults → seed).
     pub fn points(&self) -> Vec<SweepPoint> {
         let regions = axis_or(&self.regions, self.base.region.clone());
         let dispatchers = axis_or(&self.dispatchers, DispatchStrategy::RoundRobin);
@@ -268,6 +279,24 @@ impl SweepSpec {
                 "duplicate sweep variant label '{label}'"
             );
         }
+        let faults = axis_or(&self.faults, "none".to_string());
+        for (i, f) in faults.iter().enumerate() {
+            assert!(FaultSpec::preset(f).is_some(), "unknown fault preset '{f}'");
+            assert!(!faults[..i].contains(f), "duplicate fault preset '{f}'");
+        }
+        if faults.iter().any(|f| f != "none") {
+            // Composite cells run through their own drivers, which have no
+            // fault-plan path; restricting the axis keeps their bitwise
+            // contracts untouched.
+            assert!(
+                !regions.iter().any(|r| r.contains('+')),
+                "the faults axis cannot combine with multi-region '+' sets"
+            );
+            assert!(
+                self.weeks.is_empty(),
+                "the faults axis cannot combine with the week-window axis"
+            );
+        }
         let seeds = axis_or(&self.seeds, self.base.seed);
 
         let mut points = Vec::new();
@@ -284,22 +313,25 @@ impl SweepSpec {
                     for &horizon_hours in &horizons {
                         for &week in &weeks {
                             for variant in &variant_labels {
-                                for &seed in &seeds {
-                                    points.push(SweepPoint {
-                                        region: region.clone(),
-                                        dispatch: dispatch.clone(),
-                                        capacity,
-                                        // Week cells always evaluate one
-                                        // 168 h week.
-                                        horizon_hours: if week.is_some() {
-                                            168
-                                        } else {
-                                            horizon_hours
-                                        },
-                                        week,
-                                        variant: variant.clone(),
-                                        seed,
-                                    });
+                                for fault in &faults {
+                                    for &seed in &seeds {
+                                        points.push(SweepPoint {
+                                            region: region.clone(),
+                                            dispatch: dispatch.clone(),
+                                            capacity,
+                                            // Week cells always evaluate
+                                            // one 168 h week.
+                                            horizon_hours: if week.is_some() {
+                                                168
+                                            } else {
+                                                horizon_hours
+                                            },
+                                            week,
+                                            variant: variant.clone(),
+                                            faults: fault.clone(),
+                                            seed,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -332,8 +364,22 @@ impl SweepSpec {
             // drivers bit for bit.)
             cfg.history_hours = cfg.history_hours.max(cfg.horizon_hours);
         }
+        // `point.faults` deliberately never enters the config: preparation
+        // is fault-independent, so faulted and clean points stay in one
+        // [`prep_hash`] memoization group.
         cfg.seed = point.seed;
         cfg
+    }
+
+    /// The concrete fault plan for one point: empty for "none", otherwise
+    /// generated deterministically from the point's own seed and setting.
+    pub fn plan_for(&self, point: &SweepPoint) -> FaultPlan {
+        if point.faults.is_empty() || point.faults == "none" {
+            return FaultPlan::none();
+        }
+        let fspec = FaultSpec::preset(&point.faults)
+            .unwrap_or_else(|| panic!("unknown fault preset '{}'", point.faults));
+        FaultPlan::generate(point.seed, &fspec, point.horizon_hours, point.capacity, 1)
     }
 
     /// Apply the optional `[sweep]` table of an experiment TOML, so a
@@ -346,6 +392,7 @@ impl SweepSpec {
     /// capacities = [100, 150]
     /// seeds = [1, 2]
     /// weeks = [0, 1, 2, 3]
+    /// faults = ["none", "light"]
     /// aging_window_hours = 672
     /// policies = ["agnostic", "carbonflex", "oracle"]
     /// ```
@@ -416,6 +463,15 @@ impl SweepSpec {
         }
         if let Some(v) = sweep.get("weeks") {
             self.weeks = int_list(v, "weeks")?;
+        }
+        if let Some(v) = sweep.get("faults") {
+            let labels = str_list(v, "faults")?;
+            for f in &labels {
+                if FaultSpec::preset(f).is_none() {
+                    return Err(format!("sweep.faults: unknown fault preset '{f}'"));
+                }
+            }
+            self.faults = labels;
         }
         if let Some(v) = sweep.get("aging_window_hours") {
             match v.as_int() {
@@ -676,7 +732,11 @@ impl SweepRunner {
         let baselines: Vec<Baseline> = par_map(self.threads, &point_idxs, |&pi, _| {
             match &preps[pi] {
                 PointPrep::Single(p) => Baseline {
-                    result: Arc::new(p.run(PolicyKind::CarbonAgnostic)),
+                    // Faulted points compare policies under the *same*
+                    // fault plan; an empty plan takes the exact `run` path.
+                    result: Arc::new(
+                        p.run_with_plan(PolicyKind::CarbonAgnostic, &spec.plan_for(&points[pi])),
+                    ),
                     jobs_per_region: None,
                 },
                 PointPrep::Week(w) => Baseline {
@@ -707,7 +767,7 @@ impl SweepRunner {
                 ((*bl.result).clone(), bl.jobs_per_region.as_deref().cloned())
             } else {
                 match &preps[pi] {
-                    PointPrep::Single(p) => (p.run(kind), None),
+                    PointPrep::Single(p) => (p.run_with_plan(kind, &spec.plan_for(point)), None),
                     PointPrep::Week(w) => (w.prep.run(kind), None),
                     PointPrep::Spatial(sp) => {
                         let cfg = spec.config_for(point);
@@ -785,6 +845,7 @@ pub fn print_table(rows: &[SweepRow]) {
     let with_dispatch = rows.iter().any(|r| !r.point.dispatch.is_empty());
     let with_week = rows.iter().any(|r| r.point.week.is_some());
     let with_variant = rows.iter().any(|r| !r.point.variant.is_empty());
+    let with_faults = rows.iter().any(|r| !r.point.faults.is_empty() && r.point.faults != "none");
     let mut headers = vec!["region"];
     if with_dispatch {
         headers.push("dispatch");
@@ -795,6 +856,9 @@ pub fn print_table(rows: &[SweepRow]) {
     }
     if with_variant {
         headers.push("variant");
+    }
+    if with_faults {
+        headers.push("faults");
     }
     headers.push("seed");
     headers.extend_from_slice(&[
@@ -819,6 +883,9 @@ pub fn print_table(rows: &[SweepRow]) {
         }
         if with_variant {
             cells.push(r.point.variant.clone());
+        }
+        if with_faults {
+            cells.push(r.point.faults.clone());
         }
         cells.push(format!("{}", r.point.seed));
         cells.extend([
@@ -853,6 +920,7 @@ pub fn to_json(rows: &[SweepRow]) -> Json {
                         r.point.week.map(|w| Json::Num(w as f64)).unwrap_or(Json::Null),
                     ),
                     ("variant", Json::Str(r.point.variant.clone())),
+                    ("faults", Json::Str(r.point.faults.clone())),
                     ("seed", Json::Str(format!("{}", r.point.seed))),
                     ("policy", Json::Str(m.policy.clone())),
                     ("carbon_g", Json::Num(m.carbon_g)),
@@ -865,6 +933,14 @@ pub fn to_json(rows: &[SweepRow]) -> Json {
                     ("p95_delay_hours", Json::Num(m.p95_delay_hours)),
                     ("mean_utilization", Json::Num(m.mean_utilization)),
                 ];
+                if !r.point.faults.is_empty() && r.point.faults != "none" {
+                    fields.push(("restarts", Json::Num(m.restarts as f64)));
+                    fields.push(("lost_work_hours", Json::Num(m.lost_work_hours)));
+                    fields.push(("recovery_p50_slots", Json::Num(m.recovery_p50_slots)));
+                    fields.push(("recovery_p99_slots", Json::Num(m.recovery_p99_slots)));
+                    fields.push(("degraded_stale", Json::Num(m.degraded_stale as f64)));
+                    fields.push(("degraded_fallback", Json::Num(m.degraded_fallback as f64)));
+                }
                 if let Some(jpr) = &r.jobs_per_region {
                     fields.push((
                         "jobs_per_region",
@@ -1046,11 +1122,13 @@ dispatch = ["rr", "window"]
 capacities = [8, 16]
 seeds = [1, 2]
 policies = ["agnostic", "carbonflex"]
+faults = ["none", "heavy"]
 aging_window_hours = 336
 "#,
         )
         .unwrap();
         assert_eq!(spec.regions.len(), 2);
+        assert_eq!(spec.faults, vec!["none".to_string(), "heavy".to_string()]);
         assert_eq!(
             spec.dispatchers,
             vec![DispatchStrategy::RoundRobin, DispatchStrategy::LowestWindowCi]
@@ -1067,6 +1145,7 @@ aging_window_hours = 336
         assert!(bad.apply_toml_axes("[sweep]\nregions = [\"atlantis\"]\n").is_err());
         assert!(bad.apply_toml_axes("[sweep]\ndispatch = [\"teleport\"]\n").is_err());
         assert!(bad.apply_toml_axes("[sweep]\npolicies = [\"magic\"]\n").is_err());
+        assert!(bad.apply_toml_axes("[sweep]\nfaults = [\"meteor\"]\n").is_err());
         assert!(bad.apply_toml_axes("[sweep]\naging_window_hours = 0\n").is_err());
     }
 
@@ -1201,6 +1280,60 @@ aging_window_hours = 336
         // policy-independent, so both rows saw the same stream split.
         assert_eq!(rows[0].savings_pct, 0.0);
         assert_eq!(rows[0].jobs_per_region, rows[1].jobs_per_region);
+    }
+
+    #[test]
+    fn faults_axis_injects_and_preserves_clean_rows() {
+        let mk = |faults: Vec<String>| {
+            let mut spec = SweepSpec::new(tiny_base());
+            spec.faults = faults;
+            spec.policies = vec![PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex];
+            spec
+        };
+        let spec = mk(vec!["none".into(), "light".into()]);
+        let points = spec.points();
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].faults, "none");
+        assert!(spec.plan_for(&points[0]).is_empty());
+        assert!(!spec.plan_for(&points[1]).is_empty());
+
+        // Faulted and clean points at one setting share one preparation.
+        let (rows, stats) = SweepRunner::new(2).run_with_stats(&spec);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(stats.prepares, 1, "faults axis must not split prep groups");
+
+        // "none" rows are bitwise identical to a sweep without the axis.
+        let clean = SweepRunner::new(2).run(&mk(Vec::new()));
+        for (a, b) in rows[..2].iter().zip(&clean) {
+            assert_eq!(a.result.fingerprint(), b.result.fingerprint());
+            assert_eq!(a.savings_pct.to_bits(), b.savings_pct.to_bits());
+        }
+
+        // The light preset's outage actually walks the degradation ladder,
+        // and a rerun reproduces every faulted row bitwise.
+        let flex = &rows[3].result.metrics;
+        assert!(flex.degraded_stale + flex.degraded_fallback > 0, "outage never degraded");
+        let again = SweepRunner::new(1).run(&spec);
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.result.fingerprint(), b.result.fingerprint());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown fault preset")]
+    fn unknown_fault_preset_panics() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.faults = vec!["apocalypse".into()];
+        let _ = spec.points();
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot combine with multi-region")]
+    fn faults_axis_rejects_region_sets() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.regions = vec!["south-australia+ontario".into()];
+        spec.faults = vec!["light".into()];
+        let _ = spec.points();
     }
 
     #[test]

@@ -1,0 +1,458 @@
+//! Deterministic fault injection: seeded plans of slot crashes,
+//! carbon-signal outages, and coordinator shard kills.
+//!
+//! A [`FaultSpec`] describes *how much* chaos to inject (event counts and
+//! ranges); [`FaultPlan::generate`] expands it into a concrete, fully
+//! reproducible event list from `(seed, spec, horizon, capacity, shards)`
+//! via the crate RNG. Three independent forked sub-streams (crashes,
+//! outages, shard kills) keep each event family's draw sequence stable
+//! when the other families' counts change.
+//!
+//! The cardinal contract: an **empty plan injects nothing**. Every
+//! consumer guards its fault logic behind [`FaultPlan::is_empty`], so a
+//! fault-free run executes the exact instruction sequence it did before
+//! this module existed — golden fingerprints stay bitwise identical.
+
+use crate::config::toml::{self, Value};
+use crate::util::rng::Rng;
+
+/// How much chaos to inject. Counts of three event families plus the
+/// ranges their parameters are drawn from; all-zero counts mean "no
+/// faults". Ships with named presets (`none`, `light`, `heavy`) usable as
+/// sweep-axis values, and parses from an optional `[faults]` TOML table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Number of slot-crash events over the horizon.
+    pub slot_crashes: usize,
+    /// Fraction of max capacity taken down per crash, drawn from
+    /// `[crash_frac_min, crash_frac_max]`.
+    pub crash_frac_min: f64,
+    pub crash_frac_max: f64,
+    /// Repair time in slots per crash, drawn from `[repair_min, repair_max]`
+    /// (inclusive; clamped to at least 1).
+    pub repair_min: usize,
+    pub repair_max: usize,
+    /// Progress a suspended victim loses at crash onset, hours (capped at
+    /// the work it has actually done).
+    pub rework_hours: f64,
+    /// Number of carbon-signal outages.
+    pub signal_outages: usize,
+    /// Outage length in slots, drawn from `[outage_min, outage_max]`.
+    pub outage_min: usize,
+    pub outage_max: usize,
+    /// Degradation-ladder knob: a last-known-good forecast older than this
+    /// many slots is unusable and the policy falls through to the
+    /// carbon-agnostic rung.
+    pub max_stale_slots: usize,
+    /// Number of coordinator shard kills (capped so at least one shard
+    /// survives; ignored for single-shard deployments).
+    pub shard_kills: usize,
+    /// Fleet-wide submission count at which each kill fires, drawn from
+    /// `[kill_after_min, kill_after_max]`.
+    pub kill_after_min: u64,
+    pub kill_after_max: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec::none()
+    }
+}
+
+impl FaultSpec {
+    /// Preset names accepted by [`FaultSpec::preset`] and the sweep's
+    /// `faults` axis.
+    pub const PRESETS: [&'static str; 3] = ["none", "light", "heavy"];
+
+    /// No faults at all; generates an empty plan.
+    pub fn none() -> FaultSpec {
+        FaultSpec {
+            slot_crashes: 0,
+            crash_frac_min: 0.0,
+            crash_frac_max: 0.0,
+            repair_min: 0,
+            repair_max: 0,
+            rework_hours: 0.0,
+            signal_outages: 0,
+            outage_min: 0,
+            outage_max: 0,
+            max_stale_slots: 6,
+            shard_kills: 0,
+            kill_after_min: 0,
+            kill_after_max: 0,
+        }
+    }
+
+    /// A mild failure regime: a couple of partial-capacity crashes, one
+    /// short signal outage, one shard kill.
+    pub fn light() -> FaultSpec {
+        FaultSpec {
+            slot_crashes: 2,
+            crash_frac_min: 0.10,
+            crash_frac_max: 0.25,
+            repair_min: 2,
+            repair_max: 6,
+            rework_hours: 1.0,
+            signal_outages: 1,
+            outage_min: 4,
+            outage_max: 12,
+            max_stale_slots: 6,
+            shard_kills: 1,
+            kill_after_min: 32,
+            kill_after_max: 96,
+        }
+    }
+
+    /// An aggressive regime: repeated deep crashes, long outages with a
+    /// tight staleness bound, multiple shard kills.
+    pub fn heavy() -> FaultSpec {
+        FaultSpec {
+            slot_crashes: 6,
+            crash_frac_min: 0.25,
+            crash_frac_max: 0.50,
+            repair_min: 4,
+            repair_max: 12,
+            rework_hours: 2.0,
+            signal_outages: 3,
+            outage_min: 12,
+            outage_max: 24,
+            max_stale_slots: 4,
+            shard_kills: 2,
+            kill_after_min: 16,
+            kill_after_max: 128,
+        }
+    }
+
+    /// Look up a named preset.
+    pub fn preset(name: &str) -> Option<FaultSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "none" => Some(FaultSpec::none()),
+            "light" => Some(FaultSpec::light()),
+            "heavy" => Some(FaultSpec::heavy()),
+            _ => None,
+        }
+    }
+
+    /// Parse the optional `[faults]` table from TOML source. `preset`
+    /// names a baseline (default `none`); the remaining keys override
+    /// individual fields, so a config can say `preset = "light"` and then
+    /// tighten just `max_stale_slots`.
+    pub fn from_toml_str(src: &str) -> Result<FaultSpec, String> {
+        let root = toml::parse(src).map_err(|e| e.to_string())?;
+        let mut spec = match root.get_path("faults.preset") {
+            Some(v) => {
+                let name =
+                    v.as_str().ok_or_else(|| "faults.preset: expected string".to_string())?;
+                FaultSpec::preset(name).ok_or_else(|| {
+                    format!(
+                        "faults.preset: unknown preset '{name}' (valid: {})",
+                        FaultSpec::PRESETS.join(", ")
+                    )
+                })?
+            }
+            None => FaultSpec::none(),
+        };
+        if let Some(v) = root.get_path("faults.slot_crashes") {
+            spec.slot_crashes = count_field(v, "faults.slot_crashes")?;
+        }
+        if let Some(v) = root.get_path("faults.crash_frac_min") {
+            spec.crash_frac_min = frac_field(v, "faults.crash_frac_min")?;
+        }
+        if let Some(v) = root.get_path("faults.crash_frac_max") {
+            spec.crash_frac_max = frac_field(v, "faults.crash_frac_max")?;
+        }
+        if let Some(v) = root.get_path("faults.repair_min") {
+            spec.repair_min = count_field(v, "faults.repair_min")?;
+        }
+        if let Some(v) = root.get_path("faults.repair_max") {
+            spec.repair_max = count_field(v, "faults.repair_max")?;
+        }
+        if let Some(v) = root.get_path("faults.rework_hours") {
+            spec.rework_hours = nonneg_field(v, "faults.rework_hours")?;
+        }
+        if let Some(v) = root.get_path("faults.signal_outages") {
+            spec.signal_outages = count_field(v, "faults.signal_outages")?;
+        }
+        if let Some(v) = root.get_path("faults.outage_min") {
+            spec.outage_min = count_field(v, "faults.outage_min")?;
+        }
+        if let Some(v) = root.get_path("faults.outage_max") {
+            spec.outage_max = count_field(v, "faults.outage_max")?;
+        }
+        if let Some(v) = root.get_path("faults.max_stale_slots") {
+            spec.max_stale_slots = count_field(v, "faults.max_stale_slots")?;
+        }
+        if let Some(v) = root.get_path("faults.shard_kills") {
+            spec.shard_kills = count_field(v, "faults.shard_kills")?;
+        }
+        if let Some(v) = root.get_path("faults.kill_after_min") {
+            spec.kill_after_min = count_field(v, "faults.kill_after_min")? as u64;
+        }
+        if let Some(v) = root.get_path("faults.kill_after_max") {
+            spec.kill_after_max = count_field(v, "faults.kill_after_max")? as u64;
+        }
+        Ok(spec)
+    }
+}
+
+fn count_field(v: &Value, field: &str) -> Result<usize, String> {
+    match v.as_int() {
+        Some(i) if i >= 0 => Ok(i as usize),
+        _ => Err(format!("{field}: expected non-negative integer")),
+    }
+}
+
+fn frac_field(v: &Value, field: &str) -> Result<f64, String> {
+    match v.as_f64() {
+        Some(f) if (0.0..=1.0).contains(&f) => Ok(f),
+        _ => Err(format!("{field}: expected number in [0, 1]")),
+    }
+}
+
+fn nonneg_field(v: &Value, field: &str) -> Result<f64, String> {
+    match v.as_f64() {
+        Some(f) if f >= 0.0 => Ok(f),
+        _ => Err(format!("{field}: expected non-negative number")),
+    }
+}
+
+/// At slot `at`, `down` servers crash and stay down for `repair_slots`
+/// slots. Running jobs displaced by the capacity loss suspend through the
+/// engine's ordinary suspend/resume path and lose up to `rework_hours` of
+/// progress.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlotCrash {
+    pub at: usize,
+    pub down: usize,
+    pub repair_slots: usize,
+    pub rework_hours: f64,
+}
+
+/// The carbon signal is unavailable for slots `start .. start + len`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SignalOutage {
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Coordinator shard `shard` is killed once the fleet has seen
+/// `at_submission` submissions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardKill {
+    pub shard: usize,
+    pub at_submission: u64,
+}
+
+/// A concrete, reproducible schedule of fault events. Everything that
+/// consumes a plan treats it as immutable data; re-running with the same
+/// plan replays the identical failure history.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Slot crashes, sorted by onset slot (at most one per slot).
+    pub crashes: Vec<SlotCrash>,
+    /// Signal outages, sorted by start (may overlap; the mask is a union).
+    pub outages: Vec<SignalOutage>,
+    /// Shard kills, sorted by trigger submission count (at most one per
+    /// shard; always leaves at least one survivor).
+    pub shard_kills: Vec<ShardKill>,
+    /// Staleness bound for the degradation ladder, slots.
+    pub max_stale_slots: usize,
+}
+
+impl FaultPlan {
+    /// The empty plan: injects nothing anywhere.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// True when the plan carries no events at all — the guard every
+    /// fault hook checks before touching any state.
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.outages.is_empty() && self.shard_kills.is_empty()
+    }
+
+    /// Expand a spec into a concrete plan. Deterministic in all five
+    /// arguments; independent sub-streams per event family.
+    pub fn generate(
+        seed: u64,
+        spec: &FaultSpec,
+        horizon: usize,
+        max_capacity: usize,
+        num_shards: usize,
+    ) -> FaultPlan {
+        let mut root = Rng::new(seed ^ 0xFA17_5EED);
+        let mut crash_rng = root.fork(0xC4A5);
+        let mut outage_rng = root.fork(0x0A7A);
+        let mut kill_rng = root.fork(0x517D);
+        let span = horizon.max(1);
+
+        let mut crashes: Vec<SlotCrash> = Vec::with_capacity(spec.slot_crashes);
+        if max_capacity > 0 {
+            for _ in 0..spec.slot_crashes {
+                let at = crash_rng.below(span);
+                let hi_frac = spec.crash_frac_max.max(spec.crash_frac_min);
+                let frac = crash_rng.range(spec.crash_frac_min, hi_frac);
+                // Never take the whole cluster down: overdue jobs must keep
+                // a server to run on, so cap at capacity - 1.
+                let down = ((max_capacity as f64 * frac).round() as usize)
+                    .clamp(1, max_capacity.saturating_sub(1).max(1));
+                let lo = spec.repair_min.max(1) as i64;
+                let hi = (spec.repair_max.max(1) as i64).max(lo);
+                let repair_slots = crash_rng.int_range(lo, hi) as usize;
+                crashes.push(SlotCrash {
+                    at,
+                    down,
+                    repair_slots,
+                    rework_hours: spec.rework_hours,
+                });
+            }
+        }
+        crashes.sort_by_key(|c| c.at);
+        crashes.dedup_by_key(|c| c.at);
+
+        let mut outages: Vec<SignalOutage> = Vec::with_capacity(spec.signal_outages);
+        for _ in 0..spec.signal_outages {
+            let start = outage_rng.below(span);
+            let lo = spec.outage_min.max(1) as i64;
+            let hi = (spec.outage_max.max(1) as i64).max(lo);
+            let len = outage_rng.int_range(lo, hi) as usize;
+            outages.push(SignalOutage { start, len });
+        }
+        outages.sort_by_key(|o| (o.start, o.len));
+
+        let mut shard_kills: Vec<ShardKill> = Vec::new();
+        if num_shards > 1 {
+            for _ in 0..spec.shard_kills {
+                if shard_kills.len() + 1 >= num_shards {
+                    break; // at least one shard must survive
+                }
+                let shard = kill_rng.below(num_shards);
+                let lo = spec.kill_after_min.max(1) as i64;
+                let hi = (spec.kill_after_max.max(1) as i64).max(lo);
+                let at_submission = kill_rng.int_range(lo, hi) as u64;
+                if !shard_kills.iter().any(|k| k.shard == shard) {
+                    shard_kills.push(ShardKill { shard, at_submission });
+                }
+            }
+            shard_kills.sort_by_key(|k| (k.at_submission, k.shard));
+        }
+
+        FaultPlan { crashes, outages, shard_kills, max_stale_slots: spec.max_stale_slots }
+    }
+
+    /// Servers held down by in-repair crashes at slot `t`.
+    pub fn capacity_down_at(&self, t: usize) -> usize {
+        self.crashes
+            .iter()
+            .filter(|c| c.at <= t && t < c.at + c.repair_slots)
+            .map(|c| c.down)
+            .sum()
+    }
+
+    /// Crashes whose onset is exactly slot `t`.
+    pub fn crashes_at(&self, t: usize) -> impl Iterator<Item = &SlotCrash> {
+        self.crashes.iter().filter(move |c| c.at == t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_generates_empty_plan() {
+        let plan = FaultPlan::generate(42, &FaultSpec::none(), 168, 100, 4);
+        assert!(plan.is_empty());
+        assert_eq!(plan, FaultPlan::none());
+        assert_eq!(plan.capacity_down_at(0), 0);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        for preset in FaultSpec::PRESETS {
+            let spec = FaultSpec::preset(preset).unwrap();
+            let a = FaultPlan::generate(7, &spec, 168, 150, 3);
+            let b = FaultPlan::generate(7, &spec, 168, 150, 3);
+            assert_eq!(a, b, "preset {preset} not reproducible");
+            let c = FaultPlan::generate(8, &spec, 168, 150, 3);
+            if !a.is_empty() {
+                assert_ne!(a, c, "preset {preset} ignores the seed");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_events_respect_bounds() {
+        let spec = FaultSpec::heavy();
+        let plan = FaultPlan::generate(3, &spec, 168, 150, 4);
+        assert!(!plan.crashes.is_empty());
+        for c in &plan.crashes {
+            assert!(c.at < 168);
+            assert!(c.down >= 1 && c.down < 150);
+            assert!(c.repair_slots >= spec.repair_min && c.repair_slots <= spec.repair_max);
+        }
+        // Crashes are sorted and unique per slot.
+        for w in plan.crashes.windows(2) {
+            assert!(w[0].at < w[1].at);
+        }
+        for o in &plan.outages {
+            assert!(o.start < 168);
+            assert!(o.len >= spec.outage_min && o.len <= spec.outage_max);
+        }
+        // At most one kill per shard, and at least one survivor.
+        let mut shards: Vec<usize> = plan.shard_kills.iter().map(|k| k.shard).collect();
+        shards.sort_unstable();
+        shards.dedup();
+        assert_eq!(shards.len(), plan.shard_kills.len());
+        assert!(plan.shard_kills.len() < 4);
+        for k in &plan.shard_kills {
+            assert!(k.shard < 4);
+            assert!(k.at_submission >= spec.kill_after_min);
+            assert!(k.at_submission <= spec.kill_after_max);
+        }
+    }
+
+    #[test]
+    fn single_shard_deployments_never_get_kills() {
+        let plan = FaultPlan::generate(11, &FaultSpec::heavy(), 168, 150, 1);
+        assert!(plan.shard_kills.is_empty());
+    }
+
+    #[test]
+    fn capacity_down_window() {
+        let plan = FaultPlan {
+            crashes: vec![
+                SlotCrash { at: 4, down: 10, repair_slots: 3, rework_hours: 1.0 },
+                SlotCrash { at: 6, down: 5, repair_slots: 2, rework_hours: 1.0 },
+            ],
+            ..FaultPlan::default()
+        };
+        assert_eq!(plan.capacity_down_at(3), 0);
+        assert_eq!(plan.capacity_down_at(4), 10);
+        assert_eq!(plan.capacity_down_at(6), 15); // overlap sums
+        assert_eq!(plan.capacity_down_at(7), 5);
+        assert_eq!(plan.capacity_down_at(8), 0);
+        assert_eq!(plan.crashes_at(4).count(), 1);
+        assert_eq!(plan.crashes_at(5).count(), 0);
+    }
+
+    #[test]
+    fn toml_table_overrides_preset() {
+        let src = r#"
+[faults]
+preset = "light"
+max_stale_slots = 3
+slot_crashes = 4
+"#;
+        let spec = FaultSpec::from_toml_str(src).unwrap();
+        let light = FaultSpec::light();
+        assert_eq!(spec.max_stale_slots, 3);
+        assert_eq!(spec.slot_crashes, 4);
+        assert_eq!(spec.signal_outages, light.signal_outages);
+        // Missing table → none; bad preset / bad values are errors.
+        assert_eq!(FaultSpec::from_toml_str("").unwrap(), FaultSpec::none());
+        assert!(FaultSpec::from_toml_str("[faults]\npreset = \"apocalypse\"\n").is_err());
+        assert!(FaultSpec::from_toml_str("[faults]\nslot_crashes = -1\n").is_err());
+        assert!(FaultSpec::from_toml_str("[faults]\ncrash_frac_min = 1.5\n").is_err());
+    }
+}

@@ -24,6 +24,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod faults;
 pub mod learning;
 pub mod runtime;
 pub mod sched;

@@ -12,6 +12,9 @@
 //!   sharded) coordinator on stdin/stdout JSON lines (wire protocol v2)
 //! - `serve-bench [--jobs n] [--batch b] [--json]` — closed-loop serving
 //!   benchmark → `BENCH_serve.json`
+//! - `chaos-bench [--faults light|heavy] [--json]` — fault-injection
+//!   benchmark (clean vs faulted sim + shard-kill failover) →
+//!   `BENCH_chaos.json`
 
 use carbonflex::carbon::synth::{self, Region};
 use carbonflex::config::{ExperimentConfig, ServiceConfig, ShedPolicy};
@@ -39,6 +42,7 @@ fn main() {
         Some("experiment") => cmd_experiment(&args),
         Some("serve") => cmd_serve(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
+        Some("chaos-bench") => cmd_chaos_bench(&args),
         _ => {
             print_usage();
             if args.command.is_none() || args.flag("help") {
@@ -64,8 +68,8 @@ fn print_usage() {
          \x20 sweep       [--config <file>] [--regions a,b+c] [--policies x,y|all|headline]\n\
          \x20             [--dispatch rr,current,window] [--capacities 100,150]\n\
          \x20             [--horizons 168] [--weeks N|w1,w2] [--aging-window 672]\n\
-         \x20             [--seeds 1,2] [--history <h>] [--offsets <n>] [--threads N]\n\
-         \x20             [--shard i/n] [--json] [--check]\n\
+         \x20             [--seeds 1,2] [--faults none,light,heavy] [--history <h>]\n\
+         \x20             [--offsets <n>] [--threads N] [--shard i/n] [--json] [--check]\n\
          \x20             parallel cartesian grid; rows in grid order. A '+'-joined\n\
          \x20             region entry is a multi-region spatial cell (the --dispatch\n\
          \x20             axis applies); --weeks makes cells weekly continuous-learning\n\
@@ -83,13 +87,21 @@ fn print_usage() {
          \x20 serve       [--config <file>] [--policy <name>] [--shards n|a+b]\n\
          \x20             [--dispatch rr|current|window] [--max-pending N]\n\
          \x20             [--max-batch N] [--shed reject-newest|reject-lowest-queue]\n\
-         \x20             JSON-line coordinator on stdio (wire protocol v2; a\n\
-         \x20             [service] table in the config sets the same knobs)\n\
+         \x20             [--kill-shard s@N,...] JSON-line coordinator on stdio\n\
+         \x20             (wire protocol v2; a [service] table in the config sets\n\
+         \x20             the same knobs; --kill-shard kills shard s at the N-th\n\
+         \x20             submission to exercise supervisor failover)\n\
          \x20 serve-bench [--config <file>] [--policy <name>] [--jobs 2000]\n\
          \x20             [--horizon <h>] [--seed <s>] [--batch 64] [--shards n|a+b]\n\
          \x20             [--json] [--out BENCH_serve.json]\n\
          \x20             closed-loop serving benchmark: single vs batched vs\n\
-         \x20             sharded ingest of one generated trace"
+         \x20             sharded ingest of one generated trace\n\
+         \x20 chaos-bench [--config <file>] [--faults light|heavy|none]\n\
+         \x20             [--policy carbonflex] [--serve-policy agnostic]\n\
+         \x20             [--jobs 120] [--shards 2] [--json] [--out BENCH_chaos.json]\n\
+         \x20             fault-injection benchmark: carbon overhead of running\n\
+         \x20             through a seeded fault plan, crash-recovery percentiles,\n\
+         \x20             and shard-kill failover with the exactly-once drain check"
     );
 }
 
@@ -264,6 +276,17 @@ fn cmd_sweep(args: &Args) -> i32 {
         s.parse::<u64>().map_err(|_| format!("invalid --seeds entry '{s}'"))
     }) {
         Ok(v) if !v.is_empty() => spec.seeds = v,
+        Ok(_) => {}
+        Err(e) => return fail(&e),
+    };
+    match parse_list(args, "faults", |s| {
+        if carbonflex::faults::FaultSpec::preset(s).is_some() {
+            Ok(s.to_string())
+        } else {
+            Err(format!("unknown fault preset '{s}' (none, light, heavy)"))
+        }
+    }) {
+        Ok(v) if !v.is_empty() => spec.faults = v,
         Ok(_) => {}
         Err(e) => return fail(&e),
     };
@@ -536,6 +559,27 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     let mut cluster =
         coordinator::ShardedCoordinator::start(&cfg, &service, kind, &regions, strategy);
+    // Deterministic fault injection: kill shard s once the N-th submission
+    // arrives; the supervisor fails pending jobs over and restarts it.
+    let kills = match parse_list(args, "kill-shard", |s| {
+        s.split_once('@')
+            .and_then(|(a, b)| {
+                Some(carbonflex::faults::ShardKill {
+                    shard: a.trim().parse().ok()?,
+                    at_submission: b.trim().parse().ok()?,
+                })
+            })
+            .ok_or_else(|| format!("invalid --kill-shard entry '{s}' (expected s@N, e.g. 0@50)"))
+    }) {
+        Ok(v) => v,
+        Err(e) => return fail(&e),
+    };
+    if !kills.is_empty() {
+        if cluster.num_shards() < 2 {
+            return fail("--kill-shard needs at least 2 shards (a survivor to fail over to)");
+        }
+        cluster.set_kill_plan(&kills);
+    }
     eprintln!(
         "carbonflex coordinator ready (policy: {}, shards: {}, max_pending: {}, shed: {}); \
          JSON lines on stdin (protocol v2; un-versioned lines read as legacy v1)",
@@ -674,6 +718,87 @@ fn cmd_serve_bench(args: &Args) -> i32 {
         return fail(&format!("writing {out}: {e}"));
     }
     eprintln!("serve bench written to {out}");
+    0
+}
+
+/// Fault-injection benchmark: clean vs faulted simulation plus a shard-kill
+/// failover drive, written as `BENCH_chaos.json`. Exits non-zero when the
+/// exactly-once drain identity fails — accepted work was lost or duplicated.
+fn cmd_chaos_bench(args: &Args) -> i32 {
+    use carbonflex::experiments::chaos::{run_chaos_bench, ChaosBenchOpts};
+    let t0 = std::time::Instant::now();
+    let cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => return fail(&e),
+    };
+    let service = match load_service(args) {
+        Ok(s) => s,
+        Err(e) => return fail(&e),
+    };
+    let mut opts = ChaosBenchOpts::new(cfg, service);
+    opts.preset = args.get_or("faults", "light").to_string();
+    match PolicyKind::parse_or_err(args.get_or("policy", "carbonflex")) {
+        Ok(k) => opts.kind = k,
+        Err(e) => return fail(&e),
+    }
+    match PolicyKind::parse_or_err(args.get_or("serve-policy", "agnostic")) {
+        Ok(k) => opts.serve_kind = k,
+        Err(e) => return fail(&e),
+    }
+    match args.num_or::<usize>("jobs", opts.serve_jobs) {
+        Ok(0) => return fail("--jobs must be positive"),
+        Ok(n) => opts.serve_jobs = n,
+        Err(e) => return fail(&e),
+    }
+    match args.num_or::<usize>("shards", opts.shards) {
+        Ok(n) if n >= 2 => opts.shards = n,
+        Ok(_) => return fail("--shards must be at least 2 (kills need a survivor)"),
+        Err(e) => return fail(&e),
+    }
+    let report = match run_chaos_bench(&opts) {
+        Ok(r) => r,
+        Err(e) => return fail(&e),
+    };
+    let doc = report.to_json(&opts, t0.elapsed().as_secs_f64());
+    if args.flag("json") {
+        println!("{doc}");
+    } else {
+        println!("preset:            {}", report.preset);
+        println!(
+            "carbon:            {:.2} kg clean, {:.2} kg faulted ({:+.2} %)",
+            report.carbon_clean_g / 1000.0,
+            report.carbon_faulted_g / 1000.0,
+            report.carbon_overhead_pct
+        );
+        println!(
+            "crashes:           {} restarts, {:.1} h lost work, recovery p50/p99 {:.0}/{:.0} slots",
+            report.restarts, report.lost_work_hours, report.recovery_p50_slots,
+            report.recovery_p99_slots
+        );
+        println!(
+            "degradation:       {} stale slots, {} fallback slots",
+            report.degraded_stale, report.degraded_fallback
+        );
+        println!(
+            "failover:          {} kills, {} rerouted, {} shed ({:.1} % of failed-over)",
+            report.failovers,
+            report.rerouted,
+            report.failover_shed,
+            report.shed_during_failover_rate * 100.0
+        );
+        println!(
+            "exactly-once:      {}",
+            if report.drained_exactly_once { "ok" } else { "VIOLATED" }
+        );
+    }
+    let out = args.get_or("out", "BENCH_chaos.json");
+    if let Err(e) = std::fs::write(out, format!("{doc}\n")) {
+        return fail(&format!("writing {out}: {e}"));
+    }
+    eprintln!("chaos bench written to {out}");
+    if !report.drained_exactly_once {
+        return fail("exactly-once drain identity violated: accepted work lost or duplicated");
+    }
     0
 }
 

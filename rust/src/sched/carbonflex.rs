@@ -19,9 +19,11 @@
 //! Pallas kernel executed via PJRT (`runtime::matcher`) — Python stays off
 //! the request path either way.
 
+use crate::carbon::forecast::SignalState;
 use crate::learning::kb::{Matcher, Neighbor};
 use crate::learning::state::StateVector;
-use crate::sched::{Decision, Policy, SlotCtx};
+use crate::sched::carbon_agnostic::CarbonAgnostic;
+use crate::sched::{Decision, DegradationCounters, Policy, SlotCtx};
 
 /// Aggregator over the matched capacities (Alg. 2 line "mimic"). Selectable
 /// for the ablation bench via the `CARBONFLEX_AGG` environment variable,
@@ -136,6 +138,12 @@ pub struct CarbonFlex<M: Matcher> {
     granted: Vec<usize>,
     /// Matched thresholds, sorted for aggregation.
     rhos: Vec<f64>,
+    /// Degradation-ladder bookkeeping (see `crate::faults`): counts of
+    /// stale-forecast slots and carbon-agnostic fallback slots.
+    degraded: DegradationCounters,
+    /// Bottom rung of the ladder: the carbon-agnostic baseline decides the
+    /// slot when the signal is dark.
+    fallback: CarbonAgnostic,
 }
 
 impl<M: Matcher> CarbonFlex<M> {
@@ -147,6 +155,8 @@ impl<M: Matcher> CarbonFlex<M> {
             entries: Vec::new(),
             granted: Vec::new(),
             rhos: Vec::new(),
+            degraded: DegradationCounters::default(),
+            fallback: CarbonAgnostic,
         }
     }
 
@@ -164,14 +174,18 @@ impl<M: Matcher> CarbonFlex<M> {
         self.matcher.top_k_batch_into(states, self.params.knn_k, out, offsets);
     }
 
-    /// Build the Table 2 state for the current slot.
-    fn state_of(ctx: &SlotCtx) -> StateVector {
-        let ci = ctx.forecaster.predict(ctx.t);
-        let ci_prev = if ctx.t == 0 { ci } else { ctx.forecaster.predict(ctx.t - 1) };
+    /// Build the Table 2 state for the current slot, reading the carbon
+    /// signal as of slot `q` (`q == ctx.t` when fresh; an earlier
+    /// last-known-good slot on the stale rung of the degradation ladder).
+    /// Cluster-observable features (queue lengths, elasticity) always come
+    /// from the live slot — only the carbon signal can go stale.
+    fn state_at(ctx: &SlotCtx, q: usize) -> StateVector {
+        let ci = ctx.forecaster.predict(q);
+        let ci_prev = if q == 0 { ci } else { ctx.forecaster.predict(q - 1) };
         StateVector::from_raw(
             ci,
             ci - ci_prev,
-            ctx.forecaster.day_ahead_rank(ctx.t),
+            ctx.forecaster.day_ahead_rank(q),
             &ctx.queue_lengths(),
             ctx.mean_elasticity(),
         )
@@ -312,12 +326,31 @@ impl<M: Matcher> Policy for CarbonFlex<M> {
     }
 
     fn decide_into(&mut self, ctx: &SlotCtx, out: &mut Decision) {
-        let state = Self::state_of(ctx);
+        // Degradation ladder (see `crate::faults`): fresh signal → normal
+        // CBR decision; bounded-stale signal → decide on the last-known-good
+        // forecast slot; dark signal → carbon-agnostic fallback.
+        let q = match ctx.forecaster.signal_state(ctx.t) {
+            SignalState::Fresh => ctx.t,
+            SignalState::Stale { last_good } => {
+                self.degraded.stale += 1;
+                last_good
+            }
+            SignalState::Dark => {
+                self.degraded.fallback += 1;
+                self.fallback.decide_into(ctx, out);
+                return;
+            }
+        };
+        let state = Self::state_at(ctx, q);
         let k = self.params.knn_k;
         self.matcher.top_k_into(&state, k, &mut self.neighbors);
         let m_t = self.provision(ctx);
         let rho = self.threshold();
         self.schedule(ctx, m_t, rho, out);
+    }
+
+    fn degradation(&self) -> DegradationCounters {
+        self.degraded
     }
 }
 
@@ -541,6 +574,46 @@ mod tests {
                 assert_eq!(a.rho.to_bits(), b.rho.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn degradation_ladder_stale_then_fallback() {
+        use crate::faults::SignalOutage;
+        // Slot 0 clean, everything after dirty; outage covers [1, 20).
+        let mut hourly = vec![500.0; 24];
+        hourly[0] = 60.0;
+        let trace = CarbonTrace::new("x", hourly);
+        let jobs: Vec<Job> = (0..2).map(|i| job(i, 0, 4.0, 24.0)).collect();
+        let views: Vec<JobView> = jobs
+            .iter()
+            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false })
+            .collect();
+        let masked = Forecaster::perfect(trace.clone())
+            .with_outages(&[SignalOutage { start: 1, len: 19 }], 3, 24);
+        let mut cf = CarbonFlex::new(kb_with(0, 8), CarbonFlexParams::default());
+        assert_eq!(cf.degradation(), crate::sched::DegradationCounters::default());
+        // t=2 is stale (last good = 0, 2 back ≤ 3): decides on slot 0's
+        // clean signal → scale-out capacity, and the stale counter ticks.
+        let d_stale = cf.decide(&ctx_at(2, &views, &masked, 0.0));
+        assert!(d_stale.capacity >= 4, "stale capacity {}", d_stale.capacity);
+        assert_eq!(cf.degradation().stale, 1);
+        assert_eq!(cf.degradation().fallback, 0);
+        // t=10 is dark (last good 10 slots back > 3): carbon-agnostic
+        // fallback — full capacity, FCFS base allocations.
+        let d_dark = cf.decide(&ctx_at(10, &views, &masked, 0.0));
+        let mut agnostic = CarbonAgnostic;
+        let want = agnostic.decide(&ctx_at(10, &views, &masked, 0.0));
+        assert_eq!(d_dark.capacity, want.capacity);
+        assert_eq!(d_dark.alloc, want.alloc);
+        assert_eq!(cf.degradation().fallback, 1);
+        // A fresh slot after the outage behaves exactly as without a mask.
+        let mut clean_cf = CarbonFlex::new(kb_with(0, 8), CarbonFlexParams::default());
+        let clean_f = Forecaster::perfect(trace);
+        let d_after = cf.decide(&ctx_at(21, &views, &masked, 0.0));
+        let d_clean = clean_cf.decide(&ctx_at(21, &views, &clean_f, 0.0));
+        assert_eq!(d_after.capacity, d_clean.capacity);
+        assert_eq!(d_after.alloc, d_clean.alloc);
+        assert_eq!(cf.degradation().stale, 1);
     }
 
     #[test]

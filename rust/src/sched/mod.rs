@@ -191,6 +191,15 @@ impl SlotCtx<'_> {
     }
 }
 
+/// Degradation-ladder counters a policy accumulates over a run (see
+/// `crate::faults`): slots decided on a stale last-known-good forecast and
+/// slots handed to the carbon-agnostic fallback because the signal was dark.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DegradationCounters {
+    pub stale: u64,
+    pub fallback: u64,
+}
+
 /// A provisioning + scheduling policy.
 ///
 /// Implementations must provide at least one of [`decide`](Policy::decide)
@@ -220,6 +229,12 @@ pub trait Policy {
     /// Hook: called once when a job completes (policies with internal
     /// schedules can garbage-collect).
     fn on_complete(&mut self, _job: JobId, _t: usize) {}
+
+    /// Degradation-ladder counters accumulated so far (zero for policies
+    /// that never degrade; CarbonFlex overrides this during signal outages).
+    fn degradation(&self) -> DegradationCounters {
+        DegradationCounters::default()
+    }
 }
 
 /// Identifier for constructing policies by name (CLI / experiment grids).

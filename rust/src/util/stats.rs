@@ -45,17 +45,23 @@ pub fn daily_cov(hourly: &[f64]) -> f64 {
     mean(&covs)
 }
 
-/// p-th percentile (0..=100) by linear interpolation; panics on empty input.
+/// p-th percentile (0..=100) by linear interpolation; 0.0 for empty input
+/// (a percentile over no samples has no meaningful value, and serving-path
+/// callers must never panic on an empty latency window).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty(), "percentile of empty slice");
+    if xs.is_empty() {
+        return 0.0;
+    }
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     percentile_sorted(&v, p)
 }
 
-/// p-th percentile over an already-sorted slice.
+/// p-th percentile over an already-sorted slice; 0.0 for empty input.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty());
+    if sorted.is_empty() {
+        return 0.0;
+    }
     let p = p.clamp(0.0, 100.0);
     if sorted.len() == 1 {
         return sorted[0];
@@ -297,6 +303,12 @@ mod tests {
     fn percentile_interpolates() {
         let xs = [0.0, 10.0];
         assert!((percentile(&xs, 30.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_empty_is_zero() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile_sorted(&[], 99.0), 0.0);
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Fault-injection properties: the cardinal invariants of the chaos
+//! subsystem (see `carbonflex::faults`) over randomized instances.
+//!
+//! 1. A plan with only zero-length outages (and an outright empty plan) is
+//!    bitwise indistinguishable from a clean run.
+//! 2. A full-horizon outage pushes CarbonFlex all the way down its
+//!    degradation ladder: every decision is the carbon-agnostic fallback's,
+//!    so the whole run is bitwise the carbon-agnostic run.
+//! 3. Shard-kill failover loses nothing silently: killed-incarnation
+//!    completions + failover sheds + the fleet drain account for every
+//!    accepted submission exactly once.
+//! 4. The same `(seed, spec)` always expands to the same plan, and the same
+//!    plan always replays the same run.
+
+use carbonflex::config::{ExperimentConfig, ServiceConfig};
+use carbonflex::coordinator::api::{Response, SubmitRequest};
+use carbonflex::coordinator::{shard_regions, ShardedCoordinator};
+use carbonflex::experiments::cells::DispatchStrategy;
+use carbonflex::experiments::runner::PreparedExperiment;
+use carbonflex::faults::{FaultPlan, FaultSpec, ShardKill, SignalOutage};
+use carbonflex::sched::PolicyKind;
+use carbonflex::util::proptest_lite::{check, Config};
+use carbonflex::util::rng::Rng;
+
+#[derive(Debug)]
+struct Instance {
+    cfg: ExperimentConfig,
+    seed: u64,
+}
+
+fn random_instance(rng: &mut Rng) -> Instance {
+    let mut cfg = ExperimentConfig::default();
+    cfg.seed = rng.next_u64();
+    cfg.capacity = 6 + rng.below(12);
+    cfg.horizon_hours = 48 + 24 * rng.below(2);
+    cfg.history_hours = cfg.horizon_hours + 24;
+    cfg.replay_offsets = 1;
+    let seed = rng.next_u64();
+    Instance { cfg, seed }
+}
+
+#[test]
+fn zero_length_outages_are_bitwise_clean() {
+    check(
+        "zero-length outage ≡ no faults",
+        Config { cases: 6, seed: 0xC1EA_0001 },
+        random_instance,
+        |inst| {
+            let prep = PreparedExperiment::prepare(&inst.cfg);
+            // Non-empty plan whose every event is a no-op: zero-length
+            // outages force the full fault-handling path through the
+            // engine and the forecaster mask.
+            let plan = FaultPlan {
+                crashes: Vec::new(),
+                outages: vec![
+                    SignalOutage { start: 0, len: 0 },
+                    SignalOutage { start: inst.cfg.horizon_hours / 2, len: 0 },
+                ],
+                shard_kills: Vec::new(),
+                max_stale_slots: 4,
+            };
+            assert!(!plan.is_empty(), "zero-length outages still populate the plan");
+            for kind in [PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex] {
+                let clean = prep.run(kind);
+                let faulted = prep.run_with_plan(kind, &plan);
+                if clean.fingerprint() != faulted.fingerprint() {
+                    return Err(format!("{kind:?}: zero-length outage changed the run"));
+                }
+                // The empty plan short-circuits to the same place.
+                let empty = prep.run_with_plan(kind, &FaultPlan::none());
+                if clean.fingerprint() != empty.fingerprint() {
+                    return Err(format!("{kind:?}: empty plan changed the run"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn full_horizon_outage_is_bitwise_carbon_agnostic() {
+    check(
+        "dark signal ≡ carbon-agnostic",
+        Config { cases: 6, seed: 0xC1EA_0002 },
+        random_instance,
+        |inst| {
+            let prep = PreparedExperiment::prepare(&inst.cfg);
+            // Signal dark for the whole horizon with a tight staleness
+            // bound: no slot can find a last-known-good forecast, so every
+            // decision lands on the bottom rung of the ladder.
+            let plan = FaultPlan {
+                crashes: Vec::new(),
+                outages: vec![SignalOutage { start: 0, len: inst.cfg.horizon_hours }],
+                shard_kills: Vec::new(),
+                max_stale_slots: 3,
+            };
+            let flex_dark = prep.run_with_plan(PolicyKind::CarbonFlex, &plan);
+            let agnostic = prep.run(PolicyKind::CarbonAgnostic);
+            if flex_dark.fingerprint() != agnostic.fingerprint() {
+                return Err("dark CarbonFlex diverged from CarbonAgnostic".into());
+            }
+            if flex_dark.metrics.degraded_fallback == 0 {
+                return Err("fallback counter never incremented under a dark signal".into());
+            }
+            if flex_dark.metrics.degraded_stale != 0 {
+                return Err("stale rung reached with no last-known-good slot".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn shard_kill_failover_accounts_for_every_accepted_job() {
+    // Fewer cases: each one prepares 2 shards plus a restarted incarnation.
+    check(
+        "failover exactly-once",
+        Config { cases: 4, seed: 0xC1EA_0003 },
+        |rng| {
+            let mut cfg = ExperimentConfig::default();
+            cfg.capacity = 8;
+            cfg.horizon_hours = 48;
+            cfg.history_hours = 72;
+            cfg.replay_offsets = 1;
+            let jobs = 6 + rng.below(8);
+            let kill_at = 1 + rng.below(jobs) as u64;
+            (cfg, jobs, kill_at)
+        },
+        |(cfg, jobs, kill_at)| {
+            let regions = shard_regions("2", &cfg.region).map_err(|e| e.to_string())?;
+            let mut cluster = ShardedCoordinator::start(
+                cfg,
+                &ServiceConfig::default(),
+                PolicyKind::CarbonAgnostic,
+                &regions,
+                DispatchStrategy::RoundRobin,
+            );
+            cluster.set_kill_plan(&[ShardKill { shard: 0, at_submission: *kill_at }]);
+            let mut accepted = 0u64;
+            for i in 0..*jobs {
+                let r = cluster.submit(&SubmitRequest {
+                    workload: "N-body(N=100k)".to_string(),
+                    length_hours: 1.0 + (i % 3) as f64,
+                    queue: i % 3,
+                });
+                if matches!(r, Response::Submitted { .. }) {
+                    accepted += 1;
+                }
+                if i % 3 == 2 {
+                    cluster.tick();
+                }
+            }
+            let (failovers, _rerouted, failover_shed) = cluster.failover_counters();
+            if failovers != 1 {
+                return Err(format!("expected exactly one failover, saw {failovers}"));
+            }
+            let killed_completed: u64 =
+                cluster.killed_metrics().iter().map(|m| m.completed as u64).sum();
+            let drained = match cluster.drain() {
+                Response::Drained { completed, .. } => completed as u64,
+                other => return Err(format!("expected drained, got {other:?}")),
+            };
+            cluster.shutdown();
+            if killed_completed + drained + failover_shed != accepted {
+                return Err(format!(
+                    "exactly-once violated: killed {killed_completed} + drained {drained} \
+                     + shed {failover_shed} != accepted {accepted}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn seeded_plans_and_runs_are_deterministic() {
+    check(
+        "same (seed, spec) ⇒ same plan ⇒ same run",
+        Config { cases: 6, seed: 0xC1EA_0004 },
+        random_instance,
+        |inst| {
+            let spec = FaultSpec::preset("heavy").unwrap();
+            let mk = || {
+                FaultPlan::generate(
+                    inst.seed,
+                    &spec,
+                    inst.cfg.horizon_hours,
+                    inst.cfg.capacity,
+                    3,
+                )
+            };
+            let (a, b) = (mk(), mk());
+            if a != b {
+                return Err("plan generation is not deterministic".into());
+            }
+            let prep = PreparedExperiment::prepare(&inst.cfg);
+            let r1 = prep.run_with_plan(PolicyKind::CarbonFlex, &a);
+            let r2 = prep.run_with_plan(PolicyKind::CarbonFlex, &b);
+            if r1.fingerprint() != r2.fingerprint() {
+                return Err("same plan replayed to a different run".into());
+            }
+            Ok(())
+        },
+    );
+}
