@@ -1,10 +1,16 @@
 #!/usr/bin/env sh
 # Minimal shell client for the coordinator's JSON-lines protocol (v2).
 #
-# Pipes a scripted session into `carbonflex serve`: a correlated batch
-# submission, a few ticks with status polls, a stats snapshot, and a final
-# drain. Responses come back one JSON line per request, each echoing the
-# request's "id" when one was given.
+# Part 1 pipes a scripted session into `carbonflex serve`: a correlated
+# batch submission, a few ticks with status polls, a stats snapshot, and a
+# final drain. Responses come back one JSON line per request, each echoing
+# the request's "id" when one was given.
+#
+# Part 2 demonstrates the persistent-connection session protocol: a
+# `serve --tcp` server on localhost, driven by the bundled `client`
+# subcommand with one forced mid-stream disconnect — the client must
+# reconnect, resume the same session by token, and finish with every
+# submission accounted exactly once.
 #
 # Usage:
 #   sh examples/serve_client.sh [path-to-carbonflex-binary]
@@ -47,3 +53,25 @@ fi
     # Finish everything and get the final report.
     printf '%s\n' '{"v": 2, "id": "final", "op": "drain"}'
 } | "$BIN" serve --config "$CFG" --shards 1
+
+# --- Part 2: TCP session with one forced reconnect. ---------------------
+# Fixed localhost port for portability (no lsof/ss dependency); override
+# with SERVE_PORT if 47611 is taken.
+PORT="${SERVE_PORT:-47611}"
+echo "--- session demo: serve --tcp 127.0.0.1:$PORT ---" >&2
+"$BIN" serve --config "$CFG" --shards 1 --tcp "127.0.0.1:$PORT" &
+SERVER_PID=$!
+# The listener binds before serving; give the spawned process a moment.
+sleep 1
+# Submit 8 generated jobs, dropping the connection after the 4th: the
+# client reconnects with its resume token, replays what went unanswered,
+# and exits non-zero if the reconnect did not survive. --drain shuts the
+# server down and prints the final report.
+if ! "$BIN" client --config "$CFG" --tcp "127.0.0.1:$PORT" \
+        --jobs 8 --drop-after 4 --drain; then
+    kill "$SERVER_PID" 2>/dev/null || true
+    echo "session demo failed" >&2
+    exit 1
+fi
+wait "$SERVER_PID"
+echo "session demo ok: reconnect survived, session resumed, drain clean" >&2

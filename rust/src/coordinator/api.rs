@@ -206,9 +206,17 @@ impl WireRequest {
     }
 
     pub fn to_json_line(&self) -> String {
+        self.to_json_line_with(&[])
+    }
+
+    /// Encode with extra top-level envelope keys (the session layer adds
+    /// `session`/`seq`/`ack`). The v2 parser reads only known keys, so
+    /// extras pass through older peers untouched. Extras force the v2
+    /// encoding: the flat legacy shape has nowhere to carry them.
+    pub fn to_json_line_with(&self, extra: &[(&str, Json)]) -> String {
         // Legacy v1 lines keep the pre-envelope shape (no "v"/"id"); ops
         // that postdate v1 fall through to the v2 encoding.
-        if self.v <= 1 {
+        if self.v <= 1 && extra.is_empty() {
             match &self.req {
                 Request::Submit(_) | Request::Tick | Request::Status | Request::Drain => {
                     return legacy_request_json(&self.req).to_string();
@@ -234,6 +242,9 @@ impl WireRequest {
             Request::Status => pairs.push(("op", Json::Str("status".into()))),
             Request::Stats => pairs.push(("op", Json::Str("stats".into()))),
             Request::Drain => pairs.push(("op", Json::Str("drain".into()))),
+        }
+        for (k, val) in extra {
+            pairs.push((k, val.clone()));
         }
         Json::obj(pairs).to_string()
     }
@@ -287,9 +298,15 @@ impl WireRequest {
 
 impl WireResponse {
     pub fn to_json_line(&self) -> String {
+        self.to_json_line_with(&[])
+    }
+
+    /// Encode with extra top-level envelope keys (see
+    /// [`WireRequest::to_json_line_with`]); extras force the v2 shape.
+    pub fn to_json_line_with(&self, extra: &[(&str, Json)]) -> String {
         // Legacy-shaped emission for v1 clients; ops without a v1 shape
         // (batch, stats) fall through to the v2 encoding.
-        if self.v <= 1 {
+        if self.v <= 1 && extra.is_empty() {
             match &self.resp {
                 Response::Batch { .. } | Response::Stats(_) => {}
                 other => return legacy_response_json(other).to_string(),
@@ -367,6 +384,9 @@ impl WireResponse {
                 pairs.push(("code", Json::Str(code.as_str().into())));
                 pairs.push(("error", Json::Str(message.clone())));
             }
+        }
+        for (k, val) in extra {
+            pairs.push((k, val.clone()));
         }
         Json::obj(pairs).to_string()
     }
@@ -743,6 +763,30 @@ mod tests {
             Response::Stats(s) => assert_eq!(s.shed, 9_007_199_254_740_992),
             other => panic!("expected stats, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn extra_envelope_keys_pass_through_the_parser() {
+        let w = WireRequest::with_id(Request::Tick, "t-1");
+        let line = w.to_json_line_with(&[
+            ("session", Json::Num(3.0)),
+            ("seq", Json::Num(17.0)),
+            ("ack", Json::Num(16.0)),
+        ]);
+        assert!(line.contains("\"seq\""), "{line}");
+        // The core parser reads only known keys: the envelope still
+        // decodes, extras are invisible to session-unaware peers.
+        assert_eq!(WireRequest::from_json_line(&line).unwrap(), w, "{line}");
+        let r = WireResponse {
+            v: PROTOCOL_VERSION,
+            id: Some("t-1".into()),
+            resp: Response::Ticked { slot: 4 },
+        };
+        let rline = r.to_json_line_with(&[("seq", Json::Num(17.0))]);
+        assert_eq!(WireResponse::from_json_line(&rline).unwrap(), r, "{rline}");
+        // Extras force v2 even for ops with a legacy shape.
+        let legacy = WireRequest { v: 1, id: None, req: Request::Tick };
+        assert!(legacy.to_json_line_with(&[("seq", Json::Num(0.0))]).contains("\"v\""));
     }
 
     #[test]

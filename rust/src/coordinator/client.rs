@@ -1,0 +1,492 @@
+//! Session client: the connection-holding counterpart of
+//! [`SessionServer`](crate::coordinator::session::SessionServer).
+//!
+//! Owns a [`Transport`], a live [`Connection`], and the session state
+//! (id, resume token, sequence cursor). Requests go out pipelined with
+//! `session`/`seq`/`ack` envelope extras; the client matches responses
+//! back by `seq`, retries unanswered frames on timeout, and reconnects
+//! with capped, seed-jittered exponential backoff on disconnect —
+//! resuming the same session by token so the server's dedup makes every
+//! retry idempotent. On a deterministic (non-wall-clock) transport the
+//! backoff only counts; on TCP it actually sleeps.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::api::{Request, Response, WireRequest, WireResponse};
+use crate::coordinator::transport::{Connection, Transport, TransportError};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Reconnect/retry policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackoffConfig {
+    /// First retry delay, milliseconds.
+    pub base_ms: u64,
+    /// Delay ceiling, milliseconds.
+    pub cap_ms: u64,
+    /// Dial attempts per reconnect, and timed-out waits per pipeline,
+    /// before giving up.
+    pub max_attempts: usize,
+}
+
+impl Default for BackoffConfig {
+    fn default() -> Self {
+        BackoffConfig { base_ms: 50, cap_ms: 2000, max_attempts: 8 }
+    }
+}
+
+/// Client-side session telemetry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SessionStats {
+    /// Successful reconnect + resume cycles survived.
+    pub reconnects: u64,
+    /// Frames re-sent after a timeout or reconnect.
+    pub retries: u64,
+    /// Receive timeouts observed.
+    pub timeouts: u64,
+    /// Handshakes performed (first connect + every resume).
+    pub handshakes: u64,
+    /// Backoff delay accumulated, milliseconds (counted even on
+    /// deterministic transports that do not sleep).
+    pub backoff_ms_total: u64,
+}
+
+/// A resuming, retrying session over any [`Transport`].
+pub struct SessionClient {
+    transport: Box<dyn Transport>,
+    conn: Option<Box<dyn Connection>>,
+    client_id: String,
+    session: Option<u64>,
+    token: Option<String>,
+    /// Next sequence number to assign.
+    next_seq: u64,
+    /// Highest seq for which this client has received every response at
+    /// or below it — piggybacked as `ack` on outgoing frames.
+    ack_cursor: Option<u64>,
+    backoff: BackoffConfig,
+    rng: Rng,
+    stats: SessionStats,
+}
+
+impl SessionClient {
+    /// `seed` drives the backoff jitter; mixing in the client id keeps
+    /// many clients from synchronizing their retry storms.
+    pub fn new(transport: Box<dyn Transport>, client_id: &str, seed: u64) -> SessionClient {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in client_id.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        SessionClient {
+            transport,
+            conn: None,
+            client_id: client_id.to_string(),
+            session: None,
+            token: None,
+            next_seq: 0,
+            ack_cursor: None,
+            backoff: BackoffConfig::default(),
+            rng: Rng::new(seed ^ h),
+            stats: SessionStats::default(),
+        }
+    }
+
+    pub fn with_backoff(mut self, backoff: BackoffConfig) -> SessionClient {
+        self.backoff = backoff;
+        self
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        self.stats
+    }
+
+    pub fn session_id(&self) -> Option<u64> {
+        self.session
+    }
+
+    /// Drop the live connection (test hook / forced-reconnect demo): the
+    /// next operation dials and resumes.
+    pub fn force_disconnect(&mut self) {
+        self.conn = None;
+    }
+
+    /// Capped exponential backoff with seeded jitter:
+    /// `min(cap, base * 2^attempt) * (0.5 + 0.5 * u)`. Sleeps only on
+    /// wall-clock transports; always counts toward the stats.
+    fn backoff_delay_ms(&mut self, attempt: usize) -> u64 {
+        let raw = self
+            .backoff
+            .base_ms
+            .saturating_mul(1u64 << attempt.min(20))
+            .min(self.backoff.cap_ms);
+        let jittered = (raw as f64 * (0.5 + 0.5 * self.rng.f64())).round() as u64;
+        self.stats.backoff_ms_total += jittered;
+        if self.transport.is_wall_clock() {
+            std::thread::sleep(std::time::Duration::from_millis(jittered));
+        }
+        jittered
+    }
+
+    /// Dial + handshake until connected, with backoff between attempts.
+    /// Resumes by token when one is held; a fresh session otherwise.
+    fn ensure_connected(&mut self) -> Result<(), TransportError> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let mut last = TransportError::Disconnected;
+        for attempt in 0..self.backoff.max_attempts {
+            if attempt > 0 {
+                self.backoff_delay_ms(attempt - 1);
+            }
+            let mut conn = match self.transport.dial() {
+                Ok(c) => c,
+                Err(e) => {
+                    last = e;
+                    continue;
+                }
+            };
+            match self.handshake(conn.as_mut()) {
+                Ok(()) => {
+                    self.conn = Some(conn);
+                    return Ok(());
+                }
+                Err(e) => {
+                    last = e;
+                    continue;
+                }
+            }
+        }
+        Err(last)
+    }
+
+    /// Send `hello` (with the resume token when held) and wait for the
+    /// `hello` reply. Retries the frame on timeout: a handshake lost to
+    /// link faults must not kill the connection attempt.
+    fn handshake(&mut self, conn: &mut dyn Connection) -> Result<(), TransportError> {
+        let mut pairs = vec![
+            ("op", Json::Str("hello".into())),
+            ("client", Json::Str(self.client_id.clone())),
+        ];
+        if let Some(tok) = &self.token {
+            pairs.push(("resume", Json::Str(tok.clone())));
+        }
+        if let Some(a) = self.ack_cursor {
+            pairs.push(("ack", Json::num(a as f64)));
+        }
+        let line = Json::obj(pairs).to_string();
+        for _ in 0..self.backoff.max_attempts {
+            conn.send(&line)?;
+            loop {
+                match conn.recv() {
+                    Ok(frame) => {
+                        let v = match json::parse(&frame) {
+                            Ok(v) => v,
+                            Err(_) => continue,
+                        };
+                        if v.get("kind").and_then(Json::as_str) != Some("hello") {
+                            // A stale response from before the reconnect;
+                            // the seq-matched pipeline will pick it up or
+                            // re-request it. Keep waiting for the hello.
+                            continue;
+                        }
+                        let sid = v
+                            .get("session")
+                            .and_then(Json::as_f64)
+                            .map(|f| f as u64)
+                            .ok_or_else(|| {
+                                TransportError::Io("hello reply missing session".into())
+                            })?;
+                        let resumed =
+                            v.get("resumed").and_then(Json::as_bool).unwrap_or(false);
+                        if self.token.is_some() && !resumed {
+                            // The server lost our session (lease expiry):
+                            // previously applied-but-unacked work cannot be
+                            // replayed without double-submitting, so
+                            // resuming silently would break exactly-once.
+                            return Err(TransportError::Closed);
+                        }
+                        self.session = Some(sid);
+                        self.token = v
+                            .get("token")
+                            .and_then(Json::as_str)
+                            .map(str::to_string)
+                            .or_else(|| self.token.clone());
+                        self.stats.handshakes += 1;
+                        return Ok(());
+                    }
+                    Err(TransportError::Timeout) => {
+                        self.stats.timeouts += 1;
+                        break; // resend the hello
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        Err(TransportError::Timeout)
+    }
+
+    /// Send one request and wait for its response.
+    pub fn request(&mut self, req: Request) -> Result<Response, TransportError> {
+        self.pipeline(vec![req]).map(|mut v| v.remove(0))
+    }
+
+    /// Send a window of requests back to back, then collect responses by
+    /// sequence number. Unanswered frames are re-sent on timeout; a
+    /// disconnect triggers reconnect + resume + replay of everything
+    /// still unanswered — the server's dedup makes the replay idempotent.
+    /// Responses come back in request order.
+    pub fn pipeline(&mut self, reqs: Vec<Request>) -> Result<Vec<Response>, TransportError> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.ensure_connected()?;
+        let first_seq = self.next_seq;
+        let mut lines: BTreeMap<u64, String> = BTreeMap::new();
+        for (i, req) in reqs.into_iter().enumerate() {
+            let seq = first_seq + i as u64;
+            lines.insert(seq, self.encode(req, seq));
+        }
+        let last_seq = self.next_seq + lines.len() as u64 - 1;
+        self.next_seq = last_seq + 1;
+
+        let mut results: BTreeMap<u64, Response> = BTreeMap::new();
+        self.send_all(&lines, &results, true)?;
+        let mut idle_waits = 0usize;
+        while results.len() < lines.len() {
+            let outcome = self.conn.as_mut().expect("connected above").recv();
+            match outcome {
+                Ok(frame) => {
+                    if self.absorb(&frame, first_seq, last_seq, &mut results)? {
+                        idle_waits = 0;
+                    }
+                }
+                Err(TransportError::Timeout) => {
+                    self.stats.timeouts += 1;
+                    idle_waits += 1;
+                    if idle_waits > self.backoff.max_attempts {
+                        return Err(TransportError::Timeout);
+                    }
+                    self.send_all(&lines, &results, false)?;
+                }
+                Err(TransportError::Disconnected) => {
+                    self.conn = None;
+                    self.stats.reconnects += 1;
+                    self.ensure_connected()?;
+                    idle_waits = 0;
+                    self.send_all(&lines, &results, false)?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        self.ack_cursor = Some(last_seq);
+        Ok(results.into_values().collect())
+    }
+
+    /// Send every line not yet answered. `initial` marks the first pass
+    /// (later passes count as retries).
+    fn send_all(
+        &mut self,
+        lines: &BTreeMap<u64, String>,
+        results: &BTreeMap<u64, Response>,
+        initial: bool,
+    ) -> Result<(), TransportError> {
+        loop {
+            self.ensure_connected()?;
+            let mut failed = false;
+            for (seq, line) in lines {
+                if results.contains_key(seq) {
+                    continue;
+                }
+                if !initial {
+                    self.stats.retries += 1;
+                }
+                let conn = self.conn.as_mut().expect("connected above");
+                match conn.send(line) {
+                    Ok(()) => {}
+                    Err(TransportError::Disconnected) => {
+                        // Mid-window disconnect: reconnect + resume, then
+                        // restart the pass for everything unanswered.
+                        self.conn = None;
+                        self.stats.reconnects += 1;
+                        failed = true;
+                        break;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            if !failed {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Fold one received frame into `results` if it belongs to the
+    /// in-flight window. Returns whether progress was made.
+    fn absorb(
+        &mut self,
+        frame: &str,
+        first_seq: u64,
+        last_seq: u64,
+        results: &mut BTreeMap<u64, Response>,
+    ) -> Result<bool, TransportError> {
+        let v = match json::parse(frame) {
+            Ok(v) => v,
+            Err(_) => return Ok(false),
+        };
+        match v.get("kind").and_then(Json::as_str) {
+            // Session-control frames are not pipeline responses.
+            Some("hello") | Some("pong") | Some("bye") => return Ok(false),
+            _ => {}
+        }
+        let Some(seq) = v.get("seq").and_then(Json::as_f64).map(|f| f as u64) else {
+            // An unsequenced error aimed at this session (e.g. "unknown
+            // session") is fatal for the window: replaying onto a fresh
+            // session could double-apply, so surface it instead.
+            if v.get("kind").and_then(Json::as_str) == Some("error")
+                && v.get("session").is_some()
+            {
+                return Err(TransportError::Closed);
+            }
+            return Ok(false);
+        };
+        if seq < first_seq || seq > last_seq || results.contains_key(&seq) {
+            // Stale duplicate from an earlier window (or a fault-dup);
+            // already accounted for.
+            return Ok(false);
+        }
+        let wire = WireResponse::from_json_line(frame)
+            .map_err(|e| TransportError::Io(format!("bad response frame: {e}")))?;
+        results.insert(seq, wire.resp);
+        Ok(true)
+    }
+
+    fn encode(&self, req: Request, seq: u64) -> String {
+        let sid = self.session.expect("encode called before handshake");
+        let mut extras = vec![
+            ("session", Json::num(sid as f64)),
+            ("seq", Json::num(seq as f64)),
+        ];
+        if let Some(a) = self.ack_cursor {
+            extras.push(("ack", Json::num(a as f64)));
+        }
+        WireRequest::new(req).to_json_line_with(&extras)
+    }
+
+    /// Best-effort clean close: final ack, then `bye`.
+    pub fn bye(&mut self) {
+        let Some(sid) = self.session else { return };
+        let Some(conn) = self.conn.as_mut() else { return };
+        let mut pairs = vec![
+            ("op", Json::Str("bye".into())),
+            ("session", Json::num(sid as f64)),
+        ];
+        if let Some(a) = self.ack_cursor {
+            pairs.push(("ack", Json::num(a as f64)));
+        }
+        let _ = conn.send(&Json::obj(pairs).to_string());
+        let _ = conn.recv();
+        self.session = None;
+        self.token = None;
+        self.conn = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, ServiceConfig};
+    use crate::coordinator::api::SubmitRequest;
+    use crate::coordinator::session::{SessionConfig, SessionServer};
+    use crate::coordinator::shard::{shard_regions, ShardedCoordinator};
+    use crate::coordinator::transport::{FrameHandler, LoopbackTransport};
+    use crate::experiments::cells::DispatchStrategy;
+    use crate::faults::net::{LinkFaultSpec, LinkPlan};
+    use crate::sched::PolicyKind;
+    use std::sync::{Arc, Mutex};
+
+    fn small_cluster() -> ShardedCoordinator {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 8;
+        cfg.horizon_hours = 48;
+        cfg.history_hours = 72;
+        cfg.replay_offsets = 1;
+        let service = ServiceConfig::default();
+        let regions = shard_regions("1", &cfg.region).unwrap();
+        ShardedCoordinator::start(
+            &cfg,
+            &service,
+            PolicyKind::CarbonAgnostic,
+            &regions,
+            DispatchStrategy::RoundRobin,
+        )
+    }
+
+    fn loopback_client(plan: LinkPlan) -> (SessionClient, Arc<Mutex<SessionServer>>) {
+        let server =
+            Arc::new(Mutex::new(SessionServer::new(small_cluster(), SessionConfig::default())));
+        let handler: Arc<Mutex<dyn FrameHandler>> = server.clone();
+        let transport = LoopbackTransport::new(handler, plan);
+        let client = SessionClient::new(Box::new(transport), "test-client", 7);
+        (client, server)
+    }
+
+    fn sub(q: usize) -> Request {
+        Request::Submit(SubmitRequest {
+            workload: "N-body(N=100k)".to_string(),
+            length_hours: 2.0,
+            queue: q,
+        })
+    }
+
+    #[test]
+    fn clean_pipeline_roundtrip() {
+        let (mut client, server) = loopback_client(LinkPlan::none());
+        let resps = client.pipeline(vec![sub(0), sub(1), Request::Tick]).unwrap();
+        assert_eq!(resps.len(), 3);
+        assert_eq!(resps[0], Response::Submitted { job_id: 0 });
+        assert_eq!(resps[1], Response::Submitted { job_id: 1 });
+        assert!(matches!(resps[2], Response::Ticked { .. }));
+        let st = client.stats();
+        assert_eq!(st.reconnects, 0);
+        assert_eq!(st.retries, 0);
+        assert_eq!(st.handshakes, 1);
+        assert_eq!(server.lock().unwrap().counters().accepted, 2);
+    }
+
+    #[test]
+    fn forced_reconnect_resumes_same_session() {
+        let (mut client, server) = loopback_client(LinkPlan::none());
+        client.pipeline(vec![sub(0)]).unwrap();
+        let sid = client.session_id().unwrap();
+        client.force_disconnect();
+        let resps = client.pipeline(vec![sub(1)]).unwrap();
+        assert_eq!(resps[0], Response::Submitted { job_id: 1 });
+        assert_eq!(client.session_id(), Some(sid), "resume must keep the session");
+        assert_eq!(client.stats().handshakes, 2);
+        let c = server.lock().unwrap().counters();
+        assert_eq!(c.resumes, 1);
+        assert_eq!(c.accepted, 2);
+    }
+
+    #[test]
+    fn faulty_link_preserves_exactly_once() {
+        let plan = LinkPlan::generate(11, &LinkFaultSpec::heavy(), 64);
+        assert!(!plan.is_empty());
+        let (mut client, server) = loopback_client(plan);
+        let mut accepted = 0u64;
+        for i in 0..16usize {
+            let resps = client.pipeline(vec![sub(i % 3)]).unwrap();
+            if matches!(resps[0], Response::Submitted { .. }) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 16, "ample capacity: every submit admits exactly once");
+        let c = server.lock().unwrap().counters();
+        assert_eq!(c.accepted, 16, "server-side ledger agrees");
+        let st = client.stats();
+        assert!(
+            st.retries + st.reconnects > 0,
+            "a heavy plan must actually exercise the retry path: {st:?}"
+        );
+    }
+}

@@ -11,7 +11,9 @@ use std::time::Instant;
 use crate::carbon::synth::Region;
 use crate::config::{ExperimentConfig, ServiceConfig};
 use crate::coordinator::api::{ErrorCode, Request, Response, SubmitOutcome, SubmitRequest};
+use crate::coordinator::client::SessionClient;
 use crate::coordinator::shard::ShardedCoordinator;
+use crate::coordinator::transport::TransportError;
 use crate::experiments::cells::DispatchStrategy;
 use crate::sched::PolicyKind;
 use crate::util::json::Json;
@@ -178,6 +180,77 @@ pub fn drive(
         carbon_g,
         mean_delay_hours,
     }
+}
+
+/// Drive `arrivals` through a [`SessionClient`] slot by slot: submits go
+/// out pipelined in windows of up to `window` frames, each slot ends with
+/// a `Tick`, and the run ends with a `Drain` — the same request stream the
+/// stdio [`drive`] issues, so a fault-free session drive must produce a
+/// bitwise-identical drain report. Latency is measured around each
+/// pipeline window, amortized per member.
+pub fn drive_session(
+    client: &mut SessionClient,
+    arrivals: &[(usize, SubmitRequest)],
+    window: usize,
+    mode: &str,
+) -> Result<DriveReport, TransportError> {
+    let window = window.max(1);
+    let last_slot = arrivals.iter().map(|(t, _)| *t).max().unwrap_or(0);
+    let mut hist = LatencyHistogram::new();
+    let (mut accepted, mut shed, mut other) = (0usize, 0usize, 0usize);
+    let wall = Instant::now();
+    let mut cursor = 0usize;
+    for t in 0..=last_slot {
+        let start = cursor;
+        while cursor < arrivals.len() && arrivals[cursor].0 == t {
+            cursor += 1;
+        }
+        let slot_jobs = &arrivals[start..cursor];
+        for chunk in slot_jobs.chunks(window) {
+            let reqs: Vec<Request> =
+                chunk.iter().map(|(_, s)| Request::Submit(s.clone())).collect();
+            let n = reqs.len() as u32;
+            let t0 = Instant::now();
+            let resps = client.pipeline(reqs)?;
+            let per = t0.elapsed() / n.max(1);
+            for resp in &resps {
+                hist.record(per);
+                match resp {
+                    Response::Submitted { .. } => accepted += 1,
+                    Response::Error { code: ErrorCode::QueueFull | ErrorCode::Shed, .. } => {
+                        shed += 1
+                    }
+                    _ => other += 1,
+                }
+            }
+        }
+        client.request(Request::Tick)?;
+    }
+    let drained = client.request(Request::Drain)?;
+    client.bye();
+    let wall_seconds = wall.elapsed().as_secs_f64();
+    let submitted = arrivals.len();
+    let (completed, carbon_g, mean_delay_hours) = match drained {
+        Response::Drained { completed, carbon_g, mean_delay_hours } => {
+            (completed, carbon_g, mean_delay_hours)
+        }
+        _ => (0, 0.0, 0.0),
+    };
+    Ok(DriveReport {
+        mode: mode.to_string(),
+        submitted,
+        accepted,
+        shed,
+        rejected_other: other,
+        wall_seconds,
+        submissions_per_sec: if wall_seconds > 0.0 { submitted as f64 / wall_seconds } else { 0.0 },
+        shed_rate: if submitted > 0 { shed as f64 / submitted as f64 } else { 0.0 },
+        p50_decision_ms: hist.percentile_ms(50.0),
+        p99_decision_ms: hist.percentile_ms(99.0),
+        completed,
+        carbon_g,
+        mean_delay_hours,
+    })
 }
 
 /// Options for [`run_serve_bench`].
@@ -359,6 +432,50 @@ mod tests {
         assert_eq!(ra.accepted, rb.accepted);
         assert!(ra.drain_matches(&rb), "single {ra:?} vs batch {rb:?}");
         assert_eq!(ra.completed, ra.accepted);
+    }
+
+    #[test]
+    fn fault_free_session_drive_matches_stdio_drive_bitwise() {
+        use crate::coordinator::session::{SessionConfig, SessionServer};
+        use crate::coordinator::transport::{FrameHandler, LoopbackTransport};
+        use crate::faults::net::LinkPlan;
+        use std::sync::{Arc, Mutex};
+
+        let cfg = small_cfg();
+        let service = ServiceConfig::default();
+        let jobs = tracegen::generate_n(&cfg, 48, 33, 50);
+        let arrivals = submissions_of(&jobs);
+        let region = Region::parse(&cfg.region).unwrap_or(Region::ALL[0]);
+
+        let mut a = ShardedCoordinator::start(
+            &cfg,
+            &service,
+            PolicyKind::CarbonAgnostic,
+            &[region],
+            DispatchStrategy::RoundRobin,
+        );
+        let stdio = drive(&mut a, &arrivals, 1, "single");
+        a.shutdown();
+
+        let b = ShardedCoordinator::start(
+            &cfg,
+            &service,
+            PolicyKind::CarbonAgnostic,
+            &[region],
+            DispatchStrategy::RoundRobin,
+        );
+        let server = Arc::new(Mutex::new(SessionServer::new(b, SessionConfig::default())));
+        let handler: Arc<Mutex<dyn FrameHandler>> = server.clone();
+        let mut client = SessionClient::new(
+            Box::new(LoopbackTransport::new(handler, LinkPlan::none())),
+            "loadgen",
+            5,
+        );
+        let session = drive_session(&mut client, &arrivals, 16, "session").unwrap();
+        assert_eq!(stdio.accepted, session.accepted);
+        assert!(stdio.drain_matches(&session), "stdio {stdio:?} vs session {session:?}");
+        let st = client.stats();
+        assert_eq!(st.reconnects + st.retries, 0, "clean link must not retry");
     }
 
     #[test]

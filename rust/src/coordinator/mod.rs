@@ -1,17 +1,32 @@
 //! The coordinator service: a leader thread owning the cluster engine and a
 //! policy, behind a versioned JSON-lines wire API with batched ingest,
 //! backpressure, service stats, and an optional sharded (one coordinator
-//! per region) deployment shape.
+//! per region) deployment shape. Connection-oriented access layers on
+//! top: a session protocol (resume tokens, sequence numbers, idempotent
+//! retry) over pluggable transports (in-process loopback with seeded
+//! link faults, or real TCP).
 
 pub mod api;
+pub mod client;
 pub mod loadgen;
 pub mod server;
+pub mod session;
 pub mod shard;
+pub mod transport;
 
 pub use api::{
     ErrorCode, ParseFailure, Request, Response, StatsResponse, StatusResponse, SubmitOutcome,
     SubmitRequest, WireRequest, WireResponse, PROTOCOL_VERSION,
 };
-pub use loadgen::{drive, run_serve_bench, submissions_of, DriveReport, ServeBenchOpts};
-pub use server::{CheckpointState, ClusterHandle, Coordinator, CoordinatorConfig};
+pub use client::{BackoffConfig, SessionClient, SessionStats};
+pub use loadgen::{
+    drive, drive_session, run_serve_bench, submissions_of, DriveReport, ServeBenchOpts,
+};
+pub use server::{
+    CheckpointState, ClusterHandle, ControlError, Coordinator, CoordinatorConfig,
+};
+pub use session::{take_cluster, SessionConfig, SessionCounters, SessionServer};
 pub use shard::{shard_regions, ShardedCoordinator};
+pub use transport::{
+    Connection, FrameHandler, LoopbackTransport, TcpTransport, Transport, TransportError,
+};

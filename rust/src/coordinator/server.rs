@@ -20,7 +20,7 @@ use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::carbon::forecast::Forecaster;
 use crate::cluster::metrics::RunMetrics;
@@ -59,7 +59,18 @@ pub struct CheckpointState {
     pub accepted: Vec<(usize, SubmitRequest)>,
     /// Job ids whose outcomes the leader has observed.
     pub completed: Vec<usize>,
+    /// Fully-acknowledged entries dropped by [`CheckpointState::compact`]
+    /// — each was present in both `accepted` and `completed` before the
+    /// drop, so totals stay reconstructible for accounting.
+    pub compacted: u64,
 }
+
+/// Completed-entry count past which the leader compacts the checkpoint
+/// inline. High enough that short-lived tests and small failovers see
+/// the full uncompacted log, low enough that a long session's replay
+/// buffer stays bounded by pending + threshold instead of growing with
+/// total throughput.
+pub const CHECKPOINT_COMPACT_THRESHOLD: usize = 256;
 
 impl CheckpointState {
     /// Submissions admitted but not yet completed, in admission order —
@@ -72,7 +83,66 @@ impl CheckpointState {
             .map(|(_, s)| s.clone())
             .collect()
     }
+
+    /// Lifetime admissions, including compacted-away entries.
+    pub fn accepted_total(&self) -> u64 {
+        self.compacted + self.accepted.len() as u64
+    }
+
+    /// Lifetime completions, including compacted-away entries.
+    pub fn completed_total(&self) -> u64 {
+        self.compacted + self.completed.len() as u64
+    }
+
+    /// Drop fully-acknowledged entries: every (id, request) pair that is
+    /// both accepted and completed leaves both lists and bumps
+    /// `compacted`. [`CheckpointState::pending`] is unchanged — only
+    /// entries a failover would never re-route are removed — so long
+    /// sessions keep a bounded write-ahead log instead of one that grows
+    /// with total throughput.
+    pub fn compact(&mut self) {
+        let done: std::collections::BTreeSet<usize> = self.completed.iter().copied().collect();
+        let matched: std::collections::BTreeSet<usize> = self
+            .accepted
+            .iter()
+            .map(|(id, _)| *id)
+            .filter(|id| done.contains(id))
+            .collect();
+        if matched.is_empty() {
+            return;
+        }
+        self.accepted.retain(|(id, _)| !matched.contains(id));
+        self.completed.retain(|id| !matched.contains(id));
+        self.compacted += matched.len() as u64;
+    }
 }
+
+/// Failure of an out-of-band control fetch (e.g. the latency-histogram
+/// snapshot): distinguishes a leader that is gone from one that is alive
+/// but not answering, instead of blocking the caller forever.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlError {
+    /// The leader thread has stopped (drained, killed, or crashed).
+    Stopped,
+    /// The leader did not answer within [`CONTROL_RECV_TIMEOUT`] — it is
+    /// wedged or mid-drain; treat the shard as unresponsive.
+    Unresponsive,
+}
+
+impl std::fmt::Display for ControlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ControlError::Stopped => write!(f, "coordinator stopped"),
+            ControlError::Unresponsive => write!(f, "coordinator unresponsive"),
+        }
+    }
+}
+
+/// How long an out-of-band control fetch waits before declaring the
+/// leader unresponsive. Control fetches are O(1) snapshots, so a healthy
+/// leader answers as soon as it finishes the request in flight; only a
+/// wedged or killed-but-not-yet-reaped leader runs the clock out.
+pub const CONTROL_RECV_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Client handle to a running coordinator.
 #[derive(Clone)]
@@ -172,16 +242,24 @@ impl ClusterHandle {
         reply_rx.recv().unwrap_or_else(|_| stopped())
     }
 
-    /// Snapshot of the leader's decision-latency histogram (empty when the
-    /// coordinator has stopped). The sharded frontend merges these
-    /// bucket-wise, so fleet percentiles come from the union of samples
-    /// rather than the worst shard's percentile.
-    pub fn latency_histogram(&self) -> LatencyHistogram {
+    /// Snapshot of the leader's decision-latency histogram. The sharded
+    /// frontend merges these bucket-wise, so fleet percentiles come from
+    /// the union of samples rather than the worst shard's percentile.
+    ///
+    /// Bounded: a leader that has stopped reports [`ControlError::Stopped`]
+    /// and one that stays silent past [`CONTROL_RECV_TIMEOUT`] reports
+    /// [`ControlError::Unresponsive`] — the fetch never blocks forever on
+    /// a dead or wedged shard.
+    pub fn latency_histogram(&self) -> Result<LatencyHistogram, ControlError> {
         let (reply_tx, reply_rx) = mpsc::channel();
         if self.tx.send(Envelope::Latency { reply: reply_tx }).is_err() {
-            return LatencyHistogram::new();
+            return Err(ControlError::Stopped);
         }
-        reply_rx.recv().unwrap_or_else(|_| LatencyHistogram::new())
+        match reply_rx.recv_timeout(CONTROL_RECV_TIMEOUT) {
+            Ok(hist) => Ok(hist),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ControlError::Unresponsive),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ControlError::Stopped),
+        }
     }
 
     pub fn submit(&self, workload: &str, length_hours: f64, queue: usize) -> Result<usize, String> {
@@ -381,6 +459,11 @@ impl Leader {
             let q = q.min(self.depths.len() - 1);
             self.depths[q] = self.depths[q].saturating_sub(1);
             self.outcomes_seen += 1;
+        }
+        // Keep the write-ahead log bounded as acknowledgements advance:
+        // fully-completed entries can never be re-routed by a failover.
+        if ck.completed.len() >= CHECKPOINT_COMPACT_THRESHOLD {
+            ck.compact();
         }
     }
 
@@ -698,7 +781,7 @@ mod tests {
         h.submit("Jacobi(N=1k)", 3.0, 1).unwrap();
         let before = h.stats().unwrap().requests;
         // The histogram snapshot carries every recorded submit decision…
-        let hist = h.latency_histogram();
+        let hist = h.latency_histogram().unwrap();
         assert_eq!(hist.count(), 2);
         assert!(hist.percentile_ms(99.0) >= hist.percentile_ms(50.0));
         // …and fetching it does not bump the request counter.
@@ -727,6 +810,76 @@ mod tests {
         let metrics = coord.kill();
         assert_eq!(metrics.completed, 1);
         assert_eq!(metrics.unfinished, 2);
+    }
+
+    #[test]
+    fn latency_fetch_from_dead_leader_errors_instead_of_hanging() {
+        let coord = start_coordinator();
+        let h = coord.handle();
+        h.submit("N-body(N=100k)", 2.0, 0).unwrap();
+        // Kill the leader (joins the thread, drops the receiver): the
+        // out-of-band fetch must come back as a structured error, never
+        // block on a reply that cannot arrive.
+        let _ = coord.kill();
+        assert!(matches!(h.latency_histogram(), Err(ControlError::Stopped)));
+    }
+
+    #[test]
+    fn checkpoint_compaction_preserves_pending_and_totals() {
+        let mut ck = CheckpointState::default();
+        for id in 0..1000usize {
+            ck.accepted.push((id, sub("N-body(N=100k)", 1.0, id % 3)));
+        }
+        for id in 0..990usize {
+            ck.completed.push(id);
+        }
+        let pending_before = ck.pending();
+        assert_eq!(pending_before.len(), 10);
+        ck.compact();
+        // Only the 10 unfinished entries survive; totals reconstruct.
+        assert_eq!(ck.accepted.len(), 10);
+        assert!(ck.completed.is_empty());
+        assert_eq!(ck.compacted, 990);
+        assert_eq!(ck.accepted_total(), 1000);
+        assert_eq!(ck.completed_total(), 990);
+        assert_eq!(ck.pending(), pending_before);
+        // Idempotent: nothing left to match.
+        ck.compact();
+        assert_eq!(ck.compacted, 990);
+        // Completing the stragglers compacts them away too.
+        ck.completed.extend(990..1000usize);
+        ck.compact();
+        assert!(ck.accepted.is_empty());
+        assert_eq!(ck.accepted_total(), 1000);
+        assert_eq!(ck.completed_total(), 1000);
+        assert!(ck.pending().is_empty());
+    }
+
+    #[test]
+    fn leader_auto_compacts_past_threshold() {
+        let coord = start_coordinator();
+        let h = coord.handle();
+        // Admit and complete well past the threshold: short jobs finish
+        // on the next tick, so each round's completions accumulate.
+        let n = CHECKPOINT_COMPACT_THRESHOLD + 64;
+        for _ in 0..n {
+            h.submit("Heat(N=1k)", 1.0, 0).unwrap();
+        }
+        // Drain completes everything and runs sync_completions (and with
+        // it the compaction) one final time.
+        match h.request(Request::Drain) {
+            Response::Drained { completed, .. } => assert_eq!(completed, n),
+            other => panic!("expected drained, got {other:?}"),
+        }
+        let ck = coord.checkpoint();
+        assert!(
+            ck.accepted.len() < CHECKPOINT_COMPACT_THRESHOLD,
+            "write-ahead log must stay bounded, kept {}",
+            ck.accepted.len()
+        );
+        assert_eq!(ck.accepted_total(), n as u64);
+        assert_eq!(ck.completed_total(), n as u64);
+        coord.shutdown();
     }
 
     #[test]

@@ -1,0 +1,717 @@
+//! Session layer over the coordinator transports: handshake with resume
+//! tokens, per-session monotonic sequence numbers, server-side dedup of
+//! retried submits, bounded replay buffers, and heartbeat/lease expiry.
+//!
+//! The [`SessionServer`] wraps a [`ShardedCoordinator`] behind the
+//! [`FrameHandler`] interface both transports speak. Clients open a
+//! session with a `hello` frame, then send ordinary v2 envelopes carrying
+//! three extra top-level keys:
+//!
+//! * `session` — the session id from the handshake,
+//! * `seq` — a per-session monotonic sequence number starting at 0,
+//! * `ack` — the highest `seq` whose response the client has received
+//!   (lets the server drop replay entries).
+//!
+//! The server applies frames **in sequence order**: duplicates
+//! (`seq < next`) are answered from the replay cache without touching the
+//! cluster — a retried submit is idempotent and, crucially, does not
+//! advance the kill-plan submission clock — and early frames
+//! (`seq > next`) are parked until the gap closes, so a reordered link
+//! drains bitwise identical to an in-order one. Lease expiry sheds
+//! sessions whose client went silent, folding their counters into the
+//! exactly-once accounting instead of losing them.
+//!
+//! Frames without a `session` key pass straight through to the cluster —
+//! a session-unaware stdio/TCP client sees the exact pre-session
+//! protocol.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::api::{
+    ErrorCode, Request, Response, WireRequest, WireResponse, PROTOCOL_VERSION,
+};
+use crate::coordinator::shard::ShardedCoordinator;
+use crate::coordinator::transport::FrameHandler;
+use crate::util::json::{self, Json};
+
+/// Session-layer knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionConfig {
+    /// A session with no traffic for this many virtual slots is expired
+    /// and its counters folded into the retired accounting.
+    pub lease_slots: usize,
+    /// Largest tolerated gap between an early frame's `seq` and the next
+    /// expected one, and the bound on cached unacked responses.
+    pub replay_window: u64,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { lease_slots: 24, replay_window: 1024 }
+    }
+}
+
+/// Per-session accounting folded into [`SessionCounters`] on close.
+#[derive(Debug, Clone, Default)]
+struct SessionLedger {
+    accepted: u64,
+    shed: u64,
+    dedup_hits: u64,
+}
+
+struct SessionState {
+    client: String,
+    token: String,
+    /// Lowest sequence number not yet applied.
+    next_apply: u64,
+    /// Early frames (raw lines) waiting for the gap to close.
+    parked: BTreeMap<u64, String>,
+    /// Applied-but-unacked responses, keyed by seq, ready for replay.
+    replay: BTreeMap<u64, String>,
+    /// Virtual slot of the last frame seen from this session.
+    last_active_slot: usize,
+    ledger: SessionLedger,
+}
+
+/// Aggregate session-layer counters (live sessions + retired ones).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SessionCounters {
+    /// Fresh handshakes served.
+    pub handshakes: u64,
+    /// Successful resume handshakes.
+    pub resumes: u64,
+    /// Retried frames answered from the replay cache without touching
+    /// the cluster.
+    pub dedup_hits: u64,
+    /// Sessions shed by lease expiry.
+    pub expired_sessions: u64,
+    /// Unacked responses outstanding when their session expired.
+    pub expired_unacked: u64,
+    /// Sessions closed cleanly by `bye`.
+    pub closed_sessions: u64,
+    /// Submissions accepted across all sessions (the client side of the
+    /// exactly-once identity).
+    pub accepted: u64,
+    /// Submissions shed by backpressure across all sessions.
+    pub shed: u64,
+}
+
+/// The server side of the session protocol: owns the cluster and every
+/// live session. One instance serves all connections of a deployment
+/// (the transports hand it frames under a mutex).
+pub struct SessionServer {
+    cluster: ShardedCoordinator,
+    cfg: SessionConfig,
+    sessions: BTreeMap<u64, SessionState>,
+    by_token: BTreeMap<String, u64>,
+    next_session: u64,
+    /// Virtual slot mirror (advanced by applied ticks) — the lease clock.
+    slot: usize,
+    /// Counters of sessions already retired (expired or closed).
+    retired: SessionCounters,
+    done: bool,
+}
+
+/// Deterministic resume token: a keyed fold of (client, session id).
+/// Deterministic on purpose — reconnect tests and seeded benches replay
+/// identical handshakes; this is not an authentication boundary.
+fn token_of(client: &str, id: u64) -> String {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in client.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^= id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h = h.rotate_left(27).wrapping_mul(0x2545_F491_4F6C_DD1D);
+    format!("tok-{h:016x}")
+}
+
+/// Checked decode of an unsigned envelope counter (`seq`, `ack`,
+/// `session`): present, finite, integral, non-negative.
+fn seq_field(v: &Json, key: &str) -> Option<u64> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .filter(|f| f.is_finite() && *f >= 0.0 && f.fract() == 0.0)
+        .map(|f| f as u64)
+}
+
+impl SessionServer {
+    pub fn new(cluster: ShardedCoordinator, cfg: SessionConfig) -> SessionServer {
+        SessionServer {
+            cluster,
+            cfg,
+            sessions: BTreeMap::new(),
+            by_token: BTreeMap::new(),
+            next_session: 0,
+            slot: 0,
+            retired: SessionCounters::default(),
+            done: false,
+        }
+    }
+
+    /// True once a drain has been applied (via any path).
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Live + retired counters.
+    pub fn counters(&self) -> SessionCounters {
+        let mut c = self.retired;
+        for s in self.sessions.values() {
+            c.accepted += s.ledger.accepted;
+            c.shed += s.ledger.shed;
+            c.dedup_hits += s.ledger.dedup_hits;
+        }
+        c
+    }
+
+    /// Hand the cluster back for shutdown accounting (killed metrics,
+    /// failover counters).
+    pub fn into_cluster(self) -> ShardedCoordinator {
+        self.cluster
+    }
+
+    /// Consume one envelope line, produce zero or more response lines.
+    /// Zero happens only for parked (early) frames.
+    pub fn handle_line(&mut self, line: &str) -> Vec<String> {
+        let parsed = match json::parse(line.trim()) {
+            Ok(v) => v,
+            Err(e) => {
+                return vec![error_line(
+                    ErrorCode::BadRequest,
+                    &format!("invalid json: {e}"),
+                    None,
+                    &[],
+                )]
+            }
+        };
+        match parsed.get("op").and_then(Json::as_str) {
+            Some("hello") => vec![self.handshake(&parsed)],
+            Some("ping") => vec![self.ping(&parsed)],
+            Some("bye") => vec![self.bye(&parsed)],
+            _ if parsed.get("session").is_some() => self.sequenced(&parsed, line),
+            _ => vec![self.passthrough(line)],
+        }
+    }
+
+    /// `hello`: open a fresh session, or resume one by token. The reply
+    /// carries the session id, resume token, next expected seq, and the
+    /// lease length, so the client knows both its address and how long
+    /// it may stay silent.
+    fn handshake(&mut self, v: &Json) -> String {
+        let client = v.get("client").and_then(Json::as_str).unwrap_or("anon").to_string();
+        if let Some(token) = v.get("resume").and_then(Json::as_str) {
+            if let Some(&sid) = self.by_token.get(token) {
+                let slot = self.slot;
+                let ack = seq_field(v, "ack");
+                let sess = self.sessions.get_mut(&sid).expect("token index out of sync");
+                sess.last_active_slot = slot;
+                if let Some(a) = ack {
+                    apply_ack(sess, a);
+                }
+                self.retired.resumes += 1;
+                return hello_line(sid, &sess.token, sess.next_apply, self.cfg, true);
+            }
+            // Unknown or expired token: fall through to a fresh session.
+            // The reply says `resumed: false`, so the client knows its
+            // unacked frames must not be replayed blindly.
+        }
+        let sid = self.next_session;
+        self.next_session += 1;
+        let token = token_of(&client, sid);
+        self.by_token.insert(token.clone(), sid);
+        self.sessions.insert(
+            sid,
+            SessionState {
+                client,
+                token: token.clone(),
+                next_apply: 0,
+                parked: BTreeMap::new(),
+                replay: BTreeMap::new(),
+                last_active_slot: self.slot,
+                ledger: SessionLedger::default(),
+            },
+        );
+        self.retired.handshakes += 1;
+        hello_line(sid, &token, 0, self.cfg, false)
+    }
+
+    /// `ping`: unsequenced heartbeat. Refreshes the lease; answers with
+    /// the server's virtual slot.
+    fn ping(&mut self, v: &Json) -> String {
+        let mut pairs = vec![
+            ("v", Json::num(PROTOCOL_VERSION as f64)),
+            ("ok", Json::Bool(true)),
+            ("kind", Json::Str("pong".into())),
+            ("slot", Json::num(self.slot as f64)),
+        ];
+        if let Some(sid) = seq_field(v, "session") {
+            if let Some(sess) = self.sessions.get_mut(&sid) {
+                sess.last_active_slot = self.slot;
+                pairs.push(("session", Json::num(sid as f64)));
+            }
+        }
+        Json::obj(pairs).to_string()
+    }
+
+    /// `bye`: clean close. Final ack applies, counters fold into the
+    /// retired totals, the session and its token disappear.
+    fn bye(&mut self, v: &Json) -> String {
+        if let Some(sid) = seq_field(v, "session") {
+            if let Some(mut sess) = self.sessions.remove(&sid) {
+                if let Some(a) = seq_field(v, "ack") {
+                    apply_ack(&mut sess, a);
+                }
+                self.by_token.remove(&sess.token);
+                self.retired.closed_sessions += 1;
+                self.fold_ledger(&sess);
+            }
+        }
+        Json::obj(vec![
+            ("v", Json::num(PROTOCOL_VERSION as f64)),
+            ("ok", Json::Bool(true)),
+            ("kind", Json::Str("bye".into())),
+        ])
+        .to_string()
+    }
+
+    fn fold_ledger(&mut self, sess: &SessionState) {
+        self.retired.accepted += sess.ledger.accepted;
+        self.retired.shed += sess.ledger.shed;
+        self.retired.dedup_hits += sess.ledger.dedup_hits;
+    }
+
+    /// A sequenced frame: dedup below the cursor, apply at it, park above
+    /// it. All responses carry `session` and `seq` extras for client-side
+    /// correlation.
+    fn sequenced(&mut self, v: &Json, line: &str) -> Vec<String> {
+        let Some(sid) = seq_field(v, "session") else {
+            return vec![error_line(
+                ErrorCode::BadRequest,
+                "'session' must be a non-negative integer",
+                None,
+                &[],
+            )];
+        };
+        if !self.sessions.contains_key(&sid) {
+            // Unknown (expired or never opened): the client must
+            // re-handshake before anything else applies.
+            return vec![error_line(
+                ErrorCode::BadRequest,
+                &format!("unknown session {sid}"),
+                None,
+                &[("session", Json::num(sid as f64))],
+            )];
+        }
+        let Some(seq) = seq_field(v, "seq") else {
+            return vec![error_line(
+                ErrorCode::BadRequest,
+                "sequenced frame missing 'seq'",
+                None,
+                &[("session", Json::num(sid as f64))],
+            )];
+        };
+        let ack = seq_field(v, "ack");
+        let window = self.cfg.replay_window;
+        let slot = self.slot;
+        {
+            let sess = self.sessions.get_mut(&sid).expect("checked above");
+            sess.last_active_slot = slot;
+            if let Some(a) = ack {
+                apply_ack(sess, a);
+            }
+            if seq < sess.next_apply {
+                // Retry of an already-applied frame: answer from the
+                // replay cache. The cluster — and with it the kill-plan
+                // submission clock — is never consulted twice.
+                sess.ledger.dedup_hits += 1;
+                let cached = sess.replay.get(&seq).cloned();
+                return vec![cached.unwrap_or_else(|| {
+                    error_line(
+                        ErrorCode::BadRequest,
+                        &format!("seq {seq} already applied and acked"),
+                        None,
+                        &[("session", Json::num(sid as f64)), ("seq", Json::num(seq as f64))],
+                    )
+                })];
+            }
+            if seq > sess.next_apply {
+                if seq - sess.next_apply > window {
+                    return vec![error_line(
+                        ErrorCode::BadRequest,
+                        &format!(
+                            "seq {seq} is {} past the cursor (replay window {window})",
+                            seq - sess.next_apply
+                        ),
+                        None,
+                        &[("session", Json::num(sid as f64)), ("seq", Json::num(seq as f64))],
+                    )];
+                }
+                // Early: park until the gap closes. No response yet — the
+                // client's retry discipline covers the missing frame.
+                sess.parked.insert(seq, line.to_string());
+                return Vec::new();
+            }
+        }
+        // seq == next_apply: apply it, then drain any parked successors
+        // the gap-close just unlocked.
+        let mut out = vec![self.apply_one(sid, seq, line)];
+        loop {
+            let next = {
+                let sess = self.sessions.get_mut(&sid).expect("session vanished mid-apply");
+                let cursor = sess.next_apply;
+                sess.parked.remove(&cursor).map(|l| (cursor, l))
+            };
+            match next {
+                Some((cursor, parked_line)) => {
+                    out.push(self.apply_one(sid, cursor, parked_line.as_str()))
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Apply one in-order frame to the cluster, cache and return its
+    /// encoded response.
+    fn apply_one(&mut self, sid: u64, seq: u64, line: &str) -> String {
+        let extras =
+            [("session", Json::num(sid as f64)), ("seq", Json::num(seq as f64))];
+        let encoded = match WireRequest::from_json_line(line) {
+            Ok(wire) => {
+                let resp = self.cluster.handle_request(wire.req);
+                if let Some(sess) = self.sessions.get_mut(&sid) {
+                    count_outcomes(&mut sess.ledger, &resp);
+                }
+                match &resp {
+                    Response::Ticked { slot } => {
+                        self.slot = *slot;
+                        self.expire_leases();
+                    }
+                    Response::Drained { .. } => self.done = true,
+                    _ => {}
+                }
+                WireResponse { v: PROTOCOL_VERSION, id: wire.id, resp }
+                    .to_json_line_with(&extras)
+            }
+            // Malformed frames still consume their sequence slot — the
+            // error is the (cached, replayable) response.
+            Err(p) => error_line(p.code, &p.message, p.id, &extras),
+        };
+        if let Some(sess) = self.sessions.get_mut(&sid) {
+            sess.next_apply = seq + 1;
+            sess.replay.insert(seq, encoded.clone());
+            // A client that never acks cannot grow the cache without
+            // bound; oldest entries go first (it acked nothing, so it can
+            // re-derive nothing — misbehavior costs the misbehaver).
+            while sess.replay.len() as u64 > self.cfg.replay_window {
+                sess.replay.pop_first();
+            }
+        }
+        encoded
+    }
+
+    /// Shed sessions whose lease ran out: silent past `lease_slots`.
+    /// Their counters fold into the retired totals, so the exactly-once
+    /// accounting keeps every accepted submission visible.
+    fn expire_leases(&mut self) {
+        let cutoff = self.cfg.lease_slots;
+        let slot = self.slot;
+        let dead: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| slot.saturating_sub(s.last_active_slot) > cutoff)
+            .map(|(&id, _)| id)
+            .collect();
+        for sid in dead {
+            if let Some(sess) = self.sessions.remove(&sid) {
+                self.by_token.remove(&sess.token);
+                self.retired.expired_sessions += 1;
+                self.retired.expired_unacked += sess.replay.len() as u64;
+                self.fold_ledger(&sess);
+            }
+        }
+    }
+
+    /// A line with no session machinery: the pre-session stdio protocol,
+    /// byte for byte.
+    fn passthrough(&mut self, line: &str) -> String {
+        match WireRequest::from_json_line(line) {
+            Ok(wire) => {
+                let resp = self.cluster.handle_request(wire.req);
+                match &resp {
+                    Response::Ticked { slot } => {
+                        self.slot = *slot;
+                        self.expire_leases();
+                    }
+                    Response::Drained { .. } => self.done = true,
+                    _ => {}
+                }
+                WireResponse { v: wire.v.max(1), id: wire.id, resp }.to_json_line()
+            }
+            Err(p) => WireResponse {
+                v: PROTOCOL_VERSION,
+                id: p.id,
+                resp: Response::Error { code: p.code, message: p.message },
+            }
+            .to_json_line(),
+        }
+    }
+}
+
+impl FrameHandler for SessionServer {
+    fn handle_frame(&mut self, line: &str) -> Vec<String> {
+        self.handle_line(line)
+    }
+    fn done(&self) -> bool {
+        self.done
+    }
+}
+
+/// Extract the cluster back out of a shared server once every transport
+/// clone has been dropped. `None` while other `Arc` handles survive.
+pub fn take_cluster(server: Arc<Mutex<SessionServer>>) -> Option<ShardedCoordinator> {
+    Arc::try_unwrap(server)
+        .ok()
+        .map(|m| m.into_inner().expect("session server poisoned").into_cluster())
+}
+
+fn apply_ack(sess: &mut SessionState, ack: u64) {
+    // Everything at or below the ack cursor is delivered; replaying it
+    // can never be needed again.
+    sess.replay.retain(|&seq, _| seq > ack);
+}
+
+/// Fold a response's submission outcomes into a session ledger.
+fn count_outcomes(ledger: &mut SessionLedger, resp: &Response) {
+    match resp {
+        Response::Submitted { .. } => ledger.accepted += 1,
+        Response::Error { code: ErrorCode::QueueFull | ErrorCode::Shed, .. } => ledger.shed += 1,
+        Response::Batch { results } => {
+            for r in results {
+                match r {
+                    crate::coordinator::api::SubmitOutcome::Accepted { .. } => {
+                        ledger.accepted += 1
+                    }
+                    crate::coordinator::api::SubmitOutcome::Rejected {
+                        code: ErrorCode::QueueFull | ErrorCode::Shed,
+                        ..
+                    } => ledger.shed += 1,
+                    crate::coordinator::api::SubmitOutcome::Rejected { .. } => {}
+                }
+            }
+        }
+        _ => {}
+    }
+}
+
+fn hello_line(sid: u64, token: &str, next_seq: u64, cfg: SessionConfig, resumed: bool) -> String {
+    Json::obj(vec![
+        ("v", Json::num(PROTOCOL_VERSION as f64)),
+        ("ok", Json::Bool(true)),
+        ("kind", Json::Str("hello".into())),
+        ("session", Json::num(sid as f64)),
+        ("token", Json::Str(token.to_string())),
+        ("next_seq", Json::num(next_seq as f64)),
+        ("lease_slots", Json::num(cfg.lease_slots as f64)),
+        ("resumed", Json::Bool(resumed)),
+    ])
+    .to_string()
+}
+
+fn error_line(
+    code: ErrorCode,
+    message: &str,
+    id: Option<String>,
+    extras: &[(&str, Json)],
+) -> String {
+    WireResponse {
+        v: PROTOCOL_VERSION,
+        id,
+        resp: Response::Error { code, message: message.to_string() },
+    }
+    .to_json_line_with(extras)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, ServiceConfig};
+    use crate::coordinator::shard::shard_regions;
+    use crate::experiments::cells::DispatchStrategy;
+    use crate::sched::PolicyKind;
+
+    fn small_server() -> SessionServer {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 8;
+        cfg.horizon_hours = 48;
+        cfg.history_hours = 72;
+        cfg.replay_offsets = 1;
+        let service = ServiceConfig::default();
+        let regions = shard_regions("1", &cfg.region).unwrap();
+        let cluster = ShardedCoordinator::start(
+            &cfg,
+            &service,
+            PolicyKind::CarbonAgnostic,
+            &regions,
+            DispatchStrategy::RoundRobin,
+        );
+        SessionServer::new(cluster, SessionConfig::default())
+    }
+
+    fn submit_line(sid: u64, seq: u64, ack: Option<u64>) -> String {
+        let wire = WireRequest::new(Request::Submit(crate::coordinator::api::SubmitRequest {
+            workload: "N-body(N=100k)".to_string(),
+            length_hours: 2.0,
+            queue: 0,
+        }));
+        let mut extras = vec![
+            ("session", Json::num(sid as f64)),
+            ("seq", Json::num(seq as f64)),
+        ];
+        if let Some(a) = ack {
+            extras.push(("ack", Json::num(a as f64)));
+        }
+        wire.to_json_line_with(&extras)
+    }
+
+    fn hello(server: &mut SessionServer, client: &str) -> (u64, String) {
+        let line = format!(r#"{{"op":"hello","client":"{client}"}}"#);
+        let out = server.handle_line(&line);
+        assert_eq!(out.len(), 1);
+        let v = json::parse(&out[0]).unwrap();
+        assert_eq!(v.get("kind").and_then(Json::as_str), Some("hello"));
+        let sid = v.get("session").and_then(Json::as_usize).unwrap() as u64;
+        let token = v.get("token").and_then(Json::as_str).unwrap().to_string();
+        (sid, token)
+    }
+
+    #[test]
+    fn handshake_submit_dedup_roundtrip() {
+        let mut server = small_server();
+        let (sid, _token) = hello(&mut server, "alice");
+        let line = submit_line(sid, 0, None);
+        let first = server.handle_line(&line);
+        assert_eq!(first.len(), 1);
+        assert!(first[0].contains("\"job_id\""), "{}", first[0]);
+        // Retrying the same seq replays the identical bytes and never
+        // re-submits: accepted stays 1, dedup_hits counts the retry.
+        let retry = server.handle_line(&line);
+        assert_eq!(retry, first);
+        let c = server.counters();
+        assert_eq!(c.accepted, 1);
+        assert_eq!(c.dedup_hits, 1);
+        assert_eq!(c.handshakes, 1);
+    }
+
+    #[test]
+    fn reordered_frames_apply_in_sequence_order() {
+        let mut server = small_server();
+        let (sid, _) = hello(&mut server, "bob");
+        // seq 1 arrives early: parked, no response.
+        let early = server.handle_line(&submit_line(sid, 1, None));
+        assert!(early.is_empty());
+        // seq 0 closes the gap: both apply, in order, in one go.
+        let out = server.handle_line(&submit_line(sid, 0, None));
+        assert_eq!(out.len(), 2);
+        let v0 = json::parse(&out[0]).unwrap();
+        let v1 = json::parse(&out[1]).unwrap();
+        assert_eq!(v0.get("seq").and_then(Json::as_usize), Some(0));
+        assert_eq!(v1.get("seq").and_then(Json::as_usize), Some(1));
+        assert_eq!(v0.get("job_id").and_then(Json::as_usize), Some(0));
+        assert_eq!(v1.get("job_id").and_then(Json::as_usize), Some(1));
+        assert_eq!(server.counters().accepted, 2);
+    }
+
+    #[test]
+    fn ack_compacts_replay_and_resume_restores_cursor() {
+        let mut server = small_server();
+        let (sid, token) = hello(&mut server, "carol");
+        server.handle_line(&submit_line(sid, 0, None));
+        server.handle_line(&submit_line(sid, 1, Some(0)));
+        {
+            let sess = server.sessions.get(&sid).unwrap();
+            assert_eq!(sess.replay.len(), 1, "acked seq 0 must be dropped");
+            assert!(sess.replay.contains_key(&1));
+        }
+        // Resume by token: same session, cursor intact.
+        let out =
+            server.handle_line(&format!(r#"{{"op":"hello","client":"carol","resume":"{token}"}}"#));
+        let v = json::parse(&out[0]).unwrap();
+        assert_eq!(v.get("resumed").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("session").and_then(Json::as_usize), Some(sid as usize));
+        assert_eq!(v.get("next_seq").and_then(Json::as_usize), Some(2));
+        assert_eq!(server.counters().resumes, 1);
+        // Unknown token opens a fresh session instead.
+        let out = server.handle_line(r#"{"op":"hello","client":"carol","resume":"tok-bogus"}"#);
+        let v = json::parse(&out[0]).unwrap();
+        assert_eq!(v.get("resumed").and_then(Json::as_bool), Some(false));
+        assert_ne!(v.get("session").and_then(Json::as_usize), Some(sid as usize));
+    }
+
+    #[test]
+    fn lease_expiry_sheds_silent_sessions_into_accounting() {
+        let mut server = small_server();
+        server.cfg.lease_slots = 2;
+        let (sid, _) = hello(&mut server, "dave");
+        server.handle_line(&submit_line(sid, 0, None));
+        // Another client ticks the clock past dave's lease.
+        let (sid2, _) = hello(&mut server, "erin");
+        for seq in 0..4u64 {
+            let tick = WireRequest::new(Request::Tick).to_json_line_with(&[
+                ("session", Json::num(sid2 as f64)),
+                ("seq", Json::num(seq as f64)),
+            ]);
+            server.handle_line(&tick);
+        }
+        assert!(!server.sessions.contains_key(&sid), "silent session must expire");
+        let c = server.counters();
+        assert_eq!(c.expired_sessions, 1);
+        assert_eq!(c.expired_unacked, 1, "dave never acked his submit");
+        assert_eq!(c.accepted, 1, "expired accounting keeps the accepted submit");
+        // A frame on the dead session is a structured error, not a crash.
+        let out = server.handle_line(&submit_line(sid, 1, None));
+        assert!(out[0].contains("unknown session"), "{}", out[0]);
+    }
+
+    #[test]
+    fn passthrough_lines_match_the_stdio_protocol() {
+        let mut server = small_server();
+        let line = WireRequest::new(Request::Status).to_json_line();
+        let out = server.handle_line(&line);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains("\"kind\": \"status\"") || out[0].contains("\"kind\":\"status\""));
+        assert!(!out[0].contains("session"));
+        // Drain flips done for the transports' accept loops.
+        let out = server.handle_line(&WireRequest::new(Request::Drain).to_json_line());
+        assert!(out[0].contains("drained"), "{}", out[0]);
+        assert!(server.is_done());
+    }
+
+    #[test]
+    fn seq_gap_beyond_window_is_rejected() {
+        let mut server = small_server();
+        server.cfg.replay_window = 4;
+        let (sid, _) = hello(&mut server, "frank");
+        let out = server.handle_line(&submit_line(sid, 100, None));
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains("replay window"), "{}", out[0]);
+        // The cursor did not move; in-order traffic still applies.
+        let ok = server.handle_line(&submit_line(sid, 0, None));
+        assert!(ok[0].contains("job_id"), "{}", ok[0]);
+    }
+
+    #[test]
+    fn bye_closes_and_folds_counters() {
+        let mut server = small_server();
+        let (sid, _) = hello(&mut server, "gina");
+        server.handle_line(&submit_line(sid, 0, None));
+        let out = server.handle_line(&format!(r#"{{"op":"bye","session":{sid},"ack":0}}"#));
+        assert!(out[0].contains("\"bye\""), "{}", out[0]);
+        assert!(!server.sessions.contains_key(&sid));
+        let c = server.counters();
+        assert_eq!(c.closed_sessions, 1);
+        assert_eq!(c.accepted, 1);
+    }
+}

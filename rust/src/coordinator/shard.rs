@@ -403,7 +403,11 @@ impl ShardedCoordinator {
         let per = self.stats();
         let mut merged = LatencyHistogram::new();
         for sh in &self.shards {
-            merged.merge(&sh.handle.latency_histogram());
+            // A dead or wedged shard contributes nothing rather than
+            // hanging the whole stats fetch (see `ControlError`).
+            if let Ok(h) = sh.handle.latency_histogram() {
+                merged.merge(&h);
+            }
         }
         let mut agg = StatsResponse {
             slot: self.slot,
@@ -601,8 +605,11 @@ mod tests {
         }
         // Round-robin spread the stream, so the union must hold every
         // recorded decision across both shards.
-        let total: u64 =
-            cluster.shards.iter().map(|sh| sh.handle.latency_histogram().count()).sum();
+        let total: u64 = cluster
+            .shards
+            .iter()
+            .map(|sh| sh.handle.latency_histogram().unwrap().count())
+            .sum();
         assert_eq!(total, 6);
         match cluster.stats_merged() {
             Response::Stats(st) => {

@@ -16,12 +16,18 @@
 //! runs the smoke config, asserts the headline fields, and uploads the
 //! JSON as an artifact.
 
+use std::sync::{Arc, Mutex};
+
 use crate::carbon::synth::Region;
 use crate::config::{ExperimentConfig, ServiceConfig};
-use crate::coordinator::loadgen::{drive, submissions_of};
+use crate::coordinator::client::SessionClient;
+use crate::coordinator::loadgen::{drive, drive_session, submissions_of};
+use crate::coordinator::session::{take_cluster, SessionConfig, SessionServer};
 use crate::coordinator::shard::ShardedCoordinator;
+use crate::coordinator::transport::{FrameHandler, LoopbackTransport};
 use crate::experiments::cells::DispatchStrategy;
 use crate::experiments::runner::PreparedExperiment;
+use crate::faults::net::{LinkFaultSpec, LinkPlan};
 use crate::faults::{FaultPlan, FaultSpec};
 use crate::sched::PolicyKind;
 use crate::util::json::Json;
@@ -88,6 +94,15 @@ pub struct ChaosReport {
     /// Exactly-once drain identity: killed-incarnation completions +
     /// failover sheds + fleet drain == accepted submissions.
     pub drained_exactly_once: bool,
+    // Session chaos leg: the same shard kills, driven through a session
+    // client over a loopback link carrying a seeded fault plan.
+    pub session_reconnects: u64,
+    pub session_retries: u64,
+    pub session_dedup_hits: u64,
+    pub session_link_events: usize,
+    /// Exactly-once identity under combined shard kills + link faults,
+    /// with the server-side session ledger agreeing with the client.
+    pub session_exactly_once: bool,
 }
 
 /// Run both chaos legs. Deterministic in `(opts.cfg.seed, preset)`; the
@@ -134,6 +149,52 @@ pub fn run_chaos_bench(opts: &ChaosBenchOpts) -> Result<ChaosReport, String> {
         + failover_shed
         == report.accepted as u64;
 
+    // --- Session chaos leg: the same kill plan, driven through a session
+    // client whose loopback link carries a seeded fault plan from the
+    // matching link preset. Dedup'd retries never reach the cluster, so
+    // the kill clock (submissions seen) fires at the same points as the
+    // plain serve leg — and the exactly-once identity must still hold.
+    let link_spec = LinkFaultSpec::preset(&opts.preset)
+        .ok_or_else(|| format!("unknown link-fault preset '{}'", opts.preset))?;
+    let link_plan =
+        LinkPlan::generate(cfg.seed, &link_spec, opts.serve_jobs + cfg.horizon_hours + 16);
+    let session_link_events = link_plan.len();
+    let mut session_cluster = ShardedCoordinator::start(
+        cfg,
+        &opts.service,
+        opts.serve_kind,
+        &regions,
+        DispatchStrategy::RoundRobin,
+    );
+    session_cluster.set_kill_plan(&serve_plan.shard_kills);
+    let server = Arc::new(Mutex::new(SessionServer::new(
+        session_cluster,
+        SessionConfig::default(),
+    )));
+    let handler: Arc<Mutex<dyn FrameHandler>> = server.clone();
+    let mut client = SessionClient::new(
+        Box::new(LoopbackTransport::new(handler, link_plan)),
+        "chaos-session",
+        cfg.seed,
+    );
+    let s_report = drive_session(&mut client, &arrivals, 16, "chaos-session")
+        .map_err(|e| format!("session chaos leg failed: {e}"))?;
+    let s_stats = client.stats();
+    drop(client);
+    let s_counters =
+        server.lock().map_err(|_| "session server poisoned")?.counters();
+    let session_cluster =
+        take_cluster(server).ok_or("session server still shared after chaos leg")?;
+    let (_, _, s_failover_shed) = session_cluster.failover_counters();
+    let s_killed: usize =
+        session_cluster.killed_metrics().iter().map(|m| m.completed).sum();
+    session_cluster.shutdown();
+    let session_exactly_once = s_killed as u64
+        + s_report.completed as u64
+        + s_failover_shed
+        == s_report.accepted as u64
+        && s_counters.accepted == s_report.accepted as u64;
+
     Ok(ChaosReport {
         preset: opts.preset.clone(),
         carbon_clean_g: cg,
@@ -154,6 +215,11 @@ pub fn run_chaos_bench(opts: &ChaosBenchOpts) -> Result<ChaosReport, String> {
         failover_shed,
         shed_during_failover_rate,
         drained_exactly_once,
+        session_reconnects: s_stats.reconnects,
+        session_retries: s_stats.retries,
+        session_dedup_hits: s_counters.dedup_hits,
+        session_link_events,
+        session_exactly_once,
     })
 }
 
@@ -199,6 +265,16 @@ impl ChaosReport {
             ),
             ("shed_during_failover_rate", Json::num(self.shed_during_failover_rate)),
             ("drained_exactly_once", Json::Bool(self.drained_exactly_once)),
+            (
+                "session",
+                Json::obj(vec![
+                    ("reconnects", Json::num(self.session_reconnects as f64)),
+                    ("retries", Json::num(self.session_retries as f64)),
+                    ("dedup_hits", Json::num(self.session_dedup_hits as f64)),
+                    ("link_events", Json::num(self.session_link_events as f64)),
+                ]),
+            ),
+            ("session_exactly_once", Json::Bool(self.session_exactly_once)),
             ("wall_seconds", Json::num(wall_seconds)),
         ])
     }
@@ -226,6 +302,10 @@ mod tests {
         assert!(r.degraded_stale + r.degraded_fallback > 0, "ladder never engaged");
         assert_eq!(r.failovers, 1, "shard kill did not fire");
         assert!(r.drained_exactly_once, "accepted submissions lost or duplicated");
+        // The combined cell: link faults actually fired alongside the
+        // shard kill, and the session still accounted exactly once.
+        assert!(r.session_link_events > 0, "light link plan was empty");
+        assert!(r.session_exactly_once, "session leg lost or duplicated submissions");
         assert!(r.carbon_clean_g > 0.0 && r.carbon_faulted_g > 0.0);
         // Determinism: a second run reproduces the document bitwise.
         let again = run_chaos_bench(&opts).unwrap();
@@ -244,6 +324,9 @@ mod tests {
         assert_eq!(r.restarts, 0);
         assert_eq!(r.failovers, 0);
         assert!(r.drained_exactly_once);
+        assert_eq!(r.session_link_events, 0);
+        assert_eq!(r.session_reconnects + r.session_retries + r.session_dedup_hits, 0);
+        assert!(r.session_exactly_once);
         assert_eq!(r.carbon_clean_g.to_bits(), r.carbon_faulted_g.to_bits());
     }
 
@@ -264,6 +347,7 @@ mod tests {
             "recovery_p99_slots",
             "shed_during_failover_rate",
             "drained_exactly_once",
+            "session_exactly_once",
         ] {
             assert!(doc.get(field).is_some(), "missing headline field '{field}'");
         }

@@ -8,6 +8,7 @@ pub mod cells;
 pub mod chaos;
 pub mod figures;
 pub mod forecast_noise;
+pub mod net;
 pub mod perf;
 pub mod runner;
 pub mod spatial;
@@ -16,5 +17,6 @@ pub mod yearlong;
 
 pub use cells::{route_arrival, DispatchStrategy};
 pub use chaos::{run_chaos_bench, ChaosBenchOpts, ChaosReport};
+pub use net::{run_net_bench, NetBenchOpts, NetReport};
 pub use runner::{run_policies, run_policy, ExperimentRow, PreparedExperiment};
 pub use sweep::{SweepRunner, SweepSpec, SweepVariant};

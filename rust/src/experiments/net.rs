@@ -1,0 +1,348 @@
+//! Network/session benchmark (§Robustness): what the session layer costs
+//! and whether it keeps its promises.
+//!
+//! Four deterministic legs over one generated arrival stream:
+//!
+//! - **stdio leg** — the in-process [`drive`] baseline: submit latency
+//!   percentiles and the reference drain report.
+//! - **loopback clean leg** — the same stream through a
+//!   [`SessionClient`] over a fault-free in-process loopback: must drain
+//!   bitwise identical to stdio (the session layer adds no behavior).
+//! - **loopback faulted leg** — the stream through a seeded
+//!   [`LinkPlan`] (drops, dups, delays, disconnects): the client retries
+//!   and reconnects, the server dedups, and the drain must still account
+//!   for every accepted submission exactly once.
+//! - **TCP leg** — the clean stream over real `std::net` sockets on
+//!   localhost: identity again, plus TCP submit percentiles.
+//!
+//! Emitted as the `BENCH_net.json` document; the CI `net-smoke` job runs
+//! the smoke config, asserts the headline fields, and uploads the JSON.
+
+use std::sync::{Arc, Mutex};
+
+use crate::carbon::synth::Region;
+use crate::config::{ExperimentConfig, ServiceConfig};
+use crate::coordinator::client::SessionClient;
+use crate::coordinator::loadgen::{drive, drive_session, submissions_of, DriveReport};
+use crate::coordinator::session::{take_cluster, SessionConfig, SessionCounters, SessionServer};
+use crate::coordinator::shard::ShardedCoordinator;
+use crate::coordinator::transport::{
+    bind_tcp, serve_on, FrameHandler, LoopbackTransport, TcpTransport,
+};
+use crate::experiments::cells::DispatchStrategy;
+use crate::faults::net::{LinkFaultSpec, LinkPlan};
+use crate::sched::PolicyKind;
+use crate::util::json::Json;
+use crate::workload::tracegen;
+
+/// Options for [`run_net_bench`].
+#[derive(Debug, Clone)]
+pub struct NetBenchOpts {
+    pub cfg: ExperimentConfig,
+    pub service: ServiceConfig,
+    pub kind: PolicyKind,
+    /// Arrival count per leg.
+    pub jobs: usize,
+    /// Trace horizon, hours.
+    pub horizon: usize,
+    pub seed: u64,
+    /// Link-fault preset for the faulted leg (see [`LinkFaultSpec::preset`]).
+    pub preset: String,
+    /// Pipeline window (frames in flight per client window).
+    pub window: usize,
+    /// Skip the TCP leg (for environments without localhost sockets).
+    pub skip_tcp: bool,
+}
+
+impl NetBenchOpts {
+    pub fn new(cfg: ExperimentConfig, service: ServiceConfig) -> NetBenchOpts {
+        NetBenchOpts {
+            cfg,
+            service,
+            kind: PolicyKind::CarbonAgnostic,
+            jobs: 120,
+            horizon: 48,
+            seed: 0,
+            preset: "heavy".to_string(),
+            window: 16,
+            skip_tcp: false,
+        }
+    }
+}
+
+/// The measured network/session document.
+#[derive(Debug, Clone)]
+pub struct NetReport {
+    pub preset: String,
+    pub stdio: DriveReport,
+    pub loopback: DriveReport,
+    pub faulted: DriveReport,
+    pub tcp: Option<DriveReport>,
+    /// Fault-free legs (loopback, and TCP when run) drain bitwise
+    /// identical to the stdio baseline.
+    pub fault_free_identical: bool,
+    /// Faulted leg: every accepted submission completed exactly once and
+    /// the server-side session ledger agrees with the client's count.
+    pub exactly_once: bool,
+    /// Faulted-leg client telemetry.
+    pub reconnects: u64,
+    pub retries: u64,
+    pub timeouts: u64,
+    /// Faulted-leg server telemetry.
+    pub dedup_hits: u64,
+    pub resumes: u64,
+    /// Events in the generated link plan (0 for preset "none").
+    pub plan_events: usize,
+}
+
+fn session_pair(
+    cfg: &ExperimentConfig,
+    service: &ServiceConfig,
+    kind: PolicyKind,
+    region: Region,
+) -> Arc<Mutex<SessionServer>> {
+    let cluster = ShardedCoordinator::start(
+        cfg,
+        service,
+        kind,
+        &[region],
+        DispatchStrategy::RoundRobin,
+    );
+    Arc::new(Mutex::new(SessionServer::new(cluster, SessionConfig::default())))
+}
+
+/// Recover the cluster from a served session server and shut it down,
+/// returning the server-side session counters.
+fn finish(server: Arc<Mutex<SessionServer>>) -> Result<SessionCounters, String> {
+    let counters = server.lock().map_err(|_| "session server poisoned")?.counters();
+    let cluster = take_cluster(server).ok_or("session server still shared after serve")?;
+    cluster.shutdown();
+    Ok(counters)
+}
+
+/// Run all legs. Deterministic in `(cfg.seed, preset)` for everything but
+/// wall-clock latency numbers.
+pub fn run_net_bench(opts: &NetBenchOpts) -> Result<NetReport, String> {
+    let spec = LinkFaultSpec::preset(&opts.preset)
+        .ok_or_else(|| format!("unknown link-fault preset '{}'", opts.preset))?;
+    let cfg = &opts.cfg;
+    let region = Region::parse(&cfg.region).unwrap_or(Region::ALL[0]);
+    let trace = tracegen::generate_n(cfg, opts.horizon, cfg.seed, opts.jobs);
+    let arrivals = submissions_of(&trace);
+
+    // --- stdio leg: the in-process baseline. ---
+    let mut base = ShardedCoordinator::start(
+        cfg,
+        &opts.service,
+        opts.kind,
+        &[region],
+        DispatchStrategy::RoundRobin,
+    );
+    let stdio = drive(&mut base, &arrivals, 1, "stdio");
+    base.shutdown();
+
+    // --- loopback clean leg: session framing, no faults. ---
+    let server = session_pair(cfg, &opts.service, opts.kind, region);
+    let handler: Arc<Mutex<dyn FrameHandler>> = server.clone();
+    let mut client = SessionClient::new(
+        Box::new(LoopbackTransport::new(handler, LinkPlan::none())),
+        "net-bench-clean",
+        opts.seed,
+    );
+    let loopback = drive_session(&mut client, &arrivals, opts.window, "loopback")
+        .map_err(|e| format!("clean loopback leg failed: {e}"))?;
+    drop(client);
+    finish(server)?;
+
+    // --- loopback faulted leg: seeded link faults, retry + dedup. ---
+    // Size the plan horizon to the frame budget: one frame per submit,
+    // plus a tick per slot, a drain, the handshake, and retry headroom.
+    let msg_horizon = arrivals.len() + opts.horizon + 16;
+    let plan = LinkPlan::generate(opts.seed, &spec, msg_horizon);
+    let plan_events = plan.len();
+    let server = session_pair(cfg, &opts.service, opts.kind, region);
+    let handler: Arc<Mutex<dyn FrameHandler>> = server.clone();
+    let mut client = SessionClient::new(
+        Box::new(LoopbackTransport::new(handler, plan)),
+        "net-bench-faulted",
+        opts.seed,
+    );
+    let faulted = drive_session(&mut client, &arrivals, opts.window, "faulted")
+        .map_err(|e| format!("faulted loopback leg failed: {e}"))?;
+    let cstats = client.stats();
+    drop(client);
+    let scounters = finish(server)?;
+
+    // --- TCP leg: clean stream over real localhost sockets. ---
+    let tcp = if opts.skip_tcp {
+        None
+    } else {
+        let server = session_pair(cfg, &opts.service, opts.kind, region);
+        let handler: Arc<Mutex<dyn FrameHandler>> = server.clone();
+        let (listener, addr) =
+            bind_tcp("127.0.0.1:0").map_err(|e| format!("tcp bind failed: {e}"))?;
+        let serve_handle = std::thread::spawn(move || serve_on(listener, handler));
+        let mut client = SessionClient::new(
+            Box::new(TcpTransport::new(&addr)),
+            "net-bench-tcp",
+            opts.seed,
+        );
+        let report = drive_session(&mut client, &arrivals, opts.window, "tcp")
+            .map_err(|e| format!("tcp leg failed: {e}"))?;
+        drop(client);
+        serve_handle
+            .join()
+            .map_err(|_| "tcp server thread panicked")?
+            .map_err(|e| format!("tcp serve failed: {e}"))?;
+        finish(server)?;
+        Some(report)
+    };
+
+    let mut fault_free_identical = stdio.drain_matches(&loopback);
+    if let Some(t) = &tcp {
+        fault_free_identical = fault_free_identical && stdio.drain_matches(t);
+    }
+    // Exactly-once under faults: the drain completed everything the
+    // cluster accepted, the server's per-session ledger agrees with the
+    // client's observed accepts, and nothing was double-applied (a
+    // faulted run must also match the stdio drain bitwise, because
+    // dedup'd retries never reach the cluster).
+    let exactly_once = faulted.completed == faulted.accepted
+        && scounters.accepted == faulted.accepted as u64
+        && stdio.drain_matches(&faulted);
+
+    Ok(NetReport {
+        preset: opts.preset.clone(),
+        stdio,
+        loopback,
+        faulted,
+        tcp,
+        fault_free_identical,
+        exactly_once,
+        reconnects: cstats.reconnects,
+        retries: cstats.retries,
+        timeouts: cstats.timeouts,
+        dedup_hits: scounters.dedup_hits,
+        resumes: scounters.resumes,
+        plan_events,
+    })
+}
+
+impl NetReport {
+    /// The `BENCH_net.json` document.
+    pub fn to_json(&self, opts: &NetBenchOpts, wall_seconds: f64) -> Json {
+        let mut modes = vec![
+            ("stdio", self.stdio.to_json()),
+            ("loopback", self.loopback.to_json()),
+            ("faulted", self.faulted.to_json()),
+        ];
+        if let Some(t) = &self.tcp {
+            modes.push(("tcp", t.to_json()));
+        }
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("region", Json::str(opts.cfg.region.clone())),
+                    ("capacity", Json::num(opts.cfg.capacity as f64)),
+                    ("policy", Json::str(opts.kind.key())),
+                    ("jobs", Json::num(opts.jobs as f64)),
+                    ("horizon_hours", Json::num(opts.horizon as f64)),
+                    ("seed", Json::num(opts.seed as f64)),
+                    ("preset", Json::str(self.preset.clone())),
+                    ("window", Json::num(opts.window as f64)),
+                ]),
+            ),
+            ("fault_free_identical", Json::Bool(self.fault_free_identical)),
+            ("exactly_once", Json::Bool(self.exactly_once)),
+            ("reconnects", Json::num(self.reconnects as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("timeouts", Json::num(self.timeouts as f64)),
+            ("dedup_hits", Json::num(self.dedup_hits as f64)),
+            ("resumes", Json::num(self.resumes as f64)),
+            ("plan_events", Json::num(self.plan_events as f64)),
+            ("stdio_p50_ms", Json::num(self.stdio.p50_decision_ms)),
+            ("stdio_p99_ms", Json::num(self.stdio.p99_decision_ms)),
+            (
+                "tcp_p50_ms",
+                self.tcp.as_ref().map_or(Json::Null, |t| Json::num(t.p50_decision_ms)),
+            ),
+            (
+                "tcp_p99_ms",
+                self.tcp.as_ref().map_or(Json::Null, |t| Json::num(t.p99_decision_ms)),
+            ),
+            ("modes", Json::obj(modes)),
+            ("wall_seconds", Json::num(wall_seconds)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_opts() -> NetBenchOpts {
+        let mut cfg = ExperimentConfig::default();
+        cfg.capacity = 10;
+        cfg.horizon_hours = 48;
+        cfg.history_hours = 72;
+        cfg.replay_offsets = 1;
+        let mut opts = NetBenchOpts::new(cfg, ServiceConfig::default());
+        opts.jobs = 60;
+        opts
+    }
+
+    #[test]
+    fn net_bench_heavy_keeps_identity_and_exactly_once() {
+        let r = run_net_bench(&smoke_opts()).unwrap();
+        assert!(r.plan_events > 0, "heavy preset generated an empty plan");
+        assert!(r.fault_free_identical, "clean session legs diverged from stdio");
+        assert!(r.exactly_once, "faulted leg lost or duplicated submissions");
+        assert!(
+            r.retries + r.reconnects > 0,
+            "heavy plan never exercised the retry path"
+        );
+    }
+
+    #[test]
+    fn net_bench_none_preset_is_faultless() {
+        let mut opts = smoke_opts();
+        opts.preset = "none".to_string();
+        opts.skip_tcp = true;
+        let r = run_net_bench(&opts).unwrap();
+        assert_eq!(r.plan_events, 0);
+        assert_eq!(r.reconnects + r.retries + r.dedup_hits, 0);
+        assert!(r.fault_free_identical && r.exactly_once);
+        assert!(r.tcp.is_none());
+    }
+
+    #[test]
+    fn net_bench_rejects_unknown_preset() {
+        let mut opts = smoke_opts();
+        opts.preset = "carrier-pigeon".to_string();
+        assert!(run_net_bench(&opts).is_err());
+    }
+
+    #[test]
+    fn net_json_has_headline_fields() {
+        let mut opts = smoke_opts();
+        opts.skip_tcp = true;
+        let doc = run_net_bench(&opts).unwrap().to_json(&opts, 2.0);
+        for field in [
+            "fault_free_identical",
+            "exactly_once",
+            "reconnects",
+            "dedup_hits",
+            "stdio_p50_ms",
+            "stdio_p99_ms",
+            "tcp_p50_ms",
+            "tcp_p99_ms",
+        ] {
+            assert!(doc.get(field).is_some(), "missing headline field '{field}'");
+        }
+        assert_eq!(doc.get("schema").and_then(Json::as_f64), Some(1.0));
+        // TCP skipped → latency fields are null, not absent.
+        assert!(matches!(doc.get("tcp_p50_ms"), Some(Json::Null)));
+    }
+}

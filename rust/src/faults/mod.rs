@@ -16,6 +16,8 @@
 use crate::config::toml::{self, Value};
 use crate::util::rng::Rng;
 
+pub mod net;
+
 /// How much chaos to inject. Counts of three event families plus the
 /// ranges their parameters are drawn from; all-zero counts mean "no
 /// faults". Ships with named presets (`none`, `light`, `heavy`) usable as

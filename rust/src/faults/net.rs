@@ -1,0 +1,239 @@
+//! Seeded network link faults for the session transport.
+//!
+//! A [`LinkFaultSpec`] describes *how much* link chaos to inject (counts
+//! per fault family); [`LinkPlan::generate`] expands it into a concrete,
+//! fully reproducible per-message fault map from `(seed, spec,
+//! msg_horizon)` via the crate RNG, mirroring [`super::FaultPlan`]'s
+//! forked sub-stream discipline so each family's draw sequence is stable
+//! when the other families' counts change.
+//!
+//! Faults key on the *send index* of a request frame: the `i`-th frame a
+//! client pushes into a faulty link hits at most one [`LinkFault`]. The
+//! cardinal contract carries over from the parent module: an **empty plan
+//! injects nothing**, and every consumer guards behind
+//! [`LinkPlan::is_empty`] so a fault-free session run executes the exact
+//! byte sequence of a clean one.
+
+use std::collections::BTreeMap;
+
+use crate::util::rng::Rng;
+
+/// How much link chaos to inject: counts of five fault families applied
+/// to client request frames. All-zero counts mean "clean link". Ships
+/// with named presets (`none`, `light`, `heavy`) matching the
+/// [`super::FaultSpec`] vocabulary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LinkFaultSpec {
+    /// Request frames silently dropped in flight (client must retry).
+    pub drops: usize,
+    /// Request frames delivered twice (server dedup must absorb).
+    pub dups: usize,
+    /// Request frames held back and delivered late (reordering).
+    pub delays: usize,
+    /// Maximum frames a delayed frame is held past its send index
+    /// (delay drawn from `1..=delay_max`; clamped to at least 1).
+    pub delay_max: usize,
+    /// Requests delivered whose *response* frame is lost (client sees a
+    /// timeout and retries an already-applied operation).
+    pub resp_drops: usize,
+    /// Mid-session disconnects fired just before a frame is sent
+    /// (client must reconnect and resume).
+    pub disconnects: usize,
+}
+
+impl Default for LinkFaultSpec {
+    fn default() -> Self {
+        LinkFaultSpec::none()
+    }
+}
+
+impl LinkFaultSpec {
+    /// Preset names accepted by [`LinkFaultSpec::preset`].
+    pub const PRESETS: [&'static str; 3] = ["none", "light", "heavy"];
+
+    /// Clean link; generates an empty plan.
+    pub fn none() -> LinkFaultSpec {
+        LinkFaultSpec { drops: 0, dups: 0, delays: 0, delay_max: 0, resp_drops: 0, disconnects: 0 }
+    }
+
+    /// A mild regime: a few drops and duplicates, light reordering, one
+    /// lost response, one mid-session disconnect.
+    pub fn light() -> LinkFaultSpec {
+        LinkFaultSpec { drops: 3, dups: 3, delays: 2, delay_max: 4, resp_drops: 1, disconnects: 1 }
+    }
+
+    /// An aggressive regime: heavy loss and duplication, deep
+    /// reordering, several lost responses and disconnects.
+    pub fn heavy() -> LinkFaultSpec {
+        LinkFaultSpec {
+            drops: 10,
+            dups: 8,
+            delays: 6,
+            delay_max: 8,
+            resp_drops: 4,
+            disconnects: 3,
+        }
+    }
+
+    /// Look up a named preset.
+    pub fn preset(name: &str) -> Option<LinkFaultSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "none" => Some(LinkFaultSpec::none()),
+            "light" => Some(LinkFaultSpec::light()),
+            "heavy" => Some(LinkFaultSpec::heavy()),
+            _ => None,
+        }
+    }
+}
+
+/// What happens to the request frame at one send index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkFault {
+    /// The frame is lost in flight; the server never sees it.
+    DropReq,
+    /// The frame is delivered twice back to back.
+    DupReq,
+    /// The frame is held and delivered after `n` more frames have been
+    /// sent (or at the next receive flush, whichever comes first).
+    Delay(usize),
+    /// The frame is delivered and applied, but its response is lost.
+    DropResp,
+    /// The connection breaks before this frame is sent; the frame stays
+    /// with the client for replay after reconnect.
+    Disconnect,
+}
+
+/// A concrete, reproducible map from request send index to link fault.
+/// Consumers treat it as immutable data; re-running the same plan
+/// replays the identical loss/duplication/reorder history.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct LinkPlan {
+    /// At most one fault per send index.
+    pub faults: BTreeMap<usize, LinkFault>,
+}
+
+impl LinkPlan {
+    /// The empty plan: a perfectly clean link.
+    pub fn none() -> LinkPlan {
+        LinkPlan::default()
+    }
+
+    /// True when the link carries no faults — the guard the loopback
+    /// transport checks before touching any fault state.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// The fault scheduled for send index `i`, if any.
+    pub fn fault_at(&self, i: usize) -> Option<LinkFault> {
+        self.faults.get(&i).copied()
+    }
+
+    /// Number of scheduled fault events.
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// Expand a spec into a concrete plan over `msg_horizon` send
+    /// indices. Deterministic in all three arguments; independent forked
+    /// sub-streams per fault family, first-writer-wins on index
+    /// collisions (family order: disconnects, drops, dups, delays,
+    /// resp_drops — rarer, more disruptive families claim slots first).
+    pub fn generate(seed: u64, spec: &LinkFaultSpec, msg_horizon: usize) -> LinkPlan {
+        let mut root = Rng::new(seed ^ 0x4E7F_A175);
+        let mut disc_rng = root.fork(0xD15C);
+        let mut drop_rng = root.fork(0xD40F);
+        let mut dup_rng = root.fork(0xD0B1);
+        let mut delay_rng = root.fork(0xDE1A);
+        let mut resp_rng = root.fork(0x4E55);
+        let span = msg_horizon.max(1);
+
+        let mut faults: BTreeMap<usize, LinkFault> = BTreeMap::new();
+        // Keep index 0 clean for disconnects/drops: the first frame of a
+        // session is the handshake, and losing it before any state exists
+        // exercises nothing the later indices don't.
+        for _ in 0..spec.disconnects {
+            let at = 1 + disc_rng.below(span);
+            faults.entry(at).or_insert(LinkFault::Disconnect);
+        }
+        for _ in 0..spec.drops {
+            let at = 1 + drop_rng.below(span);
+            faults.entry(at).or_insert(LinkFault::DropReq);
+        }
+        for _ in 0..spec.dups {
+            let at = 1 + dup_rng.below(span);
+            faults.entry(at).or_insert(LinkFault::DupReq);
+        }
+        for _ in 0..spec.delays {
+            let at = 1 + delay_rng.below(span);
+            let hi = spec.delay_max.max(1) as i64;
+            let by = delay_rng.int_range(1, hi) as usize;
+            faults.entry(at).or_insert(LinkFault::Delay(by));
+        }
+        for _ in 0..spec.resp_drops {
+            let at = 1 + resp_rng.below(span);
+            faults.entry(at).or_insert(LinkFault::DropResp);
+        }
+        LinkPlan { faults }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_generates_empty_plan() {
+        let plan = LinkPlan::generate(42, &LinkFaultSpec::none(), 256);
+        assert!(plan.is_empty());
+        assert_eq!(plan, LinkPlan::none());
+        assert_eq!(plan.fault_at(0), None);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        for preset in LinkFaultSpec::PRESETS {
+            let spec = LinkFaultSpec::preset(preset).unwrap();
+            let a = LinkPlan::generate(7, &spec, 256);
+            let b = LinkPlan::generate(7, &spec, 256);
+            assert_eq!(a, b, "preset {preset} not reproducible");
+            let c = LinkPlan::generate(8, &spec, 256);
+            if !a.is_empty() {
+                assert_ne!(a, c, "preset {preset} ignores the seed");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_events_respect_bounds() {
+        let spec = LinkFaultSpec::heavy();
+        let plan = LinkPlan::generate(3, &spec, 200);
+        assert!(!plan.is_empty());
+        let mut counts = [0usize; 5];
+        for (&at, fault) in &plan.faults {
+            assert!(at >= 1 && at <= 200, "index {at} outside 1..=200");
+            match fault {
+                LinkFault::Disconnect => counts[0] += 1,
+                LinkFault::DropReq => counts[1] += 1,
+                LinkFault::DupReq => counts[2] += 1,
+                LinkFault::Delay(by) => {
+                    assert!(*by >= 1 && *by <= spec.delay_max);
+                    counts[3] += 1;
+                }
+                LinkFault::DropResp => counts[4] += 1,
+            }
+        }
+        // First-writer-wins can only shrink family counts, never grow.
+        assert!(counts[0] <= spec.disconnects && counts[0] >= 1);
+        assert!(counts[1] <= spec.drops);
+        assert!(counts[2] <= spec.dups);
+        assert!(counts[3] <= spec.delays);
+        assert!(counts[4] <= spec.resp_drops);
+    }
+
+    #[test]
+    fn unknown_preset_is_none() {
+        assert!(LinkFaultSpec::preset("apocalypse").is_none());
+        assert_eq!(LinkFaultSpec::preset("LIGHT"), Some(LinkFaultSpec::light()));
+    }
+}

@@ -8,13 +8,18 @@
 //! - `gen-traces --region <key> --hours <n> --out <csv>` — export CI traces
 //! - `catalog` — print the Table 3 workload catalog
 //! - `experiment <fig5|fig6|...|fig14|overheads>` — regenerate a paper figure
-//! - `serve [--policy <name>] [--shards n|a+b]` — run the (optionally
-//!   sharded) coordinator on stdin/stdout JSON lines (wire protocol v2)
+//! - `serve [--policy <name>] [--shards n|a+b] [--tcp host:port]` — run the
+//!   (optionally sharded) coordinator on stdin/stdout JSON lines (wire
+//!   protocol v2), or as a TCP session server with resume/dedup
+//! - `client --tcp host:port [--jobs n] [--drop-after k]` — drive a TCP
+//!   session from the CLI, optionally forcing a mid-stream reconnect
 //! - `serve-bench [--jobs n] [--batch b] [--json]` — closed-loop serving
 //!   benchmark → `BENCH_serve.json`
 //! - `chaos-bench [--faults light|heavy] [--json]` — fault-injection
-//!   benchmark (clean vs faulted sim + shard-kill failover) →
-//!   `BENCH_chaos.json`
+//!   benchmark (clean vs faulted sim + shard-kill failover + session
+//!   chaos cell) → `BENCH_chaos.json`
+//! - `net-bench [--faults heavy] [--json]` — session/transport benchmark
+//!   (stdio vs loopback vs faulted loopback vs TCP) → `BENCH_net.json`
 
 use carbonflex::carbon::synth::{self, Region};
 use carbonflex::config::{ExperimentConfig, ServiceConfig, ShedPolicy};
@@ -41,8 +46,10 @@ fn main() {
         Some("catalog") => cmd_catalog(),
         Some("experiment") => cmd_experiment(&args),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
         Some("chaos-bench") => cmd_chaos_bench(&args),
+        Some("net-bench") => cmd_net_bench(&args),
         _ => {
             print_usage();
             if args.command.is_none() || args.flag("help") {
@@ -87,10 +94,18 @@ fn print_usage() {
          \x20 serve       [--config <file>] [--policy <name>] [--shards n|a+b]\n\
          \x20             [--dispatch rr|current|window] [--max-pending N]\n\
          \x20             [--max-batch N] [--shed reject-newest|reject-lowest-queue]\n\
-         \x20             [--kill-shard s@N,...] JSON-line coordinator on stdio\n\
-         \x20             (wire protocol v2; a [service] table in the config sets\n\
-         \x20             the same knobs; --kill-shard kills shard s at the N-th\n\
-         \x20             submission to exercise supervisor failover)\n\
+         \x20             [--kill-shard s@N,...] [--tcp host:port]\n\
+         \x20             JSON-line coordinator on stdio (wire protocol v2; a\n\
+         \x20             [service] table in the config sets the same knobs;\n\
+         \x20             --kill-shard kills shard s at the N-th submission to\n\
+         \x20             exercise supervisor failover). With --tcp, listens as\n\
+         \x20             a session server instead: length-prefixed frames,\n\
+         \x20             handshake + resume tokens, idempotent retry via\n\
+         \x20             server-side dedup; exits after a drain\n\
+         \x20 client      --tcp host:port [--jobs 8] [--drop-after k] [--drain]\n\
+         \x20             drive a TCP session: submit a generated trace, force\n\
+         \x20             one reconnect after k submissions (resume must keep\n\
+         \x20             the session), print session stats\n\
          \x20 serve-bench [--config <file>] [--policy <name>] [--jobs 2000]\n\
          \x20             [--horizon <h>] [--seed <s>] [--batch 64] [--shards n|a+b]\n\
          \x20             [--json] [--out BENCH_serve.json]\n\
@@ -101,7 +116,15 @@ fn print_usage() {
          \x20             [--jobs 120] [--shards 2] [--json] [--out BENCH_chaos.json]\n\
          \x20             fault-injection benchmark: carbon overhead of running\n\
          \x20             through a seeded fault plan, crash-recovery percentiles,\n\
-         \x20             and shard-kill failover with the exactly-once drain check"
+         \x20             shard-kill failover with the exactly-once drain check,\n\
+         \x20             and a combined kill + link-fault session cell\n\
+         \x20 net-bench   [--config <file>] [--faults none|light|heavy]\n\
+         \x20             [--policy agnostic] [--jobs 120] [--horizon 48]\n\
+         \x20             [--seed <s>] [--window 16] [--no-tcp] [--json]\n\
+         \x20             [--out BENCH_net.json]\n\
+         \x20             session/transport benchmark: stdio baseline vs session\n\
+         \x20             legs (clean loopback, seeded link faults, TCP) with\n\
+         \x20             bitwise drain identity and exactly-once gates"
     );
 }
 
@@ -580,6 +603,36 @@ fn cmd_serve(args: &Args) -> i32 {
         }
         cluster.set_kill_plan(&kills);
     }
+    // --tcp: serve sessions over real sockets instead of stdio lines. The
+    // session layer adds handshake/resume/dedup on top of the same wire
+    // requests; a drain shuts the listener down.
+    if let Some(addr) = args.get("tcp") {
+        use carbonflex::coordinator::session::{take_cluster, SessionConfig, SessionServer};
+        use carbonflex::coordinator::transport::{bind_tcp, serve_on, FrameHandler};
+        use std::sync::{Arc, Mutex};
+        let (listener, local) = match bind_tcp(addr) {
+            Ok(x) => x,
+            Err(e) => return fail(&format!("binding {addr}: {e}")),
+        };
+        let server =
+            Arc::new(Mutex::new(SessionServer::new(cluster, SessionConfig::default())));
+        let handler: Arc<Mutex<dyn FrameHandler>> = server.clone();
+        eprintln!(
+            "carbonflex coordinator listening on {local} (policy: {}, session protocol \
+             over TCP: length-prefixed v2 frames, resume tokens, idempotent retry)",
+            kind.key()
+        );
+        if let Err(e) = serve_on(listener, handler) {
+            return fail(&format!("tcp serve failed: {e}"));
+        }
+        match take_cluster(server) {
+            Some(c) => {
+                c.shutdown();
+            }
+            None => return fail("session server still shared after serve"),
+        }
+        return 0;
+    }
     eprintln!(
         "carbonflex coordinator ready (policy: {}, shards: {}, max_pending: {}, shed: {}); \
          JSON lines on stdin (protocol v2; un-versioned lines read as legacy v1)",
@@ -633,6 +686,90 @@ fn cmd_serve(args: &Args) -> i32 {
         eprintln!("coordinator done: {} jobs, {:.2} kg CO2", completed, carbon_g / 1000.0);
     }
     cluster.shutdown();
+    0
+}
+
+/// Drive a TCP session server from the CLI: submit a generated trace one
+/// job per request, optionally force a disconnect after `--drop-after`
+/// submissions (the resume handshake must keep the session), tick once per
+/// slot, and optionally drain. Non-zero exit if a forced drop did not
+/// produce a surviving reconnect.
+fn cmd_client(args: &Args) -> i32 {
+    use carbonflex::coordinator::client::SessionClient;
+    use carbonflex::coordinator::loadgen::submissions_of;
+    use carbonflex::coordinator::transport::TcpTransport;
+    use carbonflex::coordinator::{Request, Response};
+    use carbonflex::workload::tracegen;
+    let Some(addr) = args.get("tcp") else {
+        return fail("client requires --tcp host:port");
+    };
+    let cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => return fail(&e),
+    };
+    let jobs = match args.num_or::<usize>("jobs", 8) {
+        Ok(0) => return fail("--jobs must be positive"),
+        Ok(n) => n,
+        Err(e) => return fail(&e),
+    };
+    let drop_after = match args.num_or::<usize>("drop-after", 0) {
+        Ok(n) => n,
+        Err(e) => return fail(&e),
+    };
+    let seed = match args.num_or::<u64>("seed", cfg.seed) {
+        Ok(s) => s,
+        Err(e) => return fail(&e),
+    };
+    let trace = tracegen::generate_n(&cfg, cfg.horizon_hours, seed, jobs);
+    let arrivals = submissions_of(&trace);
+    let mut client =
+        SessionClient::new(Box::new(TcpTransport::new(addr)), "carbonflex-cli", seed);
+    let (mut accepted, mut shed) = (0usize, 0usize);
+    let mut slot = 0usize;
+    for (i, (arrival, sub)) in arrivals.iter().enumerate() {
+        if drop_after > 0 && i == drop_after {
+            eprintln!("client: forcing a disconnect before submission {i}");
+            client.force_disconnect();
+        }
+        // Advance the cluster clock to this job's arrival slot.
+        while slot < *arrival {
+            if let Err(e) = client.request(Request::Tick) {
+                return fail(&format!("tick failed: {e}"));
+            }
+            slot += 1;
+        }
+        match client.request(Request::Submit(sub.clone())) {
+            Ok(Response::Submitted { .. }) => accepted += 1,
+            Ok(_) => shed += 1,
+            Err(e) => return fail(&format!("submission {i} failed: {e}")),
+        }
+    }
+    let mut drained = None;
+    if args.flag("drain") {
+        match client.request(Request::Drain) {
+            Ok(Response::Drained { completed, carbon_g, .. }) => {
+                drained = Some((completed, carbon_g));
+            }
+            Ok(other) => return fail(&format!("unexpected drain response: {other:?}")),
+            Err(e) => return fail(&format!("drain failed: {e}")),
+        }
+    }
+    client.bye();
+    let st = client.stats();
+    println!(
+        "client: {accepted} accepted, {shed} shed of {} submitted; \
+         reconnects {}, retries {}, handshakes {}",
+        arrivals.len(),
+        st.reconnects,
+        st.retries,
+        st.handshakes
+    );
+    if let Some((completed, carbon_g)) = drained {
+        println!("drained: {} jobs, {:.2} kg CO2", completed, carbon_g / 1000.0);
+    }
+    if drop_after > 0 && st.reconnects == 0 {
+        return fail("forced disconnect did not produce a reconnect");
+    }
     0
 }
 
@@ -790,6 +927,14 @@ fn cmd_chaos_bench(args: &Args) -> i32 {
             "exactly-once:      {}",
             if report.drained_exactly_once { "ok" } else { "VIOLATED" }
         );
+        println!(
+            "session cell:      {} link events, {} reconnects, {} retries, {} dedup hits — {}",
+            report.session_link_events,
+            report.session_reconnects,
+            report.session_retries,
+            report.session_dedup_hits,
+            if report.session_exactly_once { "ok" } else { "VIOLATED" }
+        );
     }
     let out = args.get_or("out", "BENCH_chaos.json");
     if let Err(e) = std::fs::write(out, format!("{doc}\n")) {
@@ -798,6 +943,98 @@ fn cmd_chaos_bench(args: &Args) -> i32 {
     eprintln!("chaos bench written to {out}");
     if !report.drained_exactly_once {
         return fail("exactly-once drain identity violated: accepted work lost or duplicated");
+    }
+    if !report.session_exactly_once {
+        return fail(
+            "session exactly-once identity violated under combined shard kills + link faults",
+        );
+    }
+    0
+}
+
+/// Session/transport benchmark: the stdio baseline against session legs
+/// over clean loopback, a seeded link-fault plan, and real TCP — written
+/// as `BENCH_net.json`. Exits non-zero when a fault-free leg diverges from
+/// the stdio drain or the faulted leg breaks exactly-once.
+fn cmd_net_bench(args: &Args) -> i32 {
+    use carbonflex::experiments::net::{run_net_bench, NetBenchOpts};
+    let t0 = std::time::Instant::now();
+    let cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => return fail(&e),
+    };
+    let service = match load_service(args) {
+        Ok(s) => s,
+        Err(e) => return fail(&e),
+    };
+    let mut opts = NetBenchOpts::new(cfg, service);
+    opts.preset = args.get_or("faults", "heavy").to_string();
+    match PolicyKind::parse_or_err(args.get_or("policy", "agnostic")) {
+        Ok(k) => opts.kind = k,
+        Err(e) => return fail(&e),
+    }
+    match args.num_or::<usize>("jobs", opts.jobs) {
+        Ok(0) => return fail("--jobs must be positive"),
+        Ok(n) => opts.jobs = n,
+        Err(e) => return fail(&e),
+    }
+    match args.num_or::<usize>("horizon", opts.horizon) {
+        Ok(0) => return fail("--horizon must be positive"),
+        Ok(h) => opts.horizon = h,
+        Err(e) => return fail(&e),
+    }
+    match args.num_or::<u64>("seed", opts.cfg.seed) {
+        Ok(s) => opts.seed = s,
+        Err(e) => return fail(&e),
+    }
+    match args.num_or::<usize>("window", opts.window) {
+        Ok(0) => return fail("--window must be positive"),
+        Ok(w) => opts.window = w,
+        Err(e) => return fail(&e),
+    }
+    opts.skip_tcp = args.flag("no-tcp");
+    let report = match run_net_bench(&opts) {
+        Ok(r) => r,
+        Err(e) => return fail(&e),
+    };
+    let doc = report.to_json(&opts, t0.elapsed().as_secs_f64());
+    if args.flag("json") {
+        println!("{doc}");
+    } else {
+        println!("preset:              {}", report.preset);
+        println!(
+            "stdio submit:        p50 {:.3} ms, p99 {:.3} ms",
+            report.stdio.p50_decision_ms, report.stdio.p99_decision_ms
+        );
+        if let Some(t) = &report.tcp {
+            println!(
+                "tcp submit:          p50 {:.3} ms, p99 {:.3} ms",
+                t.p50_decision_ms, t.p99_decision_ms
+            );
+        }
+        println!(
+            "faulted leg:         {} link events, {} reconnects, {} retries, {} dedup hits",
+            report.plan_events, report.reconnects, report.retries, report.dedup_hits
+        );
+        println!(
+            "fault-free identity: {}",
+            if report.fault_free_identical { "ok" } else { "VIOLATED" }
+        );
+        println!(
+            "exactly-once:        {}",
+            if report.exactly_once { "ok" } else { "VIOLATED" }
+        );
+    }
+    let out = args.get_or("out", "BENCH_net.json");
+    if let Err(e) = std::fs::write(out, format!("{doc}\n")) {
+        return fail(&format!("writing {out}: {e}"));
+    }
+    eprintln!("net bench written to {out}");
+    if !report.fault_free_identical {
+        return fail("fault-free session drain diverged from the stdio baseline");
+    }
+    if !report.exactly_once {
+        return fail("exactly-once violated under the seeded link-fault plan");
     }
     0
 }

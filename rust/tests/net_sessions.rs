@@ -1,0 +1,321 @@
+//! Session-transport integration properties: seeded link-fault plans must
+//! not change what the cluster computes (bitwise drain identity),
+//! reconnect-with-resume must preserve exactly-once, and server-side dedup
+//! must make double-submitted sequence numbers a no-op.
+
+use std::sync::{Arc, Mutex};
+
+use carbonflex::config::{ExperimentConfig, ServiceConfig};
+use carbonflex::coordinator::{
+    drive, drive_session, shard_regions, submissions_of, take_cluster, DriveReport,
+    FrameHandler, LoopbackTransport, Request, SessionClient, SessionConfig, SessionCounters,
+    SessionServer, ShardedCoordinator, SubmitRequest, WireRequest,
+};
+use carbonflex::experiments::DispatchStrategy;
+use carbonflex::faults::net::{LinkFaultSpec, LinkPlan};
+use carbonflex::sched::PolicyKind;
+use carbonflex::util::json::{self, Json};
+use carbonflex::util::proptest_lite::{check, Config};
+use carbonflex::util::rng::Rng;
+use carbonflex::workload::tracegen;
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.capacity = 8;
+    cfg.horizon_hours = 48;
+    cfg.history_hours = 72;
+    cfg.replay_offsets = 1;
+    cfg
+}
+
+fn small_cluster(cfg: &ExperimentConfig) -> ShardedCoordinator {
+    let service = ServiceConfig::default();
+    let regions = shard_regions("1", &cfg.region).unwrap();
+    ShardedCoordinator::start(
+        cfg,
+        &service,
+        PolicyKind::CarbonAgnostic,
+        &regions,
+        DispatchStrategy::RoundRobin,
+    )
+}
+
+/// The stdio reference drive for one arrival stream.
+fn stdio_baseline(cfg: &ExperimentConfig, arrivals: &[(usize, SubmitRequest)]) -> DriveReport {
+    let mut cluster = small_cluster(cfg);
+    let report = drive(&mut cluster, arrivals, 1, "stdio");
+    cluster.shutdown();
+    report
+}
+
+/// Drive the same stream through a session over a loopback link carrying
+/// `plan`; returns the drive report plus both sides' telemetry.
+fn session_run(
+    cfg: &ExperimentConfig,
+    arrivals: &[(usize, SubmitRequest)],
+    plan: LinkPlan,
+    seed: u64,
+    window: usize,
+) -> (DriveReport, SessionCounters, carbonflex::coordinator::SessionStats) {
+    let server = Arc::new(Mutex::new(SessionServer::new(
+        small_cluster(cfg),
+        SessionConfig::default(),
+    )));
+    let handler: Arc<Mutex<dyn FrameHandler>> = server.clone();
+    let mut client = SessionClient::new(
+        Box::new(LoopbackTransport::new(handler, plan)),
+        "prop-client",
+        seed,
+    );
+    let report = drive_session(&mut client, arrivals, window, "session")
+        .expect("session drive must survive the seeded plan");
+    let stats = client.stats();
+    drop(client);
+    let counters = server.lock().unwrap().counters();
+    let cluster = take_cluster(server).expect("no other holders after drive");
+    cluster.shutdown();
+    (report, counters, stats)
+}
+
+#[derive(Debug)]
+struct PlanCase {
+    plan_seed: u64,
+    preset: &'static str,
+    jobs: usize,
+    window: usize,
+}
+
+/// Property (i): any seeded drop/dup/reorder/disconnect plan drains
+/// bitwise identical to the clean stdio run — link faults may cost
+/// retries, never results.
+#[test]
+fn seeded_fault_plans_drain_bitwise_identical() {
+    let cfg = small_cfg();
+    let trace = tracegen::generate_n(&cfg, 48, 17, 40);
+    let arrivals = submissions_of(&trace);
+    let baseline = stdio_baseline(&cfg, &arrivals);
+    assert_eq!(baseline.completed, baseline.accepted);
+    check(
+        "fault plans preserve drain identity",
+        Config { cases: 8, seed: 0x5E55_10A1 },
+        |r: &mut Rng| PlanCase {
+            plan_seed: r.next_u64(),
+            preset: ["light", "heavy"][r.below(2)],
+            jobs: 40,
+            window: 1 + r.below(24),
+        },
+        |case| {
+            let spec = LinkFaultSpec::preset(case.preset).unwrap();
+            let plan = LinkPlan::generate(case.plan_seed, &spec, case.jobs + 48 + 16);
+            let (report, counters, _) =
+                session_run(&cfg, &arrivals, plan, case.plan_seed, case.window);
+            if !baseline.drain_matches(&report) {
+                return Err(format!(
+                    "drain diverged: baseline {baseline:?} vs faulted {report:?}"
+                ));
+            }
+            if counters.accepted != report.accepted as u64 {
+                return Err(format!(
+                    "server ledger {} != client accepted {}",
+                    counters.accepted, report.accepted
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Debug)]
+struct DisconnectCase {
+    client_seed: u64,
+    drop_at: usize,
+    window: usize,
+}
+
+/// Property (ii): a forced mid-batch disconnect followed by
+/// reconnect-with-resume preserves exactly-once — nothing lost, nothing
+/// double-applied, drain still bitwise identical.
+#[test]
+fn reconnect_with_resume_preserves_exactly_once() {
+    let cfg = small_cfg();
+    let trace = tracegen::generate_n(&cfg, 48, 23, 30);
+    let arrivals = submissions_of(&trace);
+    let baseline = stdio_baseline(&cfg, &arrivals);
+    check(
+        "resume after disconnect is exactly-once",
+        Config { cases: 8, seed: 0x0D15_C0FF },
+        |r: &mut Rng| DisconnectCase {
+            client_seed: r.next_u64(),
+            drop_at: 1 + r.below(arrivals.len() - 1),
+            window: 1 + r.below(8),
+        },
+        |case| {
+            let server = Arc::new(Mutex::new(SessionServer::new(
+                small_cluster(&cfg),
+                SessionConfig::default(),
+            )));
+            let handler: Arc<Mutex<dyn FrameHandler>> = server.clone();
+            let mut client = SessionClient::new(
+                Box::new(LoopbackTransport::new(handler, LinkPlan::none())),
+                "prop-resume",
+                case.client_seed,
+            );
+            // Drive the stream by hand so the disconnect lands mid-batch:
+            // once at least `drop_at` submissions are in (so a session
+            // exists to resume), drop the link before the next window.
+            let mut accepted = 0usize;
+            let last_slot = arrivals.iter().map(|(t, _)| *t).max().unwrap_or(0);
+            let mut cursor = 0usize;
+            let mut submitted = 0usize;
+            let mut forced = false;
+            for t in 0..=last_slot {
+                let start = cursor;
+                while cursor < arrivals.len() && arrivals[cursor].0 == t {
+                    cursor += 1;
+                }
+                for chunk in arrivals[start..cursor].chunks(case.window) {
+                    if !forced && submitted >= case.drop_at && submitted > 0 {
+                        client.force_disconnect();
+                        forced = true;
+                    }
+                    submitted += chunk.len();
+                    let reqs: Vec<Request> =
+                        chunk.iter().map(|(_, s)| Request::Submit(s.clone())).collect();
+                    for resp in client.pipeline(reqs).map_err(|e| e.to_string())? {
+                        if matches!(resp, carbonflex::coordinator::Response::Submitted { .. })
+                        {
+                            accepted += 1;
+                        }
+                    }
+                }
+                client.request(Request::Tick).map_err(|e| e.to_string())?;
+            }
+            if !forced {
+                // Late drop points can fall past the final window; drop
+                // before the drain instead so every case reconnects once.
+                client.force_disconnect();
+            }
+            let drained = client.request(Request::Drain).map_err(|e| e.to_string())?;
+            let stats = client.stats();
+            client.bye();
+            let counters = server.lock().unwrap().counters();
+            let cluster = take_cluster(server).expect("no other holders");
+            cluster.shutdown();
+            let completed = match drained {
+                carbonflex::coordinator::Response::Drained { completed, carbon_g, .. } => {
+                    if carbon_g.to_bits() != baseline.carbon_g.to_bits() {
+                        return Err("carbon diverged from the stdio baseline".into());
+                    }
+                    completed
+                }
+                other => return Err(format!("unexpected drain response {other:?}")),
+            };
+            if completed != accepted || completed != baseline.completed {
+                return Err(format!(
+                    "exactly-once broken: accepted {accepted}, completed {completed}, \
+                     baseline {}",
+                    baseline.completed
+                ));
+            }
+            if counters.accepted != accepted as u64 {
+                return Err("server ledger disagrees with the client".into());
+            }
+            if stats.handshakes < 2 {
+                return Err("forced disconnect never triggered a resume".into());
+            }
+            if counters.resumes == 0 {
+                return Err("server saw no resume handshake".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Debug)]
+struct DedupCase {
+    submits: usize,
+    resend: usize,
+}
+
+/// Property (iii): re-sending an already-applied sequence number returns
+/// the cached response verbatim and never reaches the cluster — a
+/// double-submitted seq is a no-op.
+#[test]
+fn dedup_makes_double_submitted_seqs_a_noop() {
+    check(
+        "dedup replays are no-ops",
+        Config { cases: 8, seed: 0xDD_0B1 },
+        |r: &mut Rng| {
+            let submits = 2 + r.below(10);
+            DedupCase { submits, resend: r.below(submits) }
+        },
+        |case| {
+            let cfg = small_cfg();
+            let mut server =
+                SessionServer::new(small_cluster(&cfg), SessionConfig::default());
+            let hello = server
+                .handle_line(r#"{"op":"hello","client":"dedup-prop"}"#)
+                .pop()
+                .ok_or("no hello reply")?;
+            let sid = json::parse(&hello)
+                .map_err(|e| e.to_string())?
+                .get("session")
+                .and_then(Json::as_f64)
+                .ok_or("hello reply missing session")? as u64;
+            let frame = |seq: u64| {
+                WireRequest::new(Request::Submit(SubmitRequest {
+                    workload: "N-body(N=100k)".to_string(),
+                    length_hours: 2.0,
+                    queue: 0,
+                }))
+                .to_json_line_with(&[
+                    ("session", Json::num(sid as f64)),
+                    ("seq", Json::num(seq as f64)),
+                ])
+            };
+            let mut firsts = Vec::new();
+            for seq in 0..case.submits as u64 {
+                let mut out = server.handle_line(&frame(seq));
+                if out.len() != 1 {
+                    return Err(format!("expected one response, got {out:?}"));
+                }
+                firsts.push(out.pop().unwrap());
+            }
+            let before = server.counters();
+            // Double-submit one seq, then the whole prefix again.
+            let replay = server
+                .handle_line(&frame(case.resend as u64))
+                .pop()
+                .ok_or("dedup returned nothing")?;
+            if replay != firsts[case.resend] {
+                return Err(format!(
+                    "cached replay differs: {replay} vs {}",
+                    firsts[case.resend]
+                ));
+            }
+            for seq in 0..case.submits as u64 {
+                let again = server.handle_line(&frame(seq)).pop().ok_or("no replay")?;
+                if again != firsts[seq as usize] {
+                    return Err("full-prefix replay diverged".into());
+                }
+            }
+            let after = server.counters();
+            if after.accepted != before.accepted {
+                return Err(format!(
+                    "replays reached the cluster: accepted {} -> {}",
+                    before.accepted, after.accepted
+                ));
+            }
+            if after.dedup_hits != before.dedup_hits + 1 + case.submits as u64 {
+                return Err(format!(
+                    "dedup hits off: {} -> {} for {} replays",
+                    before.dedup_hits,
+                    after.dedup_hits,
+                    1 + case.submits
+                ));
+            }
+            server.into_cluster().shutdown();
+            Ok(())
+        },
+    );
+}
