@@ -110,6 +110,7 @@ mod tests {
             k_max,
             profile: ScalingProfile::from_comm_ratio(0.05, k_max),
             watts_per_unit: watts,
+            deps: Vec::new(),
         }
     }
 

@@ -309,6 +309,17 @@ pub struct ClusterEngine {
     /// order every policy sees. Completions compact it in place (order
     /// preserved, so results stay bitwise identical to the full scan).
     active: Vec<usize>,
+    /// Arrived jobs still gated on uncompleted dependency parents
+    /// ([`Job::deps`]), ascending id order. Invisible to the policy until
+    /// released; always empty for flat (zero-edge) workloads.
+    blocked: Vec<usize>,
+    /// Slot each job became eligible to run (index = dense id): its arrival,
+    /// unless a parent completion released it later (then that slot + 1).
+    eligible_at: Vec<u32>,
+    /// True once any registered job carries dependency edges. Every DAG hook
+    /// below guards on this, so flat traces execute the exact pre-DAG
+    /// instruction sequence (bitwise-identical, allocation-free).
+    has_deps: bool,
     /// Recycled policy-view buffer; always empty between steps, only its
     /// allocation is reused (see the lifetime note in `step`).
     views_buf: Vec<JobView<'static>>,
@@ -353,6 +364,9 @@ impl ClusterEngine {
             active_jobs: 0,
             waiting: vec![],
             active: vec![],
+            blocked: vec![],
+            eligible_at: vec![],
+            has_deps: false,
             views_buf: vec![],
             cols: JobViewCols::default(),
             decision: Decision::default(),
@@ -374,10 +388,17 @@ impl ClusterEngine {
     /// Register a job. `job.id` must equal its submission index.
     pub fn add_job(&mut self, job: Job) {
         assert_eq!(job.id, self.jobs.len(), "job ids must be dense submission indices");
+        for &p in &job.deps {
+            assert!(p < job.id, "dep {p} of job {} is not an earlier job", job.id);
+        }
         let idx = self.jobs.len();
         let arrival = job.arrival;
+        if !job.deps.is_empty() {
+            self.has_deps = true;
+        }
         self.jobs.push(job);
         self.state.push_job(self.jobs.last().unwrap().work());
+        self.eligible_at.push(arrival as u32);
         self.active_jobs += 1;
         // Keep `waiting` sorted by (arrival, id) descending; the next due
         // arrival is at the back. Submission outside the step loop, so the
@@ -395,6 +416,9 @@ impl ClusterEngine {
         self.outcomes.reserve(n);
         self.recent.reserve(n + 1);
         self.active.reserve(n);
+        if self.has_deps {
+            self.blocked.reserve(n);
+        }
         self.views_buf.reserve(n);
         self.cols.reserve(n);
         self.decision.alloc.reserve(n);
@@ -442,8 +466,17 @@ impl ClusterEngine {
                 break;
             }
             self.waiting.pop();
-            self.active.push(j);
-            admitted = true;
+            if self.has_deps
+                && self.jobs[j].deps.iter().any(|&p| self.state.flags[p] & DONE == 0)
+            {
+                // Dependency-gated: invisible to the policy until every
+                // parent completes (see `release_ready_children`).
+                let pos = self.blocked.partition_point(|&b| b < j);
+                self.blocked.insert(pos, j);
+            } else {
+                self.active.push(j);
+                admitted = true;
+            }
         }
         if admitted {
             self.active.sort_unstable();
@@ -505,9 +538,10 @@ impl ClusterEngine {
                 remaining: self.state.remaining[i],
                 prev_alloc: self.state.prev_alloc[i] as usize,
                 overdue: false,
+                eligible_since: self.eligible_at[i] as usize,
             };
             let overdue = jv.slack_left(t) <= 0.0;
-            self.cols.push(&self.jobs[i], jv.remaining, jv.prev_alloc, overdue);
+            self.cols.push(&self.jobs[i], jv.remaining, jv.prev_alloc, overdue, jv.eligible_since);
             views.push(JobView { overdue, ..jv });
         }
 
@@ -603,6 +637,9 @@ impl ClusterEngine {
         if completed_any {
             let flags = &self.state.flags;
             self.active.retain(|&i| flags[i] & DONE == 0);
+        }
+        if self.has_deps && completed_any && !self.blocked.is_empty() {
+            self.release_ready_children(t);
         }
         if !self.plan.is_empty() {
             self.resolve_crashes(t);
@@ -712,6 +749,32 @@ impl ClusterEngine {
             } else {
                 k += 1;
             }
+        }
+    }
+
+    /// DAG hook: move blocked jobs whose parents have all completed into
+    /// the active set. A child released by a completion in slot `t` is
+    /// eligible from slot `t + 1` — it never runs in (or before) the slot
+    /// its last parent finished in. A crashed parent is simply not DONE
+    /// (completion is permanent; crashes only hit running jobs), so its
+    /// children stay gated here until the reworked parent completes.
+    fn release_ready_children(&mut self, t: usize) {
+        let flags = &self.state.flags;
+        let jobs = &self.jobs;
+        let eligible_at = &mut self.eligible_at;
+        let active = &mut self.active;
+        let mut released = false;
+        self.blocked.retain(|&j| {
+            let ready = jobs[j].deps.iter().all(|&p| flags[p] & DONE != 0);
+            if ready {
+                eligible_at[j] = (t + 1) as u32;
+                active.push(j);
+                released = true;
+            }
+            !ready
+        });
+        if released {
+            active.sort_unstable();
         }
     }
 
@@ -962,6 +1025,7 @@ mod tests {
             k_max,
             profile: ScalingProfile::from_comm_ratio(0.02, k_max),
             watts_per_unit: 40.0,
+            deps: Vec::new(),
         }
     }
 
@@ -1249,6 +1313,7 @@ mod tests {
                     remaining: rng.range(0.1, j.work().max(0.2)),
                     prev_alloc: rng.below(j.k_max + 1),
                     overdue: rng.chance(0.3),
+                    eligible_since: j.arrival,
                 })
                 .collect();
             // Random decision, including duplicate, unknown, and huge ids.
@@ -1300,6 +1365,7 @@ mod tests {
                         remaining: j.work(),
                         prev_alloc: 0,
                         overdue: o,
+                        eligible_since: j.arrival,
                     })
                     .collect();
                 let cols = JobViewCols::from_views(&views);
@@ -1405,6 +1471,10 @@ mod tests {
         let mut outcomes: Vec<JobOutcome> = Vec::new();
         let mut slots: Vec<SlotRecord> = Vec::new();
         let mut usage_per_slot: Vec<usize> = Vec::new();
+        // Dependency gating, AoS style: a job is active only once arrived
+        // AND every parent was done at the start of the slot; the first
+        // slot it qualifies is its `eligible_since`.
+        let mut first_eligible: Vec<Option<usize>> = vec![None; jobs.len()];
         let mut prev_capacity = cfg.max_capacity;
         let mut prev_used = 0usize;
         let mut overhead_energy = 0.0f64;
@@ -1415,8 +1485,18 @@ mod tests {
         let t_end = last_arrival + cfg.horizon + cfg.max_drain_slots;
         let mut t = 0usize;
         while pending > 0 && t < t_end {
-            let active: Vec<usize> =
-                (0..jobs.len()).filter(|&i| jobs[i].arrival <= t && !st[i].done).collect();
+            let active: Vec<usize> = (0..jobs.len())
+                .filter(|&i| {
+                    jobs[i].arrival <= t
+                        && !st[i].done
+                        && jobs[i].deps.iter().all(|&p| st[p].done)
+                })
+                .collect();
+            for &i in &active {
+                if first_eligible[i].is_none() {
+                    first_eligible[i] = Some(if jobs[i].deps.is_empty() { jobs[i].arrival } else { t });
+                }
+            }
             if active.is_empty() {
                 prev_used = 0;
                 usage_per_slot.push(0);
@@ -1454,6 +1534,7 @@ mod tests {
                         remaining: st[i].remaining,
                         prev_alloc: st[i].prev_alloc,
                         overdue: false,
+                        eligible_since: first_eligible[i].unwrap_or(jobs[i].arrival),
                     };
                     let overdue = jv.slack_left(t) <= 0.0;
                     JobView { overdue, ..jv }
@@ -1622,7 +1703,7 @@ mod tests {
             Config { cases: 48, seed: 0xA05D },
             |rng| {
                 let n = 1 + rng.below(10);
-                let jobs: Vec<Job> = (0..n)
+                let mut jobs: Vec<Job> = (0..n)
                     .map(|i| {
                         let k_max = 1 + rng.below(4);
                         let mut j = job(
@@ -1637,6 +1718,16 @@ mod tests {
                         j
                     })
                     .collect();
+                // Half the cases carry dependency edges, so the engine's DAG
+                // gate is pinned against the AoS reference too.
+                if rng.chance(0.5) {
+                    for i in 1..n {
+                        if rng.chance(0.4) {
+                            let p = rng.below(i);
+                            jobs[i].deps.push(p);
+                        }
+                    }
+                }
                 let capacity = 1 + rng.below(8);
                 let policy_choice = rng.below(4);
                 let policy_seed = rng.below(1 << 30) as u64;
@@ -1665,6 +1756,100 @@ mod tests {
                         got.fingerprint(),
                         want.fingerprint()
                     ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn dag_child_waits_for_parent_completion() {
+        // Chain 0 ← 1: both arrive at t=0. The child must stay invisible to
+        // the policy until the parent completes, then start the next slot.
+        let mut child = job(1, 0, 2.0, 6.0, 4);
+        child.deps = vec![0];
+        let jobs = vec![job(0, 0, 3.0, 6.0, 4), child];
+        let f = flat_forecaster(100, 100.0);
+        let r = sim(10, 24).run(&jobs, &f, &mut RunAll);
+        assert_eq!(r.metrics.completed, 2);
+        let done = |id: usize| r.outcomes.iter().find(|o| o.id == id).unwrap().completion;
+        // Parent runs slots 0..=2; the child becomes eligible at slot 3 and
+        // runs 3..=4 — never concurrently with the parent.
+        assert_eq!(done(0), 2);
+        assert_eq!(done(1), 4);
+        for s in &r.slots {
+            assert!(s.used <= 1, "slot {}: parent and child overlapped", s.t);
+        }
+        // While gated, the child is absent from the policy's queue view.
+        assert_eq!(r.slots[0].queue_lengths[0], 1);
+    }
+
+    /// Property: every schedule the engine emits under dependency edges is
+    /// topologically feasible — a child never completes at or before any of
+    /// its parents — across policy shapes, including the overdue force-run
+    /// path (which must not override the gate) and a random decider.
+    #[test]
+    fn property_dag_schedules_are_topologically_feasible() {
+        use crate::util::proptest_lite::{check, Config};
+        use crate::util::rng::Rng;
+        check(
+            "DAG schedules are topologically feasible",
+            Config { cases: 64, seed: 0xDA6F },
+            |rng| {
+                let n = 2 + rng.below(9);
+                let mut jobs: Vec<Job> = (0..n)
+                    .map(|i| {
+                        let k_max = 1 + rng.below(4);
+                        let mut j = job(
+                            i,
+                            rng.below(5),
+                            0.5 + rng.range(0.0, 4.0),
+                            rng.range(0.0, 6.0),
+                            k_max,
+                        );
+                        j.profile = ScalingProfile::from_comm_ratio(rng.range(0.0, 0.25), k_max);
+                        j
+                    })
+                    .collect();
+                for i in 1..n {
+                    if rng.chance(0.6) {
+                        let p = rng.below(i);
+                        jobs[i].deps.push(p);
+                    }
+                }
+                let capacity = 1 + rng.below(6);
+                let policy_choice = rng.below(3);
+                let policy_seed = rng.below(1 << 30) as u64;
+                (jobs, capacity, policy_choice, policy_seed)
+            },
+            |(jobs, capacity, policy_choice, policy_seed)| {
+                let mut policy: Box<dyn Policy> = match policy_choice {
+                    0 => Box::new(RunAll),
+                    1 => Box::new(NeverRun),
+                    _ => Box::new(RandomDecider(Rng::new(*policy_seed))),
+                };
+                let f = flat_forecaster(512, 120.0);
+                let r = sim(*capacity, 24).run(jobs, &f, policy.as_mut());
+                if r.metrics.completed != jobs.len() {
+                    return Err(format!(
+                        "{} of {} jobs completed",
+                        r.metrics.completed,
+                        jobs.len()
+                    ));
+                }
+                let mut completion = vec![0usize; jobs.len()];
+                for o in &r.outcomes {
+                    completion[o.id] = o.completion;
+                }
+                for j in jobs {
+                    for &p in &j.deps {
+                        if completion[j.id] <= completion[p] {
+                            return Err(format!(
+                                "child {} completed at {} but parent {p} only at {}",
+                                j.id, completion[j.id], completion[p]
+                            ));
+                        }
+                    }
                 }
                 Ok(())
             },

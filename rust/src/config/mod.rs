@@ -5,6 +5,6 @@ pub mod schema;
 pub mod toml;
 
 pub use schema::{
-    default_queues, ConfigError, ElasticityScenario, ExperimentConfig, Hardware, QueueConfig,
-    ServiceConfig, ShedPolicy, TraceFamily,
+    default_queues, ConfigError, DagShape, ElasticityScenario, ExperimentConfig, Hardware,
+    QueueConfig, ServiceConfig, ShedPolicy, TraceFamily,
 };

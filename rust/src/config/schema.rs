@@ -139,6 +139,51 @@ impl ElasticityScenario {
     }
 }
 
+/// DAG topology tracegen wires into a generated trace (the `dag_shape`
+/// sweep axis). [`DagShape::None`] is the degenerate zero-edge case: the
+/// generator does not touch its RNG stream for it, so flat traces stay
+/// bitwise identical to the pre-DAG generator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DagShape {
+    /// No dependency edges (flat, independent jobs — the default).
+    None,
+    /// Linear chains: jobs partitioned into pipelines, each stage depending
+    /// on its predecessor.
+    Chains,
+    /// Fan-out trees: one root per group, every other member depends on it.
+    Fanout,
+    /// Map-reduce: per group, independent maps plus one final reduce
+    /// depending on every map.
+    MapReduce,
+    /// Random DAGs: each job independently draws 1–2 earlier parents.
+    Random,
+}
+
+impl DagShape {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "flat" => Ok(Self::None),
+            "chains" | "chain" => Ok(Self::Chains),
+            "fanout" | "fan-out" => Ok(Self::Fanout),
+            "mapreduce" | "map-reduce" => Ok(Self::MapReduce),
+            "random" => Ok(Self::Random),
+            other => Err(field_err(
+                "workload.dag_shape",
+                format!("unknown dag shape '{other}' (none, chains, fanout, mapreduce, random)"),
+            )),
+        }
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Chains => "chains",
+            Self::Fanout => "fanout",
+            Self::MapReduce => "mapreduce",
+            Self::Random => "random",
+        }
+    }
+}
+
 /// A submission queue: jobs with base-length in `(min_len, max_len]` hours get
 /// slack `delay_hours` (paper default: short ≤2h → 6h, medium ≤12h → 24h,
 /// long → 48h).
@@ -174,6 +219,9 @@ pub struct ExperimentConfig {
     pub arrival_scale: f64,
     /// Job-length multiplier for distribution-shift studies (Fig. 13).
     pub length_scale: f64,
+    /// Dependency topology tracegen imposes on the generated jobs
+    /// ([`DagShape::None`] = flat, bitwise identical to the pre-DAG traces).
+    pub dag_shape: DagShape,
     /// Override every queue's slack with this many hours (Fig. 9 sweeps).
     pub uniform_delay_hours: Option<f64>,
     /// k=5 nearest neighbours for the CBR match (paper §5).
@@ -200,6 +248,7 @@ impl Default for ExperimentConfig {
             queues: default_queues(),
             arrival_scale: 1.0,
             length_scale: 1.0,
+            dag_shape: DagShape::None,
             uniform_delay_hours: None,
             knn_k: 5,
             violation_tolerance: 0.2,
@@ -268,6 +317,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = root.get_path("workload.length_scale") {
             cfg.length_scale = pos_f64(v, "workload.length_scale")?;
+        }
+        if let Some(v) = root.get_path("workload.dag_shape") {
+            cfg.dag_shape = DagShape::parse(req_str(v, "workload.dag_shape")?)?;
         }
         if let Some(v) = root.get_path("scheduler.uniform_delay_hours") {
             cfg.uniform_delay_hours = Some(nonneg_f64(v, "scheduler.uniform_delay_hours")?);
@@ -371,6 +423,12 @@ impl ExperimentConfig {
         let mut cfg = self.clone();
         cfg.arrival_scale = 1.0;
         cfg.length_scale = 1.0;
+        // The learning history also stays flat: the oracle replay that
+        // builds the knowledge base learns provisioning/threshold mappings
+        // from independent jobs, and a `dag_shape` cell measures how those
+        // learned decisions transfer to precedence-constrained evaluation
+        // workloads (mirroring the Fig. 13 learn/eval-mismatch design).
+        cfg.dag_shape = DagShape::None;
         cfg
     }
 
@@ -583,6 +641,36 @@ delay_hours = 48.0
         cfg.uniform_delay_hours = Some(12.0);
         assert_eq!(cfg.slack_for_length(0.5), 12.0);
         assert_eq!(cfg.slack_for_length(99.0), 12.0);
+    }
+
+    #[test]
+    fn dag_shape_parses_and_defaults() {
+        let cfg = ExperimentConfig::from_toml_str("").unwrap();
+        assert_eq!(cfg.dag_shape, DagShape::None);
+        let cfg =
+            ExperimentConfig::from_toml_str("[workload]\ndag_shape = \"mapreduce\"\n").unwrap();
+        assert_eq!(cfg.dag_shape, DagShape::MapReduce);
+        // Round-trip: every shape parses from its own as_str (plus aliases).
+        for s in [
+            DagShape::None,
+            DagShape::Chains,
+            DagShape::Fanout,
+            DagShape::MapReduce,
+            DagShape::Random,
+        ] {
+            assert_eq!(DagShape::parse(s.as_str()).unwrap(), s);
+        }
+        assert_eq!(DagShape::parse("map-reduce").unwrap(), DagShape::MapReduce);
+        assert_eq!(DagShape::parse("fan-out").unwrap(), DagShape::Fanout);
+        assert!(DagShape::parse("lattice").is_err());
+        assert!(
+            ExperimentConfig::from_toml_str("[workload]\ndag_shape = \"lattice\"\n").is_err()
+        );
+        // The history config is always flat — DAG cells measure transfer of
+        // flat-learned decisions, and replay learning never sees edges.
+        let mut shaped = ExperimentConfig::default();
+        shaped.dag_shape = DagShape::Chains;
+        assert_eq!(shaped.unshifted_history().dag_shape, DagShape::None);
     }
 
     #[test]

@@ -430,6 +430,7 @@ impl Leader {
             k_max: self.k_max,
             profile: spec.profile(self.k_max),
             watts_per_unit: spec.watts_per_unit,
+            deps: Vec::new(),
         };
         self.engine.add_job(job);
         self.checkpoint

@@ -170,6 +170,7 @@ pub fn bench_hotpaths(cfg: &ExperimentConfig, budget: Duration) -> HotpathReport
             k_max: 4,
             profile: ScalingProfile::from_comm_ratio(0.05, 4),
             watts_per_unit: 40.0,
+            deps: Vec::new(),
         })
         .collect();
     let hardware = cfg.hardware;

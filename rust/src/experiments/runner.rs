@@ -234,6 +234,13 @@ impl PreparedExperiment {
                 // index clones in O(n), so per-cell policy construction no
                 // longer pays a scaler refit + O(n log n) tree rebuild.
                 let kb = self.knowledge_base().clone();
+                if self.eval_jobs.iter().any(|j| !j.deps.is_empty()) {
+                    // DAG workload: replace flat per-queue slack with
+                    // critical-path slack (longest downstream chain,
+                    // computed once per DAG here at prep).
+                    let down = crate::workload::job::critical_path_downstream(&self.eval_jobs);
+                    return Box::new(CarbonFlex::with_critical_path(kb, params, down));
+                }
                 Box::new(CarbonFlex::new(kb, params))
             }
         }

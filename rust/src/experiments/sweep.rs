@@ -40,7 +40,7 @@
 //! reproduces the legacy `run_spatial_prepared` / `run_yearlong` outputs
 //! (pinned by their in-test reference implementations). Rows are emitted in
 //! grid order: region → dispatch → capacity → horizon → week → variant →
-//! faults → seed, with policy innermost.
+//! dag shape → faults → seed, with policy innermost.
 //!
 //! Two further batching features (§Perf):
 //!
@@ -62,7 +62,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::cluster::sim::SimResult;
-use crate::config::ExperimentConfig;
+use crate::config::{DagShape, ExperimentConfig};
 use crate::experiments::cells::{self, DispatchStrategy, SpatialPrep, WeekCell};
 use crate::experiments::runner::{prep_hash, PreparedExperiment};
 use crate::faults::{FaultPlan, FaultSpec};
@@ -136,6 +136,14 @@ pub struct SweepSpec {
     /// points at the same setting share one memoized preparation; it cannot
     /// combine with multi-region `+` sets or the week-window axis.
     pub faults: Vec<String>,
+    /// DAG-shape labels (see `config::DagShape::parse`; defaults to
+    /// `["none"]`). Unlike the faults axis, a shape DOES enter
+    /// [`config_for`](SweepSpec::config_for): it rewrites trace generation
+    /// itself, so shaped and flat points at one setting prepare in separate
+    /// [`prep_hash`] memoization groups. The axis cannot combine with
+    /// multi-region `+` sets or the week-window axis (the composite-cell
+    /// drivers have no eligibility-gating path).
+    pub dag_shapes: Vec<String>,
     /// Workload/trace seeds; each is mixed into a per-cell seed.
     pub seeds: Vec<u64>,
     /// Policies to run at every point.
@@ -169,6 +177,8 @@ pub struct SweepPoint {
     pub variant: String,
     /// Fault-preset label ("none" when the axis is unused).
     pub faults: String,
+    /// DAG-shape label ("none" when the axis is unused).
+    pub dag_shape: String,
     /// The spec-level seed entry this point simulates with (the config's
     /// seed, verbatim — so a single-cell sweep reproduces `compare`
     /// bitwise). Region/capacity/variant rows deliberately share their seed
@@ -224,6 +234,7 @@ impl SweepSpec {
             aging_window_hours: DEFAULT_AGING_WINDOW_HOURS,
             variants: Vec::new(),
             faults: Vec::new(),
+            dag_shapes: Vec::new(),
             seeds: Vec::new(),
             policies: Vec::new(),
             spatial_preps: Vec::new(),
@@ -241,7 +252,7 @@ impl SweepSpec {
     }
 
     /// All grid points, in grid order (region → dispatch → capacity →
-    /// horizon → week → variant → faults → seed).
+    /// horizon → week → variant → dag shape → faults → seed).
     pub fn points(&self) -> Vec<SweepPoint> {
         let regions = axis_or(&self.regions, self.base.region.clone());
         let dispatchers = axis_or(&self.dispatchers, DispatchStrategy::RoundRobin);
@@ -297,6 +308,23 @@ impl SweepSpec {
                 "the faults axis cannot combine with the week-window axis"
             );
         }
+        let dag_shapes = axis_or(&self.dag_shapes, "none".to_string());
+        for (i, d) in dag_shapes.iter().enumerate() {
+            assert!(DagShape::parse(d).is_ok(), "unknown dag shape '{d}'");
+            assert!(!dag_shapes[..i].contains(d), "duplicate dag shape '{d}'");
+        }
+        if dag_shapes.iter().any(|d| d != "none") {
+            // Same restriction (and reason) as the faults axis: the
+            // composite-cell drivers have no dependency-gating path.
+            assert!(
+                !regions.iter().any(|r| r.contains('+')),
+                "the dag-shape axis cannot combine with multi-region '+' sets"
+            );
+            assert!(
+                self.weeks.is_empty(),
+                "the dag-shape axis cannot combine with the week-window axis"
+            );
+        }
         let seeds = axis_or(&self.seeds, self.base.seed);
 
         let mut points = Vec::new();
@@ -313,24 +341,27 @@ impl SweepSpec {
                     for &horizon_hours in &horizons {
                         for &week in &weeks {
                             for variant in &variant_labels {
-                                for fault in &faults {
-                                    for &seed in &seeds {
-                                        points.push(SweepPoint {
-                                            region: region.clone(),
-                                            dispatch: dispatch.clone(),
-                                            capacity,
-                                            // Week cells always evaluate
-                                            // one 168 h week.
-                                            horizon_hours: if week.is_some() {
-                                                168
-                                            } else {
-                                                horizon_hours
-                                            },
-                                            week,
-                                            variant: variant.clone(),
-                                            faults: fault.clone(),
-                                            seed,
-                                        });
+                                for dag in &dag_shapes {
+                                    for fault in &faults {
+                                        for &seed in &seeds {
+                                            points.push(SweepPoint {
+                                                region: region.clone(),
+                                                dispatch: dispatch.clone(),
+                                                capacity,
+                                                // Week cells always evaluate
+                                                // one 168 h week.
+                                                horizon_hours: if week.is_some() {
+                                                    168
+                                                } else {
+                                                    horizon_hours
+                                                },
+                                                week,
+                                                variant: variant.clone(),
+                                                faults: fault.clone(),
+                                                dag_shape: dag.clone(),
+                                                seed,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -353,6 +384,11 @@ impl SweepSpec {
         cfg.region = point.region.clone();
         cfg.capacity = point.capacity;
         cfg.horizon_hours = point.horizon_hours;
+        // Unlike `point.faults` below, the DAG shape MUST enter the config:
+        // it changes trace generation itself, so shaped points land in their
+        // own [`prep_hash`] groups and prepare separately.
+        cfg.dag_shape = DagShape::parse(&point.dag_shape)
+            .unwrap_or_else(|_| panic!("unknown dag shape '{}'", point.dag_shape));
         if let Some(v) = self.variants.iter().find(|v| v.label == point.variant) {
             v.apply(&mut cfg);
         }
@@ -393,6 +429,7 @@ impl SweepSpec {
     /// seeds = [1, 2]
     /// weeks = [0, 1, 2, 3]
     /// faults = ["none", "light"]
+    /// dag_shapes = ["none", "chains"]
     /// aging_window_hours = 672
     /// policies = ["agnostic", "carbonflex", "oracle"]
     /// ```
@@ -472,6 +509,15 @@ impl SweepSpec {
                 }
             }
             self.faults = labels;
+        }
+        if let Some(v) = sweep.get("dag_shapes") {
+            let labels = str_list(v, "dag_shapes")?;
+            for d in &labels {
+                if DagShape::parse(d).is_err() {
+                    return Err(format!("sweep.dag_shapes: unknown dag shape '{d}'"));
+                }
+            }
+            self.dag_shapes = labels;
         }
         if let Some(v) = sweep.get("aging_window_hours") {
             match v.as_int() {
@@ -846,6 +892,8 @@ pub fn print_table(rows: &[SweepRow]) {
     let with_week = rows.iter().any(|r| r.point.week.is_some());
     let with_variant = rows.iter().any(|r| !r.point.variant.is_empty());
     let with_faults = rows.iter().any(|r| !r.point.faults.is_empty() && r.point.faults != "none");
+    let with_dag =
+        rows.iter().any(|r| !r.point.dag_shape.is_empty() && r.point.dag_shape != "none");
     let mut headers = vec!["region"];
     if with_dispatch {
         headers.push("dispatch");
@@ -859,6 +907,9 @@ pub fn print_table(rows: &[SweepRow]) {
     }
     if with_faults {
         headers.push("faults");
+    }
+    if with_dag {
+        headers.push("dag");
     }
     headers.push("seed");
     headers.extend_from_slice(&[
@@ -886,6 +937,9 @@ pub fn print_table(rows: &[SweepRow]) {
         }
         if with_faults {
             cells.push(r.point.faults.clone());
+        }
+        if with_dag {
+            cells.push(r.point.dag_shape.clone());
         }
         cells.push(format!("{}", r.point.seed));
         cells.extend([
@@ -921,6 +975,7 @@ pub fn to_json(rows: &[SweepRow]) -> Json {
                     ),
                     ("variant", Json::Str(r.point.variant.clone())),
                     ("faults", Json::Str(r.point.faults.clone())),
+                    ("dag_shape", Json::Str(r.point.dag_shape.clone())),
                     ("seed", Json::Str(format!("{}", r.point.seed))),
                     ("policy", Json::Str(m.policy.clone())),
                     ("carbon_g", Json::Num(m.carbon_g)),
@@ -1123,12 +1178,14 @@ capacities = [8, 16]
 seeds = [1, 2]
 policies = ["agnostic", "carbonflex"]
 faults = ["none", "heavy"]
+dag_shapes = ["none", "fanout"]
 aging_window_hours = 336
 "#,
         )
         .unwrap();
         assert_eq!(spec.regions.len(), 2);
         assert_eq!(spec.faults, vec!["none".to_string(), "heavy".to_string()]);
+        assert_eq!(spec.dag_shapes, vec!["none".to_string(), "fanout".to_string()]);
         assert_eq!(
             spec.dispatchers,
             vec![DispatchStrategy::RoundRobin, DispatchStrategy::LowestWindowCi]
@@ -1146,6 +1203,7 @@ aging_window_hours = 336
         assert!(bad.apply_toml_axes("[sweep]\ndispatch = [\"teleport\"]\n").is_err());
         assert!(bad.apply_toml_axes("[sweep]\npolicies = [\"magic\"]\n").is_err());
         assert!(bad.apply_toml_axes("[sweep]\nfaults = [\"meteor\"]\n").is_err());
+        assert!(bad.apply_toml_axes("[sweep]\ndag_shapes = [\"moebius\"]\n").is_err());
         assert!(bad.apply_toml_axes("[sweep]\naging_window_hours = 0\n").is_err());
     }
 
@@ -1333,6 +1391,60 @@ aging_window_hours = 336
         let mut spec = SweepSpec::new(tiny_base());
         spec.regions = vec!["south-australia+ontario".into()];
         spec.faults = vec!["light".into()];
+        let _ = spec.points();
+    }
+
+    #[test]
+    fn dag_axis_injects_and_preserves_clean_rows() {
+        let mk = |shapes: Vec<String>| {
+            let mut spec = SweepSpec::new(tiny_base());
+            spec.dag_shapes = shapes;
+            spec.policies = vec![PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex];
+            spec
+        };
+        let spec = mk(vec!["none".into(), "chains".into()]);
+        let points = spec.points();
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].dag_shape, "none");
+        assert_eq!(spec.config_for(&points[0]).dag_shape, DagShape::None);
+        assert_eq!(spec.config_for(&points[1]).dag_shape, DagShape::Chains);
+
+        // Unlike the faults axis, the shape feeds trace generation: shaped
+        // and flat points at one setting must prepare separately.
+        let (rows, stats) = SweepRunner::new(2).run_with_stats(&spec);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(stats.prepares, 2, "dag axis must split prep groups");
+
+        // "none" rows are bitwise identical to a sweep without the axis.
+        let flat = SweepRunner::new(2).run(&mk(Vec::new()));
+        for (a, b) in rows[..2].iter().zip(&flat) {
+            assert_eq!(a.result.fingerprint(), b.result.fingerprint());
+            assert_eq!(a.savings_pct.to_bits(), b.savings_pct.to_bits());
+        }
+
+        // Shaped rows still make progress, and a rerun reproduces every
+        // row bitwise regardless of thread count.
+        assert!(rows[2].result.metrics.completed > 0, "chained cell completed nothing");
+        let again = SweepRunner::new(1).run(&spec);
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.result.fingerprint(), b.result.fingerprint());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown dag shape")]
+    fn unknown_dag_shape_panics() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.dag_shapes = vec!["moebius".into()];
+        let _ = spec.points();
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot combine with multi-region")]
+    fn dag_axis_rejects_region_sets() {
+        let mut spec = SweepSpec::new(tiny_base());
+        spec.regions = vec!["south-australia+ontario".into()];
+        spec.dag_shapes = vec!["chains".into()];
         let _ = spec.points();
     }
 

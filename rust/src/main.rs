@@ -76,6 +76,7 @@ fn print_usage() {
          \x20             [--dispatch rr,current,window] [--capacities 100,150]\n\
          \x20             [--horizons 168] [--weeks N|w1,w2] [--aging-window 672]\n\
          \x20             [--seeds 1,2] [--faults none,light,heavy] [--history <h>]\n\
+         \x20             [--dag-shapes none,chains,fanout,mapreduce,random]\n\
          \x20             [--offsets <n>] [--threads N] [--shard i/n] [--json] [--check]\n\
          \x20             parallel cartesian grid; rows in grid order. A '+'-joined\n\
          \x20             region entry is a multi-region spatial cell (the --dispatch\n\
@@ -310,6 +311,15 @@ fn cmd_sweep(args: &Args) -> i32 {
         }
     }) {
         Ok(v) if !v.is_empty() => spec.faults = v,
+        Ok(_) => {}
+        Err(e) => return fail(&e),
+    };
+    match parse_list(args, "dag-shapes", |s| {
+        carbonflex::config::DagShape::parse(s)
+            .map(|_| s.to_string())
+            .map_err(|e| e.to_string())
+    }) {
+        Ok(v) if !v.is_empty() => spec.dag_shapes = v,
         Ok(_) => {}
         Err(e) => return fail(&e),
     };

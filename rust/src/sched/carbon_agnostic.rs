@@ -52,6 +52,7 @@ mod tests {
             k_max: 4,
             profile: ScalingProfile::from_comm_ratio(0.05, 4),
             watts_per_unit: 40.0,
+            deps: Vec::new(),
         }
     }
 
@@ -61,7 +62,13 @@ mod tests {
         let views: Vec<crate::sched::JobView> = jobs
             .iter()
             .map(|j| {
-                crate::sched::JobView { job: j, remaining: 2.0, prev_alloc: 0, overdue: false }
+                crate::sched::JobView {
+                    job: j,
+                    remaining: 2.0,
+                    prev_alloc: 0,
+                    overdue: false,
+                    eligible_since: j.arrival,
+                }
             })
             .collect();
         let f = Forecaster::perfect(CarbonTrace::new("x", vec![100.0; 10]));

@@ -161,6 +161,7 @@ mod tests {
             k_max: 4,
             profile: ScalingProfile::from_comm_ratio(0.02, 4),
             watts_per_unit: 40.0,
+            deps: Vec::new(),
         }
     }
 

@@ -130,6 +130,12 @@ impl Default for CarbonFlexParams {
 pub struct CarbonFlex<M: Matcher> {
     matcher: M,
     params: CarbonFlexParams,
+    /// Critical-path tail per job id (longest chain of `length_hours`
+    /// strictly downstream of the job, see
+    /// [`crate::workload::job::critical_path_downstream`]). Empty for flat
+    /// workloads — every slack read then takes the exact pre-DAG
+    /// instruction path, so flat runs stay bitwise identical.
+    downstream: Vec<f64>,
     /// Matched neighbours for the current slot.
     neighbors: Vec<Neighbor>,
     /// Alg. 3 candidate entries: (marginal, slack, view index, k).
@@ -148,15 +154,42 @@ pub struct CarbonFlex<M: Matcher> {
 
 impl<M: Matcher> CarbonFlex<M> {
     pub fn new(matcher: M, params: CarbonFlexParams) -> Self {
+        Self::with_critical_path(matcher, params, Vec::new())
+    }
+
+    /// DAG-aware variant: urgency and the Alg. 3 ordering use
+    /// **critical-path slack** — per-queue slack minus the longest chain of
+    /// work strictly downstream of the job — instead of the flat per-queue
+    /// slack. A parent whose completion unblocks a deep chain is treated as
+    /// urgent long before its own deadline is. `downstream` is indexed by
+    /// dense job id; pass an empty vector for flat workloads.
+    pub fn with_critical_path(
+        matcher: M,
+        params: CarbonFlexParams,
+        downstream: Vec<f64>,
+    ) -> Self {
         CarbonFlex {
             matcher,
             params,
+            downstream,
             neighbors: Vec::new(),
             entries: Vec::new(),
             granted: Vec::new(),
             rhos: Vec::new(),
             degraded: DegradationCounters::default(),
             fallback: CarbonAgnostic,
+        }
+    }
+
+    /// Effective slack of a job for urgency and scheduling order: flat
+    /// per-queue slack, less the critical-path tail that cannot start until
+    /// this job completes. Never larger than the flat slack (tails are
+    /// non-negative).
+    fn cp_slack(&self, v: &crate::sched::JobView<'_>, t: usize) -> f64 {
+        if self.downstream.is_empty() {
+            v.slack_left(t)
+        } else {
+            v.slack_left(t) - self.downstream.get(v.job.id).copied().unwrap_or(0.0)
         }
     }
 
@@ -191,11 +224,12 @@ impl<M: Matcher> CarbonFlex<M> {
         )
     }
 
-    /// Base servers needed by jobs about to exhaust their slack.
+    /// Base servers needed by jobs about to exhaust their (critical-path)
+    /// slack.
     fn urgent_floor(&self, ctx: &SlotCtx) -> usize {
         ctx.jobs
             .iter()
-            .filter(|v| v.slack_left(ctx.t) <= self.params.urgency_window)
+            .filter(|v| self.cp_slack(v, ctx.t) <= self.params.urgency_window)
             .map(|v| v.job.k_min)
             .sum()
     }
@@ -274,7 +308,10 @@ impl<M: Matcher> CarbonFlex<M> {
     /// or above the threshold ρ, written into `out`.
     fn schedule(&mut self, ctx: &SlotCtx, m_t: usize, rho: f64, out: &mut Decision) {
         // Candidate server increments (j, k) with p_j(k) ≥ ρ.
-        // Sort key: marginal desc, remaining slack asc (EDF), id.
+        // Sort key: marginal desc, remaining (critical-path) slack asc
+        // (EDF), id. Split field borrow: `entries` is taken mutably, so the
+        // cp_slack logic is inlined over the `downstream` field here.
+        let downstream: &[f64] = &self.downstream;
         let entries = &mut self.entries;
         entries.clear();
         for (i, v) in ctx.jobs.iter().enumerate() {
@@ -284,7 +321,12 @@ impl<M: Matcher> CarbonFlex<M> {
                 if !qualifies {
                     break; // marginals decrease in k
                 }
-                entries.push((p, v.slack_left(ctx.t), i, k));
+                let slack = if downstream.is_empty() {
+                    v.slack_left(ctx.t)
+                } else {
+                    v.slack_left(ctx.t) - downstream.get(v.job.id).copied().unwrap_or(0.0)
+                };
+                entries.push((p, slack, i, k));
             }
         }
         // Unstable sort is order-identical here — the (view index, k) tail
@@ -377,6 +419,7 @@ mod tests {
             k_max: 4,
             profile: ScalingProfile::from_comm_ratio(0.03, 4),
             watts_per_unit: 40.0,
+            deps: Vec::new(),
         }
     }
 
@@ -432,7 +475,7 @@ mod tests {
         let jobs: Vec<Job> = (0..2).map(|i| job(i, 0, 4.0, 24.0)).collect();
         let views: Vec<JobView> = jobs
             .iter()
-            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false })
+            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false, eligible_since: j.arrival })
             .collect();
         let mut cf = CarbonFlex::new(kb_with(0, 8), CarbonFlexParams::default());
         // Clean slot → high capacity, scheduling happens.
@@ -451,7 +494,7 @@ mod tests {
         let jobs = vec![job(0, 0, 4.0, 24.0)];
         let views: Vec<JobView> = jobs
             .iter()
-            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false })
+            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false, eligible_since: j.arrival })
             .collect();
         // KB with states far away from the query (extreme queue lengths).
         let mut kb = KnowledgeBase::new();
@@ -482,7 +525,7 @@ mod tests {
         let jobs = vec![job(0, 0, 4.0, 24.0)];
         let views: Vec<JobView> = jobs
             .iter()
-            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false })
+            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false, eligible_since: j.arrival })
             .collect();
         let mut cf = CarbonFlex::new(kb_with(2, 8), CarbonFlexParams::default());
         let d = cf.decide(&ctx_at(0, &views, &f, 0.9));
@@ -496,7 +539,7 @@ mod tests {
         let jobs = vec![job(0, 0, 2.0, 6.0)];
         let views: Vec<JobView> = jobs
             .iter()
-            .map(|j| JobView { job: j, remaining: 2.0, prev_alloc: 0, overdue: false })
+            .map(|j| JobView { job: j, remaining: 2.0, prev_alloc: 0, overdue: false, eligible_since: j.arrival })
             .collect();
         let mut cf = CarbonFlex::new(KnowledgeBase::new(), CarbonFlexParams::default());
         let d = cf.decide(&ctx_at(0, &views, &f, 0.0));
@@ -511,7 +554,7 @@ mod tests {
         let jobs: Vec<Job> = (0..2).map(|i| job(i, 0, 4.0, 24.0)).collect();
         let views: Vec<JobView> = jobs
             .iter()
-            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false })
+            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false, eligible_since: j.arrival })
             .collect();
         let ctx = ctx_at(0, &views, &f, 0.0);
         let mut cf = CarbonFlex::new(KnowledgeBase::new(), CarbonFlexParams::default());
@@ -528,7 +571,7 @@ mod tests {
         let jobs = vec![job(0, 0, 2.0, 0.0)];
         let views: Vec<JobView> = jobs
             .iter()
-            .map(|j| JobView { job: j, remaining: 2.0, prev_alloc: 0, overdue: true })
+            .map(|j| JobView { job: j, remaining: 2.0, prev_alloc: 0, overdue: true, eligible_since: j.arrival })
             .collect();
         let ctx = ctx_at(0, &views, &f, 0.0);
         // Threshold above 1 normally blocks everything; overdue must pass.
@@ -536,6 +579,61 @@ mod tests {
         let mut d = Decision::default();
         cf.schedule(&ctx, 5, 1.01, &mut d);
         assert!(!d.alloc.is_empty());
+    }
+
+    #[test]
+    fn critical_path_reorders_schedule_toward_deep_parents() {
+        // Two jobs with one shared profile, so every marginal ties and the
+        // slack key decides the order. Flat slack: job 1 (20h) is tighter
+        // than job 0 (24h). Critical-path mode knows job 0 gates a 6-hour
+        // downstream chain → effective slack 18h < 20h, so it wins the
+        // single granted server instead.
+        let f = Forecaster::perfect(CarbonTrace::new("x", vec![100.0; 24]));
+        let jobs = vec![job(0, 0, 4.0, 24.0), job(1, 0, 4.0, 20.0)];
+        let views: Vec<JobView> = jobs
+            .iter()
+            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false, eligible_since: j.arrival })
+            .collect();
+        let ctx = ctx_at(0, &views, &f, 0.0);
+
+        let mut flat = CarbonFlex::new(KnowledgeBase::new(), CarbonFlexParams::default());
+        let mut d = Decision::default();
+        flat.schedule(&ctx, 1, 0.0, &mut d);
+        assert_eq!(d.alloc, vec![(1, 1)], "flat EDF must pick the tighter deadline");
+
+        let mut dag = CarbonFlex::with_critical_path(
+            KnowledgeBase::new(),
+            CarbonFlexParams::default(),
+            vec![6.0, 0.0],
+        );
+        dag.schedule(&ctx, 1, 0.0, &mut d);
+        assert_eq!(d.alloc, vec![(0, 1)], "deep parent must outrank the tighter leaf");
+    }
+
+    #[test]
+    fn critical_path_slack_widens_the_urgency_floor() {
+        // slack_left(0) = 5h: outside the 2h urgency window in flat mode,
+        // inside it once a 4-hour downstream tail is charged to the job.
+        let f = Forecaster::perfect(CarbonTrace::new("x", vec![100.0; 24]));
+        let jobs = vec![job(0, 0, 2.0, 5.0)];
+        let views: Vec<JobView> = jobs
+            .iter()
+            .map(|j| JobView { job: j, remaining: 2.0, prev_alloc: 0, overdue: false, eligible_since: j.arrival })
+            .collect();
+        let ctx = ctx_at(0, &views, &f, 0.0);
+        let flat = CarbonFlex::new(KnowledgeBase::new(), CarbonFlexParams::default());
+        assert_eq!(flat.urgent_floor(&ctx), 0);
+        let dag = CarbonFlex::with_critical_path(
+            KnowledgeBase::new(),
+            CarbonFlexParams::default(),
+            vec![4.0],
+        );
+        assert_eq!(dag.urgent_floor(&ctx), 1);
+        // And cp_slack never exceeds the flat slack (tails are ≥ 0).
+        for v in &views {
+            assert!(dag.cp_slack(v, 0) <= v.slack_left(0));
+            assert_eq!(flat.cp_slack(v, 0).to_bits(), v.slack_left(0).to_bits());
+        }
     }
 
     #[test]
@@ -586,7 +684,7 @@ mod tests {
         let jobs: Vec<Job> = (0..2).map(|i| job(i, 0, 4.0, 24.0)).collect();
         let views: Vec<JobView> = jobs
             .iter()
-            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false })
+            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false, eligible_since: j.arrival })
             .collect();
         let masked = Forecaster::perfect(trace.clone())
             .with_outages(&[SignalOutage { start: 1, len: 19 }], 3, 24);
@@ -626,7 +724,7 @@ mod tests {
         let jobs: Vec<Job> = (0..3).map(|i| job(i, 0, 4.0, 24.0)).collect();
         let views: Vec<JobView> = jobs
             .iter()
-            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false })
+            .map(|j| JobView { job: j, remaining: 4.0, prev_alloc: 0, overdue: false, eligible_since: j.arrival })
             .collect();
         let mut a = CarbonFlex::new(kb_with(0, 8), CarbonFlexParams::default());
         let mut b = CarbonFlex::new(kb_with(0, 8), CarbonFlexParams::default());

@@ -115,6 +115,7 @@ mod tests {
             k_max: 4,
             profile: ScalingProfile::from_comm_ratio(0.05, 4),
             watts_per_unit: 40.0,
+            deps: Vec::new(),
         }
     }
 

@@ -26,6 +26,13 @@ use crate::workload::job::{Job, JobId};
 pub const MAX_QUEUES: usize = 8;
 
 /// Per-job view the policy sees at slot `t`.
+///
+/// Policies see **eligibility, not raw arrival**: a job with unfinished
+/// dependency parents (`Job::deps`) never appears in `SlotCtx::jobs` — the
+/// engine holds it back until every parent completes, and stamps the slot
+/// it was released in `eligible_since`. For flat (zero-edge) workloads
+/// `eligible_since == job.arrival`, so precedence-unaware policies behave
+/// bitwise identically to the pre-DAG interface.
 #[derive(Debug, Clone)]
 pub struct JobView<'a> {
     pub job: &'a Job,
@@ -35,6 +42,9 @@ pub struct JobView<'a> {
     pub prev_alloc: usize,
     /// True once the job has exhausted its slack and must run to completion.
     pub overdue: bool,
+    /// Slot this job became eligible to run: its arrival for jobs with no
+    /// (remaining) parents, else the slot after its last parent completed.
+    pub eligible_since: usize,
 }
 
 impl JobView<'_> {
@@ -64,6 +74,8 @@ pub struct JobViewCols {
     pub prev_alloc: Vec<u32>,
     /// True once the job has exhausted its slack.
     pub overdue: Vec<bool>,
+    /// Slot the job became eligible (see [`JobView::eligible_since`]).
+    pub eligible_since: Vec<u32>,
     /// Submission queue index.
     pub queue: Vec<u32>,
     /// `Job::elasticity()` captured at fill time.
@@ -80,6 +92,7 @@ impl JobViewCols {
         self.remaining.clear();
         self.prev_alloc.clear();
         self.overdue.clear();
+        self.eligible_since.clear();
         self.queue.clear();
         self.elasticity.clear();
         self.k_min.clear();
@@ -87,11 +100,19 @@ impl JobViewCols {
     }
 
     /// Append one job's columns (same field values a [`JobView`] would carry).
-    pub fn push(&mut self, job: &Job, remaining: f64, prev_alloc: usize, overdue: bool) {
+    pub fn push(
+        &mut self,
+        job: &Job,
+        remaining: f64,
+        prev_alloc: usize,
+        overdue: bool,
+        eligible_since: usize,
+    ) {
         self.id.push(job.id);
         self.remaining.push(remaining);
         self.prev_alloc.push(prev_alloc as u32);
         self.overdue.push(overdue);
+        self.eligible_since.push(eligible_since as u32);
         self.queue.push(job.queue as u32);
         self.elasticity.push(job.elasticity());
         self.k_min.push(job.k_min as u32);
@@ -105,6 +126,7 @@ impl JobViewCols {
         self.remaining.reserve(additional);
         self.prev_alloc.reserve(additional);
         self.overdue.reserve(additional);
+        self.eligible_since.reserve(additional);
         self.queue.reserve(additional);
         self.elasticity.reserve(additional);
         self.k_min.reserve(additional);
@@ -124,7 +146,7 @@ impl JobViewCols {
     pub fn from_views(views: &[JobView]) -> JobViewCols {
         let mut cols = JobViewCols::default();
         for v in views {
-            cols.push(v.job, v.remaining, v.prev_alloc, v.overdue);
+            cols.push(v.job, v.remaining, v.prev_alloc, v.overdue, v.eligible_since);
         }
         cols
     }
@@ -358,6 +380,7 @@ mod tests {
                 k_max: 4,
                 profile: ScalingProfile::from_comm_ratio(0.05, 4),
                 watts_per_unit: 40.0,
+                deps: Vec::new(),
             })
             .collect();
         let views: Vec<JobView> = jobs
@@ -367,6 +390,7 @@ mod tests {
                 remaining: j.length_hours,
                 prev_alloc: j.id % 2,
                 overdue: j.id == 5,
+                eligible_since: j.arrival,
             })
             .collect();
         let cols = JobViewCols::from_views(&views);
@@ -376,6 +400,7 @@ mod tests {
             assert_eq!(cols.remaining[i].to_bits(), v.remaining.to_bits());
             assert_eq!(cols.prev_alloc[i] as usize, v.prev_alloc);
             assert_eq!(cols.overdue[i], v.overdue);
+            assert_eq!(cols.eligible_since[i] as usize, v.eligible_since);
             assert_eq!(cols.queue[i] as usize, v.job.queue);
             assert_eq!(cols.elasticity[i].to_bits(), v.job.elasticity().to_bits());
             assert_eq!(cols.k_min[i] as usize, v.job.k_min);

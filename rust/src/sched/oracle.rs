@@ -58,7 +58,16 @@ pub struct OracleSchedule {
 /// ascending integer sort. The trailing fields encode the paper's
 /// tie-breaks (earliest deadline, then stable (j, t, k) order).
 #[inline]
-fn pack(score: f32, deadline: usize, job: usize, t: usize, k: usize) -> u128 {
+fn pack_entry(score: f32, deadline: usize, job: usize, t: usize, k: usize) -> u128 {
+    // Each mask below silently wraps an out-of-range field into a foreign
+    // entry's bits; the asserts make that latent corruption loud in debug
+    // builds instead (scores must also be non-negative finite, or the
+    // complemented-bits ordering trick breaks down).
+    debug_assert!(score.is_finite() && score >= 0.0, "score {score} not a non-negative finite");
+    debug_assert!(deadline < 1 << 24, "deadline {deadline} overflows its 24-bit field");
+    debug_assert!(job < 1 << 32, "job id {job} overflows its 32-bit field");
+    debug_assert!(t < 1 << 24, "slot {t} overflows its 24-bit field");
+    debug_assert!(k > 0 && k < 1 << 16, "allocation {k} outside its 16-bit field");
     let inv = !(score.to_bits()) as u128;
     (inv << 96)
         | ((deadline as u128 & 0xFF_FFFF) << 72)
@@ -67,28 +76,43 @@ fn pack(score: f32, deadline: usize, job: usize, t: usize, k: usize) -> u128 {
         | (k as u128 & 0xFFFF)
 }
 
+/// Inverse of [`pack_entry`]'s payload fields: `(job, t, k)`. The single
+/// pack/unpack pair (pinned by the boundary round-trip test) replaces the
+/// decoders that used to be scattered inline across the greedy pass.
 #[inline]
-fn entry_job(e: u128) -> usize {
-    ((e >> 40) & 0xFFFF_FFFF) as usize
+fn unpack_entry(e: u128) -> (usize, usize, usize) {
+    (((e >> 40) & 0xFFFF_FFFF) as usize, ((e >> 16) & 0xFF_FFFF) as usize, (e & 0xFFFF) as usize)
 }
 
-/// Entries one job contributes for its current (possibly extended) window.
-fn job_entry_count(job: &Job, extra_slack: f64) -> usize {
-    (job.length_hours + job.slack_hours + extra_slack).ceil() as usize * job.k_max
+/// Entries one job contributes for its current (possibly extended) window,
+/// starting no earlier than `start` (its precedence-derived earliest slot).
+fn job_entry_count(job: &Job, extra_slack: f64, start: usize) -> usize {
+    let deadline = job.arrival + (job.length_hours + job.slack_hours + extra_slack).ceil() as usize;
+    deadline.saturating_sub(start) * job.k_max
 }
 
-/// Append job `j`'s candidate entries (every (t, k) in its window).
-fn push_job_entries(entries: &mut Vec<u128>, jobs: &[Job], ci: &CarbonTrace, j: usize, extra: f64) {
+/// Append job `j`'s candidate entries (every (t, k) in its window). `start`
+/// is the earliest usable slot — the job's arrival, raised by precedence
+/// repair once its parents' planned completions are known.
+fn push_job_entries(
+    entries: &mut Vec<u128>,
+    jobs: &[Job],
+    ci: &CarbonTrace,
+    j: usize,
+    extra: f64,
+    start: usize,
+) {
     let job = &jobs[j];
     assert_eq!(job.k_min, 1, "oracle assumes unit base allocations");
+    debug_assert!(start >= job.arrival, "start {start} precedes arrival of job {j}");
     // The job must COMPLETE by the end of slot deadline−1 (finishing at
     // `arrival + ceil(l+d)` hours after arrival), so the last usable
     // slot is deadline−1.
     let deadline = job.arrival + (job.length_hours + job.slack_hours + extra).ceil() as usize;
-    for t in job.arrival..deadline {
+    for t in start..deadline {
         let c = ci.at(t).max(1e-9);
         for k in 1..=job.k_max {
-            entries.push(pack((job.marginal(k) / c) as f32, deadline, j, t, k));
+            entries.push(pack_entry((job.marginal(k) / c) as f32, deadline, j, t, k));
         }
     }
 }
@@ -134,14 +158,23 @@ pub fn compute_schedule(
     let mut extra_slack = vec![0.0f64; jobs.len()];
     let mut extended: Vec<usize> = Vec::new();
     let mut extended_mask = vec![false; jobs.len()];
+    // Precedence state: earliest usable slot per job (its arrival for flat
+    // traces; raised by the repair rounds below once parents' planned
+    // completions are known). `has_deps` gates every DAG branch, so a flat
+    // trace takes the pre-DAG path and produces bitwise-identical output.
+    let has_deps = jobs.iter().any(|j| !j.deps.is_empty());
+    let mut earliest: Vec<usize> = jobs.iter().map(|j| j.arrival).collect();
 
     // Lines 2–6: the full candidate list, pre-sized exactly, sorted once
     // (a primitive ascending sort realizes score-desc + tie-breaks).
-    let total: usize =
-        jobs.iter().enumerate().map(|(j, job)| job_entry_count(job, extra_slack[j])).sum();
+    let total: usize = jobs
+        .iter()
+        .enumerate()
+        .map(|(j, job)| job_entry_count(job, extra_slack[j], earliest[j]))
+        .sum();
     let mut entries: Vec<u128> = Vec::with_capacity(total);
     for j in 0..jobs.len() {
-        push_job_entries(&mut entries, jobs, ci, j, extra_slack[j]);
+        push_job_entries(&mut entries, jobs, ci, j, extra_slack[j], earliest[j]);
     }
     entries.sort_unstable();
 
@@ -157,7 +190,29 @@ pub fn compute_schedule(
             .filter(|(j, (_, work))| *work < jobs[*j].length_hours - 1e-9)
             .map(|(j, _)| j)
             .collect();
-        if unfinished.is_empty() || round + 1 == max_rounds {
+        // Precedence repair: a child planned into any slot at or before its
+        // last parent's final planned slot gets its earliest bound raised
+        // and its candidate entries regenerated from that bound.
+        let mut displaced: Vec<usize> = Vec::new();
+        if has_deps {
+            for j in 0..jobs.len() {
+                let mut lb = earliest[j];
+                for &p in &jobs[j].deps {
+                    if let Some(last) = result[p].0.last_slot() {
+                        lb = lb.max(last + 1);
+                    }
+                }
+                if lb > earliest[j] && result[j].0.slots.first().map_or(false, |&(t, _)| t < lb) {
+                    earliest[j] = lb;
+                    displaced.push(j);
+                }
+            }
+        }
+        if (unfinished.is_empty() && displaced.is_empty()) || round + 1 == max_rounds {
+            let mut result = result;
+            if has_deps {
+                clamp_precedence(jobs, &mut result);
+            }
             // Assemble the schedule.
             let horizon = result
                 .iter()
@@ -178,32 +233,72 @@ pub fn compute_schedule(
                 capacity_curve,
             };
         }
-        // Repair: extend the unfinished jobs' windows and splice only their
-        // regenerated entries back into the sorted list.
-        for &j in &unfinished {
+        // Repair: extend the unfinished jobs' windows, raise the displaced
+        // jobs' start bounds, and splice only the regenerated entries back
+        // into the sorted list.
+        for &j in unfinished.iter().chain(&displaced) {
             touched[j] = true;
+        }
+        for &j in &unfinished {
             extra_slack[j] += extension_step;
             if !extended_mask[j] {
                 extended_mask[j] = true;
                 extended.push(j);
             }
         }
-        entries.retain(|&e| !touched[entry_job(e)]);
+        entries.retain(|&e| !touched[unpack_entry(e).0]);
         fresh.clear();
-        let regen: usize =
-            unfinished.iter().map(|&j| job_entry_count(&jobs[j], extra_slack[j])).sum();
+        let regen: usize = (0..jobs.len())
+            .filter(|&j| touched[j])
+            .map(|j| job_entry_count(&jobs[j], extra_slack[j], earliest[j]))
+            .sum();
         fresh.reserve(regen);
-        for &j in &unfinished {
-            push_job_entries(&mut fresh, jobs, ci, j, extra_slack[j]);
+        for j in 0..jobs.len() {
+            if touched[j] {
+                push_job_entries(&mut fresh, jobs, ci, j, extra_slack[j], earliest[j]);
+            }
         }
         fresh.sort_unstable();
         merge_sorted(&entries, &fresh, &mut merged);
         std::mem::swap(&mut entries, &mut merged);
-        for &j in &unfinished {
-            touched[j] = false;
+        for j in unfinished.iter().chain(&displaced) {
+            touched[*j] = false;
         }
     }
     unreachable!("loop always returns on the final round");
+}
+
+/// Final precedence guarantee: whatever the repair rounds achieved, drop any
+/// child slot at or before its last parent's final planned slot. Processed
+/// in ascending id order (parents precede children), so each bound reads the
+/// parent's post-clamp plan and the output is precedence-feasible
+/// unconditionally — a round-capped repair can leave a child short of work,
+/// exactly like a round-capped deadline extension, but never a child hour
+/// scheduled before its last parent hour.
+fn clamp_precedence(jobs: &[Job], result: &mut [(JobPlan, f64)]) {
+    for j in 0..jobs.len() {
+        if jobs[j].deps.is_empty() {
+            continue;
+        }
+        let mut lb = 0usize;
+        for &p in &jobs[j].deps {
+            if let Some(last) = result[p].0.last_slot() {
+                lb = lb.max(last + 1);
+            }
+        }
+        let plan = &mut result[j].0;
+        if plan.slots.first().map_or(false, |&(t, _)| t < lb) {
+            plan.slots.retain(|&(t, _)| t >= lb);
+            // Re-derive planned work from the surviving slots (Σ over a
+            // slot's 1..=k marginals = the slot's throughput).
+            let work: f64 = plan
+                .slots
+                .iter()
+                .map(|&(_, k)| (1..=k).map(|i| jobs[j].marginal(i)).sum::<f64>())
+                .sum();
+            result[j].1 = work;
+        }
+    }
 }
 
 /// One greedy pass of Algorithm 1 (lines 7–12) over a pre-sorted candidate
@@ -217,12 +312,7 @@ fn greedy_pass(
     // Per-job allocations live in flat window-indexed vectors
     // (alloc[j][t − arrival]) — the dense layout is ~2× faster than hash
     // maps on the million-entry pop loop (§Perf).
-    let t_max = entries
-        .iter()
-        .map(|e| ((e >> 16) & 0xFF_FFFF) as usize)
-        .max()
-        .map(|m| m + 1)
-        .unwrap_or(0);
+    let t_max = entries.iter().map(|&e| unpack_entry(e).1).max().map(|m| m + 1).unwrap_or(0);
     let mut used = vec![0u32; t_max];
     let mut alloc: Vec<Vec<u16>> = jobs
         .iter()
@@ -236,9 +326,7 @@ fn greedy_pass(
     let cap = max_capacity as u32;
 
     for &e in entries {
-        let j = entry_job(e);
-        let t = ((e >> 16) & 0xFF_FFFF) as usize;
-        let k = (e & 0xFFFF) as u16;
+        let (j, t, k) = unpack_entry(e);
         if work[j] >= jobs[j].length_hours {
             continue; // Line 10–11: job already fully planned
         }
@@ -247,12 +335,12 @@ fn greedy_pass(
         }
         // Server k is only valid on top of servers 1..k−1 at the same slot.
         let off = t - jobs[j].arrival;
-        if alloc[j][off] != k - 1 {
+        if alloc[j][off] != (k - 1) as u16 {
             continue;
         }
-        alloc[j][off] = k;
+        alloc[j][off] = k as u16;
         used[t] += 1;
-        work[j] += jobs[j].marginal(k as usize);
+        work[j] += jobs[j].marginal(k);
     }
 
     // Assemble sorted plans.
@@ -336,6 +424,7 @@ mod tests {
             k_max,
             profile: ScalingProfile::from_comm_ratio(r, k_max),
             watts_per_unit: 40.0,
+            deps: Vec::new(),
         }
     }
 
@@ -474,10 +563,12 @@ mod tests {
     ) -> OracleSchedule {
         let mut extra_slack = vec![0.0f64; jobs.len()];
         let mut extended: Vec<usize> = Vec::new();
+        let has_deps = jobs.iter().any(|j| !j.deps.is_empty());
+        let mut earliest: Vec<usize> = jobs.iter().map(|j| j.arrival).collect();
         for round in 0..max_rounds.max(1) {
             let mut entries: Vec<u128> = Vec::new();
             for j in 0..jobs.len() {
-                push_job_entries(&mut entries, jobs, ci, j, extra_slack[j]);
+                push_job_entries(&mut entries, jobs, ci, j, extra_slack[j], earliest[j]);
             }
             entries.sort_unstable();
             let result = greedy_pass(jobs, &entries, max_capacity, &extra_slack);
@@ -487,7 +578,28 @@ mod tests {
                 .filter(|(j, (_, work))| *work < jobs[*j].length_hours - 1e-9)
                 .map(|(j, _)| j)
                 .collect();
-            if unfinished.is_empty() || round + 1 == max_rounds {
+            let mut displaced: Vec<usize> = Vec::new();
+            if has_deps {
+                for j in 0..jobs.len() {
+                    let mut lb = earliest[j];
+                    for &p in &jobs[j].deps {
+                        if let Some(last) = result[p].0.last_slot() {
+                            lb = lb.max(last + 1);
+                        }
+                    }
+                    if lb > earliest[j]
+                        && result[j].0.slots.first().map_or(false, |&(t, _)| t < lb)
+                    {
+                        earliest[j] = lb;
+                        displaced.push(j);
+                    }
+                }
+            }
+            if (unfinished.is_empty() && displaced.is_empty()) || round + 1 == max_rounds {
+                let mut result = result;
+                if has_deps {
+                    clamp_precedence(jobs, &mut result);
+                }
                 let horizon = result
                     .iter()
                     .flat_map(|(p, _)| p.last_slot())
@@ -525,11 +637,21 @@ mod tests {
         let scarce: Vec<Job> = (0..3).map(|i| job(i, 0, 4.0, 0.0, 1, 0.0)).collect();
         let valley = valley_trace(48);
         let contended: Vec<Job> = (0..6).map(|i| job(i, i % 3, 3.0, 1.0, 4, 0.05)).collect();
+        // Chained DAG over the same valley: precedence repair rounds (and
+        // the final clamp) must also match the full rebuild.
+        let mut chained: Vec<Job> = (0..6).map(|i| job(i, 0, 2.0, 6.0, 2, 0.05)).collect();
+        for i in 1..6 {
+            if i % 3 != 0 {
+                chained[i].deps.push(i - 1);
+            }
+        }
         let cases: Vec<(&[Job], &CarbonTrace, usize, usize)> = vec![
             (&scarce[..], &flat, 1, 8),      // repeated extensions, capacity 1
             (&scarce[..], &flat, 1, 2),      // hits the round cap while infeasible
             (&contended[..], &valley, 2, 6), // elastic jobs under contention
             (&contended[..], &valley, 10, 4), // feasible round 0 (no repair)
+            (&chained[..], &valley, 2, 6),   // precedence repair rounds
+            (&chained[..], &valley, 4, 2),   // precedence clamp at the round cap
         ];
         for (i, (jobs, trace, cap, rounds)) in cases.into_iter().enumerate() {
             let fast = compute_schedule(jobs, trace, cap, 24.0, rounds);
@@ -541,6 +663,112 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "case {i}: work[{j}] diverged");
             }
         }
+    }
+
+    #[test]
+    fn pack_entry_round_trips_at_field_boundaries() {
+        let cases = [
+            (0.0f32, 0usize, 0usize, 0usize, 1usize),
+            (1.0, (1 << 24) - 1, (1 << 32) - 1, (1 << 24) - 1, (1 << 16) - 1),
+            (f32::MAX, 12, 7, 3, 2),
+        ];
+        for &(score, deadline, jb, t, k) in &cases {
+            let e = pack_entry(score, deadline, jb, t, k);
+            assert_eq!(unpack_entry(e), (jb, t, k), "fields corrupted in {e:#034x}");
+        }
+        // Higher score ⇒ smaller key (descending-score greedy realized as an
+        // ascending integer sort) …
+        let hi = pack_entry(2.0, 5, 1, 1, 1);
+        let lo = pack_entry(1.0, 5, 1, 1, 1);
+        assert!(hi < lo);
+        // … and at equal scores the earlier deadline sorts first.
+        let near = pack_entry(1.0, 4, 1, 1, 1);
+        assert!(near < lo);
+    }
+
+    #[test]
+    fn oracle_never_plans_a_child_before_its_parent() {
+        // Both jobs covet the same 4-slot valley; flat greedy overlaps them
+        // there. With an edge 0 → 1 the child's plan must start strictly
+        // after the parent's last planned slot (here: pushed to the back
+        // half of the valley), and both must still finish.
+        let parent = job(0, 0, 2.0, 10.0, 1, 0.0);
+        let mut child = job(1, 0, 2.0, 10.0, 1, 0.0);
+        child.deps = vec![0];
+        let jobs = vec![parent, child];
+        let s = compute_schedule(&jobs, &valley_trace(24), 10, 24.0, 8);
+        let p_last = s.plans[0].last_slot().expect("parent planned");
+        let c_first = s.plans[1].slots.first().expect("child planned").0;
+        assert!(c_first > p_last, "child starts at {c_first}, parent ends at {p_last}");
+        for (j, &w) in s.planned_work.iter().enumerate() {
+            assert!(w >= jobs[j].length_hours - 1e-9, "job {j} unfinished");
+        }
+    }
+
+    #[test]
+    fn round_capped_repair_still_never_violates_precedence() {
+        // With a single round no repair ever runs; the final clamp alone
+        // must strip the child's premature slots — leaving it short of
+        // work, but never scheduled before its parent's last hour.
+        let parent = job(0, 0, 2.0, 10.0, 1, 0.0);
+        let mut child = job(1, 0, 2.0, 10.0, 1, 0.0);
+        child.deps = vec![0];
+        let jobs = vec![parent, child];
+        let s = compute_schedule(&jobs, &valley_trace(24), 10, 24.0, 1);
+        let p_last = s.plans[0].last_slot().expect("parent planned");
+        for &(t, _) in &s.plans[1].slots {
+            assert!(t > p_last, "child slot {t} not after parent end {p_last}");
+        }
+        assert!(s.planned_work[1] < 2.0 - 1e-9, "the clamp should have cost the child work");
+    }
+
+    #[test]
+    fn property_oracle_plans_are_precedence_feasible() {
+        use crate::util::proptest_lite::{check, Config};
+        check(
+            "oracle plans are precedence-feasible",
+            Config { cases: 48, seed: 0x0AC1E },
+            |rng| {
+                let n = 2 + rng.below(7);
+                let mut jobs: Vec<Job> = (0..n)
+                    .map(|i| {
+                        let k_max = 1 + rng.below(3);
+                        job(
+                            i,
+                            rng.below(4),
+                            1.0 + rng.range(0.0, 3.0),
+                            rng.range(0.0, 8.0),
+                            k_max,
+                            rng.range(0.0, 0.2),
+                        )
+                    })
+                    .collect();
+                for i in 1..n {
+                    if rng.chance(0.5) {
+                        jobs[i].deps.push(rng.below(i));
+                    }
+                }
+                let cap = 1 + rng.below(5);
+                (jobs, cap)
+            },
+            |(jobs, cap)| {
+                let s = compute_schedule(jobs, &valley_trace(64), *cap, 24.0, 6);
+                for j in jobs {
+                    for &p in &j.deps {
+                        let Some(p_last) = s.plans[p].last_slot() else { continue };
+                        if let Some(&(c_first, _)) = s.plans[j.id].slots.first() {
+                            if c_first <= p_last {
+                                return Err(format!(
+                                    "job {} starts at {c_first}, parent {p} ends at {p_last}",
+                                    j.id
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -53,7 +53,10 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): a single NaN (e.g. a 0/0 ratio
+    // upstream) must not panic the metrics path. IEEE total order sorts NaN
+    // above +inf, so finite percentiles stay exactly where they were.
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
@@ -309,6 +312,20 @@ mod tests {
     fn percentile_empty_is_zero() {
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(percentile_sorted(&[], 99.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // Regression: partial_cmp().unwrap() panicked on any NaN sample.
+        // total_cmp sorts NaN after +inf, so low/mid percentiles of a mostly
+        // finite window are unchanged and nothing panics.
+        let xs = [3.0, f64::NAN, 1.0, 2.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 40.0), 3.0);
+        // The top percentile lands on the NaN tail — defined, not a panic.
+        assert!(percentile(&xs, 100.0).is_nan());
+        // All-NaN input is equally panic-free.
+        assert!(percentile(&[f64::NAN; 3], 50.0).is_nan());
     }
 
     #[test]

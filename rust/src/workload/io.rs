@@ -112,6 +112,7 @@ pub fn load_csv(path: impl AsRef<Path>, hardware: Hardware) -> Result<Vec<Job>, 
             k_max,
             profile,
             watts_per_unit: spec.watts_per_unit,
+            deps: Vec::new(),
         });
     }
     // Re-id if the file was hand-edited out of order: the engine requires

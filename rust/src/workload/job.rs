@@ -36,6 +36,13 @@ pub struct Job {
     pub profile: ScalingProfile,
     /// Active power per allocated server, watts.
     pub watts_per_unit: f64,
+    /// Parent job ids: this job becomes eligible only once every parent has
+    /// completed. Every parent id is strictly smaller than `id` (tracegen
+    /// emits edges in submission order), so any trace is topologically
+    /// sorted by construction. Empty for flat (independent) workloads —
+    /// `Vec::new()` does not allocate, so flat jobs stay heap-identical to
+    /// the pre-DAG model.
+    pub deps: Vec<JobId>,
 }
 
 impl Job {
@@ -86,6 +93,31 @@ impl Job {
     }
 }
 
+/// Longest downstream chain of `length_hours` below each job — the
+/// critical-path tail the DAG-aware policies subtract from flat slack
+/// (a job whose descendants still need `downstream[j]` base-hours has that
+/// much less real slack than its own deadline suggests).
+///
+/// `downstream[j] = max over children c of (length_hours[c] + downstream[c])`
+/// and `0.0` for sinks, computed in one reverse pass over the submission
+/// order (valid because every edge points from a smaller id to a larger
+/// one). For flat traces the result is all zeros, so
+/// `cp_slack = slack − downstream` degenerates to flat slack exactly.
+pub fn critical_path_downstream(jobs: &[Job]) -> Vec<f64> {
+    let mut down = vec![0.0f64; jobs.len()];
+    for j in (0..jobs.len()).rev() {
+        debug_assert_eq!(jobs[j].id, j, "jobs must be in dense id order");
+        let tail = jobs[j].length_hours + down[j];
+        for &p in &jobs[j].deps {
+            debug_assert!(p < j, "dep {p} of job {j} is not an earlier job");
+            if tail > down[p] {
+                down[p] = tail;
+            }
+        }
+    }
+    down
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,6 +136,7 @@ mod tests {
             k_max,
             profile: ScalingProfile::from_comm_ratio(0.05, k_max),
             watts_per_unit: 40.0,
+            deps: Vec::new(),
         }
     }
 
@@ -140,5 +173,71 @@ mod tests {
     fn min_slots_rounds_up() {
         assert_eq!(test_job(0, 0, 2.2, 0.0, 2).min_slots(), 3);
         assert_eq!(test_job(0, 0, 0.4, 0.0, 2).min_slots(), 1);
+    }
+
+    #[test]
+    fn critical_path_flat_trace_is_all_zeros() {
+        let jobs: Vec<Job> = (0..5).map(|i| test_job(i, 0, 2.0, 6.0, 4)).collect();
+        assert_eq!(critical_path_downstream(&jobs), vec![0.0; 5]);
+    }
+
+    #[test]
+    fn critical_path_chain_accumulates_lengths() {
+        // 0 ← 1 ← 2 (chain): downstream[0] = len(1)+len(2), downstream[1] =
+        // len(2), downstream[2] = 0.
+        let mut jobs: Vec<Job> = vec![
+            test_job(0, 0, 3.0, 6.0, 4),
+            test_job(1, 0, 2.0, 6.0, 4),
+            test_job(2, 0, 5.0, 6.0, 4),
+        ];
+        jobs[1].deps = vec![0];
+        jobs[2].deps = vec![1];
+        let down = critical_path_downstream(&jobs);
+        assert_eq!(down, vec![7.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn critical_path_takes_longest_branch() {
+        // Fan-out 0 → {1, 2}; job 2 is the longer branch.
+        let mut jobs: Vec<Job> = vec![
+            test_job(0, 0, 1.0, 6.0, 4),
+            test_job(1, 0, 2.0, 6.0, 4),
+            test_job(2, 0, 4.0, 6.0, 4),
+        ];
+        jobs[1].deps = vec![0];
+        jobs[2].deps = vec![0];
+        let down = critical_path_downstream(&jobs);
+        assert_eq!(down, vec![4.0, 0.0, 0.0]);
+        // Diamond tail: a reduce depending on both branches extends the max.
+        let mut reduce = test_job(3, 0, 1.5, 6.0, 4);
+        reduce.deps = vec![1, 2];
+        let mut jobs = jobs;
+        jobs.push(reduce);
+        let down = critical_path_downstream(&jobs);
+        assert_eq!(down, vec![5.5, 1.5, 1.5, 0.0]);
+    }
+
+    #[test]
+    fn critical_path_parent_dominates_child_tail() {
+        // Structural invariant the policies rely on: for every edge p → c,
+        // downstream[p] ≥ length[c] + downstream[c].
+        let mut jobs: Vec<Job> =
+            (0..6).map(|i| test_job(i, 0, 1.0 + i as f64 * 0.5, 6.0, 4)).collect();
+        jobs[2].deps = vec![0, 1];
+        jobs[3].deps = vec![2];
+        jobs[4].deps = vec![2];
+        jobs[5].deps = vec![3, 4];
+        let down = critical_path_downstream(&jobs);
+        for (c, job) in jobs.iter().enumerate() {
+            for &p in &job.deps {
+                assert!(
+                    down[p] >= job.length_hours + down[c] - 1e-12,
+                    "edge {p}->{c}: {} < {} + {}",
+                    down[p],
+                    job.length_hours,
+                    down[c]
+                );
+            }
+        }
     }
 }

@@ -10,7 +10,7 @@
 //! calibrated so the carbon-agnostic baseline yields the target mean
 //! utilization (paper: ~50%).
 
-use crate::config::{ElasticityScenario, ExperimentConfig, Hardware, TraceFamily};
+use crate::config::{DagShape, ElasticityScenario, ExperimentConfig, Hardware, TraceFamily};
 use crate::util::rng::Rng;
 use crate::workload::job::Job;
 use crate::workload::profile::{self, ScalingProfile, Scalability, WorkloadSpec};
@@ -177,9 +177,91 @@ fn generate_with(
             k_max,
             profile: prof,
             watts_per_unit: spec.watts_per_unit,
+            deps: Vec::new(),
         });
     }
+    apply_dag_shape(&mut jobs, cfg.dag_shape, seed);
     jobs
+}
+
+/// Salt for the DAG-edge RNG: edges draw from their own stream, seeded off
+/// the trace seed, so wiring a topology never perturbs the arrival/length
+/// draws above — a `dag_shape` cell keeps the *same jobs* as its flat twin
+/// and differs only in the edges.
+const DAG_SALT: u64 = 0xDA61_57A7;
+
+/// Wire `cfg.dag_shape` dependency edges into a generated trace, in place.
+///
+/// Every edge points from a strictly smaller id to a larger one (parents
+/// precede children in submission order), so traces are topologically
+/// sorted by construction. [`DagShape::None`] is a strict no-op — flat
+/// traces stay bitwise identical to the pre-DAG generator.
+fn apply_dag_shape(jobs: &mut [Job], shape: DagShape, seed: u64) {
+    if shape == DagShape::None || jobs.len() < 2 {
+        return;
+    }
+    let mut rng = Rng::new(seed ^ DAG_SALT);
+    match shape {
+        DagShape::None => unreachable!("handled above"),
+        // Linear pipelines: consecutive submissions form chains of 2–5
+        // stages, each stage depending on its predecessor.
+        DagShape::Chains => {
+            let mut i = 0;
+            while i < jobs.len() {
+                let len = 2 + rng.below(4);
+                for j in i + 1..(i + len).min(jobs.len()) {
+                    jobs[j].deps.push(j - 1);
+                }
+                i += len;
+            }
+        }
+        // Fan-out trees: groups of 3–6, the first member is the root and
+        // every other member depends on it.
+        DagShape::Fanout => {
+            let mut i = 0;
+            while i < jobs.len() {
+                let len = 3 + rng.below(4);
+                for j in i + 1..(i + len).min(jobs.len()) {
+                    jobs[j].deps.push(i);
+                }
+                i += len;
+            }
+        }
+        // Map-reduce stages: groups of 4–7 where the last member is the
+        // reduce, depending on every map before it.
+        DagShape::MapReduce => {
+            let mut i = 0;
+            while i < jobs.len() {
+                let len = 4 + rng.below(4);
+                let end = (i + len).min(jobs.len());
+                if end - i >= 2 {
+                    for m in i..end - 1 {
+                        jobs[end - 1].deps.push(m);
+                    }
+                }
+                i += len;
+            }
+        }
+        // Random DAGs: ~65% of jobs draw 1–2 distinct earlier parents; the
+        // rest stay sources so the graph keeps parallel width.
+        DagShape::Random => {
+            for j in 1..jobs.len() {
+                if rng.chance(0.35) {
+                    continue;
+                }
+                let n_parents = 1 + rng.below(2);
+                let mut deps: Vec<usize> = Vec::with_capacity(n_parents);
+                for _ in 0..n_parents {
+                    let p = rng.below(j);
+                    if !deps.contains(&p) {
+                        deps.push(p);
+                    }
+                }
+                deps.sort_unstable();
+                jobs[j].deps = deps;
+            }
+        }
+    }
 }
 
 /// Base-scale demand of a trace in server-hours.
@@ -320,5 +402,142 @@ mod tests {
         let p = FamilyParams::for_family(TraceFamily::SurfLike);
         // Tuesday noon vs Sunday noon.
         assert!(p.intensity(24 + 12) > p.intensity(6 * 24 + 12));
+    }
+
+    /// Satellite guard for the calibrated job count: the target is
+    /// `.round()`ed, never floor-truncated, so the generated trace mass
+    /// tracks the utilization target from above *and* below. Pins the count
+    /// against the formula recomputed from the public pieces.
+    #[test]
+    fn job_count_rounds_rather_than_truncates() {
+        for (horizon, seed) in [(168usize, 12u64), (96, 13), (72, 14)] {
+            let c = cfg();
+            let params = FamilyParams::for_family(c.trace);
+            let mean_len = params.mean_length(c.length_scale);
+            let expect = (c.capacity as f64 * c.target_utilization * horizon as f64 / mean_len
+                * c.arrival_scale)
+                .round()
+                .max(1.0) as usize;
+            let jobs = generate(&c, horizon, seed);
+            assert_eq!(jobs.len(), expect, "horizon {horizon}");
+            // And the generated-hours mass is what those draws sum to —
+            // identical across runs (no hidden truncation inside the loop).
+            let mass: f64 = jobs.iter().map(|j| j.length_hours).sum();
+            let mass2: f64 = generate(&c, horizon, seed).iter().map(|j| j.length_hours).sum();
+            assert_eq!(mass.to_bits(), mass2.to_bits());
+            assert!(jobs.iter().all(|j| (1.0..=96.0).contains(&j.length_hours)));
+        }
+    }
+
+    fn all_shapes() -> [DagShape; 4] {
+        [DagShape::Chains, DagShape::Fanout, DagShape::MapReduce, DagShape::Random]
+    }
+
+    #[test]
+    fn dag_none_is_bitwise_identical_to_flat() {
+        // The zero-edge case is the degenerate DAG: same arrivals, lengths
+        // (bit for bit), workloads, and no edges — the pre-DAG generator.
+        let flat = generate(&cfg(), 168, 21);
+        let mut c = cfg();
+        c.dag_shape = DagShape::None;
+        let none = generate(&c, 168, 21);
+        assert_eq!(flat.len(), none.len());
+        for (a, b) in flat.iter().zip(&none) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.length_hours.to_bits(), b.length_hours.to_bits());
+            assert_eq!(a.workload, b.workload);
+            assert!(a.deps.is_empty() && b.deps.is_empty());
+        }
+    }
+
+    #[test]
+    fn dag_edges_do_not_perturb_the_job_stream() {
+        // A shaped trace carries the *same jobs* as its flat twin — the
+        // edge RNG is a separate salted stream.
+        let flat = generate(&cfg(), 168, 22);
+        for shape in all_shapes() {
+            let mut c = cfg();
+            c.dag_shape = shape;
+            let shaped = generate(&c, 168, 22);
+            assert_eq!(flat.len(), shaped.len(), "{shape:?}");
+            let mut edges = 0usize;
+            for (a, b) in flat.iter().zip(&shaped) {
+                assert_eq!(a.arrival, b.arrival, "{shape:?}");
+                assert_eq!(a.length_hours.to_bits(), b.length_hours.to_bits(), "{shape:?}");
+                assert_eq!(a.workload_idx, b.workload_idx, "{shape:?}");
+                edges += b.deps.len();
+            }
+            assert!(edges > 0, "{shape:?} wired no edges");
+        }
+    }
+
+    #[test]
+    fn dag_edges_are_topological_and_deterministic() {
+        for shape in all_shapes() {
+            let mut c = cfg();
+            c.dag_shape = shape;
+            let a = generate(&c, 168, 23);
+            let b = generate(&c, 168, 23);
+            for (j, job) in a.iter().enumerate() {
+                assert_eq!(job.id, j);
+                assert_eq!(job.deps, b[j].deps, "{shape:?} edges not deterministic");
+                for &p in &job.deps {
+                    assert!(p < j, "{shape:?}: dep {p} of job {j} not earlier");
+                    // Parents never arrive after their children (arrivals
+                    // are sorted before ids are assigned).
+                    assert!(a[p].arrival <= job.arrival, "{shape:?}");
+                }
+                // No duplicate parents.
+                let mut d = job.deps.clone();
+                d.dedup();
+                assert_eq!(d.len(), job.deps.len(), "{shape:?} duplicate parent");
+            }
+        }
+    }
+
+    #[test]
+    fn dag_shape_structure() {
+        let mk = |shape| {
+            let mut c = cfg();
+            c.dag_shape = shape;
+            generate(&c, 168, 24)
+        };
+        // Chains: at most one parent, always the immediate predecessor.
+        for (j, job) in mk(DagShape::Chains).iter().enumerate() {
+            assert!(job.deps.len() <= 1);
+            if let Some(&p) = job.deps.first() {
+                assert_eq!(p, j - 1);
+            }
+        }
+        // Fanout: at most one parent, and no node both has a parent and is
+        // one (depth ≤ 1 trees).
+        let fan = mk(DagShape::Fanout);
+        let mut is_parent = vec![false; fan.len()];
+        for job in &fan {
+            assert!(job.deps.len() <= 1);
+            for &p in &job.deps {
+                is_parent[p] = true;
+            }
+        }
+        for job in &fan {
+            if !job.deps.is_empty() {
+                assert!(!is_parent[job.id], "fanout child {} is also a root", job.id);
+            }
+        }
+        // MapReduce: nodes are either sources or a reduce with ≥ 1 maps,
+        // and every reduce's parents are contiguous predecessors.
+        let mr = mk(DagShape::MapReduce);
+        assert!(mr.iter().any(|j| j.deps.len() >= 3), "no wide reduce generated");
+        for job in &mr {
+            if !job.deps.is_empty() {
+                let lo = job.deps[0];
+                let expect: Vec<usize> = (lo..job.id).collect();
+                assert_eq!(job.deps, expect, "reduce {} parents not contiguous", job.id);
+            }
+        }
+        // Random: parents bounded at 2, and some sources survive.
+        let rnd = mk(DagShape::Random);
+        assert!(rnd.iter().all(|j| j.deps.len() <= 2));
+        assert!(rnd.iter().filter(|j| j.deps.is_empty()).count() >= rnd.len() / 10);
     }
 }

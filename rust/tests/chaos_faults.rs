@@ -12,12 +12,12 @@
 //! 4. The same `(seed, spec)` always expands to the same plan, and the same
 //!    plan always replays the same run.
 
-use carbonflex::config::{ExperimentConfig, ServiceConfig};
+use carbonflex::config::{DagShape, ExperimentConfig, ServiceConfig};
 use carbonflex::coordinator::api::{Response, SubmitRequest};
 use carbonflex::coordinator::{shard_regions, ShardedCoordinator};
 use carbonflex::experiments::cells::DispatchStrategy;
 use carbonflex::experiments::runner::PreparedExperiment;
-use carbonflex::faults::{FaultPlan, FaultSpec, ShardKill, SignalOutage};
+use carbonflex::faults::{FaultPlan, FaultSpec, ShardKill, SignalOutage, SlotCrash};
 use carbonflex::sched::PolicyKind;
 use carbonflex::util::proptest_lite::{check, Config};
 use carbonflex::util::rng::Rng;
@@ -170,6 +170,81 @@ fn shard_kill_failover_accounts_for_every_accepted_job() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn crashed_parents_keep_dag_children_gated() {
+    // A whole-cluster crash suspends every running job — including chain
+    // parents mid-run — and the rework penalty pushes their completions
+    // later. Dependency gating must hold through that detour: a child may
+    // only ever complete strictly after its last parent, because a crashed
+    // (suspended, not DONE) parent keeps its children out of the eligible
+    // set until the rework actually finishes.
+    use std::cell::Cell;
+    let crashed_runs = Cell::new(0usize);
+    check(
+        "crashed parent gates children",
+        Config { cases: 6, seed: 0xC1EA_0005 },
+        |rng| {
+            let mut cfg = ExperimentConfig::default();
+            cfg.seed = rng.next_u64();
+            cfg.capacity = 6 + rng.below(12);
+            cfg.horizon_hours = 48;
+            cfg.history_hours = 72;
+            cfg.replay_offsets = 1;
+            cfg.dag_shape = DagShape::Chains;
+            let crash_at = 2 + rng.below(20);
+            (cfg, crash_at)
+        },
+        |(cfg, crash_at)| {
+            let prep = PreparedExperiment::prepare(cfg);
+            if !prep.eval_jobs.iter().any(|j| !j.deps.is_empty()) {
+                return Err("chains shape generated no dependency edges".into());
+            }
+            let plan = FaultPlan {
+                crashes: vec![SlotCrash {
+                    at: *crash_at,
+                    down: cfg.capacity,
+                    repair_slots: 3,
+                    rework_hours: 2.0,
+                }],
+                outages: Vec::new(),
+                shard_kills: Vec::new(),
+                max_stale_slots: 4,
+            };
+            for kind in [PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex] {
+                let res = prep.run_with_plan(kind, &plan);
+                if res.metrics.unfinished != 0 {
+                    return Err(format!(
+                        "{kind:?}: {} jobs never finished after the crash",
+                        res.metrics.unfinished
+                    ));
+                }
+                if res.metrics.restarts > 0 {
+                    crashed_runs.set(crashed_runs.get() + 1);
+                }
+                let mut completion = vec![usize::MAX; prep.eval_jobs.len()];
+                for o in &res.outcomes {
+                    completion[o.id] = o.completion;
+                }
+                for j in &prep.eval_jobs {
+                    for &p in &j.deps {
+                        if completion[j.id] <= completion[p] {
+                            return Err(format!(
+                                "{kind:?}: child {} completed in slot {} but parent {} \
+                                 only in slot {}",
+                                j.id, completion[j.id], p, completion[p]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+    // The crash plan must actually have displaced running work somewhere,
+    // or the property above never exercised the suspended-parent path.
+    assert!(crashed_runs.get() > 0, "no case saw a restart; crash plan was a no-op");
 }
 
 #[test]

@@ -28,6 +28,7 @@ fn job(id: usize, arrival: usize, length: f64, slack: f64) -> Job {
         k_max: 4,
         profile: ScalingProfile::from_comm_ratio(0.05, 4),
         watts_per_unit: 40.0,
+        deps: Vec::new(),
     }
 }
 

@@ -1,6 +1,7 @@
 //! Golden fingerprints for the composite sweep cells: one spatial
-//! (multi-region + geo-dispatch) cell and one yearlong (week-window +
-//! continuous learning) cell, on smoke-sized configs.
+//! (multi-region + geo-dispatch) cell, one yearlong (week-window +
+//! continuous learning) cell, and one DAG (precedence-gated workload)
+//! cell, on smoke-sized configs.
 //!
 //! Blessing works like the other golden guards (see `common::check_or_bless`):
 //! the first local run writes `tests/golden/scenario_fingerprints.txt` —
@@ -65,10 +66,36 @@ fn yearlong_lines() -> Vec<String> {
         .collect()
 }
 
+fn dag_lines() -> Vec<String> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.capacity = 12;
+    cfg.horizon_hours = 48;
+    cfg.history_hours = 96;
+    cfg.replay_offsets = 1;
+    let mut spec = SweepSpec::new(cfg);
+    spec.dag_shapes = vec!["chains".into(), "mapreduce".into()];
+    spec.policies =
+        vec![PolicyKind::CarbonAgnostic, PolicyKind::CarbonFlex, PolicyKind::Oracle];
+    SweepRunner::new(2)
+        .run(&spec)
+        .iter()
+        .map(|r| {
+            format!(
+                "dag/{}/{}\t{}\tcompleted={}",
+                r.point.dag_shape,
+                r.kind.as_str(),
+                r.result.fingerprint(),
+                r.result.metrics.completed
+            )
+        })
+        .collect()
+}
+
 #[test]
 fn scenario_cells_reproduce_checked_in_fingerprints() {
     let mut lines = spatial_lines();
     lines.extend(yearlong_lines());
+    lines.extend(dag_lines());
     common::check_or_bless("scenario_fingerprints.txt", &lines);
 }
 
@@ -79,4 +106,5 @@ fn scenario_cells_are_bitwise_repeatable() {
     // bit, so the fingerprints above are stable things to pin.
     assert_eq!(spatial_lines(), spatial_lines(), "spatial cell not reproducible");
     assert_eq!(yearlong_lines(), yearlong_lines(), "yearlong cell not reproducible");
+    assert_eq!(dag_lines(), dag_lines(), "dag cell not reproducible");
 }
